@@ -1,0 +1,41 @@
+//! Network-scale study (§V-B, last experiment): completion rate for all
+//! four schemes as the constellation grows from 4×4 to 32×32 satellites
+//! (> 1000 sats) at fixed λ = 25.
+//!
+//! Run: `cargo run --release --example constellation_scale`
+//! (set SCALE_QUICK=1 for a fast pass)
+
+use satkit::experiments::{render_panels, scale, SweepOpts};
+
+fn main() {
+    let quick = std::env::var("SCALE_QUICK").map(|v| v == "1").unwrap_or(false);
+    let opts = if quick { SweepOpts::quick() } else { SweepOpts::default() };
+    let ns: Vec<usize> = if quick { vec![4, 8, 16] } else { vec![4, 8, 16, 24, 32] };
+    let rows = scale(&ns, &opts);
+    println!("{}", render_panels("network-scale study (lambda = 25, VGG19)", &rows, "N"));
+    // the paper's claim: SCC keeps its completion-rate lead beyond 32x32
+    for &n in &ns {
+        let get = |s: satkit::offload::SchemeKind| {
+            rows.iter()
+                .find(|r| r.x == n as f64 && r.scheme == s)
+                .unwrap()
+                .report
+                .completion_rate()
+        };
+        let scc = get(satkit::offload::SchemeKind::Scc);
+        let best_other = [
+            satkit::offload::SchemeKind::Random,
+            satkit::offload::SchemeKind::Rrp,
+            satkit::offload::SchemeKind::Dqn,
+        ]
+        .into_iter()
+        .map(get)
+        .fold(0.0f64, f64::max);
+        println!(
+            "N={n:>2}: SCC {:.3} vs best baseline {:.3} ({})",
+            scc,
+            best_other,
+            if scc >= best_other - 0.01 { "SCC leads/ties" } else { "baseline leads" }
+        );
+    }
+}

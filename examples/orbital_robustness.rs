@@ -1,0 +1,93 @@
+//! Robustness scenario: the constellation under *realistic dynamics* —
+//! gateway handover as satellites drift overhead (§III-A) and transient
+//! satellite outages (radiation upsets) — plus the paper's §VI future-work
+//! extension, early exit, as the mitigation knob.
+//!
+//! Question answered: when satellites fail mid-run, how much completion
+//! does each scheme lose, and can an accuracy-for-delay trade (early exit
+//! at ≥ 90 % / ≥ 80 % relative accuracy) buy the headroom back?
+//!
+//! Run: `cargo run --release --example orbital_robustness`
+
+use satkit::config::SimConfig;
+use satkit::dnn::{DnnModel, EarlyExitProfile};
+use satkit::offload::SchemeKind;
+use satkit::sim::{dynamics::Handover, Simulation};
+
+fn base_cfg() -> SimConfig {
+    SimConfig {
+        n: 10,
+        slots: 16,
+        lambda: 55.0,
+        model: DnnModel::Vgg19,
+        seed: 21,
+        ..SimConfig::default()
+    }
+}
+
+fn main() {
+    println!("=== exit branches available (VGG19) ===");
+    let ee = EarlyExitProfile::for_model(DnnModel::Vgg19);
+    for (i, b) in ee.branches.iter().enumerate() {
+        println!(
+            "branch {i}: after layer {:>2} ({})  accuracy {:.2}  saves {:.1}% of FLOPs",
+            b.layer_idx,
+            ee.base.layers[b.layer_idx].name,
+            b.accuracy,
+            100.0 * ee.saving_for_exit(i)
+        );
+    }
+
+    println!("\n=== dynamics: handover + 2% per-slot outage, lambda=55 ===");
+    println!(
+        "{:<8} {:>12} {:>12} {:>12} {:>12}",
+        "scheme", "static", "handover", "faults", "both"
+    );
+    for scheme in SchemeKind::all() {
+        let stat = Simulation::new(&base_cfg(), scheme).run();
+        let hand = Simulation::new(&base_cfg(), scheme)
+            .with_handover(Handover::default())
+            .run();
+        let faulty = Simulation::new(&base_cfg(), scheme)
+            .with_faults(0.02, 0.3)
+            .run();
+        let both = Simulation::new(&base_cfg(), scheme)
+            .with_handover(Handover::default())
+            .with_faults(0.02, 0.3)
+            .run();
+        println!(
+            "{:<8} {:>11.2}% {:>11.2}% {:>11.2}% {:>11.2}%",
+            scheme.name(),
+            100.0 * stat.completion_rate(),
+            100.0 * hand.completion_rate(),
+            100.0 * faulty.completion_rate(),
+            100.0 * both.completion_rate(),
+        );
+    }
+
+    println!("\n=== early exit as mitigation (SCC, faults on) ===");
+    println!(
+        "{:<22} {:>10} {:>12} {:>12}",
+        "policy", "accuracy", "complete", "delay[ms]"
+    );
+    for (label, floor) in [
+        ("full model", None),
+        ("exit @ >=90% acc", Some(0.90)),
+        ("exit @ >=80% acc", Some(0.80)),
+    ] {
+        let mut sim = Simulation::new(&base_cfg(), SchemeKind::Scc).with_faults(0.02, 0.3);
+        let mut acc = 1.0;
+        if let Some(f) = floor {
+            sim = sim.with_early_exit(f);
+            acc = sim.delivered_accuracy;
+        }
+        let r = sim.run();
+        println!(
+            "{:<22} {:>10.3} {:>11.2}% {:>12.1}",
+            label,
+            acc,
+            100.0 * r.completion_rate(),
+            r.avg_delay_ms
+        );
+    }
+}

@@ -1,0 +1,24 @@
+//! Quickstart: build a Table-I default constellation, run the paper's SCC
+//! scheme (Alg. 1 splitting + Alg. 2 GA offloading) on VGG19 tasks, and
+//! print the three §V-B metrics.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use satkit::config::SimConfig;
+use satkit::offload::SchemeKind;
+use satkit::sim::Simulation;
+
+fn main() {
+    let cfg = SimConfig::default(); // Table I defaults: N=10, lambda=25, VGG19
+    println!("{}\n", cfg.table());
+
+    let report = Simulation::new(&cfg, SchemeKind::Scc).run();
+
+    println!("SCC on {} tasks over {} slots:", report.total_tasks, report.slots_run);
+    println!("  task completion rate : {:.2}%", 100.0 * report.completion_rate());
+    println!("  total average delay  : {:.1} ms  (comp {:.1} + tran {:.1})",
+        report.avg_delay_ms, report.avg_comp_ms, report.avg_tran_ms);
+    println!("  workload variance    : {:.3e} MFLOP^2 (cv {:.3})",
+        report.workload_variance, report.workload_cv());
+    println!("\nfull report: {}", report.to_json().to_string());
+}

@@ -1,0 +1,102 @@
+"""AOT compile path: lower every L2 graph to HLO *text* artifacts.
+
+Run once by `make artifacts`; rust/src/runtime/ loads the text with
+`HloModuleProto::from_text_file` and compiles it on the PJRT CPU client.
+HLO text (NOT `.serialize()`): jax >= 0.5 emits protos with 64-bit
+instruction ids that xla_extension 0.5.1 rejects; the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Each artifact gets a sidecar `<name>.meta.json` recording input shapes and
+dtypes so the Rust runtime can validate feeds without parsing HLO.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def probe_input(spec) -> np.ndarray:
+    """Deterministic probe tensor (matches the Rust integration test):
+    element i = (i % 13) * 0.1, reshaped to the spec."""
+    n = int(np.prod(spec.shape))
+    return (np.arange(n) % 13).astype(np.float32).reshape(spec.shape) * 0.1
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    # print_large_constants=True: the default printer elides big weight
+    # literals as '{...}', which the XLA 0.5.1 text parser silently reads
+    # back as ZEROS — the baked model weights would vanish.
+    return comp.as_hlo_text(True)
+
+
+def _spec(x):
+    return jax.ShapeDtypeStruct(jnp.shape(x), jnp.result_type(x))
+
+
+def artifact_specs():
+    """name -> (fn, example_args). Params are baked as constants via closure
+    so the Rust side feeds only the activation tensor(s)."""
+    vw = model.vgg_slice_params()
+    rw = model.resnet_slice_params()
+    qw = model.qnet_params()
+    cw = model.classifier_params()
+    return {
+        "vgg_slice": (lambda x: model.vgg_slice(x, *vw), [jax.ShapeDtypeStruct(model.VGG_IN, jnp.float32)]),
+        "resnet_slice": (lambda x: model.resnet_slice(x, *rw), [jax.ShapeDtypeStruct(model.RESNET_IN, jnp.float32)]),
+        "qnet": (lambda s: model.qnet(s, *qw), [jax.ShapeDtypeStruct((8, model.STATE_DIM), jnp.float32)]),
+        "classifier": (lambda x: model.classifier(x, *cw), [jax.ShapeDtypeStruct((8, model.CLS_IN), jnp.float32)]),
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts", help="artifact directory")
+    ap.add_argument("--only", default=None, help="comma-separated artifact names")
+    args = ap.parse_args()
+
+    out_dir = pathlib.Path(args.out_dir)
+    out_dir.mkdir(parents=True, exist_ok=True)
+    names = args.only.split(",") if args.only else None
+
+    for name, (fn, specs) in artifact_specs().items():
+        if names and name not in names:
+            continue
+        lowered = jax.jit(fn).lower(*specs)
+        text = to_hlo_text(lowered)
+        hlo_path = out_dir / f"{name}.hlo.txt"
+        hlo_path.write_text(text)
+        # cross-language parity fixture: run the graph in jax on the
+        # deterministic probe; rust/tests/integration_runtime.rs repeats
+        # the execution through PJRT-from-Rust and must match.
+        probe_out = jax.jit(fn)(*[jnp.asarray(probe_input(s)) for s in specs])
+        checksums = [float(np.asarray(o, np.float64).sum()) for o in probe_out]
+        meta = {
+            "name": name,
+            "inputs": [{"shape": list(s.shape), "dtype": str(s.dtype)} for s in specs],
+            "outputs": [
+                {"shape": list(o.shape), "dtype": str(o.dtype)}
+                for o in lowered.out_info
+            ]
+            if hasattr(lowered, "out_info")
+            else [],
+            "probe_checksums": checksums,
+        }
+        (out_dir / f"{name}.meta.json").write_text(json.dumps(meta, indent=2))
+        print(f"wrote {hlo_path} ({len(text)} chars)")
+
+
+if __name__ == "__main__":
+    main()

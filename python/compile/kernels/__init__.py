@@ -1,0 +1,3 @@
+"""L1: Pallas kernels for the DNN-slice compute hot-spot (+ jnp oracles)."""
+
+from . import conv2d, matmul, ref  # noqa: F401

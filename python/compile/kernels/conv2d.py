@@ -1,0 +1,86 @@
+"""L1 Pallas kernel: conv2d as im2col + the tiled Pallas matmul.
+
+The paper's DNN slices are dominated by 3x3 convolutions (VGG19) and
+1x1/3x3 bottleneck convolutions (ResNet101). On GPU these map to implicit-
+GEMM threadblock tiles; the TPU re-think (DESIGN.md SSHardware-Adaptation)
+is: materialize the im2col patch matrix once per block in HBM via an XLA
+gather (free fusion), then run the MXU-shaped Pallas matmul over it, so
+the HBM<->VMEM schedule is the matmul's BlockSpec schedule.
+
+Layout is NHWC (TPU-native); weights are (kh, kw, cin, cout).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import matmul as mm
+
+
+def _im2col(x: jax.Array, kh: int, kw: int, stride: int, padding: int):
+    """(N, H, W, C) -> patch matrix (N*OH*OW, KH*KW*C) + output spatial dims."""
+    n, h, w, c = x.shape
+    if padding:
+        x = jnp.pad(x, ((0, 0), (padding, padding), (padding, padding), (0, 0)))
+    oh = (h + 2 * padding - kh) // stride + 1
+    ow = (w + 2 * padding - kw) // stride + 1
+    # Gather the kh*kw shifted views; XLA fuses the slices + stack.
+    cols = []
+    for di in range(kh):
+        for dj in range(kw):
+            cols.append(
+                jax.lax.slice(
+                    x,
+                    (0, di, dj, 0),
+                    (n, di + (oh - 1) * stride + 1, dj + (ow - 1) * stride + 1, c),
+                    (1, stride, stride, 1),
+                )
+            )
+    patches = jnp.stack(cols, axis=3)  # (N, OH, OW, KH*KW, C)
+    return patches.reshape(n * oh * ow, kh * kw * c), oh, ow
+
+
+def conv2d(
+    x: jax.Array,
+    w: jax.Array,
+    *,
+    stride: int = 1,
+    padding: int = 1,
+    bm: int = mm.DEFAULT_BM,
+    bn: int = mm.DEFAULT_BN,
+    bk: int = mm.DEFAULT_BK,
+) -> jax.Array:
+    """NHWC conv2d whose GEMM core is the Pallas matmul kernel.
+
+    x: (N, H, W, Cin); w: (KH, KW, Cin, Cout) -> (N, OH, OW, Cout).
+    """
+    kh, kw, cin, cout = w.shape
+    patches, oh, ow = _im2col(x, kh, kw, stride, padding)
+    wmat = w.reshape(kh * kw * cin, cout)
+    out = mm.matmul(patches, wmat, bm=bm, bn=bn, bk=bk)
+    n = x.shape[0]
+    return out.reshape(n, oh, ow, cout)
+
+
+def conv2d_bias_relu(
+    x: jax.Array,
+    w: jax.Array,
+    b: jax.Array,
+    *,
+    stride: int = 1,
+    padding: int = 1,
+    bm: int = mm.DEFAULT_BM,
+    bn: int = mm.DEFAULT_BN,
+    bk: int = mm.DEFAULT_BK,
+) -> jax.Array:
+    """Fused conv + bias + ReLU — the repeated unit of a VGG slice."""
+    return jnp.maximum(
+        conv2d(x, w, stride=stride, padding=padding, bm=bm, bn=bn, bk=bk) + b, 0.0
+    )
+
+
+def maxpool2(x: jax.Array) -> jax.Array:
+    """2x2/2 max-pool, NHWC — closes each VGG conv stage."""
+    n, h, w, c = x.shape
+    return jnp.max(x.reshape(n, h // 2, 2, w // 2, 2, c), axis=(2, 4))

@@ -1,0 +1,105 @@
+"""L1 Pallas kernel: tiled matmul — the compute hot-spot of every DNN slice.
+
+The paper's slice compute is CNN inference; its hot-spot (conv via im2col,
+and the fully-connected layers) reduces to GEMM. On TPU the idiomatic
+mapping is a grid over (M/bm, N/bn) output tiles with a K-loop revisiting
+an f32 VMEM accumulator, tiles sized to feed the 128x128 MXU. We express
+that schedule with BlockSpec; `interpret=True` is mandatory on this CPU
+image (real-TPU lowering emits a Mosaic custom-call the CPU PJRT plugin
+cannot execute) so correctness is validated here and MXU/VMEM figures are
+*estimated* in DESIGN.md SSPerf.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+# Default block shapes: multiples of the MXU edge (128) where the operand
+# permits. Chosen by the block-shape sweep recorded in EXPERIMENTS.md SSPerf.
+DEFAULT_BM = 128
+DEFAULT_BN = 128
+DEFAULT_BK = 128
+
+
+def _matmul_kernel(x_ref, y_ref, o_ref, acc_ref, *, n_k: int):
+    """One (bm, bn) output tile; grid dim 2 walks the K blocks.
+
+    acc_ref is a VMEM scratch accumulator in f32: partial products are
+    accumulated across the K grid dimension and written out once on the
+    final K step (double-buffered pipelining of x/y tiles is implied by
+    the BlockSpec index maps).
+    """
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _zero():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(
+        x_ref[...], y_ref[...], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(k == n_k - 1)
+    def _flush():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def _pick_block(dim: int, pref: int) -> int:
+    """Largest divisor of `dim` that is <= pref (keeps the grid exact)."""
+    b = min(dim, pref)
+    while dim % b != 0:
+        b -= 1
+    return b
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk"))
+def matmul(
+    x: jax.Array,
+    y: jax.Array,
+    *,
+    bm: int = DEFAULT_BM,
+    bn: int = DEFAULT_BN,
+    bk: int = DEFAULT_BK,
+) -> jax.Array:
+    """Tiled Pallas matmul: (M, K) @ (K, N) -> (M, N).
+
+    Block shapes are clamped to divisors of the problem shape so the grid
+    is exact; odd shapes fall back to smaller tiles rather than padding.
+    """
+    m, k = x.shape
+    k2, n = y.shape
+    assert k == k2, f"contraction mismatch: {x.shape} @ {y.shape}"
+    bm = _pick_block(m, bm)
+    bn = _pick_block(n, bn)
+    bk = _pick_block(k, bk)
+    n_k = k // bk
+
+    return pl.pallas_call(
+        functools.partial(_matmul_kernel, n_k=n_k),
+        grid=(m // bm, n // bn, n_k),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=True,  # CPU image: Mosaic custom-calls are not runnable
+    )(x, y)
+
+
+def vmem_bytes(bm: int, bn: int, bk: int, itemsize: int = 4) -> int:
+    """Estimated VMEM working set for one grid step: x tile + y tile +
+    accumulator + output tile (double-buffered inputs)."""
+    return 2 * (bm * bk + bk * bn) * itemsize + 2 * (bm * bn) * 4
+
+
+def mxu_utilization(bm: int, bn: int, bk: int) -> float:
+    """Fraction of the 128x128x8 MXU issue shape covered by one tile —
+    the structural efficiency estimate used in DESIGN.md SSPerf."""
+    return min(bm / 128, 1.0) * min(bn / 128, 1.0) * min(bk / 128, 1.0)

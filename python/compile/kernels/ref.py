@@ -1,0 +1,46 @@
+"""Pure-jnp correctness oracles for the L1 Pallas kernels.
+
+Every kernel in this package must match these references under
+`numpy.testing.assert_allclose` — pytest + hypothesis sweep shapes and
+dtypes in python/tests/.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def matmul_ref(x: jax.Array, y: jax.Array) -> jax.Array:
+    """(M, K) @ (K, N) with f32 accumulation — oracle for kernels.matmul."""
+    return jnp.dot(x, y, preferred_element_type=jnp.float32).astype(x.dtype)
+
+
+def conv2d_ref(
+    x: jax.Array, w: jax.Array, *, stride: int = 1, padding: int = 1
+) -> jax.Array:
+    """NHWC conv via lax.conv_general_dilated — oracle for kernels.conv2d."""
+    return jax.lax.conv_general_dilated(
+        x,
+        w,
+        window_strides=(stride, stride),
+        padding=[(padding, padding), (padding, padding)],
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+
+
+def conv2d_bias_relu_ref(
+    x: jax.Array, w: jax.Array, b: jax.Array, *, stride: int = 1, padding: int = 1
+) -> jax.Array:
+    return jnp.maximum(conv2d_ref(x, w, stride=stride, padding=padding) + b, 0.0)
+
+
+def maxpool2_ref(x: jax.Array) -> jax.Array:
+    return jax.lax.reduce_window(
+        x,
+        -jnp.inf,
+        jax.lax.max,
+        window_dimensions=(1, 2, 2, 1),
+        window_strides=(1, 2, 2, 1),
+        padding="VALID",
+    )

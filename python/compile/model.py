@@ -1,0 +1,117 @@
+"""L2: JAX compute graphs for the satellite-side DNN slice forwards.
+
+Each satellite in the paper executes one *segment* of a partitioned DNN
+(VGG19 or ResNet101). The Rust coordinator does not re-implement the
+network: these build-time JAX functions (whose GEMM core is the L1 Pallas
+kernel) are AOT-lowered by aot.py to HLO text, and rust/src/runtime/ runs
+them through PJRT on the request path.
+
+Exported graphs (fixed shapes chosen to be Pi-class-representative while
+staying fast on the CPU PJRT backend):
+
+  vgg_slice      — [conv3x3+bias+relu] x2 + maxpool on (1, 56, 56, 64)
+                   (the repeated stage-unit of a VGG19 segment)
+  resnet_slice   — 1x1 -> 3x3 -> 1x1 bottleneck with residual add on
+                   (1, 56, 56, 256) (the repeated unit of ResNet101)
+  qnet           — DQN Q-network MLP (STATE_DIM -> 64 -> 64 -> N_ACTIONS)
+                   used by the DQN offloading baseline's serve path
+  classifier     — FC head: flatten -> (D, CLASSES) matmul (final slice)
+
+Weights are synthetic (seeded); splitting/offloading decisions depend on
+layer *shapes* (workload, activation bytes), never on weight values — see
+DESIGN.md SS4.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import conv2d as k_conv
+from .kernels import matmul as k_mm
+
+# ---------------------------------------------------------------- shapes
+VGG_IN = (1, 56, 56, 64)        # N, H, W, C of the representative slice input
+RESNET_IN = (1, 56, 56, 256)
+STATE_DIM = 32                  # DQN observation: local loads + segment sizes
+N_ACTIONS = 5                   # stay + 4 torus neighbours
+CLASSES = 1000
+CLS_IN = 512   # kept modest: weights are embedded in HLO text
+
+
+def _key(i: int) -> jax.Array:
+    return jax.random.PRNGKey(i)
+
+
+# ------------------------------------------------------------- vgg slice
+def vgg_slice_params():
+    k1, k2 = jax.random.split(_key(0))
+    c = VGG_IN[3]
+    w1 = jax.random.normal(k1, (3, 3, c, c), jnp.float32) * (2.0 / (9 * c)) ** 0.5
+    w2 = jax.random.normal(k2, (3, 3, c, c), jnp.float32) * (2.0 / (9 * c)) ** 0.5
+    b1 = jnp.zeros((c,), jnp.float32)
+    b2 = jnp.zeros((c,), jnp.float32)
+    return w1, b1, w2, b2
+
+
+# Block shapes for the slice GEMMs (M=3136, K=576, N=64 after im2col):
+# one full-M/K/N tile = 15.6 MiB estimated VMEM (double-buffered inputs +
+# f32 accumulator) — inside the 16 MiB budget with a single grid trip.
+# Chosen by the sweep in EXPERIMENTS.md SSPerf (L1): grid trips dominate
+# interpret-mode latency (1 step: 3.4 ms vs 168 steps: 254 ms), and on a
+# real TPU fewer trips = fewer HBM round-trips for the same MXU work.
+VGG_BLOCKS = dict(bm=3136, bn=64, bk=576)
+RESNET_BLOCKS = dict(bm=3136, bn=256, bk=576)
+
+
+def vgg_slice(x, w1, b1, w2, b2):
+    """conv3x3-relu -> conv3x3-relu -> maxpool2: one VGG19 stage unit."""
+    h = k_conv.conv2d_bias_relu(x, w1, b1, **VGG_BLOCKS)
+    h = k_conv.conv2d_bias_relu(h, w2, b2, **VGG_BLOCKS)
+    return (k_conv.maxpool2(h),)
+
+
+# ---------------------------------------------------------- resnet slice
+def resnet_slice_params():
+    k1, k2, k3 = jax.random.split(_key(1), 3)
+    c, mid = RESNET_IN[3], RESNET_IN[3] // 4
+    w1 = jax.random.normal(k1, (1, 1, c, mid), jnp.float32) * (2.0 / c) ** 0.5
+    w2 = jax.random.normal(k2, (3, 3, mid, mid), jnp.float32) * (2.0 / (9 * mid)) ** 0.5
+    w3 = jax.random.normal(k3, (1, 1, mid, c), jnp.float32) * (2.0 / mid) ** 0.5
+    return w1, w2, w3
+
+
+def resnet_slice(x, w1, w2, w3):
+    """1x1 reduce -> 3x3 -> 1x1 expand + residual: ResNet101 bottleneck."""
+    h = jnp.maximum(k_conv.conv2d(x, w1, padding=0, **RESNET_BLOCKS), 0.0)
+    h = jnp.maximum(k_conv.conv2d(h, w2, padding=1, **RESNET_BLOCKS), 0.0)
+    h = k_conv.conv2d(h, w3, padding=0, **RESNET_BLOCKS)
+    return (jnp.maximum(h + x, 0.0),)
+
+
+# ------------------------------------------------------------------ qnet
+def qnet_params():
+    k1, k2, k3 = jax.random.split(_key(2), 3)
+    w1 = jax.random.normal(k1, (STATE_DIM, 64), jnp.float32) * (2.0 / STATE_DIM) ** 0.5
+    w2 = jax.random.normal(k2, (64, 64), jnp.float32) * (2.0 / 64) ** 0.5
+    w3 = jax.random.normal(k3, (64, N_ACTIONS), jnp.float32) * (2.0 / 64) ** 0.5
+    return w1, w2, w3
+
+
+def qnet(s, w1, w2, w3):
+    """DQN Q(s, .) forward over a batch of observations (B, STATE_DIM)."""
+    h = jnp.maximum(k_mm.matmul(s, w1, bm=8, bk=32, bn=64), 0.0)
+    h = jnp.maximum(k_mm.matmul(h, w2, bm=8, bk=64, bn=64), 0.0)
+    return (k_mm.matmul(h, w3, bm=8, bk=64, bn=N_ACTIONS),)
+
+
+# ------------------------------------------------------------ classifier
+def classifier_params():
+    k1 = _key(3)
+    w = jax.random.normal(k1, (CLS_IN, CLASSES), jnp.float32) * (1.0 / CLS_IN) ** 0.5
+    return (w,)
+
+
+def classifier(x, w):
+    """Final FC slice: (B, CLS_IN) -> logits (B, CLASSES)."""
+    return (k_mm.matmul(x, w),)

@@ -1,0 +1,6 @@
+"""Make `import compile...` work when pytest runs from the repo root
+(e.g. `pytest python/tests/ -q`)."""
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(__file__))

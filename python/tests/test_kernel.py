@@ -1,0 +1,146 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles.
+
+Hypothesis sweeps shapes/dtypes; assert_allclose against ref.py is THE
+correctness signal for everything the Rust runtime will execute.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import conv2d as k_conv
+from compile.kernels import matmul as k_mm
+from compile.kernels import ref
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+def _rand(key, shape, dtype):
+    return jax.random.normal(jax.random.PRNGKey(key), shape, jnp.float32).astype(dtype)
+
+
+# ----------------------------------------------------------------- matmul
+@settings(**SETTINGS)
+@given(
+    m=st.integers(1, 96),
+    k=st.integers(1, 96),
+    n=st.integers(1, 96),
+)
+def test_matmul_matches_ref_shapes(m, k, n):
+    x = _rand(m * 7 + 1, (m, k), jnp.float32)
+    y = _rand(n * 13 + 2, (k, n), jnp.float32)
+    np.testing.assert_allclose(
+        k_mm.matmul(x, y), ref.matmul_ref(x, y), rtol=1e-4, atol=1e-4
+    )
+
+
+@settings(**SETTINGS)
+@given(
+    bm=st.sampled_from([8, 16, 32, 64, 128]),
+    bn=st.sampled_from([8, 16, 32, 64, 128]),
+    bk=st.sampled_from([8, 16, 32, 64, 128]),
+)
+def test_matmul_block_shape_invariance(bm, bn, bk):
+    """Result must not depend on the chosen tiling."""
+    x = _rand(3, (64, 128), jnp.float32)
+    y = _rand(4, (128, 32), jnp.float32)
+    np.testing.assert_allclose(
+        k_mm.matmul(x, y, bm=bm, bn=bn, bk=bk),
+        ref.matmul_ref(x, y),
+        rtol=1e-4,
+        atol=1e-4,
+    )
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_matmul_dtypes(dtype):
+    x = _rand(5, (32, 64), dtype)
+    y = _rand(6, (64, 16), dtype)
+    got = k_mm.matmul(x, y)
+    want = ref.matmul_ref(x, y)
+    assert got.dtype == want.dtype
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32),
+        np.asarray(want, np.float32),
+        rtol=2e-2 if dtype == jnp.bfloat16 else 1e-4,
+        atol=2e-2 if dtype == jnp.bfloat16 else 1e-4,
+    )
+
+
+def test_matmul_identity():
+    x = _rand(7, (16, 16), jnp.float32)
+    np.testing.assert_allclose(
+        k_mm.matmul(x, jnp.eye(16)), x, rtol=1e-5, atol=1e-5
+    )
+
+
+def test_pick_block_divides():
+    for dim in [1, 7, 56, 128, 224, 1000]:
+        for pref in [8, 128]:
+            b = k_mm._pick_block(dim, pref)
+            assert dim % b == 0 and 1 <= b <= min(dim, pref)
+
+
+def test_vmem_estimate_monotone():
+    assert k_mm.vmem_bytes(128, 128, 128) > k_mm.vmem_bytes(64, 64, 64)
+    assert 0 < k_mm.mxu_utilization(64, 128, 128) < 1.0
+    assert k_mm.mxu_utilization(128, 128, 128) == 1.0
+
+
+# ----------------------------------------------------------------- conv2d
+@settings(**SETTINGS)
+@given(
+    h=st.integers(4, 20),
+    cin=st.sampled_from([3, 8, 16]),
+    cout=st.sampled_from([4, 8, 32]),
+    stride=st.sampled_from([1, 2]),
+)
+def test_conv2d_matches_ref(h, cin, cout, stride):
+    x = _rand(h * 3, (1, h, h, cin), jnp.float32)
+    w = _rand(cout, (3, 3, cin, cout), jnp.float32)
+    np.testing.assert_allclose(
+        k_conv.conv2d(x, w, stride=stride, padding=1),
+        ref.conv2d_ref(x, w, stride=stride, padding=1),
+        rtol=1e-4,
+        atol=1e-4,
+    )
+
+
+@pytest.mark.parametrize("k,pad", [(1, 0), (3, 1), (5, 2), (7, 3)])
+def test_conv2d_kernel_sizes(k, pad):
+    x = _rand(11, (1, 14, 14, 8), jnp.float32)
+    w = _rand(12, (k, k, 8, 16), jnp.float32)
+    np.testing.assert_allclose(
+        k_conv.conv2d(x, w, padding=pad),
+        ref.conv2d_ref(x, w, padding=pad),
+        rtol=1e-4,
+        atol=1e-4,
+    )
+
+
+def test_conv2d_batched():
+    x = _rand(13, (4, 8, 8, 4), jnp.float32)
+    w = _rand(14, (3, 3, 4, 8), jnp.float32)
+    np.testing.assert_allclose(
+        k_conv.conv2d(x, w), ref.conv2d_ref(x, w), rtol=1e-4, atol=1e-4
+    )
+
+
+def test_conv_bias_relu_nonnegative():
+    x = _rand(15, (1, 8, 8, 4), jnp.float32)
+    w = _rand(16, (3, 3, 4, 8), jnp.float32)
+    b = _rand(17, (8,), jnp.float32)
+    got = k_conv.conv2d_bias_relu(x, w, b)
+    assert (np.asarray(got) >= 0).all()
+    np.testing.assert_allclose(
+        got, ref.conv2d_bias_relu_ref(x, w, b), rtol=1e-4, atol=1e-4
+    )
+
+
+@settings(**SETTINGS)
+@given(h=st.sampled_from([4, 8, 12, 16]), c=st.sampled_from([1, 4, 16]))
+def test_maxpool_matches_ref(h, c):
+    x = _rand(h + c, (2, h, h, c), jnp.float32)
+    np.testing.assert_allclose(k_conv.maxpool2(x), ref.maxpool2_ref(x))

@@ -1,0 +1,68 @@
+//! Ablation bench: GA solution quality and cost vs its hyper-parameters
+//! (N_iter, population N_K) — the design-choice study DESIGN.md calls
+//! abl-ga. Also isolates GA decide() latency per task.
+
+use satkit::bench::{bench, quick_mode, section};
+use satkit::config::GaConfig;
+use satkit::experiments as exp;
+use satkit::offload::{make_scheme, OffloadContext, SchemeKind};
+use satkit::satellite::Satellite;
+use satkit::topology::Torus;
+use satkit::util::rng::Pcg64;
+
+fn main() {
+    let quick = quick_mode();
+    let opts = exp::SweepOpts {
+        slots: if quick { 3 } else { 8 },
+        ..exp::SweepOpts::default()
+    };
+
+    section("quality vs N_iter (VGG19, lambda=40, SCC)");
+    let iters: Vec<usize> = if quick { vec![1, 10] } else { vec![1, 2, 5, 10, 20, 40] };
+    println!("{:>8} {:>14} {:>14} {:>16}", "N_iter", "complete", "delay", "variance");
+    for (it, r) in exp::ablation_ga(&iters, &opts) {
+        println!(
+            "{it:>8} {:>13.2}% {:>12.1}ms {:>16.3e}",
+            100.0 * r.completion_rate(),
+            r.avg_delay_ms,
+            r.workload_variance
+        );
+    }
+
+    section("GA decide() latency per task (Table-I params)");
+    let torus = Torus::new(10);
+    let mut sats: Vec<Satellite> =
+        (0..100).map(|i| Satellite::new(i, 3000.0, 15000.0)).collect();
+    let mut rng = Pcg64::seed_from_u64(1);
+    for s in sats.iter_mut() {
+        s.try_load(rng.f64_in(0.0, 12_000.0));
+    }
+    let cands = torus.decision_space(42, 3);
+    let segments = vec![3800.0, 3900.0, 3700.0, 3800.0]; // ResNet101 L=4-ish
+    for (nk, ni) in [(10usize, 5usize), (20, 10), (40, 20)] {
+        let ga = GaConfig {
+            n_k: nk,
+            n_iter: ni,
+            ..GaConfig::default()
+        };
+        let ctx = OffloadContext {
+            torus: &torus,
+            satellites: &sats,
+            origin: 42,
+            candidates: &cands,
+            segments: &segments,
+            kappa: 1e-4,
+            ga: &ga,
+        };
+        let mut scheme = make_scheme(SchemeKind::Scc, 3);
+        let r = bench(
+            &format!("GA decide N_K={nk} N_iter={ni}"),
+            3,
+            if quick { 10 } else { 50 },
+            || {
+                std::hint::black_box(scheme.decide(&ctx));
+            },
+        );
+        println!("{}", r.row());
+    }
+}

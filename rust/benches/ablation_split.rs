@@ -1,0 +1,60 @@
+//! Ablation bench: Alg. 1 workload-balanced splitting vs naive
+//! equal-layer-count cuts, under the SCC offloader (DESIGN.md abl-split).
+//! Shows why min-max balance (Eq. 3) matters: VGG19's fc-heavy tail makes
+//! naive cuts badly unbalanced, inflating drops at high λ.
+
+use satkit::bench::{bench, quick_mode, section};
+use satkit::dnn::DnnModel;
+use satkit::experiments as exp;
+use satkit::splitting::{balanced_split, naive_equal_layers};
+
+fn main() {
+    let quick = quick_mode();
+    let opts = exp::SweepOpts {
+        slots: if quick { 3 } else { 10 },
+        ..exp::SweepOpts::default()
+    };
+    let lambdas: Vec<f64> = if quick { vec![25.0] } else { vec![10.0, 25.0, 40.0, 55.0] };
+
+    section("static split quality (max block / mean block)");
+    for model in [DnnModel::Vgg19, DnnModel::Resnet101] {
+        let w = model.profile().workloads();
+        let (l, _) = model.table1_defaults();
+        let bal = balanced_split(&w, l, 1.0);
+        let naive = naive_equal_layers(&w, l);
+        println!(
+            "{:<10} L={l}  balanced max={:.0} (ratio {:.3})   naive max={:.0} (ratio {:.3})",
+            model.name(),
+            bal.max_block_workload(),
+            bal.balance_ratio(),
+            naive.max_block_workload(),
+            naive.balance_ratio()
+        );
+    }
+
+    section("end-to-end: completion & delay under SCC");
+    for model in [DnnModel::Vgg19, DnnModel::Resnet101] {
+        let rows = exp::ablation_split(model, &lambdas, &opts);
+        println!("{}:", model.name());
+        println!(
+            "{:>8} {:>14} {:>14} {:>12} {:>12}",
+            "lambda", "bal complete", "naive complete", "bal delay", "naive delay"
+        );
+        for (l, b, n) in &rows {
+            println!(
+                "{l:>8.0} {:>13.2}% {:>13.2}% {:>10.1}ms {:>10.1}ms",
+                100.0 * b.completion_rate(),
+                100.0 * n.completion_rate(),
+                b.avg_delay_ms,
+                n.avg_delay_ms
+            );
+        }
+    }
+
+    section("split cost");
+    let w = DnnModel::Resnet101.profile().workloads();
+    let r = bench("balanced_split resnet101 L=4", 10, 100, || {
+        std::hint::black_box(balanced_split(&w, 4, 1.0));
+    });
+    println!("{}", r.row());
+}

@@ -1,0 +1,46 @@
+//! Bench: regenerate Fig. 2 (ResNet101, L=4, D_M=3) — completion rate,
+//! total average delay, and workload variance vs λ for all four schemes —
+//! and time each (λ, scheme) cell.
+//!
+//! `SATKIT_BENCH_QUICK=1` shrinks the sweep for smoke runs.
+
+use satkit::bench::{bench, quick_mode, section};
+use satkit::dnn::DnnModel;
+use satkit::experiments as exp;
+use satkit::offload::SchemeKind;
+
+fn main() {
+    let quick = quick_mode();
+    let opts = exp::SweepOpts {
+        slots: if quick { 4 } else { 12 },
+        ..exp::SweepOpts::default()
+    };
+    let lambdas: Vec<f64> = if quick {
+        vec![4.0, 25.0]
+    } else {
+        exp::default_lambdas()
+    };
+
+    section("Fig 2 (ResNet101): generation");
+    let rows = exp::lambda_sweep(DnnModel::Resnet101, &lambdas, &opts);
+    println!("{}", exp::render_panels("Fig 2 — ResNet101", &rows, "lambda"));
+    std::fs::create_dir_all("results").ok();
+    std::fs::write("results/fig2.json", exp::rows_to_json(&rows).to_string()).ok();
+    println!("wrote results/fig2.json");
+
+    section("Fig 2: per-cell decision cost");
+    for scheme in SchemeKind::all() {
+        let r = bench(
+            &format!("resnet101 lambda=25 {}", scheme.name()),
+            0,
+            if quick { 1 } else { 3 },
+            || {
+                exp::run_point(DnnModel::Resnet101, 25.0, scheme, &exp::SweepOpts {
+                    slots: 3,
+                    ..opts.clone()
+                });
+            },
+        );
+        println!("{}", r.row());
+    }
+}

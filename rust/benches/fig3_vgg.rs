@@ -1,0 +1,43 @@
+//! Bench: regenerate Fig. 3 (VGG19, L=3, D_M=2) — the same three panels
+//! as Fig. 2 for the second evaluated model.
+
+use satkit::bench::{bench, quick_mode, section};
+use satkit::dnn::DnnModel;
+use satkit::experiments as exp;
+use satkit::offload::SchemeKind;
+
+fn main() {
+    let quick = quick_mode();
+    let opts = exp::SweepOpts {
+        slots: if quick { 4 } else { 12 },
+        ..exp::SweepOpts::default()
+    };
+    let lambdas: Vec<f64> = if quick {
+        vec![4.0, 25.0]
+    } else {
+        exp::default_lambdas()
+    };
+
+    section("Fig 3 (VGG19): generation");
+    let rows = exp::lambda_sweep(DnnModel::Vgg19, &lambdas, &opts);
+    println!("{}", exp::render_panels("Fig 3 — VGG19", &rows, "lambda"));
+    std::fs::create_dir_all("results").ok();
+    std::fs::write("results/fig3.json", exp::rows_to_json(&rows).to_string()).ok();
+    println!("wrote results/fig3.json");
+
+    section("Fig 3: per-cell decision cost");
+    for scheme in SchemeKind::all() {
+        let r = bench(
+            &format!("vgg19 lambda=25 {}", scheme.name()),
+            0,
+            if quick { 1 } else { 3 },
+            || {
+                exp::run_point(DnnModel::Vgg19, 25.0, scheme, &exp::SweepOpts {
+                    slots: 3,
+                    ..opts.clone()
+                });
+            },
+        );
+        println!("{}", r.row());
+    }
+}

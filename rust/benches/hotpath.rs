@@ -1,0 +1,92 @@
+//! Hot-path microbenches (§Perf): the pieces the profiler identified —
+//! Eq. 12 deficit evaluation, GA reproduction, Alg. 1 splitting, one
+//! simulator slot per scheme, and (when artifacts exist) raw PJRT slice
+//! execution latency.
+
+use satkit::bench::{bench, quick_mode, section};
+use satkit::config::{GaConfig, SimConfig};
+use satkit::dnn::DnnModel;
+use satkit::offload::{make_scheme, OffloadContext, SchemeKind};
+use satkit::satellite::Satellite;
+use satkit::sim::Simulation;
+use satkit::splitting::balanced_split;
+use satkit::topology::Torus;
+use satkit::util::rng::Pcg64;
+
+fn main() {
+    let quick = quick_mode();
+    let iters = if quick { 20 } else { 200 };
+
+    section("Eq.12 deficit evaluation");
+    let torus = Torus::new(10);
+    let mut sats: Vec<Satellite> =
+        (0..100).map(|i| Satellite::new(i, 3000.0, 15000.0)).collect();
+    let mut rng = Pcg64::seed_from_u64(1);
+    for s in sats.iter_mut() {
+        s.try_load(rng.f64_in(0.0, 12_000.0));
+    }
+    let ga = GaConfig::default();
+    let cands = torus.decision_space(42, 3);
+    let segments = vec![3800.0, 3900.0, 3700.0, 3800.0];
+    let ctx = OffloadContext {
+        torus: &torus,
+        satellites: &sats,
+        origin: 42,
+        candidates: &cands,
+        segments: &segments,
+        kappa: 1e-4,
+        ga: &ga,
+    };
+    let chrom: Vec<usize> = (0..4).map(|_| *rng.choose(&cands)).collect();
+    let r = bench("deficit(L=4, |A_x|=25)", 100, iters * 50, || {
+        std::hint::black_box(ctx.deficit(&chrom));
+    });
+    println!("{}", r.row());
+
+    section("scheme decide() per task");
+    for kind in SchemeKind::all() {
+        let mut scheme = make_scheme(kind, 7);
+        let r = bench(&format!("{} decide", kind.name()), 3, iters, || {
+            std::hint::black_box(scheme.decide(&ctx));
+        });
+        println!("{}", r.row());
+    }
+
+    section("Alg.1 balanced split");
+    for model in [DnnModel::Vgg19, DnnModel::Resnet101] {
+        let w = model.profile().workloads();
+        let (l, _) = model.table1_defaults();
+        let r = bench(&format!("{} split L={l}", model.name()), 10, iters * 10, || {
+            std::hint::black_box(balanced_split(&w, l, 1.0));
+        });
+        println!("{}", r.row());
+    }
+
+    section("one simulated slot (N=10, lambda=25)");
+    for kind in SchemeKind::all() {
+        let r = bench(&format!("{} slot", kind.name()), 0, if quick { 1 } else { 3 }, || {
+            let cfg = SimConfig {
+                slots: 1,
+                ..SimConfig::default()
+            };
+            Simulation::new(&cfg, kind).run();
+        });
+        println!("{}", r.row());
+    }
+
+    section("PJRT slice execution (requires artifacts)");
+    let dir = satkit::runtime::default_artifact_dir();
+    if dir.join("vgg_slice.hlo.txt").exists() {
+        let mut engine = satkit::runtime::Engine::cpu().unwrap();
+        engine.load_dir(&dir).unwrap();
+        for (name, n_in) in [("vgg_slice", 56 * 56 * 64), ("resnet_slice", 56 * 56 * 256), ("qnet", 256)] {
+            let input: Vec<f32> = (0..n_in).map(|i| (i % 13) as f32 * 0.1).collect();
+            let r = bench(&format!("{name} execute"), 2, if quick { 5 } else { 20 }, || {
+                std::hint::black_box(engine.run_f32(name, &[input.clone()]).unwrap());
+            });
+            println!("{}", r.row());
+        }
+    } else {
+        println!("skipped (run `make artifacts`)");
+    }
+}

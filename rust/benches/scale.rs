@@ -1,0 +1,34 @@
+//! Bench: regenerate the §V-B network-scale study — completion rate vs
+//! constellation size N ∈ {4..32} (up to 1024 satellites) at λ = 25 —
+//! and time a full slot at each scale.
+
+use satkit::bench::{bench, quick_mode, section};
+use satkit::experiments as exp;
+
+fn main() {
+    let quick = quick_mode();
+    let opts = exp::SweepOpts {
+        slots: if quick { 3 } else { 8 },
+        ..exp::SweepOpts::default()
+    };
+    let ns: Vec<usize> = if quick { vec![4, 8] } else { exp::default_ns() };
+
+    section("network-scale study: generation");
+    let rows = exp::scale(&ns, &opts);
+    println!("{}", exp::render_panels("scale — completion vs N (lambda=25)", &rows, "N"));
+    std::fs::create_dir_all("results").ok();
+    std::fs::write("results/scale.json", exp::rows_to_json(&rows).to_string()).ok();
+    println!("wrote results/scale.json");
+
+    section("scale: wall time per simulated slot (SCC)");
+    for &n in &ns {
+        let r = bench(&format!("N={n} ({} sats) one-slot sim", n * n), 0, 1, || {
+            let mut cfg = satkit::config::SimConfig::default();
+            cfg.n = n;
+            cfg.lambda = 25.0;
+            cfg.slots = 1;
+            satkit::sim::Simulation::new(&cfg, satkit::offload::SchemeKind::Scc).run();
+        });
+        println!("{}", r.row());
+    }
+}

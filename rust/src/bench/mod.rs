@@ -1,0 +1,86 @@
+//! Bench harness substrate (the offline image has no criterion): a small
+//! wall-clock timing framework with warmup, repetitions, and
+//! mean/stddev/min reporting, used by every target in `rust/benches/`.
+
+use crate::util::stats;
+use std::time::Instant;
+
+/// Result of one benchmark case.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub mean_ms: f64,
+    pub stddev_ms: f64,
+    pub min_ms: f64,
+    pub iters: usize,
+}
+
+impl BenchResult {
+    pub fn row(&self) -> String {
+        format!(
+            "{:<44} {:>10.3} ms ± {:>8.3} (min {:>10.3}, n={})",
+            self.name, self.mean_ms, self.stddev_ms, self.min_ms, self.iters
+        )
+    }
+}
+
+/// Time `f` with `warmup` throwaway runs and `iters` measured runs.
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> BenchResult {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters.max(1) {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64() * 1e3);
+    }
+    BenchResult {
+        name: name.to_string(),
+        mean_ms: stats::mean(&samples),
+        stddev_ms: stats::stddev_sample(&samples),
+        min_ms: samples.iter().cloned().fold(f64::INFINITY, f64::min),
+        iters: samples.len(),
+    }
+}
+
+/// Standard bench-binary preamble: honour `SATKIT_BENCH_QUICK=1`.
+pub fn quick_mode() -> bool {
+    std::env::var("SATKIT_BENCH_QUICK").map(|v| v == "1").unwrap_or(false)
+}
+
+/// Print a section header.
+pub fn section(title: &str) {
+    println!("\n=== {title} ===");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        let r = bench("spin", 1, 5, || {
+            let mut x = 0u64;
+            for i in 0..10_000 {
+                x = x.wrapping_add(i);
+            }
+            std::hint::black_box(x);
+        });
+        assert!(r.mean_ms >= 0.0);
+        assert_eq!(r.iters, 5);
+        assert!(r.min_ms <= r.mean_ms + 1e-9);
+    }
+
+    #[test]
+    fn row_formats() {
+        let r = BenchResult {
+            name: "x".into(),
+            mean_ms: 1.0,
+            stddev_ms: 0.1,
+            min_ms: 0.9,
+            iters: 3,
+        };
+        assert!(r.row().contains("ms"));
+    }
+}

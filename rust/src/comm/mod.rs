@@ -1,0 +1,164 @@
+//! Communication models (§III-B): gateway↔satellite Shannon rate with
+//! shadowed-Rician fading (Eq. 1) and the inter-satellite Gaussian-channel
+//! rate (Eq. 2). Also derives the per-hop transfer coefficient the delay
+//! model (Eq. 7) multiplies by workload × Manhattan hops.
+
+use crate::config::CommConfig;
+use crate::util::rng::Pcg64;
+
+const BOLTZMANN: f64 = 1.380_649e-23;
+
+#[inline]
+fn db_to_lin(db: f64) -> f64 {
+    10f64.powf(db / 10.0)
+}
+
+/// Channel state for the gateway↔satellite uplink: samples the composite
+/// gain ξ_{g,i}(t) = large-scale fading × shadowed-Rician small-scale term.
+#[derive(Clone, Debug)]
+pub struct GatewayChannel {
+    cfg: CommConfig,
+    /// Free-space path loss at the current elevation [dB] (large-scale).
+    pub path_loss_db: f64,
+}
+
+impl GatewayChannel {
+    /// LEO uplink at ~550 km / Ku-band ⇒ ≈ 169 dB free-space loss; callers
+    /// can override per-elevation.
+    pub fn new(cfg: CommConfig) -> GatewayChannel {
+        GatewayChannel {
+            cfg,
+            path_loss_db: 169.0,
+        }
+    }
+
+    /// Sample the composite channel gain ξ (linear). Shadowed-Rician: a
+    /// Rician LOS term whose mean power is log-normally shadowed.
+    pub fn sample_gain(&self, rng: &mut Pcg64) -> f64 {
+        let k = db_to_lin(self.cfg.rician_k_db);
+        // Rician fading power: |sqrt(K/(K+1)) + sqrt(1/(K+1))·CN(0,1)|²
+        let sigma = (1.0 / (2.0 * (k + 1.0))).sqrt();
+        let los = (k / (k + 1.0)).sqrt();
+        let re = los + sigma * rng.normal();
+        let im = sigma * rng.normal();
+        let small_scale = re * re + im * im;
+        // log-normal shadowing of the large-scale term
+        let shadow_db = rng.normal_with(0.0, self.cfg.shadow_sigma_db);
+        db_to_lin(-(self.path_loss_db + shadow_db) + self.cfg.antenna_gain_dbi) * small_scale
+    }
+
+    /// Eq. 1 — average uplink rate v_{g,i}(t) [bit/s]:
+    /// `B0·log2(1 + P_g·ξ/M_G)`.
+    pub fn rate_bps(&self, gain: f64) -> f64 {
+        let p_g = db_to_lin(self.cfg.gw_tx_power_dbw);
+        let noise = db_to_lin(self.cfg.gw_noise_dbw);
+        self.cfg.gw_bandwidth_hz * (1.0 + p_g * gain / noise).log2()
+    }
+
+    /// Time [s] to upload `bytes` at the sampled rate.
+    pub fn upload_secs(&self, bytes: f64, rng: &mut Pcg64) -> f64 {
+        let r = self.rate_bps(self.sample_gain(rng)).max(1.0);
+        bytes * 8.0 / r
+    }
+}
+
+/// Inter-satellite link model (Eq. 2).
+#[derive(Clone, Debug)]
+pub struct IslLink {
+    cfg: CommConfig,
+}
+
+impl IslLink {
+    pub fn new(cfg: CommConfig) -> IslLink {
+        IslLink { cfg }
+    }
+
+    /// Eq. 2 — max achievable ISL data rate r(i,j) [bit/s]:
+    /// `B·log2(1 + P_t·G_i(j)·G_j(i)·L_i(j)·L_j(i) / (k·T·B))`.
+    pub fn rate_bps(&self) -> f64 {
+        let p_t = db_to_lin(self.cfg.sat_tx_power_dbw);
+        let gains = db_to_lin(self.cfg.antenna_gain_dbi);
+        let pointing = self.cfg.pointing_coeff * self.cfg.pointing_coeff;
+        // Intra-plane ISL path loss at ~2,000 km / 26 GHz ≈ 186 dB.
+        let path = db_to_lin(-186.0);
+        let noise = BOLTZMANN * self.cfg.noise_temp_k * self.cfg.isl_bandwidth_hz;
+        let snr = p_t * gains * pointing * path / noise;
+        self.cfg.isl_bandwidth_hz * (1.0 + snr).log2()
+    }
+
+    /// Seconds to push `bytes` across ONE hop.
+    pub fn hop_secs(&self, bytes: f64) -> f64 {
+        bytes * 8.0 / self.rate_bps().max(1.0)
+    }
+
+    /// The Eq. 7 transfer coefficient κ [s per (MFLOP·hop)].
+    ///
+    /// Eq. 7 charges transmission as `MH(s_k, s_{k+1}) · q_k`: the shipped
+    /// tensor is proxied by the segment workload. κ converts that product
+    /// to seconds using the model's mean activation-bytes-per-MFLOP ratio
+    /// and the ISL rate, so delays stay in physical units.
+    pub fn kappa_secs_per_mflop_hop(&self, bytes_per_mflop: f64) -> f64 {
+        self.hop_secs(bytes_per_mflop)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::CommConfig;
+
+    #[test]
+    fn isl_rate_in_plausible_band() {
+        let link = IslLink::new(CommConfig::default());
+        let r = link.rate_bps();
+        // 20 MHz channel: between 1 Mb/s and 20 MHz * ~10 b/s/Hz
+        assert!(r > 1e6 && r < 2.5e8, "rate = {r}");
+    }
+
+    #[test]
+    fn hop_time_scales_linearly() {
+        let link = IslLink::new(CommConfig::default());
+        let t1 = link.hop_secs(1e6);
+        let t2 = link.hop_secs(2e6);
+        assert!((t2 / t1 - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn gateway_rate_positive_and_bounded() {
+        let ch = GatewayChannel::new(CommConfig::default());
+        let mut rng = Pcg64::seed_from_u64(1);
+        for _ in 0..100 {
+            let g = ch.sample_gain(&mut rng);
+            assert!(g > 0.0);
+            let r = ch.rate_bps(g);
+            assert!(r >= 0.0 && r < 10e6 * 40.0, "r={r}");
+        }
+    }
+
+    #[test]
+    fn shadowing_makes_gain_stochastic() {
+        let ch = GatewayChannel::new(CommConfig::default());
+        let mut rng = Pcg64::seed_from_u64(2);
+        let a = ch.sample_gain(&mut rng);
+        let b = ch.sample_gain(&mut rng);
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn higher_bandwidth_higher_rate() {
+        let mut hi = CommConfig::default();
+        hi.isl_bandwidth_hz *= 2.0;
+        let r_lo = IslLink::new(CommConfig::default()).rate_bps();
+        let r_hi = IslLink::new(hi).rate_bps();
+        assert!(r_hi > r_lo);
+    }
+
+    #[test]
+    fn upload_secs_reasonable() {
+        let ch = GatewayChannel::new(CommConfig::default());
+        let mut rng = Pcg64::seed_from_u64(3);
+        // 224x224x3 f32 image = 602,112 bytes over a ~10-40 Mb/s link
+        let t = ch.upload_secs(602_112.0, &mut rng);
+        assert!(t > 1e-3 && t < 30.0, "t={t}");
+    }
+}

@@ -1,0 +1,450 @@
+//! Configuration system: every Table I parameter, with TOML-file loading
+//! (a self-contained TOML-subset parser — the image has no serde/toml) and
+//! CLI overrides.
+//!
+//! Defaults reproduce Table I of the paper exactly; see
+//! [`SimConfig::default`] and [`GaConfig::default`].
+
+mod toml_lite;
+
+pub use toml_lite::TomlDoc;
+
+use crate::dnn::DnnModel;
+use crate::util::cli::Args;
+
+/// GA hyper-parameters (Table I, last row).
+#[derive(Clone, Debug, PartialEq)]
+pub struct GaConfig {
+    /// θ1 — computation-delay weight in the deficit (Eq. 12).
+    pub theta1: f64,
+    /// θ2 — transmission (workload × Manhattan-hops) weight in Eq. 12.
+    pub theta2: f64,
+    /// θ3 — drop-count weight in Eq. 12.
+    pub theta3: f64,
+    /// N_ini — initial population size.
+    pub n_ini: usize,
+    /// N_iter — maximum GA iterations.
+    pub n_iter: usize,
+    /// N_K — population size kept after elimination.
+    pub n_k: usize,
+    /// N_summ — fresh random chromosomes injected per iteration.
+    pub n_summ: usize,
+    /// ε — early-stop threshold on the best-deficit delta between iterations.
+    pub epsilon: f64,
+}
+
+impl Default for GaConfig {
+    fn default() -> Self {
+        // Table I: θ1, θ2, θ3, N_ini, N_iter, N_K, N_summ, ε = 1, 20, 1e6, 20, 10, 20, 10, 1
+        GaConfig {
+            theta1: 1.0,
+            theta2: 20.0,
+            theta3: 1e6,
+            n_ini: 20,
+            n_iter: 10,
+            n_k: 20,
+            n_summ: 10,
+            epsilon: 1.0,
+        }
+    }
+}
+
+/// Communication-model parameters (Eq. 1–2, Table I).
+#[derive(Clone, Debug, PartialEq)]
+pub struct CommConfig {
+    /// B — inter-satellite bandwidth [Hz] (Table I: 20 MHz).
+    pub isl_bandwidth_hz: f64,
+    /// P_t — satellite transmit power [dBW] (Table I: 30 dBW).
+    pub sat_tx_power_dbw: f64,
+    /// B0 — gateway channel bandwidth [Hz] (Table I: 10 MHz).
+    pub gw_bandwidth_hz: f64,
+    /// P_g — gateway transmit power [dBW].
+    pub gw_tx_power_dbw: f64,
+    /// Transmit/receive antenna gain product G_i(j)·G_j(i) [dBi sum].
+    pub antenna_gain_dbi: f64,
+    /// Beam-pointing loss coefficient L_i(j)=L_j(i) (< 1).
+    pub pointing_coeff: f64,
+    /// System noise temperature T [K].
+    pub noise_temp_k: f64,
+    /// Gateway AWGN power M_G [dBW].
+    pub gw_noise_dbw: f64,
+    /// Mean shadowing attenuation for the shadowed-Rician gateway channel [dB].
+    pub shadow_sigma_db: f64,
+    /// Rician K-factor for the gateway small-scale fading [dB].
+    pub rician_k_db: f64,
+}
+
+impl Default for CommConfig {
+    fn default() -> Self {
+        CommConfig {
+            isl_bandwidth_hz: 20e6,
+            sat_tx_power_dbw: 30.0,
+            gw_bandwidth_hz: 10e6,
+            gw_tx_power_dbw: 10.0,
+            antenna_gain_dbi: 60.0, // 30 dBi per LEO dish, tx+rx
+            pointing_coeff: 0.9,
+            noise_temp_k: 354.8, // typical LEO ISL system temperature
+            gw_noise_dbw: -130.0,
+            shadow_sigma_db: 2.0,
+            rician_k_db: 10.0,
+        }
+    }
+}
+
+/// Satellite compute parameters (Table I + Eq. 4).
+#[derive(Clone, Debug, PartialEq)]
+pub struct SatelliteConfig {
+    /// C_x — computation capability [MFLOP per slot] (Table I: 3 GHz ⇒ 3000).
+    pub capacity_mflops: f64,
+    /// M_w — maximum total loaded workload [MFLOP] before segments are
+    /// rejected (Eq. 4); backlog depth × capacity.
+    pub max_workload_mflops: f64,
+}
+
+impl Default for SatelliteConfig {
+    fn default() -> Self {
+        SatelliteConfig {
+            // Table I: 3 GHz. An in-orbit SBC core retires ~16 f32 FLOPs
+            // per cycle (dual-issue 128-bit SIMD FMA), so one 1-second
+            // slot services 48 GFLOP. With 5 gateway areas x D_M-reachable
+            // neighbourhoods this puts the constellation at a ~0.9 load
+            // factor at λ=70 — the paper's operating regime (all schemes
+            // complete most tasks; delays in the 1-4 s band with
+            // scheme gaps of hundreds of ms).
+            capacity_mflops: 48_000.0,
+            max_workload_mflops: 240_000.0, // 5-slot admission window (M_w)
+        }
+    }
+}
+
+/// Full simulation configuration (Table I + objective weights of Eq. 10).
+#[derive(Clone, Debug, PartialEq)]
+pub struct SimConfig {
+    /// N — constellation is N orbits × N satellites (Table I: 4–32, default 10).
+    pub n: usize,
+    /// Γ — number of time slots to simulate.
+    pub slots: usize,
+    /// λ — Poisson task incidence per decision satellite per slot (4–70).
+    pub lambda: f64,
+    /// Fraction of satellites that act as decision-making satellites
+    /// (those with a gateway in view generating tasks).
+    pub decision_fraction: f64,
+    /// DNN model whose tasks arrive (VGG19 or ResNet101).
+    pub model: DnnModel,
+    /// L — task splitting number; `None` ⇒ Table I default per model
+    /// (3 for VGG19, 4 for ResNet101).
+    pub split_l: Option<usize>,
+    /// D_M — maximum Manhattan offloading distance; `None` ⇒ Table I
+    /// default per model (2 for VGG19, 3 for ResNet101).
+    pub d_max: Option<usize>,
+    /// α — drop-rate weight in the objective (Eq. 10).
+    pub alpha: f64,
+    /// β — delay weight in the objective (Eq. 10).
+    pub beta: f64,
+    /// RNG seed for the whole experiment.
+    pub seed: u64,
+    pub ga: GaConfig,
+    pub comm: CommConfig,
+    pub satellite: SatelliteConfig,
+}
+
+impl Default for SimConfig {
+    fn default() -> Self {
+        SimConfig {
+            n: 10,
+            slots: 40,
+            lambda: 25.0,
+            // "multiple remote rural areas" (Fig. 1): 5 gateway areas on
+            // the default 100-satellite constellation.
+            decision_fraction: 0.05,
+            model: DnnModel::Vgg19,
+            split_l: None,
+            d_max: None,
+            alpha: 1.0,
+            beta: 1.0,
+            seed: 42,
+            ga: GaConfig::default(),
+            comm: CommConfig::default(),
+            satellite: SatelliteConfig::default(),
+        }
+    }
+}
+
+impl SimConfig {
+    /// Effective L (Table I: 3 for VGG19, 4 for ResNet101).
+    pub fn effective_l(&self) -> usize {
+        self.split_l.unwrap_or(match self.model {
+            DnnModel::Vgg19 => 3,
+            DnnModel::Resnet101 => 4,
+        })
+    }
+
+    /// Effective D_M (Table I: 2 for VGG19, 3 for ResNet101).
+    pub fn effective_d_max(&self) -> usize {
+        self.d_max.unwrap_or(match self.model {
+            DnnModel::Vgg19 => 2,
+            DnnModel::Resnet101 => 3,
+        })
+    }
+
+    /// Validate parameter ranges; returns a description of each violation.
+    pub fn validate(&self) -> Result<(), Vec<String>> {
+        let mut errs = Vec::new();
+        if self.n < 2 {
+            errs.push(format!("n={} must be >= 2", self.n));
+        }
+        if self.lambda < 0.0 {
+            errs.push(format!("lambda={} must be >= 0", self.lambda));
+        }
+        if !(0.0..=1.0).contains(&self.decision_fraction) {
+            errs.push(format!(
+                "decision_fraction={} must be in [0,1]",
+                self.decision_fraction
+            ));
+        }
+        if self.effective_l() == 0 {
+            errs.push("L must be >= 1".into());
+        }
+        if self.satellite.capacity_mflops <= 0.0 {
+            errs.push("satellite.capacity_mflops must be > 0".into());
+        }
+        if self.satellite.max_workload_mflops <= 0.0 {
+            errs.push("satellite.max_workload_mflops must be > 0".into());
+        }
+        if self.ga.n_ini == 0 || self.ga.n_k == 0 {
+            errs.push("ga.n_ini and ga.n_k must be >= 1".into());
+        }
+        if errs.is_empty() {
+            Ok(())
+        } else {
+            Err(errs)
+        }
+    }
+
+    /// Load from a TOML file then apply CLI overrides.
+    pub fn load(path: Option<&str>, args: &Args) -> Result<SimConfig, String> {
+        let mut cfg = match path {
+            Some(p) => {
+                let text = std::fs::read_to_string(p)
+                    .map_err(|e| format!("reading {p}: {e}"))?;
+                Self::from_toml(&text)?
+            }
+            None => SimConfig::default(),
+        };
+        cfg.apply_args(args)?;
+        cfg.validate().map_err(|v| v.join("; "))?;
+        Ok(cfg)
+    }
+
+    /// Parse the TOML-subset format (see [`toml_lite`]).
+    pub fn from_toml(text: &str) -> Result<SimConfig, String> {
+        let doc = TomlDoc::parse(text)?;
+        let mut cfg = SimConfig::default();
+        let d = &mut cfg;
+        doc.read_usize("", "n", &mut d.n);
+        doc.read_usize("", "slots", &mut d.slots);
+        doc.read_f64("", "lambda", &mut d.lambda);
+        doc.read_f64("", "decision_fraction", &mut d.decision_fraction);
+        doc.read_f64("", "alpha", &mut d.alpha);
+        doc.read_f64("", "beta", &mut d.beta);
+        doc.read_u64("", "seed", &mut d.seed);
+        if let Some(m) = doc.get_str("", "model") {
+            d.model = DnnModel::parse(&m)?;
+        }
+        if let Some(l) = doc.get_i64("", "split_l") {
+            d.split_l = Some(l as usize);
+        }
+        if let Some(dm) = doc.get_i64("", "d_max") {
+            d.d_max = Some(dm as usize);
+        }
+        doc.read_f64("ga", "theta1", &mut d.ga.theta1);
+        doc.read_f64("ga", "theta2", &mut d.ga.theta2);
+        doc.read_f64("ga", "theta3", &mut d.ga.theta3);
+        doc.read_usize("ga", "n_ini", &mut d.ga.n_ini);
+        doc.read_usize("ga", "n_iter", &mut d.ga.n_iter);
+        doc.read_usize("ga", "n_k", &mut d.ga.n_k);
+        doc.read_usize("ga", "n_summ", &mut d.ga.n_summ);
+        doc.read_f64("ga", "epsilon", &mut d.ga.epsilon);
+        doc.read_f64("satellite", "capacity_mflops", &mut d.satellite.capacity_mflops);
+        doc.read_f64(
+            "satellite",
+            "max_workload_mflops",
+            &mut d.satellite.max_workload_mflops,
+        );
+        doc.read_f64("comm", "isl_bandwidth_hz", &mut d.comm.isl_bandwidth_hz);
+        doc.read_f64("comm", "sat_tx_power_dbw", &mut d.comm.sat_tx_power_dbw);
+        doc.read_f64("comm", "gw_bandwidth_hz", &mut d.comm.gw_bandwidth_hz);
+        doc.read_f64("comm", "gw_tx_power_dbw", &mut d.comm.gw_tx_power_dbw);
+        doc.read_f64("comm", "antenna_gain_dbi", &mut d.comm.antenna_gain_dbi);
+        doc.read_f64("comm", "pointing_coeff", &mut d.comm.pointing_coeff);
+        doc.read_f64("comm", "noise_temp_k", &mut d.comm.noise_temp_k);
+        doc.read_f64("comm", "gw_noise_dbw", &mut d.comm.gw_noise_dbw);
+        Ok(cfg)
+    }
+
+    /// Apply `--key value` CLI overrides (subset: the sweep-relevant knobs).
+    pub fn apply_args(&mut self, args: &Args) -> Result<(), String> {
+        if let Some(n) = args.get_parsed::<usize>("n")? {
+            self.n = n;
+        }
+        if let Some(s) = args.get_parsed::<usize>("slots")? {
+            self.slots = s;
+        }
+        if let Some(l) = args.get_parsed::<f64>("lambda")? {
+            self.lambda = l;
+        }
+        if let Some(m) = args.get("model") {
+            self.model = DnnModel::parse(m)?;
+        }
+        if let Some(l) = args.get_parsed::<usize>("split-l")? {
+            self.split_l = Some(l);
+        }
+        if let Some(d) = args.get_parsed::<usize>("d-max")? {
+            self.d_max = Some(d);
+        }
+        if let Some(s) = args.get_parsed::<u64>("seed")? {
+            self.seed = s;
+        }
+        if let Some(f) = args.get_parsed::<f64>("decision-fraction")? {
+            self.decision_fraction = f;
+        }
+        if let Some(x) = args.get_parsed::<f64>("capacity")? {
+            self.satellite.capacity_mflops = x;
+        }
+        if let Some(x) = args.get_parsed::<f64>("max-workload")? {
+            self.satellite.max_workload_mflops = x;
+        }
+        if let Some(x) = args.get_parsed::<usize>("ga-iters")? {
+            self.ga.n_iter = x;
+        }
+        Ok(())
+    }
+
+    /// Render the effective configuration as a Table-I-style listing.
+    pub fn table(&self) -> String {
+        format!(
+            "Network topology N (size = NxN)        {}\n\
+             Satellite bandwidth B                  {:.0} MHz\n\
+             Satellite computation capability C_x   {:.0} MFLOP/slot\n\
+             Satellite transmission power P_t       {:.0} dBW\n\
+             Gateway bandwidth B0                   {:.0} MHz\n\
+             Generated task incidence lambda        {}\n\
+             Task splitting number L                {}\n\
+             Maximum communication distance D_M     {}\n\
+             theta1, theta2, theta3                 {}, {}, {:.0e}\n\
+             N_ini, N_iter, N_K, N_summ, epsilon    {}, {}, {}, {}, {}\n\
+             Model                                  {}\n\
+             Slots, seed                            {}, {}",
+            self.n,
+            self.comm.isl_bandwidth_hz / 1e6,
+            self.satellite.capacity_mflops,
+            self.comm.sat_tx_power_dbw,
+            self.comm.gw_bandwidth_hz / 1e6,
+            self.lambda,
+            self.effective_l(),
+            self.effective_d_max(),
+            self.ga.theta1,
+            self.ga.theta2,
+            self.ga.theta3,
+            self.ga.n_ini,
+            self.ga.n_iter,
+            self.ga.n_k,
+            self.ga.n_summ,
+            self.ga.epsilon,
+            self.model.name(),
+            self.slots,
+            self.seed,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_match_table1() {
+        let c = SimConfig::default();
+        assert_eq!(c.n, 10);
+        assert_eq!(c.ga.theta1, 1.0);
+        assert_eq!(c.ga.theta2, 20.0);
+        assert_eq!(c.ga.theta3, 1e6);
+        assert_eq!(c.ga.n_ini, 20);
+        assert_eq!(c.ga.n_iter, 10);
+        assert_eq!(c.ga.n_k, 20);
+        assert_eq!(c.ga.n_summ, 10);
+        assert_eq!(c.ga.epsilon, 1.0);
+        assert_eq!(c.comm.isl_bandwidth_hz, 20e6);
+        assert_eq!(c.comm.gw_bandwidth_hz, 10e6);
+        assert_eq!(c.comm.sat_tx_power_dbw, 30.0);
+        assert_eq!(c.satellite.capacity_mflops, 48_000.0);
+    }
+
+    #[test]
+    fn per_model_l_and_dmax() {
+        let mut c = SimConfig::default();
+        c.model = DnnModel::Vgg19;
+        assert_eq!((c.effective_l(), c.effective_d_max()), (3, 2));
+        c.model = DnnModel::Resnet101;
+        assert_eq!((c.effective_l(), c.effective_d_max()), (4, 3));
+        c.split_l = Some(7);
+        assert_eq!(c.effective_l(), 7);
+    }
+
+    #[test]
+    fn toml_roundtrip() {
+        let text = r#"
+n = 16
+lambda = 40.5
+model = "resnet101"
+seed = 9
+
+[ga]
+n_iter = 25
+theta2 = 30.0
+
+[satellite]
+capacity_mflops = 6000.0
+"#;
+        let c = SimConfig::from_toml(text).unwrap();
+        assert_eq!(c.n, 16);
+        assert_eq!(c.lambda, 40.5);
+        assert_eq!(c.model, DnnModel::Resnet101);
+        assert_eq!(c.seed, 9);
+        assert_eq!(c.ga.n_iter, 25);
+        assert_eq!(c.ga.theta2, 30.0);
+        assert_eq!(c.satellite.capacity_mflops, 6000.0);
+        // untouched keys keep defaults
+        assert_eq!(c.ga.n_k, 20);
+    }
+
+    #[test]
+    fn cli_overrides() {
+        let args = crate::util::cli::Args::parse(
+            "x --n 8 --lambda 55 --model vgg19 --seed 3 --ga-iters 4"
+                .split_whitespace()
+                .map(String::from),
+        );
+        let mut c = SimConfig::default();
+        c.apply_args(&args).unwrap();
+        assert_eq!(c.n, 8);
+        assert_eq!(c.lambda, 55.0);
+        assert_eq!(c.ga.n_iter, 4);
+    }
+
+    #[test]
+    fn validation_rejects_bad() {
+        let mut c = SimConfig::default();
+        c.n = 1;
+        c.lambda = -1.0;
+        let errs = c.validate().unwrap_err();
+        assert_eq!(errs.len(), 2);
+    }
+
+    #[test]
+    fn table_contains_key_params() {
+        let t = SimConfig::default().table();
+        assert!(t.contains("N_ini"));
+        assert!(t.contains("20 MHz"));
+    }
+}

@@ -1,0 +1,193 @@
+//! TOML-subset parser for configuration files (the image has no `toml`
+//! crate). Supports: `[section]` headers, `key = value` with string,
+//! integer, float, and boolean values, `#` comments, and blank lines.
+//! Nested tables beyond one level and arrays are intentionally out of
+//! scope — config files stay flat.
+
+use std::collections::BTreeMap;
+
+/// A parsed value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum TomlValue {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+}
+
+/// A parsed document: `(section, key) -> value`, root section is `""`.
+#[derive(Clone, Debug, Default)]
+pub struct TomlDoc {
+    map: BTreeMap<(String, String), TomlValue>,
+}
+
+impl TomlDoc {
+    pub fn parse(text: &str) -> Result<TomlDoc, String> {
+        let mut doc = TomlDoc::default();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(body) = line.strip_prefix('[') {
+                let name = body
+                    .strip_suffix(']')
+                    .ok_or(format!("line {}: unterminated section header", lineno + 1))?;
+                section = name.trim().to_string();
+                continue;
+            }
+            let (k, v) = line
+                .split_once('=')
+                .ok_or(format!("line {}: expected 'key = value'", lineno + 1))?;
+            let key = k.trim().to_string();
+            let value = parse_value(v.trim())
+                .map_err(|e| format!("line {}: {e}", lineno + 1))?;
+            doc.map.insert((section.clone(), key), value);
+        }
+        Ok(doc)
+    }
+
+    pub fn get(&self, section: &str, key: &str) -> Option<&TomlValue> {
+        self.map.get(&(section.to_string(), key.to_string()))
+    }
+
+    pub fn get_str(&self, section: &str, key: &str) -> Option<String> {
+        match self.get(section, key) {
+            Some(TomlValue::Str(s)) => Some(s.clone()),
+            _ => None,
+        }
+    }
+
+    pub fn get_i64(&self, section: &str, key: &str) -> Option<i64> {
+        match self.get(section, key) {
+            Some(TomlValue::Int(i)) => Some(*i),
+            Some(TomlValue::Float(f)) if f.fract() == 0.0 => Some(*f as i64),
+            _ => None,
+        }
+    }
+
+    pub fn get_f64(&self, section: &str, key: &str) -> Option<f64> {
+        match self.get(section, key) {
+            Some(TomlValue::Float(f)) => Some(*f),
+            Some(TomlValue::Int(i)) => Some(*i as f64),
+            _ => None,
+        }
+    }
+
+    /// Read-into-helpers: assign only if the key is present.
+    pub fn read_f64(&self, section: &str, key: &str, out: &mut f64) {
+        if let Some(v) = self.get_f64(section, key) {
+            *out = v;
+        }
+    }
+
+    pub fn read_usize(&self, section: &str, key: &str, out: &mut usize) {
+        if let Some(v) = self.get_i64(section, key) {
+            if v >= 0 {
+                *out = v as usize;
+            }
+        }
+    }
+
+    pub fn read_u64(&self, section: &str, key: &str, out: &mut u64) {
+        if let Some(v) = self.get_i64(section, key) {
+            if v >= 0 {
+                *out = v as u64;
+            }
+        }
+    }
+
+    pub fn keys(&self) -> impl Iterator<Item = &(String, String)> {
+        self.map.keys()
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // a '#' inside a quoted string does not start a comment
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<TomlValue, String> {
+    if let Some(body) = s.strip_prefix('"') {
+        let inner = body
+            .strip_suffix('"')
+            .ok_or_else(|| format!("unterminated string: {s}"))?;
+        return Ok(TomlValue::Str(inner.to_string()));
+    }
+    match s {
+        "true" => return Ok(TomlValue::Bool(true)),
+        "false" => return Ok(TomlValue::Bool(false)),
+        _ => {}
+    }
+    let clean = s.replace('_', "");
+    if let Ok(i) = clean.parse::<i64>() {
+        return Ok(TomlValue::Int(i));
+    }
+    if let Ok(f) = clean.parse::<f64>() {
+        return Ok(TomlValue::Float(f));
+    }
+    Err(format!("cannot parse value: {s}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let doc = TomlDoc::parse(
+            r#"
+# top comment
+n = 10
+lambda = 25.5        # inline comment
+name = "vgg # 19"
+flag = true
+
+[ga]
+n_iter = 10
+"#,
+        )
+        .unwrap();
+        assert_eq!(doc.get_i64("", "n"), Some(10));
+        assert_eq!(doc.get_f64("", "lambda"), Some(25.5));
+        assert_eq!(doc.get_str("", "name").as_deref(), Some("vgg # 19"));
+        assert_eq!(doc.get("", "flag"), Some(&TomlValue::Bool(true)));
+        assert_eq!(doc.get_i64("ga", "n_iter"), Some(10));
+    }
+
+    #[test]
+    fn int_float_coercion() {
+        let doc = TomlDoc::parse("a = 3\nb = 4.0\n").unwrap();
+        assert_eq!(doc.get_f64("", "a"), Some(3.0));
+        assert_eq!(doc.get_i64("", "b"), Some(4));
+    }
+
+    #[test]
+    fn underscored_numbers() {
+        let doc = TomlDoc::parse("big = 1_000_000\n").unwrap();
+        assert_eq!(doc.get_i64("", "big"), Some(1_000_000));
+    }
+
+    #[test]
+    fn errors_are_line_numbered() {
+        let e = TomlDoc::parse("ok = 1\nbroken line\n").unwrap_err();
+        assert!(e.contains("line 2"), "{e}");
+    }
+
+    #[test]
+    fn missing_keys_leave_defaults() {
+        let doc = TomlDoc::parse("").unwrap();
+        let mut x = 7.0;
+        doc.read_f64("", "nope", &mut x);
+        assert_eq!(x, 7.0);
+    }
+}

@@ -1,0 +1,148 @@
+//! Thread-pool substrate (no tokio on the offline image): fixed worker
+//! threads over an mpsc job channel, with typed result hand-back.
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// Fixed-size worker pool. Jobs are closures; [`WorkerPool::run`] blocks
+/// for one result, [`WorkerPool::spawn`] is fire-and-forget with a
+/// receiver handle.
+pub struct WorkerPool {
+    tx: Option<Sender<Job>>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl WorkerPool {
+    pub fn new(size: usize) -> WorkerPool {
+        assert!(size > 0);
+        let (tx, rx) = channel::<Job>();
+        let rx = Arc::new(Mutex::new(rx));
+        let workers = (0..size)
+            .map(|i| {
+                let rx = Arc::clone(&rx);
+                std::thread::Builder::new()
+                    .name(format!("satkit-worker-{i}"))
+                    .spawn(move || loop {
+                        let job = {
+                            let guard = rx.lock().unwrap();
+                            guard.recv()
+                        };
+                        match job {
+                            Ok(job) => job(),
+                            Err(_) => break, // channel closed
+                        }
+                    })
+                    .expect("spawning worker")
+            })
+            .collect();
+        WorkerPool {
+            tx: Some(tx),
+            workers,
+        }
+    }
+
+    pub fn size(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Submit a job and get a receiver for its result.
+    pub fn spawn<T, F>(&self, f: F) -> Receiver<T>
+    where
+        T: Send + 'static,
+        F: FnOnce() -> T + Send + 'static,
+    {
+        let (rtx, rrx) = channel();
+        let job: Job = Box::new(move || {
+            let _ = rtx.send(f());
+        });
+        self.tx
+            .as_ref()
+            .expect("pool alive")
+            .send(job)
+            .expect("worker pool closed");
+        rrx
+    }
+
+    /// Submit and block for the result.
+    pub fn run<T, F>(&self, f: F) -> Result<T, std::sync::mpsc::RecvError>
+    where
+        T: Send + 'static,
+        F: FnOnce() -> T + Send + 'static,
+    {
+        self.spawn(f).recv()
+    }
+
+    /// Map a function over items in parallel, preserving order.
+    pub fn map<T, U, F>(&self, items: Vec<T>, f: F) -> Vec<U>
+    where
+        T: Send + 'static,
+        U: Send + 'static,
+        F: Fn(T) -> U + Send + Sync + Clone + 'static,
+    {
+        let handles: Vec<Receiver<U>> = items
+            .into_iter()
+            .map(|item| {
+                let f = f.clone();
+                self.spawn(move || f(item))
+            })
+            .collect();
+        handles.into_iter().map(|h| h.recv().unwrap()).collect()
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        drop(self.tx.take()); // close the channel; workers exit
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn runs_jobs_and_returns_results() {
+        let pool = WorkerPool::new(4);
+        assert_eq!(pool.run(|| 2 + 2).unwrap(), 4);
+    }
+
+    #[test]
+    fn parallel_map_preserves_order() {
+        let pool = WorkerPool::new(8);
+        let out = pool.map((0..100).collect::<Vec<i32>>(), |x| x * x);
+        assert_eq!(out, (0..100).map(|x| x * x).collect::<Vec<i32>>());
+    }
+
+    #[test]
+    fn all_workers_participate_eventually() {
+        let pool = WorkerPool::new(4);
+        let counter = Arc::new(AtomicUsize::new(0));
+        let rxs: Vec<_> = (0..64)
+            .map(|_| {
+                let c = Arc::clone(&counter);
+                pool.spawn(move || {
+                    std::thread::sleep(std::time::Duration::from_millis(1));
+                    c.fetch_add(1, Ordering::SeqCst);
+                })
+            })
+            .collect();
+        for rx in rxs {
+            rx.recv().unwrap();
+        }
+        assert_eq!(counter.load(Ordering::SeqCst), 64);
+    }
+
+    #[test]
+    fn drop_joins_cleanly() {
+        let pool = WorkerPool::new(2);
+        let _ = pool.run(|| ());
+        drop(pool); // must not hang
+    }
+}

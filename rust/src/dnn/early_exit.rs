@@ -1,0 +1,232 @@
+//! Early-exit extension (§VI): the paper's stated future work — "the
+//! integration of an early exit technique that balances the trade-off
+//! between processing delay and accuracy during the DNN partitioning
+//! process" (BranchyNet-style side branches, cf. reference [7]).
+//!
+//! We graft exit branches onto the VGG19/ResNet101 profiles at the stage
+//! boundaries. A task that exits at branch `b` only executes the layers
+//! up to `b` plus the branch classifier — cutting workload and every
+//! downstream transmission — at an accuracy cost taken from the
+//! BranchyNet-style accuracy ladder. The split/offload pipeline is
+//! unchanged: an exited task simply has a truncated layer-workload
+//! vector, so Alg. 1 and Alg. 2 operate on exactly what will execute.
+
+use super::{DnnModel, DnnProfile, LayerKind};
+
+/// One exit branch: after `layer_idx`, a small classifier head can
+/// terminate the task with `accuracy` (relative to full-model = 1.0).
+#[derive(Clone, Debug)]
+pub struct ExitBranch {
+    /// Exit after this layer index (0-based, inclusive).
+    pub layer_idx: usize,
+    /// Workload of the branch classifier head [MFLOP].
+    pub head_mflops: f64,
+    /// Top-1 accuracy relative to running the full network.
+    pub accuracy: f64,
+}
+
+/// A profile augmented with exit branches (final "branch" = full model).
+#[derive(Clone, Debug)]
+pub struct EarlyExitProfile {
+    pub base: DnnProfile,
+    /// Sorted by layer_idx ascending; does NOT include the natural end.
+    pub branches: Vec<ExitBranch>,
+}
+
+impl EarlyExitProfile {
+    /// Standard branch placement: one exit at each pooling boundary after
+    /// the second stage (too-early exits are useless), with an accuracy
+    /// ladder shaped like BranchyNet's reported curves (earlier exits are
+    /// cheaper and less accurate).
+    pub fn for_model(model: DnnModel) -> EarlyExitProfile {
+        let base = model.profile();
+        let mut pool_idxs: Vec<usize> = base
+            .layers
+            .iter()
+            .enumerate()
+            .filter(|(_, l)| l.kind == LayerKind::Pool)
+            .map(|(i, _)| i)
+            .collect();
+        // skip the first pooling stage; keep at most 3 interior exits and
+        // never the terminal pool (exiting there saves only the head).
+        if !pool_idxs.is_empty() {
+            pool_idxs.remove(0);
+        }
+        if pool_idxs.len() > 1 {
+            pool_idxs.pop();
+        }
+        pool_idxs.truncate(3);
+        let n = pool_idxs.len().max(1) as f64;
+        let branches = pool_idxs
+            .iter()
+            .enumerate()
+            .map(|(rank, &layer_idx)| {
+                let depth_frac = (rank as f64 + 1.0) / (n + 1.0);
+                ExitBranch {
+                    layer_idx,
+                    // small FC head over the pooled activation
+                    head_mflops: base.layers[layer_idx].output_bytes / 4.0 * 2.0
+                        * 256.0
+                        / 1e6,
+                    // accuracy ladder: 0.80 at the earliest kept exit,
+                    // approaching 1.0 with depth
+                    accuracy: 0.78 + 0.20 * depth_frac,
+                }
+            })
+            .collect();
+        EarlyExitProfile { base, branches }
+    }
+
+    /// Layer workload vector for a task exiting at `branch` (None = run
+    /// the full model). The branch head is folded into the final layer.
+    pub fn workloads_for_exit(&self, branch: Option<usize>) -> Vec<f64> {
+        match branch {
+            None => self.base.workloads(),
+            Some(b) => {
+                let br = &self.branches[b];
+                let mut w: Vec<f64> = self.base.layers[..=br.layer_idx]
+                    .iter()
+                    .map(|l| l.workload_mflops)
+                    .collect();
+                if let Some(last) = w.last_mut() {
+                    *last += br.head_mflops;
+                }
+                w
+            }
+        }
+    }
+
+    /// Accuracy of exiting at `branch` (None = 1.0).
+    pub fn accuracy_for_exit(&self, branch: Option<usize>) -> f64 {
+        match branch {
+            None => 1.0,
+            Some(b) => self.branches[b].accuracy,
+        }
+    }
+
+    /// Workload saving fraction of exiting at `branch` vs the full model.
+    pub fn saving_for_exit(&self, branch: usize) -> f64 {
+        let full = self.base.total_mflops();
+        let exited: f64 = self.workloads_for_exit(Some(branch)).iter().sum();
+        1.0 - exited / full
+    }
+
+    /// Pick the shallowest exit meeting `min_accuracy`; None if only the
+    /// full model qualifies. This is the delay/accuracy policy knob.
+    pub fn cheapest_exit(&self, min_accuracy: f64) -> Option<usize> {
+        self.branches
+            .iter()
+            .enumerate()
+            .find(|(_, b)| b.accuracy >= min_accuracy)
+            .map(|(i, _)| i)
+    }
+
+    /// Expected accuracy/workload pair for a confidence-threshold policy
+    /// where a fraction `exit_probs[i]` of tasks exits at branch i (the
+    /// remainder runs to completion).
+    pub fn expected(&self, exit_probs: &[f64]) -> (f64, f64) {
+        assert_eq!(exit_probs.len(), self.branches.len());
+        let p_full: f64 = 1.0 - exit_probs.iter().sum::<f64>();
+        assert!(
+            (-1e-9..=1.0 + 1e-9).contains(&p_full),
+            "exit probabilities sum > 1"
+        );
+        let mut acc = p_full * 1.0;
+        let mut work = p_full * self.base.total_mflops();
+        for (i, &p) in exit_probs.iter().enumerate() {
+            acc += p * self.branches[i].accuracy;
+            work += p * self.workloads_for_exit(Some(i)).iter().sum::<f64>();
+        }
+        (acc, work)
+    }
+
+    /// Chainable constraint 11e check for a given split L.
+    pub fn supports_l(&self, branch: Option<usize>, l: usize) -> bool {
+        self.workloads_for_exit(branch).len() >= l
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn branches_exist_and_are_sorted() {
+        for m in [DnnModel::Vgg19, DnnModel::Resnet101] {
+            let p = EarlyExitProfile::for_model(m);
+            assert!(!p.branches.is_empty(), "{m:?}");
+            for w in p.branches.windows(2) {
+                assert!(w[0].layer_idx < w[1].layer_idx);
+                assert!(w[0].accuracy <= w[1].accuracy, "accuracy ladder");
+            }
+        }
+    }
+
+    #[test]
+    fn exit_workloads_truncate_and_save() {
+        let p = EarlyExitProfile::for_model(DnnModel::Vgg19);
+        let full: f64 = p.workloads_for_exit(None).iter().sum();
+        for b in 0..p.branches.len() {
+            let exited: f64 = p.workloads_for_exit(Some(b)).iter().sum();
+            assert!(exited < full, "exit {b} must save work");
+            assert!(p.saving_for_exit(b) > 0.0 && p.saving_for_exit(b) < 1.0);
+        }
+        // earlier exits save more
+        if p.branches.len() >= 2 {
+            assert!(p.saving_for_exit(0) > p.saving_for_exit(p.branches.len() - 1));
+        }
+    }
+
+    #[test]
+    fn accuracy_tradeoff_monotone() {
+        let p = EarlyExitProfile::for_model(DnnModel::Resnet101);
+        let mut prev_acc = 0.0;
+        for b in 0..p.branches.len() {
+            let acc = p.accuracy_for_exit(Some(b));
+            assert!((0.5..1.0).contains(&acc));
+            assert!(acc >= prev_acc);
+            prev_acc = acc;
+        }
+        assert_eq!(p.accuracy_for_exit(None), 1.0);
+    }
+
+    #[test]
+    fn cheapest_exit_respects_floor() {
+        let p = EarlyExitProfile::for_model(DnnModel::Vgg19);
+        // an impossible floor forces the full model
+        assert_eq!(p.cheapest_exit(0.999), None);
+        // a trivial floor takes the first branch
+        assert_eq!(p.cheapest_exit(0.0), Some(0));
+        // the returned exit actually meets the floor
+        if let Some(b) = p.cheapest_exit(0.9) {
+            assert!(p.branches[b].accuracy >= 0.9);
+        }
+    }
+
+    #[test]
+    fn expected_policy_interpolates() {
+        let p = EarlyExitProfile::for_model(DnnModel::Vgg19);
+        let k = p.branches.len();
+        // nobody exits -> full accuracy/work
+        let (acc, work) = p.expected(&vec![0.0; k]);
+        assert!((acc - 1.0).abs() < 1e-12);
+        assert!((work - p.base.total_mflops()).abs() < 1e-6);
+        // everyone exits at branch 0 -> branch-0 accuracy, less work
+        let mut probs = vec![0.0; k];
+        probs[0] = 1.0;
+        let (acc0, work0) = p.expected(&probs);
+        assert!((acc0 - p.branches[0].accuracy).abs() < 1e-12);
+        assert!(work0 < work);
+    }
+
+    #[test]
+    fn truncated_profiles_still_splittable() {
+        let p = EarlyExitProfile::for_model(DnnModel::Vgg19);
+        for b in 0..p.branches.len() {
+            let w = p.workloads_for_exit(Some(b));
+            assert!(p.supports_l(Some(b), 3.min(w.len())));
+            let res = crate::splitting::balanced_split(&w, 3.min(w.len()), 1.0);
+            assert_eq!(res.blocks.len(), 3.min(w.len()));
+        }
+    }
+}

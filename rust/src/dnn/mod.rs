@@ -1,0 +1,223 @@
+//! DNN workload profiles (§V-A): per-layer computation and activation
+//! sizes for the two evaluated models, VGG19 and ResNet101.
+//!
+//! Splitting (Alg. 1) consumes the per-layer workload vector `w_1..w_{N^l}`;
+//! offloading consumes per-segment workloads and the activation bytes
+//! crossing each cut (the tensors shipped over ISLs). Both are pure
+//! architecture properties, computed here from layer shapes — no weights
+//! involved (DESIGN.md §4).
+
+pub mod early_exit;
+mod resnet;
+mod vgg;
+
+pub use early_exit::{EarlyExitProfile, ExitBranch};
+pub use resnet::resnet101_layers;
+pub use vgg::vgg19_layers;
+
+/// The DNN models evaluated in the paper (§V-B).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum DnnModel {
+    Vgg19,
+    Resnet101,
+}
+
+impl DnnModel {
+    pub fn parse(s: &str) -> Result<DnnModel, String> {
+        match s.to_ascii_lowercase().as_str() {
+            "vgg19" | "vgg" => Ok(DnnModel::Vgg19),
+            "resnet101" | "resnet" => Ok(DnnModel::Resnet101),
+            other => Err(format!("unknown model '{other}' (vgg19|resnet101)")),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            DnnModel::Vgg19 => "VGG19",
+            DnnModel::Resnet101 => "ResNet101",
+        }
+    }
+
+    /// Table I defaults: (L, D_M).
+    pub fn table1_defaults(&self) -> (usize, usize) {
+        match self {
+            DnnModel::Vgg19 => (3, 2),
+            DnnModel::Resnet101 => (4, 3),
+        }
+    }
+
+    /// Per-layer profile at the model's canonical 224×224×3 input.
+    pub fn profile(&self) -> DnnProfile {
+        match self {
+            DnnModel::Vgg19 => DnnProfile::new(self.name(), vgg19_layers()),
+            DnnModel::Resnet101 => DnnProfile::new(self.name(), resnet101_layers()),
+        }
+    }
+}
+
+/// Kinds of layers that contribute workload.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LayerKind {
+    Conv,
+    Fc,
+    Pool,
+    /// Residual add + ReLU (ResNet block ends).
+    Residual,
+}
+
+/// One schedulable layer: the unit Alg. 1 groups into blocks.
+#[derive(Clone, Debug)]
+pub struct LayerSpec {
+    pub name: String,
+    pub kind: LayerKind,
+    /// Computation amount [MFLOP] — the `w_k` of Alg. 1.
+    pub workload_mflops: f64,
+    /// Output activation size [bytes] — the tensor shipped over an ISL if
+    /// the partition cuts after this layer.
+    pub output_bytes: f64,
+}
+
+/// A whole-model profile with the derived quantities the schemes need.
+#[derive(Clone, Debug)]
+pub struct DnnProfile {
+    pub model_name: &'static str,
+    pub layers: Vec<LayerSpec>,
+}
+
+impl DnnProfile {
+    pub fn new(model_name: &'static str, layers: Vec<LayerSpec>) -> DnnProfile {
+        assert!(!layers.is_empty());
+        DnnProfile { model_name, layers }
+    }
+
+    /// N^l — number of layers (constraint 11e demands N^l >= L).
+    pub fn num_layers(&self) -> usize {
+        self.layers.len()
+    }
+
+    /// Per-layer workload vector `{w_1, ..., w_{N^l}}` [MFLOP].
+    pub fn workloads(&self) -> Vec<f64> {
+        self.layers.iter().map(|l| l.workload_mflops).collect()
+    }
+
+    /// Total model workload [MFLOP].
+    pub fn total_mflops(&self) -> f64 {
+        self.layers.iter().map(|l| l.workload_mflops).sum()
+    }
+
+    /// Largest single-layer workload — Alg. 1's binary-search lower bound.
+    pub fn max_layer_mflops(&self) -> f64 {
+        self.layers
+            .iter()
+            .map(|l| l.workload_mflops)
+            .fold(0.0, f64::max)
+    }
+
+    /// Activation bytes crossing a cut *after* layer `i` (0-based).
+    pub fn cut_bytes(&self, i: usize) -> f64 {
+        self.layers[i].output_bytes
+    }
+}
+
+/// FLOPs of a conv layer: 2·OH·OW·K²·Cin·Cout (MAC = 2 FLOP), in MFLOP.
+pub fn conv_mflops(oh: usize, ow: usize, k: usize, cin: usize, cout: usize) -> f64 {
+    2.0 * (oh * ow) as f64 * (k * k * cin) as f64 * cout as f64 / 1e6
+}
+
+/// FLOPs of a fully-connected layer: 2·In·Out, in MFLOP.
+pub fn fc_mflops(input: usize, output: usize) -> f64 {
+    2.0 * input as f64 * output as f64 / 1e6
+}
+
+/// Activation bytes of an NHWC f32 tensor.
+pub fn act_bytes(h: usize, w: usize, c: usize) -> f64 {
+    (h * w * c * 4) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn vgg19_total_flops_matches_literature() {
+        // VGG19 @224 is ~39 GFLOPs (19.6 GMACs).
+        let p = DnnModel::Vgg19.profile();
+        let total = p.total_mflops();
+        assert!(
+            (37_000.0..42_000.0).contains(&total),
+            "VGG19 total = {total} MFLOP"
+        );
+    }
+
+    #[test]
+    fn resnet101_total_flops_matches_literature() {
+        // ResNet101 @224 is ~15.2 GFLOPs (7.6 GMACs).
+        let p = DnnModel::Resnet101.profile();
+        let total = p.total_mflops();
+        assert!(
+            (14_000.0..17_000.0).contains(&total),
+            "ResNet101 total = {total} MFLOP"
+        );
+    }
+
+    #[test]
+    fn vgg19_has_19_weight_layers() {
+        let p = DnnModel::Vgg19.profile();
+        let weighted = p
+            .layers
+            .iter()
+            .filter(|l| matches!(l.kind, LayerKind::Conv | LayerKind::Fc))
+            .count();
+        assert_eq!(weighted, 19); // 16 conv + 3 fc
+    }
+
+    #[test]
+    fn resnet101_weighted_layer_count() {
+        // 1 stem + 33 bottlenecks × 3 + 1 fc = 101 Conv/Fc entries; the 4
+        // downsample projections are folded into their block's Residual
+        // entry (they run on the same satellite as the add).
+        let p = DnnModel::Resnet101.profile();
+        let weighted = p
+            .layers
+            .iter()
+            .filter(|l| matches!(l.kind, LayerKind::Conv | LayerKind::Fc))
+            .count();
+        assert_eq!(weighted, 101);
+    }
+
+    #[test]
+    fn layer_count_supports_table1_l(/* constraint 11e */) {
+        for m in [DnnModel::Vgg19, DnnModel::Resnet101] {
+            let (l, _) = m.table1_defaults();
+            assert!(m.profile().num_layers() >= l);
+        }
+    }
+
+    #[test]
+    fn workloads_positive_and_cut_bytes_positive() {
+        for m in [DnnModel::Vgg19, DnnModel::Resnet101] {
+            let p = m.profile();
+            for (i, l) in p.layers.iter().enumerate() {
+                assert!(l.workload_mflops >= 0.0, "{}: {}", p.model_name, l.name);
+                assert!(p.cut_bytes(i) > 0.0);
+            }
+            assert!(p.max_layer_mflops() <= p.total_mflops());
+        }
+    }
+
+    #[test]
+    fn flop_helpers() {
+        // conv3x3, 224x224, 3->64: 2*224*224*9*3*64 = 173.4 MFLOP
+        let f = conv_mflops(224, 224, 3, 3, 64);
+        assert!((f - 173.408256).abs() < 1e-6);
+        assert_eq!(fc_mflops(4096, 1000), 8.192);
+        assert_eq!(act_bytes(224, 224, 64), 224.0 * 224.0 * 64.0 * 4.0);
+    }
+
+    #[test]
+    fn model_parse() {
+        assert_eq!(DnnModel::parse("VGG19").unwrap(), DnnModel::Vgg19);
+        assert_eq!(DnnModel::parse("resnet").unwrap(), DnnModel::Resnet101);
+        assert!(DnnModel::parse("alexnet").is_err());
+    }
+}

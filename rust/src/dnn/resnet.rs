@@ -1,0 +1,131 @@
+//! ResNet101 per-layer profile at 224×224×3 (He et al., bottleneck v1).
+//!
+//! Stem conv7×7/2 + maxpool/2, then bottleneck stages [3, 4, 23, 3] with
+//! widths (64, 128, 256, 512)×4, global average pool, FC-1000. Each
+//! bottleneck contributes its three convs as separate schedulable layers
+//! plus a `Residual` add entry; the first block of each stage carries a
+//! 1×1 projection on the shortcut (its cost is folded into that block's
+//! residual entry, since it executes on the same satellite as the add).
+
+use super::{act_bytes, conv_mflops, fc_mflops, LayerKind, LayerSpec};
+
+/// Build the full layer list (105 weighted layers' worth of work).
+pub fn resnet101_layers() -> Vec<LayerSpec> {
+    let mut layers = Vec::with_capacity(140);
+    // stem: conv7x7/2 3->64 at 112x112, then 3x3 maxpool/2 -> 56x56
+    layers.push(LayerSpec {
+        name: "conv1".into(),
+        kind: LayerKind::Conv,
+        workload_mflops: conv_mflops(112, 112, 7, 3, 64),
+        output_bytes: act_bytes(112, 112, 64),
+    });
+    layers.push(LayerSpec {
+        name: "maxpool".into(),
+        kind: LayerKind::Pool,
+        workload_mflops: 8.0 * (56 * 56 * 64) as f64 / 1e6,
+        output_bytes: act_bytes(56, 56, 64),
+    });
+
+    // (blocks, mid channels, output spatial size)
+    const STAGES: [(usize, usize, usize); 4] =
+        [(3, 64, 56), (4, 128, 28), (23, 256, 14), (3, 512, 7)];
+    let mut cin = 64usize;
+    for (si, &(blocks, mid, oh)) in STAGES.iter().enumerate() {
+        let cout = mid * 4;
+        for b in 0..blocks {
+            // the first block of stages 2-4 downsamples: its 3x3 conv has
+            // stride 2, so its *input* spatial size is 2*oh.
+            let in_h = if b == 0 && si > 0 { oh * 2 } else { oh };
+            let stage = si + 2; // torchvision naming: layer2_0 etc. offset
+            let prefix = format!("res{}_{:02}", stage, b);
+            // 1x1 reduce (spatial = input size)
+            layers.push(LayerSpec {
+                name: format!("{prefix}_a"),
+                kind: LayerKind::Conv,
+                workload_mflops: conv_mflops(in_h, in_h, 1, cin, mid),
+                output_bytes: act_bytes(in_h, in_h, mid),
+            });
+            // 3x3 (stride 2 in first block of stages 2-4 => output oh)
+            layers.push(LayerSpec {
+                name: format!("{prefix}_b"),
+                kind: LayerKind::Conv,
+                workload_mflops: conv_mflops(oh, oh, 3, mid, mid),
+                output_bytes: act_bytes(oh, oh, mid),
+            });
+            // 1x1 expand
+            layers.push(LayerSpec {
+                name: format!("{prefix}_c"),
+                kind: LayerKind::Conv,
+                workload_mflops: conv_mflops(oh, oh, 1, mid, cout),
+                output_bytes: act_bytes(oh, oh, cout),
+            });
+            // residual add (+ 1x1/stride projection in the first block)
+            let mut res_mflops = (oh * oh * cout) as f64 / 1e6; // add+relu
+            if b == 0 {
+                res_mflops += conv_mflops(oh, oh, 1, cin, cout);
+            }
+            layers.push(LayerSpec {
+                name: format!("{prefix}_add"),
+                kind: LayerKind::Residual,
+                workload_mflops: res_mflops,
+                output_bytes: act_bytes(oh, oh, cout),
+            });
+            cin = cout;
+        }
+    }
+
+    // global average pool 7x7x2048 -> 2048, then fc1000
+    layers.push(LayerSpec {
+        name: "avgpool".into(),
+        kind: LayerKind::Pool,
+        workload_mflops: (7 * 7 * 2048) as f64 / 1e6,
+        output_bytes: (2048 * 4) as f64,
+    });
+    layers.push(LayerSpec {
+        name: "fc".into(),
+        kind: LayerKind::Fc,
+        workload_mflops: fc_mflops(2048, 1000),
+        output_bytes: (1000 * 4) as f64,
+    });
+    layers
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dnn::LayerKind;
+
+    #[test]
+    fn block_structure() {
+        let l = resnet101_layers();
+        // 2 stem entries + (3+4+23+3)*4 block entries + avgpool + fc
+        assert_eq!(l.len(), 2 + 33 * 4 + 2);
+        let convs = l.iter().filter(|x| x.kind == LayerKind::Conv).count();
+        assert_eq!(convs, 1 + 33 * 3); // stem + three per bottleneck
+        let residuals = l.iter().filter(|x| x.kind == LayerKind::Residual).count();
+        assert_eq!(residuals, 33);
+    }
+
+    #[test]
+    fn stage3_dominates_depth(/* 23 blocks at 14x14 */) {
+        let l = resnet101_layers();
+        let stage4_layers = l.iter().filter(|x| x.name.starts_with("res4_")).count();
+        assert_eq!(stage4_layers, 23 * 4);
+    }
+
+    #[test]
+    fn stem_workload_known_value() {
+        let l = resnet101_layers();
+        // conv7x7/2: 2 * 112^2 * 49 * 3 * 64 / 1e6 ≈ 236.0 MFLOP
+        let expect = 2.0 * 112.0 * 112.0 * 49.0 * 3.0 * 64.0 / 1e6;
+        assert!((l[0].workload_mflops - expect).abs() < 1e-9);
+    }
+
+    #[test]
+    fn downsample_blocks_have_projection_cost() {
+        let l = resnet101_layers();
+        let first_add = l.iter().find(|x| x.name == "res3_00_add").unwrap();
+        let later_add = l.iter().find(|x| x.name == "res3_01_add").unwrap();
+        assert!(first_add.workload_mflops > 10.0 * later_add.workload_mflops);
+    }
+}

@@ -1,0 +1,88 @@
+//! VGG19 per-layer profile at 224×224×3 (Simonyan & Zisserman config E).
+//!
+//! 16 conv3×3 layers in five stages (64, 128, 256, 512, 512 channels),
+//! 2×2 max-pool after each stage, then FC-4096, FC-4096, FC-1000.
+//! ReLU cost is folded into the preceding conv/fc (it is < 0.1 % of the
+//! MACs and never a cut point by itself).
+
+use super::{act_bytes, conv_mflops, fc_mflops, LayerKind, LayerSpec};
+
+/// Build the 24-entry layer list (16 conv + 5 pool + 3 fc).
+pub fn vgg19_layers() -> Vec<LayerSpec> {
+    // (stage channels, convs in stage)
+    const STAGES: [(usize, usize); 5] = [(64, 2), (128, 2), (256, 4), (512, 4), (512, 4)];
+    let mut layers = Vec::with_capacity(24);
+    let mut h = 224usize;
+    let mut cin = 3usize;
+    for (si, &(cout, reps)) in STAGES.iter().enumerate() {
+        for r in 0..reps {
+            layers.push(LayerSpec {
+                name: format!("conv{}_{}", si + 1, r + 1),
+                kind: LayerKind::Conv,
+                workload_mflops: conv_mflops(h, h, 3, cin, cout),
+                output_bytes: act_bytes(h, h, cout),
+            });
+            cin = cout;
+        }
+        h /= 2;
+        layers.push(LayerSpec {
+            name: format!("pool{}", si + 1),
+            kind: LayerKind::Pool,
+            // 2x2 max-pool: one compare per output element ≈ 3 ops/out elem
+            workload_mflops: 3.0 * (h * h * cout) as f64 / 1e6,
+            output_bytes: act_bytes(h, h, cout),
+        });
+    }
+    // h is now 7; flatten 7*7*512 = 25088
+    let flat = h * h * cin;
+    for (i, (inp, out)) in [(flat, 4096), (4096, 4096), (4096, 1000)]
+        .into_iter()
+        .enumerate()
+    {
+        layers.push(LayerSpec {
+            name: format!("fc{}", i + 6),
+            kind: LayerKind::Fc,
+            workload_mflops: fc_mflops(inp, out),
+            output_bytes: (out * 4) as f64,
+        });
+    }
+    layers
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn layer_count_and_order() {
+        let l = vgg19_layers();
+        assert_eq!(l.len(), 24);
+        assert_eq!(l[0].name, "conv1_1");
+        assert_eq!(l[2].name, "pool1");
+        assert_eq!(l.last().unwrap().name, "fc8");
+    }
+
+    #[test]
+    fn conv3_workloads_known_values() {
+        let l = vgg19_layers();
+        // conv1_2: 224x224, 64->64, 3x3 => 2*224^2*9*64*64 / 1e6
+        let conv1_2 = l.iter().find(|x| x.name == "conv1_2").unwrap();
+        let expect = 2.0 * 224.0 * 224.0 * 9.0 * 64.0 * 64.0 / 1e6;
+        assert!((conv1_2.workload_mflops - expect).abs() < 1e-9);
+    }
+
+    #[test]
+    fn fc6_is_the_biggest_fc() {
+        let l = vgg19_layers();
+        let fc6 = l.iter().find(|x| x.name == "fc6").unwrap();
+        assert!((fc6.workload_mflops - 2.0 * 25088.0 * 4096.0 / 1e6).abs() < 1e-9);
+    }
+
+    #[test]
+    fn activations_shrink_across_pools() {
+        let l = vgg19_layers();
+        let p1 = l.iter().find(|x| x.name == "pool1").unwrap();
+        let p5 = l.iter().find(|x| x.name == "pool5").unwrap();
+        assert!(p1.output_bytes > p5.output_bytes);
+    }
+}

@@ -1,0 +1,330 @@
+//! Experiment harness: regenerates every table and figure of §V.
+//!
+//! * [`fig2`] — ResNet101 λ-sweep: completion rate (a), total average
+//!   delay (b), workload variance (c) for SCC/Random/RRP/DQN.
+//! * [`fig3`] — the same three panels for VGG19.
+//! * [`scale`] — completion rate vs network size N ∈ {4..32} at λ = 25.
+//! * [`ablation_split`] — balanced (Alg. 1) vs naive equal-layer splitting.
+//! * [`ablation_ga`] — GA solution quality vs iteration budget.
+//!
+//! Every function returns structured rows and can render the paper-style
+//! table; the benches in `rust/benches/` wrap these with timing.
+
+pub mod plot;
+
+use crate::config::SimConfig;
+use crate::dnn::DnnModel;
+use crate::metrics::Report;
+use crate::offload::SchemeKind;
+use crate::sim::{Simulation, SplitPolicy};
+use crate::util::json::Json;
+
+/// One data point of a figure: a (x, scheme) cell.
+#[derive(Clone, Debug)]
+pub struct Row {
+    /// Sweep coordinate (λ for Figs. 2–3, N for the scale study).
+    pub x: f64,
+    pub scheme: SchemeKind,
+    pub report: Report,
+}
+
+/// Sweep settings; `quick` shrinks slots for CI-speed runs.
+#[derive(Clone, Debug)]
+pub struct SweepOpts {
+    pub slots: usize,
+    pub seed: u64,
+    pub decision_fraction: f64,
+    /// Independent repetitions averaged per point (seeds seed..seed+r).
+    pub repeats: usize,
+}
+
+impl Default for SweepOpts {
+    fn default() -> Self {
+        SweepOpts {
+            slots: 20,
+            seed: 42,
+            decision_fraction: 0.05,
+            repeats: 1,
+        }
+    }
+}
+
+impl SweepOpts {
+    pub fn quick() -> SweepOpts {
+        SweepOpts {
+            slots: 6,
+            ..SweepOpts::default()
+        }
+    }
+}
+
+fn base_cfg(model: DnnModel, opts: &SweepOpts) -> SimConfig {
+    SimConfig {
+        model,
+        slots: opts.slots,
+        seed: opts.seed,
+        decision_fraction: opts.decision_fraction,
+        ..SimConfig::default()
+    }
+}
+
+fn mean_reports(reports: Vec<Report>) -> Report {
+    // average the headline metrics across repetitions (simple field mean)
+    let n = reports.len() as f64;
+    let mut out = reports[0].clone();
+    if reports.len() > 1 {
+        let sum_u64 = |f: fn(&Report) -> u64| -> u64 {
+            (reports.iter().map(|r| f(r) as f64).sum::<f64>() / n).round() as u64
+        };
+        let sum_f = |f: fn(&Report) -> f64| -> f64 {
+            reports.iter().map(f).sum::<f64>() / n
+        };
+        out.total_tasks = sum_u64(|r| r.total_tasks);
+        out.completed_tasks = sum_u64(|r| r.completed_tasks);
+        out.dropped_tasks = out.total_tasks - out.completed_tasks;
+        out.avg_delay_ms = sum_f(|r| r.avg_delay_ms);
+        out.avg_comp_ms = sum_f(|r| r.avg_comp_ms);
+        out.avg_tran_ms = sum_f(|r| r.avg_tran_ms);
+        out.avg_uplink_ms = sum_f(|r| r.avg_uplink_ms);
+        out.workload_variance = sum_f(|r| r.workload_variance);
+        out.workload_mean = sum_f(|r| r.workload_mean);
+        out.delay_p50_ms = sum_f(|r| r.delay_p50_ms);
+        out.delay_p95_ms = sum_f(|r| r.delay_p95_ms);
+    }
+    out
+}
+
+/// Run one (model, λ, scheme) point, averaged over `opts.repeats` seeds.
+pub fn run_point(
+    model: DnnModel,
+    lambda: f64,
+    scheme: SchemeKind,
+    opts: &SweepOpts,
+) -> Report {
+    let reports: Vec<Report> = (0..opts.repeats.max(1))
+        .map(|r| {
+            let mut cfg = base_cfg(model, opts);
+            cfg.lambda = lambda;
+            cfg.seed = opts.seed + r as u64 * 1000;
+            Simulation::new(&cfg, scheme).run()
+        })
+        .collect();
+    mean_reports(reports)
+}
+
+/// λ-sweep over all four schemes (the engine behind Figs. 2 & 3).
+pub fn lambda_sweep(model: DnnModel, lambdas: &[f64], opts: &SweepOpts) -> Vec<Row> {
+    let mut rows = Vec::new();
+    for &lambda in lambdas {
+        for scheme in SchemeKind::all() {
+            rows.push(Row {
+                x: lambda,
+                scheme,
+                report: run_point(model, lambda, scheme, opts),
+            });
+        }
+    }
+    rows
+}
+
+/// Paper default λ grid (§V-A: λ ∈ 4–70).
+pub fn default_lambdas() -> Vec<f64> {
+    vec![4.0, 10.0, 25.0, 40.0, 55.0, 70.0]
+}
+
+/// Fig. 2 (ResNet101, L=4, D_M=3): all three panels.
+pub fn fig2(opts: &SweepOpts) -> Vec<Row> {
+    lambda_sweep(DnnModel::Resnet101, &default_lambdas(), opts)
+}
+
+/// Fig. 3 (VGG19, L=3, D_M=2): all three panels.
+pub fn fig3(opts: &SweepOpts) -> Vec<Row> {
+    lambda_sweep(DnnModel::Vgg19, &default_lambdas(), opts)
+}
+
+/// §V-B network-scale study: completion rate vs N at fixed λ = 25.
+pub fn scale(ns: &[usize], opts: &SweepOpts) -> Vec<Row> {
+    let mut rows = Vec::new();
+    for &n in ns {
+        for scheme in SchemeKind::all() {
+            let reports: Vec<Report> = (0..opts.repeats.max(1))
+                .map(|r| {
+                    let mut cfg = base_cfg(DnnModel::Vgg19, opts);
+                    cfg.n = n;
+                    cfg.lambda = 25.0;
+                    cfg.seed = opts.seed + r as u64 * 1000;
+                    Simulation::new(&cfg, scheme).run()
+                })
+                .collect();
+            rows.push(Row {
+                x: n as f64,
+                scheme,
+                report: mean_reports(reports),
+            });
+        }
+    }
+    rows
+}
+
+/// Default N grid for the scale study (paper: 4 – 32).
+pub fn default_ns() -> Vec<usize> {
+    vec![4, 8, 16, 24, 32]
+}
+
+/// Ablation: Alg. 1 balanced splitting vs naive equal-layer cuts (SCC).
+pub fn ablation_split(model: DnnModel, lambdas: &[f64], opts: &SweepOpts) -> Vec<(f64, Report, Report)> {
+    lambdas
+        .iter()
+        .map(|&lambda| {
+            let mut cfg = base_cfg(model, opts);
+            cfg.lambda = lambda;
+            let bal = Simulation::new(&cfg, SchemeKind::Scc)
+                .with_split_policy(SplitPolicy::Balanced)
+                .run();
+            let naive = Simulation::new(&cfg, SchemeKind::Scc)
+                .with_split_policy(SplitPolicy::NaiveEqualLayers)
+                .run();
+            (lambda, bal, naive)
+        })
+        .collect()
+}
+
+/// Ablation: GA quality vs iteration budget (N_iter sweep, fixed workload).
+pub fn ablation_ga(iters: &[usize], opts: &SweepOpts) -> Vec<(usize, Report)> {
+    iters
+        .iter()
+        .map(|&it| {
+            let mut cfg = base_cfg(DnnModel::Vgg19, opts);
+            cfg.lambda = 40.0;
+            cfg.ga.n_iter = it;
+            (it, Simulation::new(&cfg, SchemeKind::Scc).run())
+        })
+        .collect()
+}
+
+/// Render rows as the three paper panels plus ASCII charts.
+pub fn render_panels_with_charts(title: &str, rows: &[Row], x_name: &str) -> String {
+    let mut out = render_panels(title, rows, x_name);
+    out.push('\n');
+    out.push_str(&plot::ascii_chart(
+        "completion rate",
+        &plot::series_from_rows(rows, |r| r.completion_rate()),
+        60,
+        12,
+    ));
+    out.push_str(&plot::ascii_chart(
+        "total average delay [ms]",
+        &plot::series_from_rows(rows, |r| r.avg_delay_ms),
+        60,
+        12,
+    ));
+    out
+}
+
+/// Render rows as the three paper panels (completion / delay / variance).
+pub fn render_panels(title: &str, rows: &[Row], x_name: &str) -> String {
+    let mut xs: Vec<f64> = rows.iter().map(|r| r.x).collect();
+    xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    xs.dedup();
+    let schemes = SchemeKind::all();
+    let mut out = format!("== {title} ==\n");
+    for (panel, metric) in [
+        ("(a) task completion rate", 0usize),
+        ("(b) total average delay [ms]", 1),
+        ("(c) satellite workload variance [MFLOP^2]", 2),
+    ] {
+        out.push_str(&format!("-- {panel} --\n{x_name:>8}"));
+        for s in schemes {
+            out.push_str(&format!("{:>14}", s.name()));
+        }
+        out.push('\n');
+        for &x in &xs {
+            out.push_str(&format!("{x:>8.0}"));
+            for s in schemes {
+                let row = rows
+                    .iter()
+                    .find(|r| r.x == x && r.scheme == s)
+                    .expect("missing row");
+                let v = match metric {
+                    0 => row.report.completion_rate(),
+                    1 => row.report.avg_delay_ms,
+                    _ => row.report.workload_variance,
+                };
+                match metric {
+                    0 => out.push_str(&format!("{v:>14.4}")),
+                    1 => out.push_str(&format!("{v:>14.1}")),
+                    _ => out.push_str(&format!("{v:>14.3e}")),
+                }
+            }
+            out.push('\n');
+        }
+    }
+    out
+}
+
+/// Export rows as JSON (one object per point) for external plotting.
+pub fn rows_to_json(rows: &[Row]) -> Json {
+    Json::Arr(
+        rows.iter()
+            .map(|r| {
+                let mut obj = match r.report.to_json() {
+                    Json::Obj(m) => m,
+                    _ => unreachable!(),
+                };
+                obj.insert("x".into(), Json::Num(r.x));
+                obj.insert("scheme".into(), Json::Str(r.scheme.name().into()));
+                Json::Obj(obj)
+            })
+            .collect(),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quick_lambda_sweep_has_all_cells() {
+        let opts = SweepOpts::quick();
+        let rows = lambda_sweep(DnnModel::Vgg19, &[4.0, 25.0], &opts);
+        assert_eq!(rows.len(), 2 * 4);
+        for r in &rows {
+            assert!(r.report.total_tasks > 0);
+        }
+    }
+
+    #[test]
+    fn render_produces_all_panels() {
+        let opts = SweepOpts::quick();
+        let rows = lambda_sweep(DnnModel::Vgg19, &[10.0], &opts);
+        let s = render_panels("Fig test", &rows, "lambda");
+        assert!(s.contains("(a) task completion rate"));
+        assert!(s.contains("(b) total average delay"));
+        assert!(s.contains("(c) satellite workload variance"));
+        assert!(s.contains("SCC"));
+    }
+
+    #[test]
+    fn json_export_parses() {
+        let opts = SweepOpts::quick();
+        let rows = lambda_sweep(DnnModel::Vgg19, &[10.0], &opts);
+        let j = rows_to_json(&rows).to_string();
+        let parsed = crate::util::json::Json::parse(&j).unwrap();
+        assert_eq!(parsed.as_arr().unwrap().len(), 4);
+    }
+
+    #[test]
+    fn repeats_average() {
+        let mut opts = SweepOpts::quick();
+        opts.repeats = 2;
+        let r = run_point(DnnModel::Vgg19, 10.0, SchemeKind::Random, &opts);
+        assert!(r.total_tasks > 0);
+    }
+
+    #[test]
+    fn ablation_split_runs() {
+        let opts = SweepOpts::quick();
+        let rows = ablation_split(DnnModel::Vgg19, &[10.0], &opts);
+        assert_eq!(rows.len(), 1);
+    }
+}

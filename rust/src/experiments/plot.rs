@@ -1,0 +1,165 @@
+//! Terminal plotting substrate: renders the figure panels as ASCII line
+//! charts so `satkit experiment`/`cargo bench` output is readable without
+//! an external plotting stack (the offline image has none).
+
+/// One named series: (x, y) points, x ascending.
+#[derive(Clone, Debug)]
+pub struct Series {
+    pub name: String,
+    pub points: Vec<(f64, f64)>,
+}
+
+/// Render series as an ASCII chart of `width` × `height` characters
+/// (plus axes). Each series draws with its own glyph; overlaps show the
+/// later series.
+pub fn ascii_chart(title: &str, series: &[Series], width: usize, height: usize) -> String {
+    const GLYPHS: [char; 6] = ['*', 'o', '+', 'x', '#', '@'];
+    if series.is_empty() || series.iter().all(|s| s.points.is_empty()) {
+        return format!("{title}\n(no data)\n");
+    }
+    let (mut x_min, mut x_max) = (f64::INFINITY, f64::NEG_INFINITY);
+    let (mut y_min, mut y_max) = (f64::INFINITY, f64::NEG_INFINITY);
+    for s in series {
+        for &(x, y) in &s.points {
+            x_min = x_min.min(x);
+            x_max = x_max.max(x);
+            y_min = y_min.min(y);
+            y_max = y_max.max(y);
+        }
+    }
+    if (x_max - x_min).abs() < 1e-12 {
+        x_max = x_min + 1.0;
+    }
+    if (y_max - y_min).abs() < 1e-12 {
+        y_max = y_min + 1.0;
+    }
+    let mut grid = vec![vec![' '; width]; height];
+    for (si, s) in series.iter().enumerate() {
+        let glyph = GLYPHS[si % GLYPHS.len()];
+        // draw line-interpolated points
+        for w in s.points.windows(2) {
+            let steps = width * 2;
+            for t in 0..=steps {
+                let f = t as f64 / steps as f64;
+                let x = w[0].0 + f * (w[1].0 - w[0].0);
+                let y = w[0].1 + f * (w[1].1 - w[0].1);
+                let col = (((x - x_min) / (x_max - x_min)) * (width - 1) as f64).round()
+                    as usize;
+                let row = (((y - y_min) / (y_max - y_min)) * (height - 1) as f64).round()
+                    as usize;
+                grid[height - 1 - row][col.min(width - 1)] = glyph;
+            }
+        }
+        if s.points.len() == 1 {
+            let (x, y) = s.points[0];
+            let col =
+                (((x - x_min) / (x_max - x_min)) * (width - 1) as f64).round() as usize;
+            let row =
+                (((y - y_min) / (y_max - y_min)) * (height - 1) as f64).round() as usize;
+            grid[height - 1 - row][col.min(width - 1)] = glyph;
+        }
+    }
+    let mut out = String::new();
+    out.push_str(title);
+    out.push('\n');
+    for (i, row) in grid.iter().enumerate() {
+        let y_label = if i == 0 {
+            format!("{y_max:>10.3e} |")
+        } else if i == height - 1 {
+            format!("{y_min:>10.3e} |")
+        } else {
+            format!("{:>10} |", "")
+        };
+        out.push_str(&y_label);
+        out.extend(row.iter());
+        out.push('\n');
+    }
+    out.push_str(&format!(
+        "{:>10} +{}\n{:>12}{:<w$.0}{:>.0}\n",
+        "",
+        "-".repeat(width),
+        "",
+        x_min,
+        x_max,
+        w = width.saturating_sub(2)
+    ));
+    let legend: Vec<String> = series
+        .iter()
+        .enumerate()
+        .map(|(i, s)| format!("{} {}", GLYPHS[i % GLYPHS.len()], s.name))
+        .collect();
+    out.push_str(&format!("{:>12}{}\n", "", legend.join("   ")));
+    out
+}
+
+/// Build the per-scheme series of one metric from experiment rows.
+pub fn series_from_rows<F: Fn(&crate::metrics::Report) -> f64>(
+    rows: &[super::Row],
+    metric: F,
+) -> Vec<Series> {
+    let mut out: Vec<Series> = Vec::new();
+    for kind in crate::offload::SchemeKind::all() {
+        let mut pts: Vec<(f64, f64)> = rows
+            .iter()
+            .filter(|r| r.scheme == kind)
+            .map(|r| (r.x, metric(&r.report)))
+            .collect();
+        pts.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        if !pts.is_empty() {
+            out.push(Series {
+                name: kind.name().to_string(),
+                points: pts,
+            });
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_two_series() {
+        let s = vec![
+            Series {
+                name: "up".into(),
+                points: vec![(0.0, 0.0), (1.0, 1.0), (2.0, 4.0)],
+            },
+            Series {
+                name: "down".into(),
+                points: vec![(0.0, 4.0), (2.0, 0.0)],
+            },
+        ];
+        let chart = ascii_chart("test", &s, 40, 10);
+        assert!(chart.contains('*'));
+        assert!(chart.contains('o'));
+        assert!(chart.contains("up"));
+        assert!(chart.contains("down"));
+        assert!(chart.lines().count() >= 12);
+    }
+
+    #[test]
+    fn empty_is_safe() {
+        assert!(ascii_chart("t", &[], 10, 5).contains("no data"));
+    }
+
+    #[test]
+    fn constant_series_no_panic() {
+        let s = vec![Series {
+            name: "flat".into(),
+            points: vec![(1.0, 2.0), (2.0, 2.0)],
+        }];
+        let chart = ascii_chart("flat", &s, 20, 5);
+        assert!(chart.contains('*'));
+    }
+
+    #[test]
+    fn single_point_series() {
+        let s = vec![Series {
+            name: "dot".into(),
+            points: vec![(1.0, 1.0)],
+        }];
+        assert!(ascii_chart("p", &s, 10, 5).contains('*'));
+    }
+}

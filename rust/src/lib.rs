@@ -1,0 +1,50 @@
+//! # satkit — collaborative satellite computing via adaptive DNN task
+//! splitting and offloading
+//!
+//! A reproduction of *"Collaborative Satellite Computing through Adaptive
+//! DNN Task Splitting and Offloading"* (ISCC 2024) as a production-shaped
+//! three-layer stack:
+//!
+//! * **L3 (this crate)** — the coordination contribution: the
+//!   workload-balanced task splitting scheme ([`splitting`], Alg. 1), the
+//!   GA-based self-adaptive offloading scheme ([`offload::ga`], Alg. 2),
+//!   the paper's baselines (Random / RRP / DQN), the constellation
+//!   simulator ([`sim`]) implementing the system model of Eq. 1–9, and a
+//!   thread-pool coordinator ([`coordinator`]) that executes real DNN
+//!   slice inference through PJRT.
+//! * **L2 (python/compile/model.py)** — JAX slice forwards, lowered once
+//!   to `artifacts/*.hlo.txt` at build time.
+//! * **L1 (python/compile/kernels/)** — Pallas matmul/conv kernels inside
+//!   those graphs, validated against pure-jnp oracles.
+//!
+//! Python never runs on the request path: [`runtime`] loads the HLO text
+//! artifacts and executes them on the PJRT CPU client from Rust.
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use satkit::config::SimConfig;
+//! use satkit::offload::SchemeKind;
+//! use satkit::sim::Simulation;
+//!
+//! let cfg = SimConfig::default();
+//! let report = Simulation::new(&cfg, SchemeKind::Scc).run();
+//! println!("completion rate = {:.3}", report.completion_rate());
+//! ```
+
+pub mod comm;
+pub mod config;
+pub mod coordinator;
+pub mod dnn;
+pub mod metrics;
+pub mod nn;
+pub mod offload;
+pub mod runtime;
+pub mod satellite;
+pub mod sim;
+pub mod splitting;
+pub mod tasks;
+pub mod topology;
+pub mod util;
+pub mod experiments;
+pub mod bench;

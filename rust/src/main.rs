@@ -1,0 +1,294 @@
+//! satkit CLI — leader entrypoint.
+//!
+//! Subcommands:
+//!   simulate            run one simulation and print the report
+//!   sweep               λ-sweep all four schemes for one model
+//!   experiment <id>     regenerate a paper figure (fig2|fig3|scale|
+//!                       ablation-split|ablation-ga|all); writes
+//!                       results/<id>.json next to the printed table
+//!   serve               run the coordinator on real PJRT slice inference
+//!   validate-artifacts  load + execute every artifact once
+//!   print-config        show the effective Table-I configuration
+//!
+//! Common options: --config <file.toml>, --n, --slots, --lambda, --model,
+//! --scheme, --seed, --split-l, --d-max, --json <out.json>.
+
+use satkit::config::SimConfig;
+use satkit::coordinator::{Coordinator, InferenceRequest};
+use satkit::experiments as exp;
+use satkit::offload::SchemeKind;
+use satkit::runtime::{default_artifact_dir, Engine};
+use satkit::sim::Simulation;
+use satkit::util::cli::Args;
+use satkit::util::stats;
+
+fn main() {
+    let args = Args::parse(std::env::args().skip(1));
+    let code = match run(&args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e}");
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+fn run(args: &Args) -> Result<(), String> {
+    let sub = args.subcommand.clone().unwrap_or_else(|| "help".into());
+    match sub.as_str() {
+        "simulate" => simulate(args),
+        "sweep" => sweep(args),
+        "experiment" => experiment(args),
+        "serve" => serve(args).map_err(|e| format!("{e:#}")),
+        "validate-artifacts" => validate_artifacts().map_err(|e| format!("{e:#}")),
+        "print-config" => {
+            let cfg = load_cfg(args)?;
+            println!("{}", cfg.table());
+            Ok(())
+        }
+        _ => {
+            println!("{}", HELP);
+            Ok(())
+        }
+    }
+}
+
+const HELP: &str = "satkit — collaborative satellite computing (ISCC 2024 reproduction)
+
+USAGE: satkit <subcommand> [--options]
+
+SUBCOMMANDS
+  simulate            one simulation run (--scheme scc|random|rrp|dqn)
+  sweep               lambda sweep, all schemes (--model vgg19|resnet101)
+  experiment <id>     fig2 | fig3 | scale | ablation-split | ablation-ga | all
+  serve               coordinator with real PJRT slice inference
+  validate-artifacts  compile + execute each artifacts/*.hlo.txt
+  print-config        effective Table-I parameters
+
+OPTIONS
+  --config FILE   TOML config   --n N          grid edge (default 10)
+  --slots S       time slots    --lambda L     task incidence (4-70)
+  --model M       vgg19|resnet101              --scheme S
+  --seed X        RNG seed      --repeats R    seeds averaged per point
+  --quick         smaller slot budget          --json FILE   export rows
+  --requests K    serve: number of requests    --workers W   exec workers";
+
+fn load_cfg(args: &Args) -> Result<SimConfig, String> {
+    SimConfig::load(args.get("config"), args)
+}
+
+fn sweep_opts(args: &Args, cfg: &SimConfig) -> exp::SweepOpts {
+    let mut o = if args.has_flag("quick") {
+        exp::SweepOpts::quick()
+    } else {
+        exp::SweepOpts::default()
+    };
+    o.seed = cfg.seed;
+    o.slots = args.get_or("slots", if args.has_flag("quick") { o.slots } else { cfg.slots });
+    o.decision_fraction = cfg.decision_fraction;
+    o.repeats = args.get_or("repeats", 1usize);
+    o
+}
+
+fn maybe_write_json(args: &Args, rows: &[exp::Row]) -> Result<(), String> {
+    if let Some(path) = args.get("json") {
+        std::fs::write(path, exp::rows_to_json(rows).to_string())
+            .map_err(|e| format!("writing {path}: {e}"))?;
+        println!("wrote {path}");
+    }
+    Ok(())
+}
+
+fn simulate(args: &Args) -> Result<(), String> {
+    let cfg = load_cfg(args)?;
+    let kind = SchemeKind::parse(args.get("scheme").unwrap_or("scc"))?;
+    println!("{}", cfg.table());
+    println!();
+    let report = Simulation::new(&cfg, kind).run();
+    println!("{}", report.row(kind.name()));
+    println!("{}", report.to_json().to_string());
+    Ok(())
+}
+
+fn sweep(args: &Args) -> Result<(), String> {
+    let cfg = load_cfg(args)?;
+    let opts = sweep_opts(args, &cfg);
+    let lambdas: Vec<f64> = match args.get("lambdas") {
+        Some(s) => s
+            .split(',')
+            .map(|t| t.parse::<f64>().map_err(|e| format!("--lambdas: {e}")))
+            .collect::<Result<_, _>>()?,
+        None => exp::default_lambdas(),
+    };
+    let rows = exp::lambda_sweep(cfg.model, &lambdas, &opts);
+    println!(
+        "{}",
+        exp::render_panels(
+            &format!("lambda sweep ({})", cfg.model.name()),
+            &rows,
+            "lambda"
+        )
+    );
+    maybe_write_json(args, &rows)
+}
+
+fn experiment(args: &Args) -> Result<(), String> {
+    let cfg = load_cfg(args)?;
+    let opts = sweep_opts(args, &cfg);
+    let id = args
+        .positionals
+        .first()
+        .map(String::as_str)
+        .unwrap_or("all");
+    std::fs::create_dir_all("results").map_err(|e| e.to_string())?;
+    let run_fig = |name: &str, rows: Vec<exp::Row>, xn: &str| -> Result<(), String> {
+        println!("{}", exp::render_panels_with_charts(name, &rows, xn));
+        let path = format!("results/{name}.json");
+        std::fs::write(&path, exp::rows_to_json(&rows).to_string())
+            .map_err(|e| e.to_string())?;
+        println!("wrote {path}\n");
+        Ok(())
+    };
+    match id {
+        "fig2" => run_fig("fig2", exp::fig2(&opts), "lambda")?,
+        "fig3" => run_fig("fig3", exp::fig3(&opts), "lambda")?,
+        "scale" => run_fig("scale", exp::scale(&exp::default_ns(), &opts), "N")?,
+        "ablation-split" => {
+            let rows = exp::ablation_split(cfg.model, &exp::default_lambdas(), &opts);
+            println!("== ablation: Alg.1 balanced vs naive equal-layer split ({}) ==", cfg.model.name());
+            println!("{:>8} {:>16} {:>16} {:>14} {:>14}", "lambda", "bal complete", "naive complete", "bal delay", "naive delay");
+            for (l, b, n) in &rows {
+                println!(
+                    "{l:>8.0} {:>15.2}% {:>15.2}% {:>12.1}ms {:>12.1}ms",
+                    100.0 * b.completion_rate(),
+                    100.0 * n.completion_rate(),
+                    b.avg_delay_ms,
+                    n.avg_delay_ms
+                );
+            }
+        }
+        "ablation-ga" => {
+            let iters = [1usize, 2, 5, 10, 20, 40];
+            let rows = exp::ablation_ga(&iters, &opts);
+            println!("== ablation: GA iteration budget (VGG19, lambda=40) ==");
+            println!("{:>8} {:>14} {:>14} {:>16}", "N_iter", "complete", "delay", "variance");
+            for (it, r) in &rows {
+                println!(
+                    "{it:>8} {:>13.2}% {:>12.1}ms {:>16.3e}",
+                    100.0 * r.completion_rate(),
+                    r.avg_delay_ms,
+                    r.workload_variance
+                );
+            }
+        }
+        "all" => {
+            run_fig("fig2", exp::fig2(&opts), "lambda")?;
+            run_fig("fig3", exp::fig3(&opts), "lambda")?;
+            run_fig("scale", exp::scale(&exp::default_ns(), &opts), "N")?;
+        }
+        other => return Err(format!("unknown experiment '{other}'")),
+    }
+    Ok(())
+}
+
+fn serve(args: &Args) -> anyhow::Result<()> {
+    let cfg = load_cfg(args).map_err(anyhow::Error::msg)?;
+    let kind = SchemeKind::parse(args.get("scheme").unwrap_or("scc"))
+        .map_err(anyhow::Error::msg)?;
+    let n_req: usize = args.get_or("requests", 24);
+    let workers: usize = args.get_or(
+        "workers",
+        std::thread::available_parallelism().map(|p| p.get().min(4)).unwrap_or(2),
+    );
+    let dir = default_artifact_dir();
+    println!(
+        "starting coordinator: {} sats, scheme={}, {} exec workers, artifacts={}",
+        cfg.n * cfg.n,
+        kind.name(),
+        workers,
+        dir.display()
+    );
+    let mut coord = Coordinator::new(&cfg, &dir, workers, kind)?;
+    println!("artifacts loaded: {:?}", coord.artifact_names());
+
+    let mut rng = satkit::util::rng::Pcg64::new(cfg.seed, 0x53E5);
+    let origins = satkit::tasks::decision_satellites(cfg.n * cfg.n, cfg.decision_fraction, cfg.seed);
+    let reqs: Vec<InferenceRequest> = (0..n_req)
+        .map(|i| InferenceRequest {
+            id: i as u64,
+            origin: *rng.choose(&origins),
+            model: cfg.model,
+        })
+        .collect();
+
+    let t0 = std::time::Instant::now();
+    let mut walls = Vec::new();
+    let mut modeled = Vec::new();
+    let mut dropped = 0usize;
+    for (i, r) in reqs.iter().enumerate() {
+        let resp = coord.serve(r)?;
+        if resp.dropped_at.is_some() {
+            dropped += 1;
+        } else {
+            walls.push(resp.wall_ms);
+            modeled.push(resp.modeled_ms);
+        }
+        if (i + 1) % 8 == 0 {
+            coord.tick();
+        }
+    }
+    let total_s = t0.elapsed().as_secs_f64();
+    println!(
+        "served {}/{} requests in {:.2}s  ({:.1} req/s)",
+        n_req - dropped,
+        n_req,
+        total_s,
+        n_req as f64 / total_s
+    );
+    println!(
+        "real exec latency  p50={:.1}ms p95={:.1}ms mean={:.1}ms",
+        stats::percentile(&walls, 50.0),
+        stats::percentile(&walls, 95.0),
+        stats::mean(&walls)
+    );
+    println!(
+        "modeled delay      p50={:.1}ms p95={:.1}ms mean={:.1}ms",
+        stats::percentile(&modeled, 50.0),
+        stats::percentile(&modeled, 95.0),
+        stats::mean(&modeled)
+    );
+    println!(
+        "segments executed on PJRT: {}",
+        coord.stats.segments_executed.load(std::sync::atomic::Ordering::Relaxed)
+    );
+    Ok(())
+}
+
+fn validate_artifacts() -> anyhow::Result<()> {
+    let dir = default_artifact_dir();
+    let mut engine = Engine::cpu()?;
+    let names = engine.load_dir(&dir)?;
+    println!("platform: {}", engine.platform());
+    for name in &names {
+        let art = engine.get(name)?;
+        let inputs: Vec<Vec<f32>> = art
+            .meta
+            .inputs
+            .iter()
+            .map(|spec| (0..spec.num_elements()).map(|i| (i % 13) as f32 * 0.1).collect())
+            .collect();
+        let out = art.run_f32(&inputs)?;
+        let sums: Vec<f64> = out
+            .iter()
+            .map(|o| o.iter().map(|x| *x as f64).sum())
+            .collect();
+        println!(
+            "{name:<16} inputs={:?} outputs={:?} checksum={sums:?}",
+            art.meta.inputs.iter().map(|s| s.shape.clone()).collect::<Vec<_>>(),
+            art.meta.outputs.iter().map(|s| s.shape.clone()).collect::<Vec<_>>(),
+        );
+    }
+    println!("all {} artifacts OK", names.len());
+    Ok(())
+}

@@ -1,0 +1,284 @@
+//! Delay / drop accounting (§III-D, Eq. 5–9) and the three evaluation
+//! metrics of §V-B: task completion rate, total average delay, and the
+//! variance of total workload assigned to each satellite.
+
+use crate::topology::SatId;
+use crate::util::json::Json;
+use crate::util::stats;
+
+/// Outcome of one task after splitting + offloading + execution.
+#[derive(Clone, Debug)]
+pub struct TaskOutcome {
+    pub task_id: u64,
+    pub origin: SatId,
+    /// Drop point dp ∈ {1..L} if dropped, or L+1 if completed (11d).
+    pub drop_point: usize,
+    /// L — segment count for this task.
+    pub l: usize,
+    /// Σ computation delay over its executed segments [s] (Eq. 5 terms).
+    pub comp_delay_s: f64,
+    /// Σ transmission delay over its executed hops [s] (Eq. 7 terms).
+    pub tran_delay_s: f64,
+    /// Gateway uplink delay [s] (Eq. 1; identical distribution across
+    /// schemes, included for end-to-end realism).
+    pub uplink_delay_s: f64,
+}
+
+impl TaskOutcome {
+    pub fn completed(&self) -> bool {
+        self.drop_point == self.l + 1
+    }
+
+    /// Eq. 8 per-task total (comp + tran); uplink reported separately.
+    pub fn total_delay_s(&self) -> f64 {
+        self.comp_delay_s + self.tran_delay_s
+    }
+}
+
+/// Per-satellite accumulators (Eq. 5/7 are per-satellite sums).
+#[derive(Clone, Debug, Default)]
+pub struct SatelliteTotals {
+    pub comp_delay_s: f64,
+    pub tran_delay_s: f64,
+    pub assigned_mflops: f64,
+    pub segments_executed: u64,
+    pub segments_rejected: u64,
+}
+
+/// Collects everything a simulation run produces.
+#[derive(Clone, Debug)]
+pub struct MetricsCollector {
+    pub outcomes: Vec<TaskOutcome>,
+    pub per_sat: Vec<SatelliteTotals>,
+    pub slots_run: usize,
+}
+
+impl MetricsCollector {
+    pub fn new(n_sats: usize) -> MetricsCollector {
+        MetricsCollector {
+            outcomes: Vec::new(),
+            per_sat: vec![SatelliteTotals::default(); n_sats],
+            slots_run: 0,
+        }
+    }
+
+    pub fn record(&mut self, o: TaskOutcome) {
+        self.outcomes.push(o);
+    }
+
+    pub fn sat(&mut self, id: SatId) -> &mut SatelliteTotals {
+        &mut self.per_sat[id]
+    }
+
+    pub fn finish(self, slots_run: usize) -> Report {
+        Report {
+            slots_run,
+            ..Report::from_collector(self)
+        }
+    }
+}
+
+/// Final experiment report — the quantities plotted in Figs. 2 & 3.
+#[derive(Clone, Debug)]
+pub struct Report {
+    pub total_tasks: u64,
+    pub completed_tasks: u64,
+    pub dropped_tasks: u64,
+    /// Mean per-task total delay over COMPLETED tasks [ms] (Fig 2b/3b).
+    pub avg_delay_ms: f64,
+    /// Mean computation / transmission components [ms].
+    pub avg_comp_ms: f64,
+    pub avg_tran_ms: f64,
+    pub avg_uplink_ms: f64,
+    /// Variance of per-satellite assigned workload [MFLOP²] (Fig 2c/3c).
+    pub workload_variance: f64,
+    /// Mean per-satellite assigned workload [MFLOP].
+    pub workload_mean: f64,
+    /// p50 / p95 per-task delay [ms].
+    pub delay_p50_ms: f64,
+    pub delay_p95_ms: f64,
+    pub slots_run: usize,
+}
+
+impl Report {
+    fn from_collector(c: MetricsCollector) -> Report {
+        let total = c.outcomes.len() as u64;
+        let completed: Vec<&TaskOutcome> =
+            c.outcomes.iter().filter(|o| o.completed()).collect();
+        let delays_ms: Vec<f64> = completed
+            .iter()
+            .map(|o| o.total_delay_s() * 1e3)
+            .collect();
+        let assigned: Vec<f64> = c.per_sat.iter().map(|s| s.assigned_mflops).collect();
+        Report {
+            total_tasks: total,
+            completed_tasks: completed.len() as u64,
+            dropped_tasks: total - completed.len() as u64,
+            avg_delay_ms: stats::mean(&delays_ms),
+            avg_comp_ms: stats::mean(
+                &completed
+                    .iter()
+                    .map(|o| o.comp_delay_s * 1e3)
+                    .collect::<Vec<_>>(),
+            ),
+            avg_tran_ms: stats::mean(
+                &completed
+                    .iter()
+                    .map(|o| o.tran_delay_s * 1e3)
+                    .collect::<Vec<_>>(),
+            ),
+            avg_uplink_ms: stats::mean(
+                &completed
+                    .iter()
+                    .map(|o| o.uplink_delay_s * 1e3)
+                    .collect::<Vec<_>>(),
+            ),
+            workload_variance: stats::variance(&assigned),
+            workload_mean: stats::mean(&assigned),
+            delay_p50_ms: stats::percentile(&delays_ms, 50.0),
+            delay_p95_ms: stats::percentile(&delays_ms, 95.0),
+            slots_run: 0,
+        }
+    }
+
+    /// Task completion rate (Fig 2a/3a) = 1 − r_D (Eq. 9).
+    pub fn completion_rate(&self) -> f64 {
+        if self.total_tasks == 0 {
+            return 1.0;
+        }
+        self.completed_tasks as f64 / self.total_tasks as f64
+    }
+
+    /// Drop rate r_D (Eq. 9).
+    pub fn drop_rate(&self) -> f64 {
+        1.0 - self.completion_rate()
+    }
+
+    /// The scalar objective of Eq. 10 with weights (α, β); delay in seconds.
+    pub fn objective(&self, alpha: f64, beta: f64) -> f64 {
+        alpha * self.drop_rate() + beta * self.avg_delay_ms / 1e3
+    }
+
+    /// Coefficient of variation of satellite workload (scale-free balance).
+    pub fn workload_cv(&self) -> f64 {
+        if self.workload_mean == 0.0 {
+            0.0
+        } else {
+            self.workload_variance.sqrt() / self.workload_mean
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("total_tasks", Json::Num(self.total_tasks as f64)),
+            ("completed_tasks", Json::Num(self.completed_tasks as f64)),
+            ("completion_rate", Json::Num(self.completion_rate())),
+            ("avg_delay_ms", Json::Num(self.avg_delay_ms)),
+            ("avg_comp_ms", Json::Num(self.avg_comp_ms)),
+            ("avg_tran_ms", Json::Num(self.avg_tran_ms)),
+            ("avg_uplink_ms", Json::Num(self.avg_uplink_ms)),
+            ("delay_p50_ms", Json::Num(self.delay_p50_ms)),
+            ("delay_p95_ms", Json::Num(self.delay_p95_ms)),
+            ("workload_variance", Json::Num(self.workload_variance)),
+            ("workload_mean", Json::Num(self.workload_mean)),
+            ("workload_cv", Json::Num(self.workload_cv())),
+            ("slots_run", Json::Num(self.slots_run as f64)),
+        ])
+    }
+
+    /// One figure-style table row.
+    pub fn row(&self, label: &str) -> String {
+        format!(
+            "{label:<10} tasks={:<6} complete={:>6.2}% delay={:>9.1}ms (comp {:>8.1} + tran {:>7.1}) var={:>12.3e} cv={:.3}",
+            self.total_tasks,
+            100.0 * self.completion_rate(),
+            self.avg_delay_ms,
+            self.avg_comp_ms,
+            self.avg_tran_ms,
+            self.workload_variance,
+            self.workload_cv(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn outcome(id: u64, dp: usize, l: usize, comp: f64, tran: f64) -> TaskOutcome {
+        TaskOutcome {
+            task_id: id,
+            origin: 0,
+            drop_point: dp,
+            l,
+            comp_delay_s: comp,
+            tran_delay_s: tran,
+            uplink_delay_s: 0.05,
+        }
+    }
+
+    #[test]
+    fn completion_and_drop_rate_eq9() {
+        let mut c = MetricsCollector::new(4);
+        c.record(outcome(0, 4, 3, 1.0, 0.2)); // completed (dp = L+1)
+        c.record(outcome(1, 2, 3, 0.5, 0.1)); // dropped at segment 2
+        c.record(outcome(2, 4, 3, 2.0, 0.4)); // completed
+        let r = c.finish(10);
+        assert_eq!(r.total_tasks, 3);
+        assert_eq!(r.completed_tasks, 2);
+        assert!((r.completion_rate() - 2.0 / 3.0).abs() < 1e-12);
+        assert!((r.drop_rate() - 1.0 / 3.0).abs() < 1e-12);
+        assert_eq!(r.slots_run, 10);
+    }
+
+    #[test]
+    fn delay_only_over_completed() {
+        let mut c = MetricsCollector::new(1);
+        c.record(outcome(0, 3, 2, 1.0, 0.0)); // completed: 1000 ms
+        c.record(outcome(1, 1, 2, 99.0, 0.0)); // dropped: excluded
+        let r = c.finish(1);
+        assert!((r.avg_delay_ms - 1000.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn workload_variance_matches_stats() {
+        let mut c = MetricsCollector::new(3);
+        c.sat(0).assigned_mflops = 100.0;
+        c.sat(1).assigned_mflops = 200.0;
+        c.sat(2).assigned_mflops = 300.0;
+        let r = c.finish(1);
+        assert!((r.workload_mean - 200.0).abs() < 1e-12);
+        assert!((r.workload_variance - stats::variance(&[100.0, 200.0, 300.0])).abs() < 1e-9);
+    }
+
+    #[test]
+    fn empty_run_is_sane() {
+        let r = MetricsCollector::new(2).finish(0);
+        assert_eq!(r.completion_rate(), 1.0);
+        assert_eq!(r.avg_delay_ms, 0.0);
+    }
+
+    #[test]
+    fn objective_eq10_weights() {
+        let mut c = MetricsCollector::new(1);
+        c.record(outcome(0, 1, 2, 0.0, 0.0)); // dropped
+        c.record(outcome(1, 3, 2, 2.0, 0.0)); // completed, 2 s
+        let r = c.finish(1);
+        // r_D = 0.5, mean delay = 2 s
+        assert!((r.objective(1.0, 1.0) - 2.5).abs() < 1e-12);
+        assert!((r.objective(2.0, 0.5) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn json_roundtrips() {
+        let mut c = MetricsCollector::new(1);
+        c.record(outcome(0, 3, 2, 1.0, 0.5));
+        let r = c.finish(5);
+        let j = r.to_json().to_string();
+        let parsed = Json::parse(&j).unwrap();
+        assert_eq!(
+            parsed.get("completion_rate").unwrap().as_f64(),
+            Some(1.0)
+        );
+    }
+}

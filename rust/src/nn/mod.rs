@@ -1,0 +1,303 @@
+//! Neural-network substrate: a small fully-connected MLP with manual
+//! backprop and SGD, used by the DQN offloading baseline (§V-A) for
+//! online Q-learning, plus an experience-replay buffer.
+//!
+//! Implemented from scratch (the offline image has no ML crates); the
+//! network is deliberately the same architecture as the AOT-exported
+//! `qnet` artifact (STATE_DIM → 64 → 64 → N_ACTIONS) so the coordinator
+//! can serve Q-values through PJRT with identical semantics.
+
+use crate::util::rng::Pcg64;
+
+/// One dense layer: y = W·x + b with optional ReLU.
+#[derive(Clone, Debug)]
+struct Dense {
+    w: Vec<f64>, // row-major (out, in)
+    b: Vec<f64>,
+    inp: usize,
+    out: usize,
+    relu: bool,
+}
+
+impl Dense {
+    fn new(inp: usize, out: usize, relu: bool, rng: &mut Pcg64) -> Dense {
+        // He initialization
+        let scale = (2.0 / inp as f64).sqrt();
+        Dense {
+            w: (0..inp * out).map(|_| rng.normal() * scale).collect(),
+            b: vec![0.0; out],
+            inp,
+            out,
+            relu,
+        }
+    }
+
+    fn forward(&self, x: &[f64], pre: &mut Vec<f64>, post: &mut Vec<f64>) {
+        pre.clear();
+        post.clear();
+        for o in 0..self.out {
+            let row = &self.w[o * self.inp..(o + 1) * self.inp];
+            let mut acc = self.b[o];
+            for (wi, xi) in row.iter().zip(x) {
+                acc += wi * xi;
+            }
+            pre.push(acc);
+            post.push(if self.relu { acc.max(0.0) } else { acc });
+        }
+    }
+}
+
+/// A multi-layer perceptron: hidden layers use ReLU, output is linear.
+#[derive(Clone, Debug)]
+pub struct Mlp {
+    layers: Vec<Dense>,
+    dims: Vec<usize>,
+}
+
+impl Mlp {
+    /// `dims = [input, hidden..., output]`.
+    pub fn new(dims: &[usize], seed: u64) -> Mlp {
+        assert!(dims.len() >= 2);
+        let mut rng = Pcg64::new(seed, 0x4E4E);
+        let layers = dims
+            .windows(2)
+            .enumerate()
+            .map(|(i, w)| Dense::new(w[0], w[1], i + 2 < dims.len(), &mut rng))
+            .collect();
+        Mlp {
+            layers,
+            dims: dims.to_vec(),
+        }
+    }
+
+    pub fn input_dim(&self) -> usize {
+        self.dims[0]
+    }
+
+    pub fn output_dim(&self) -> usize {
+        *self.dims.last().unwrap()
+    }
+
+    /// Forward pass; returns the output activations.
+    pub fn forward(&self, x: &[f64]) -> Vec<f64> {
+        assert_eq!(x.len(), self.input_dim());
+        let mut cur = x.to_vec();
+        let (mut pre, mut post) = (Vec::new(), Vec::new());
+        for l in &self.layers {
+            l.forward(&cur, &mut pre, &mut post);
+            cur = post.clone();
+        }
+        cur
+    }
+
+    /// One SGD step on squared error of a SINGLE output unit (the taken
+    /// action's Q-value) against `target` — the DQN per-transition update.
+    /// Returns the pre-update TD error.
+    pub fn sgd_step_single(&mut self, x: &[f64], action: usize, target: f64, lr: f64) -> f64 {
+        // forward, caching activations
+        let mut acts: Vec<Vec<f64>> = vec![x.to_vec()];
+        let mut pres: Vec<Vec<f64>> = Vec::new();
+        let (mut pre, mut post) = (Vec::new(), Vec::new());
+        for l in &self.layers {
+            l.forward(acts.last().unwrap(), &mut pre, &mut post);
+            pres.push(pre.clone());
+            acts.push(post.clone());
+        }
+        let out = acts.last().unwrap();
+        let td = out[action] - target;
+
+        // backward: dL/dout = td on the taken action only (L = 0.5·td²)
+        let mut grad = vec![0.0; out.len()];
+        grad[action] = td;
+        for (li, l) in self.layers.iter_mut().enumerate().rev() {
+            let a_in = &acts[li];
+            let pre = &pres[li];
+            // through relu
+            let mut gz = grad.clone();
+            if l.relu {
+                for (g, p) in gz.iter_mut().zip(pre) {
+                    if *p <= 0.0 {
+                        *g = 0.0;
+                    }
+                }
+            }
+            // grads wrt inputs for next (lower) layer
+            let mut gin = vec![0.0; l.inp];
+            for o in 0..l.out {
+                let go = gz[o];
+                if go == 0.0 {
+                    continue;
+                }
+                let row = &mut l.w[o * l.inp..(o + 1) * l.inp];
+                for i in 0..l.inp {
+                    gin[i] += row[i] * go;
+                    row[i] -= lr * go * a_in[i];
+                }
+                l.b[o] -= lr * go;
+            }
+            grad = gin;
+        }
+        td
+    }
+
+    /// Polyak/hard copy from another network (target-network sync).
+    pub fn copy_from(&mut self, other: &Mlp) {
+        assert_eq!(self.dims, other.dims);
+        for (a, b) in self.layers.iter_mut().zip(&other.layers) {
+            a.w.copy_from_slice(&b.w);
+            a.b.copy_from_slice(&b.b);
+        }
+    }
+
+    /// Flattened parameters (for artifact-parity checks / export).
+    pub fn num_params(&self) -> usize {
+        self.layers.iter().map(|l| l.w.len() + l.b.len()).sum()
+    }
+}
+
+/// One DQN transition.
+#[derive(Clone, Debug)]
+pub struct Transition {
+    pub state: Vec<f64>,
+    pub action: usize,
+    pub reward: f64,
+    pub next_state: Vec<f64>,
+    pub terminal: bool,
+}
+
+/// Fixed-capacity ring-buffer experience replay.
+#[derive(Debug)]
+pub struct ReplayBuffer {
+    buf: Vec<Transition>,
+    cap: usize,
+    next: usize,
+}
+
+impl ReplayBuffer {
+    pub fn new(cap: usize) -> ReplayBuffer {
+        assert!(cap > 0);
+        ReplayBuffer {
+            buf: Vec::with_capacity(cap),
+            cap,
+            next: 0,
+        }
+    }
+
+    pub fn push(&mut self, t: Transition) {
+        if self.buf.len() < self.cap {
+            self.buf.push(t);
+        } else {
+            self.buf[self.next] = t;
+        }
+        self.next = (self.next + 1) % self.cap;
+    }
+
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    pub fn sample<'a>(&'a self, rng: &mut Pcg64, k: usize) -> Vec<&'a Transition> {
+        (0..k.min(self.buf.len()))
+            .map(|_| &self.buf[rng.usize_in(0, self.buf.len())])
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn forward_shapes() {
+        let net = Mlp::new(&[4, 8, 3], 1);
+        let y = net.forward(&[0.1, -0.2, 0.3, 0.4]);
+        assert_eq!(y.len(), 3);
+        assert_eq!(net.num_params(), 4 * 8 + 8 + 8 * 3 + 3);
+    }
+
+    #[test]
+    fn deterministic_init() {
+        let a = Mlp::new(&[4, 8, 2], 7);
+        let b = Mlp::new(&[4, 8, 2], 7);
+        assert_eq!(a.forward(&[1.0; 4]), b.forward(&[1.0; 4]));
+    }
+
+    #[test]
+    fn sgd_reduces_td_error() {
+        let mut net = Mlp::new(&[3, 16, 2], 3);
+        let x = [0.5, -0.3, 0.8];
+        let target = 2.0;
+        let before = (net.forward(&x)[1] - target).abs();
+        for _ in 0..200 {
+            net.sgd_step_single(&x, 1, target, 0.01);
+        }
+        let after = (net.forward(&x)[1] - target).abs();
+        assert!(after < 0.05 * before + 1e-3, "before={before} after={after}");
+    }
+
+    #[test]
+    fn sgd_single_leaves_other_outputs_mostly_alone() {
+        let mut net = Mlp::new(&[3, 32, 2], 4);
+        let x = [0.2, 0.1, -0.4];
+        let other_before = net.forward(&x)[0];
+        for _ in 0..50 {
+            net.sgd_step_single(&x, 1, 1.5, 0.005);
+        }
+        let other_after = net.forward(&x)[0];
+        // shared hidden layers move it a little, but far less than the target unit
+        assert!((other_after - other_before).abs() < 1.0);
+    }
+
+    #[test]
+    fn learns_xor_style_function() {
+        // regression sanity: fit q(a) = x0 XOR x1 on action 0
+        let mut net = Mlp::new(&[2, 24, 1], 5);
+        let data = [
+            ([0.0, 0.0], 0.0),
+            ([0.0, 1.0], 1.0),
+            ([1.0, 0.0], 1.0),
+            ([1.0, 1.0], 0.0),
+        ];
+        let mut rng = Pcg64::seed_from_u64(6);
+        for _ in 0..4000 {
+            let (x, y) = data[rng.usize_in(0, 4)];
+            net.sgd_step_single(&x, 0, y, 0.05);
+        }
+        for (x, y) in data {
+            assert!((net.forward(&x)[0] - y).abs() < 0.25, "xor({x:?}) != {y}");
+        }
+    }
+
+    #[test]
+    fn copy_from_syncs() {
+        let a = Mlp::new(&[3, 8, 2], 8);
+        let mut b = Mlp::new(&[3, 8, 2], 9);
+        let x = [0.3, 0.6, -0.1];
+        assert_ne!(a.forward(&x), b.forward(&x));
+        b.copy_from(&a);
+        assert_eq!(a.forward(&x), b.forward(&x));
+    }
+
+    #[test]
+    fn replay_ring_overwrites() {
+        let mut rb = ReplayBuffer::new(4);
+        for i in 0..10 {
+            rb.push(Transition {
+                state: vec![i as f64],
+                action: 0,
+                reward: 0.0,
+                next_state: vec![],
+                terminal: false,
+            });
+        }
+        assert_eq!(rb.len(), 4);
+        let mut rng = Pcg64::seed_from_u64(10);
+        for t in rb.sample(&mut rng, 8) {
+            assert!(t.state[0] >= 6.0); // only the newest 4 remain
+        }
+    }
+}

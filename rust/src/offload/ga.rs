@@ -1,0 +1,314 @@
+//! *SCC*: the GA-based self-adaptive task offloading scheme
+//! (Algorithm 2, §IV-B) — the paper's proposal.
+//!
+//! A chromosome is the processing sequence `(c_1, …, c_L)`; fitness is the
+//! (negated) deficit of Eq. 12. Each GA iteration performs, in order:
+//!
+//! 1. **Reproduction** (line 6): for every pair of distinct parents `C`,
+//!    `D` and every index pair `(i, j)` with `c_i = d_j`, the heuristic
+//!    splice summons two offspring that switch between the parents at the
+//!    shared gene — keeping offspring length `L` and inheriting contiguous
+//!    runs from both parents.
+//! 2. **Elimination** (line 7): chromosomes with the highest deficit are
+//!    removed until the group size is ≤ `N_K`.
+//! 3. **Augmentation** (line 8): `N_summ` fresh random chromosomes keep
+//!    diversity.
+//!
+//! Early stop (line 3): when the best deficit improves by ≤ ε between
+//! iterations. Complexity `O(N_iter · (N_summ + N_K)² · L)` as analysed
+//! in §IV-B.
+
+use super::{OffloadContext, OffloadScheme, SchemeKind};
+use crate::topology::SatId;
+use crate::util::rng::Pcg64;
+
+pub struct GaScheme {
+    rng: Pcg64,
+    /// Scratch population buffer, reused across decisions (hot path).
+    pop: Vec<Individual>,
+}
+
+#[derive(Clone, Debug)]
+struct Individual {
+    chrom: Vec<SatId>,
+    deficit: f64,
+}
+
+impl GaScheme {
+    pub fn new(seed: u64) -> GaScheme {
+        GaScheme {
+            rng: Pcg64::new(seed, 0x6A61),
+            pop: Vec::new(),
+        }
+    }
+
+    fn random_chrom(&mut self, ctx: &OffloadContext) -> Vec<SatId> {
+        (0..ctx.segments.len())
+            .map(|_| *self.rng.choose(ctx.candidates))
+            .collect()
+    }
+
+    /// The paper's pairwise heuristic reproduction: for parents C and D
+    /// with a shared gene (c_i = d_j), two offspring are formed by
+    /// splicing the parents at that gene. We take, per parent pair, the
+    /// first shared-gene index pair (scanning i then j) — summoning every
+    /// (i, j) pair would square the population within one iteration.
+    fn reproduce(c: &[SatId], d: &[SatId]) -> Option<(Vec<SatId>, Vec<SatId>)> {
+        let l = c.len();
+        for i in 0..l {
+            for j in 0..l {
+                if c[i] != d[j] {
+                    continue;
+                }
+                // Offspring A: prefix of D through j, then C after i,
+                // wrapping over C cyclically to restore length L.
+                let mut a = Vec::with_capacity(l);
+                a.extend_from_slice(&d[..=j]);
+                let mut k = i + 1;
+                while a.len() < l {
+                    a.push(c[k % l]);
+                    k += 1;
+                }
+                // Offspring B: suffix of D ending at j-1 (taken cyclically
+                // backwards), then C from i to the end.
+                let mut b = Vec::with_capacity(l);
+                let take = l - (l - i); // = i genes before c_i
+                // d-window of length `take` ending just before j (cyclic)
+                for t in 0..take {
+                    let idx = (j + l - take + t) % l;
+                    b.push(d[idx]);
+                }
+                b.extend_from_slice(&c[i..]);
+                debug_assert_eq!(b.len(), l);
+                return Some((a, b));
+            }
+        }
+        None
+    }
+}
+
+impl OffloadScheme for GaScheme {
+    fn decide(&mut self, ctx: &OffloadContext) -> Vec<SatId> {
+        let g = ctx.ga;
+        let l = ctx.segments.len();
+        if l == 0 {
+            return Vec::new();
+        }
+        // Line 1: primitive group of N_ini random chromosomes.
+        self.pop.clear();
+        for _ in 0..g.n_ini {
+            let chrom = self.random_chrom(ctx);
+            let deficit = ctx.deficit(&chrom);
+            self.pop.push(Individual { chrom, deficit });
+        }
+        let mut best_prev = f64::INFINITY;
+
+        for iter in 0..g.n_iter {
+            let best_now = self
+                .pop
+                .iter()
+                .map(|i| i.deficit)
+                .fold(f64::INFINITY, f64::min);
+            // Line 3: early stop on convergence.
+            if iter != 0 && (best_prev - best_now).abs() <= g.epsilon {
+                break;
+            }
+            best_prev = best_now;
+
+            // Line 6: reproduce distinct pairs via the heuristic splice.
+            let parents = self.pop.len();
+            let mut children: Vec<Individual> = Vec::new();
+            for a in 0..parents {
+                for b in (a + 1)..parents {
+                    if self.pop[a].chrom == self.pop[b].chrom {
+                        continue;
+                    }
+                    if let Some((x, y)) =
+                        Self::reproduce(&self.pop[a].chrom, &self.pop[b].chrom)
+                    {
+                        let dx = ctx.deficit(&x);
+                        let dy = ctx.deficit(&y);
+                        children.push(Individual { chrom: x, deficit: dx });
+                        children.push(Individual { chrom: y, deficit: dy });
+                    }
+                }
+            }
+            self.pop.extend(children);
+
+            // Line 7: eliminate highest-deficit individuals until ≤ N_K.
+            if self.pop.len() > g.n_k {
+                self.pop
+                    .sort_by(|a, b| a.deficit.partial_cmp(&b.deficit).unwrap());
+                self.pop.truncate(g.n_k);
+            }
+
+            // Line 8: summon N_summ fresh chromosomes.
+            for _ in 0..g.n_summ {
+                let chrom = self.random_chrom(ctx);
+                let deficit = ctx.deficit(&chrom);
+                self.pop.push(Individual { chrom, deficit });
+            }
+        }
+
+        // Line 10: the chromosome with the lowest deficit.
+        self.pop
+            .iter()
+            .min_by(|a, b| a.deficit.partial_cmp(&b.deficit).unwrap())
+            .map(|i| i.chrom.clone())
+            .expect("population non-empty")
+    }
+
+    fn kind(&self) -> SchemeKind {
+        SchemeKind::Scc
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::GaConfig;
+    use crate::satellite::Satellite;
+    use crate::topology::Torus;
+
+    fn setup(n: usize) -> (Torus, Vec<Satellite>) {
+        let torus = Torus::new(n);
+        let sats = (0..torus.len())
+            .map(|i| Satellite::new(i, 3000.0, 15000.0))
+            .collect();
+        (torus, sats)
+    }
+
+    fn ctx<'a>(
+        torus: &'a Torus,
+        sats: &'a [Satellite],
+        cands: &'a [SatId],
+        segs: &'a [f64],
+        ga: &'a GaConfig,
+    ) -> OffloadContext<'a> {
+        OffloadContext {
+            torus,
+            satellites: sats,
+            origin: cands[0],
+            candidates: cands,
+            segments: segs,
+            kappa: 1e-4,
+            ga,
+        }
+    }
+
+    #[test]
+    fn reproduce_keeps_length_and_shared_gene() {
+        let c = vec![1usize, 2, 3, 4];
+        let d = vec![5usize, 3, 6, 7];
+        let (a, b) = GaScheme::reproduce(&c, &d).unwrap();
+        assert_eq!(a.len(), 4);
+        assert_eq!(b.len(), 4);
+        // shared gene 3 (c_2 = d_1): offspring A starts with d-prefix [5,3]
+        assert_eq!(&a[..2], &[5, 3]);
+        // offspring B ends with c-suffix from the shared gene
+        assert_eq!(&b[b.len() - 2..], &[3, 4]);
+    }
+
+    #[test]
+    fn reproduce_none_when_disjoint() {
+        assert!(GaScheme::reproduce(&[1, 2], &[3, 4]).is_none());
+    }
+
+    #[test]
+    fn decision_within_candidates() {
+        let (torus, sats) = setup(6);
+        let ga = GaConfig::default();
+        let cands = torus.decision_space(8, 2);
+        let segs = vec![500.0, 700.0, 300.0];
+        let c = ctx(&torus, &sats, &cands, &segs, &ga);
+        let mut s = GaScheme::new(1);
+        for _ in 0..10 {
+            let chrom = s.decide(&c);
+            assert_eq!(chrom.len(), 3);
+            assert!(chrom.iter().all(|x| cands.contains(x)));
+        }
+    }
+
+    #[test]
+    fn ga_beats_random_on_deficit() {
+        let (torus, mut sats) = setup(8);
+        // heavily load half the neighborhood to create a real decision
+        for i in 0..sats.len() {
+            if i % 2 == 0 {
+                sats[i].try_load(13_000.0);
+            }
+        }
+        let ga = GaConfig::default();
+        let cands = torus.decision_space(9, 3);
+        let segs = vec![4000.0, 2500.0, 3500.0, 1500.0];
+        let c = ctx(&torus, &sats, &cands, &segs, &ga);
+
+        let mut g = GaScheme::new(2);
+        let ga_deficit = c.deficit(&g.decide(&c));
+
+        let mut rng = Pcg64::seed_from_u64(3);
+        let mut rnd_total = 0.0;
+        let trials = 50;
+        for _ in 0..trials {
+            let chrom: Vec<SatId> = (0..segs.len()).map(|_| *rng.choose(&cands)).collect();
+            rnd_total += c.deficit(&chrom);
+        }
+        let rnd_mean = rnd_total / trials as f64;
+        assert!(
+            ga_deficit <= rnd_mean,
+            "GA {ga_deficit} should beat mean random {rnd_mean}"
+        );
+    }
+
+    #[test]
+    fn ga_finds_near_optimal_small_instance() {
+        // exhaustive optimum over a 5-candidate, L=2 instance
+        let (torus, mut sats) = setup(4);
+        sats[0].try_load(14_000.0);
+        let ga = GaConfig {
+            n_iter: 20,
+            ..GaConfig::default()
+        };
+        let cands = torus.decision_space(0, 1); // 5 sats
+        let segs = vec![2000.0, 2000.0];
+        let c = ctx(&torus, &sats, &cands, &segs, &ga);
+        let mut best = f64::INFINITY;
+        for &a in &cands {
+            for &b in &cands {
+                best = best.min(c.deficit(&[a, b]));
+            }
+        }
+        let mut g = GaScheme::new(4);
+        let got = c.deficit(&g.decide(&c));
+        assert!(
+            got <= best * 1.001 + 1e-9,
+            "GA {got} vs exhaustive {best}"
+        );
+    }
+
+    #[test]
+    fn converges_early_with_tight_epsilon() {
+        // with a single candidate every chromosome is identical: the GA
+        // must early-stop and still return a valid sequence
+        let (torus, sats) = setup(4);
+        let ga = GaConfig::default();
+        let cands = vec![5usize];
+        let segs = vec![100.0, 100.0];
+        let c = ctx(&torus, &sats, &cands, &segs, &ga);
+        let mut g = GaScheme::new(5);
+        assert_eq!(g.decide(&c), vec![5, 5]);
+    }
+
+    #[test]
+    fn empty_segments_ok() {
+        let (torus, sats) = setup(4);
+        let ga = GaConfig::default();
+        let cands = torus.decision_space(0, 1);
+        // L=3 but one block is empty (padded by Alg. 1)
+        let segs = vec![500.0, 0.0, 300.0];
+        let c = ctx(&torus, &sats, &cands, &segs, &ga);
+        let mut g = GaScheme::new(6);
+        let chrom = g.decide(&c);
+        assert_eq!(chrom.len(), 3);
+    }
+}

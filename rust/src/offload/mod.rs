@@ -1,0 +1,285 @@
+//! Task offloading schemes (§IV-B, §V-A): the paper's GA-based SCC scheme
+//! plus the three baselines it is evaluated against (Random, RRP, DQN).
+//!
+//! A scheme maps one split task — segment workloads `{q_1..q_L}` plus the
+//! current network state — to a processing sequence `(c_1, …, c_L)`
+//! (the "chromosome"): segment k executes on satellite c_k, intermediate
+//! activations hop `MH(c_k, c_{k+1})` ISLs (Eq. 7).
+
+pub mod dqn;
+pub mod ga;
+pub mod random;
+pub mod rrp;
+
+use crate::config::GaConfig;
+use crate::satellite::Satellite;
+use crate::topology::{SatId, Torus};
+
+/// Which scheme to run (CLI / experiment selector).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum SchemeKind {
+    /// The paper's proposal (Alg. 1 + Alg. 2 GA offloading).
+    Scc,
+    Random,
+    Rrp,
+    Dqn,
+}
+
+impl SchemeKind {
+    pub fn parse(s: &str) -> Result<SchemeKind, String> {
+        match s.to_ascii_lowercase().as_str() {
+            "scc" | "ga" => Ok(SchemeKind::Scc),
+            "random" => Ok(SchemeKind::Random),
+            "rrp" => Ok(SchemeKind::Rrp),
+            "dqn" => Ok(SchemeKind::Dqn),
+            other => Err(format!("unknown scheme '{other}' (scc|random|rrp|dqn)")),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            SchemeKind::Scc => "SCC",
+            SchemeKind::Random => "Random",
+            SchemeKind::Rrp => "RRP",
+            SchemeKind::Dqn => "DQN",
+        }
+    }
+
+    pub fn all() -> [SchemeKind; 4] {
+        [
+            SchemeKind::Scc,
+            SchemeKind::Random,
+            SchemeKind::Rrp,
+            SchemeKind::Dqn,
+        ]
+    }
+}
+
+/// Everything a scheme may observe when deciding (local view of the
+/// decision-making satellite: its decision space and those satellites'
+/// resource state — §I's "local observations").
+pub struct OffloadContext<'a> {
+    pub torus: &'a Torus,
+    pub satellites: &'a [Satellite],
+    /// Decision-making satellite x (task origin).
+    pub origin: SatId,
+    /// A_x — candidate satellites within D_M of x (constraint 11c).
+    pub candidates: &'a [SatId],
+    /// Per-segment workloads {q_1..q_L} [MFLOP] from Alg. 1.
+    pub segments: &'a [f64],
+    /// κ — ISL transfer coefficient [s per MFLOP·hop] (Eq. 7 scaling).
+    pub kappa: f64,
+    pub ga: &'a GaConfig,
+}
+
+impl<'a> OffloadContext<'a> {
+    /// Eq. 12 deficit of a chromosome `(d_1..d_L)`:
+    /// `θ1·Σ q_k/C_{d_k} + θ2·Σ q_k·MH(d_k, d_{k+1}) + θ3·D_{i,j}`,
+    /// where `D_{i,j}` counts segments that would be rejected by Eq. 4
+    /// when the sequence is walked against current loads.
+    pub fn deficit(&self, chrom: &[SatId]) -> f64 {
+        debug_assert_eq!(chrom.len(), self.segments.len());
+        let g = self.ga;
+        let mut comp = 0.0;
+        let mut tran = 0.0;
+        // hypothetical extra load per satellite while walking the sequence
+        // (a segment may revisit a satellite; loads accumulate). L is tiny
+        // (3-4), so an O(L^2) scan over the accepted prefix beats any
+        // allocation (§Perf iter 3: allocation-free deficit — this runs
+        // ~900x per GA decide).
+        let mut drops = 0.0;
+        // admitted[k] = segment k was admitted in this walk
+        let mut admitted = [false; 16];
+        let short = chrom.len() <= 16;
+        let mut extra_fallback: Vec<(SatId, f64)> = if short {
+            Vec::new()
+        } else {
+            Vec::with_capacity(chrom.len())
+        };
+        for (k, (&c, &q)) in chrom.iter().zip(self.segments).enumerate() {
+            let sat = &self.satellites[c];
+            // θ1 term, queue-aware: the GA observes current loads (the
+            // "self-adaptive" part of Alg. 2) — waiting behind a loaded
+            // satellite's backlog is paid like service time.
+            comp += (sat.loaded() + q) / sat.capacity_mflops;
+            if k + 1 < chrom.len() {
+                // Eq. 12 tran term in SECONDS: κ·q_k·MH is the realized
+                // Eq. 7 transmission delay of shipping segment k's cut
+                // activation. Expressing both delay terms in the same unit
+                // keeps Table I's weights meaningful as priorities
+                // (θ3·drop ≫ θ2·tran ≳ θ1·comp); with raw q·MH a single
+                // 4-hop ship would outweigh a dropped task and the GA
+                // would trade completions for hops.
+                tran += self.kappa * q * self.torus.manhattan(c, chrom[k + 1]) as f64;
+            }
+            // Eq. 4 admission against loaded + planned-extra workload
+            let planned: f64 = if short {
+                chrom[..k]
+                    .iter()
+                    .zip(self.segments)
+                    .enumerate()
+                    .filter(|(j, (&cj, _))| admitted[*j] && cj == c)
+                    .map(|(_, (_, &qj))| qj)
+                    .sum()
+            } else {
+                extra_fallback
+                    .iter()
+                    .filter(|(id, _)| *id == c)
+                    .map(|(_, w)| *w)
+                    .sum()
+            };
+            if q > 0.0 && sat.loaded() + planned + q >= sat.max_workload_mflops {
+                drops += 1.0;
+            } else if short {
+                admitted[k] = true;
+            } else {
+                extra_fallback.push((c, q));
+            }
+        }
+        g.theta1 * comp + g.theta2 * tran + g.theta3 * drops
+    }
+
+    /// Predicted drop count for a chromosome (θ3 term in isolation).
+    pub fn predicted_drops(&self, chrom: &[SatId]) -> usize {
+        let mut drops = 0usize;
+        let mut extra: Vec<(SatId, f64)> = Vec::with_capacity(chrom.len());
+        for (&c, &q) in chrom.iter().zip(self.segments) {
+            let sat = &self.satellites[c];
+            let planned: f64 = extra
+                .iter()
+                .filter(|(id, _)| *id == c)
+                .map(|(_, w)| *w)
+                .sum();
+            if q > 0.0 && sat.loaded() + planned + q >= sat.max_workload_mflops {
+                drops += 1;
+            } else {
+                extra.push((c, q));
+            }
+        }
+        drops
+    }
+}
+
+/// A task-offloading decision scheme.
+pub trait OffloadScheme {
+    /// Chromosome `(c_1..c_L)`, all members of `ctx.candidates`.
+    fn decide(&mut self, ctx: &OffloadContext) -> Vec<SatId>;
+
+    fn kind(&self) -> SchemeKind;
+
+    /// Learning hook: called after the decided sequence executed.
+    /// `dropped_at` = Some(k) if segment k was rejected; `delay_s` is the
+    /// realized task delay. Default: no-op (only DQN learns online).
+    fn observe(&mut self, _ctx: &OffloadContext, _chrom: &[SatId], _dropped_at: Option<usize>, _delay_s: f64) {}
+}
+
+/// Construct a scheme instance.
+pub fn make_scheme(kind: SchemeKind, seed: u64) -> Box<dyn OffloadScheme> {
+    match kind {
+        SchemeKind::Scc => Box::new(ga::GaScheme::new(seed)),
+        SchemeKind::Random => Box::new(random::RandomScheme::new(seed)),
+        SchemeKind::Rrp => Box::new(rrp::RrpScheme::new()),
+        SchemeKind::Dqn => Box::new(dqn::DqnScheme::new(seed)),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::GaConfig;
+    use crate::satellite::Satellite;
+    use crate::topology::Torus;
+
+    pub(crate) fn test_ctx<'a>(
+        torus: &'a Torus,
+        sats: &'a [Satellite],
+        candidates: &'a [SatId],
+        segments: &'a [f64],
+        ga: &'a GaConfig,
+    ) -> OffloadContext<'a> {
+        OffloadContext {
+            torus,
+            satellites: sats,
+            origin: 0,
+            candidates,
+            segments,
+            kappa: 1e-4,
+            ga,
+        }
+    }
+
+    fn setup(n: usize) -> (Torus, Vec<Satellite>, GaConfig) {
+        let torus = Torus::new(n);
+        let sats = (0..torus.len())
+            .map(|i| Satellite::new(i, 3000.0, 15000.0))
+            .collect();
+        (torus, sats, GaConfig::default())
+    }
+
+    #[test]
+    fn deficit_computation_term() {
+        let (torus, sats, mut ga) = setup(4);
+        ga.theta2 = 0.0;
+        ga.theta3 = 0.0;
+        let cands = torus.decision_space(0, 2);
+        let segs = [3000.0, 6000.0];
+        let ctx = test_ctx(&torus, &sats, &cands, &segs, &ga);
+        // both on sat 0: comp = 3000/3000 + 6000/3000 = 3
+        assert!((ctx.deficit(&[0, 0]) - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn deficit_transmission_term_eq12() {
+        let (torus, sats, mut ga) = setup(4);
+        ga.theta1 = 0.0;
+        ga.theta3 = 0.0;
+        ga.theta2 = 2.0;
+        let cands = torus.decision_space(0, 2);
+        let segs = [100.0, 50.0, 10.0];
+        let ctx = test_ctx(&torus, &sats, &cands, &segs, &ga);
+        let a = 0;
+        let b = torus.neighbors(0)[0];
+        // hops: MH(a,b)=1 after seg1, MH(b,b)=0 after seg2; last segment
+        // ships nothing. tran = kappa*q*MH summed, weighted by theta2.
+        let d = ctx.deficit(&[a, b, b]);
+        let want = 2.0 * ctx.kappa * (100.0 * 1.0 + 50.0 * 0.0);
+        assert!((d - want).abs() < 1e-12, "d={d} want={want}");
+    }
+
+    #[test]
+    fn deficit_counts_drops_with_accumulation() {
+        let (torus, mut sats, mut ga) = setup(4);
+        ga.theta1 = 0.0;
+        ga.theta2 = 0.0;
+        ga.theta3 = 1.0;
+        // satellite 0 can only admit < 15000 total
+        sats[0].try_load(9000.0);
+        let cands = torus.decision_space(0, 2);
+        let segs = [4000.0, 4000.0];
+        let ctx = test_ctx(&torus, &sats, &cands, &segs, &ga);
+        // first 4000 fits (13000 < 15000), second does not (17000 >= 15000)
+        assert!((ctx.deficit(&[0, 0]) - 1.0).abs() < 1e-12);
+        assert_eq!(ctx.predicted_drops(&[0, 0]), 1);
+        // spreading avoids the drop
+        let nb = torus.neighbors(0)[0];
+        assert_eq!(ctx.predicted_drops(&[0, nb]), 0);
+    }
+
+    #[test]
+    fn empty_segments_never_counted_as_drops() {
+        let (torus, mut sats, ga) = setup(4);
+        sats[0].try_load(14999.0);
+        let cands = torus.decision_space(0, 2);
+        let segs = [0.0, 0.0];
+        let ctx = test_ctx(&torus, &sats, &cands, &segs, &ga);
+        assert_eq!(ctx.predicted_drops(&[0, 0]), 0);
+    }
+
+    #[test]
+    fn scheme_kind_parse_and_names() {
+        assert_eq!(SchemeKind::parse("SCC").unwrap(), SchemeKind::Scc);
+        assert_eq!(SchemeKind::parse("rrp").unwrap(), SchemeKind::Rrp);
+        assert!(SchemeKind::parse("foo").is_err());
+        assert_eq!(SchemeKind::all().len(), 4);
+    }
+}

@@ -1,0 +1,91 @@
+//! *Random* baseline (§V-A): each segment's satellite is selected
+//! independently and uniformly at random from the decision space `A_x`.
+//! Theoretically achieves a perfectly even long-run workload distribution
+//! (the Fig. 2(c)/3(c) reference point) but ignores loads and distance,
+//! so it drops more tasks and pays more transmission delay.
+
+use super::{OffloadContext, OffloadScheme, SchemeKind};
+use crate::topology::SatId;
+use crate::util::rng::Pcg64;
+
+pub struct RandomScheme {
+    rng: Pcg64,
+}
+
+impl RandomScheme {
+    pub fn new(seed: u64) -> RandomScheme {
+        RandomScheme {
+            rng: Pcg64::new(seed, 0x5A4D),
+        }
+    }
+}
+
+impl OffloadScheme for RandomScheme {
+    fn decide(&mut self, ctx: &OffloadContext) -> Vec<SatId> {
+        ctx.segments
+            .iter()
+            .map(|_| *self.rng.choose(ctx.candidates))
+            .collect()
+    }
+
+    fn kind(&self) -> SchemeKind {
+        SchemeKind::Random
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::GaConfig;
+    use crate::satellite::Satellite;
+    use crate::topology::Torus;
+
+    #[test]
+    fn picks_only_candidates_and_right_length() {
+        let torus = Torus::new(6);
+        let sats: Vec<Satellite> = (0..36).map(|i| Satellite::new(i, 3000.0, 15000.0)).collect();
+        let cands = torus.decision_space(7, 2);
+        let segs = vec![100.0; 5];
+        let ga = GaConfig::default();
+        let ctx = OffloadContext {
+            torus: &torus,
+            satellites: &sats,
+            origin: 7,
+            candidates: &cands,
+            segments: &segs,
+            kappa: 1e-4,
+            ga: &ga,
+        };
+        let mut s = RandomScheme::new(3);
+        for _ in 0..50 {
+            let c = s.decide(&ctx);
+            assert_eq!(c.len(), 5);
+            assert!(c.iter().all(|x| cands.contains(x)));
+        }
+    }
+
+    #[test]
+    fn spreads_over_candidates() {
+        let torus = Torus::new(8);
+        let sats: Vec<Satellite> = (0..64).map(|i| Satellite::new(i, 3000.0, 15000.0)).collect();
+        let cands = torus.decision_space(0, 2);
+        let segs = vec![1.0];
+        let ga = GaConfig::default();
+        let ctx = OffloadContext {
+            torus: &torus,
+            satellites: &sats,
+            origin: 0,
+            candidates: &cands,
+            segments: &segs,
+            kappa: 1e-4,
+            ga: &ga,
+        };
+        let mut s = RandomScheme::new(4);
+        let mut seen = std::collections::HashSet::new();
+        for _ in 0..400 {
+            seen.insert(s.decide(&ctx)[0]);
+        }
+        // 13 candidates; a uniform picker should hit nearly all of them
+        assert!(seen.len() >= cands.len() - 1, "seen {}", seen.len());
+    }
+}

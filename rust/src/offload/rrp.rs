@@ -1,0 +1,161 @@
+//! *Residual-Resource-Priority (RRP)* baseline (§V-A): "selects the
+//! available satellites with the most residual computing resources to
+//! process the **next segment**" — i.e. per-segment re-selection of the
+//! residual argmax, accounting the workload its own earlier segments
+//! already planned onto a candidate. Because the argmax after placing
+//! segment k is generally a *different* satellite, RRP's sequences zigzag
+//! between the fittest satellites regardless of distance — the
+//! load-oblivious-to-topology behaviour §V-B blames for its delay — and
+//! every decision satellite chases the same fittest targets
+//! ("a particular satellite is chosen by multiple decision-making
+//! satellites"), hurting balance.
+
+use super::{OffloadContext, OffloadScheme, SchemeKind};
+use crate::topology::SatId;
+
+#[derive(Default)]
+pub struct RrpScheme;
+
+impl RrpScheme {
+    pub fn new() -> RrpScheme {
+        RrpScheme
+    }
+}
+
+impl OffloadScheme for RrpScheme {
+    fn decide(&mut self, ctx: &OffloadContext) -> Vec<SatId> {
+        let mut chrom = Vec::with_capacity(ctx.segments.len());
+        // workload planned onto candidates by this task's earlier segments
+        let mut planned: Vec<(SatId, f64)> = Vec::new();
+        for &q in ctx.segments {
+            let best = ctx
+                .candidates
+                .iter()
+                .copied()
+                .max_by(|&a, &b| {
+                    let ra = effective_residual(ctx, &planned, a);
+                    let rb = effective_residual(ctx, &planned, b);
+                    ra.partial_cmp(&rb)
+                        .unwrap()
+                        // deterministic tie-break: lower id wins
+                        .then(b.cmp(&a))
+                })
+                .expect("non-empty candidate set");
+            planned.push((best, q));
+            chrom.push(best);
+        }
+        chrom
+    }
+
+    fn kind(&self) -> SchemeKind {
+        SchemeKind::Rrp
+    }
+}
+
+fn effective_residual(ctx: &OffloadContext, planned: &[(SatId, f64)], s: SatId) -> f64 {
+    let extra: f64 = planned
+        .iter()
+        .filter(|(id, _)| *id == s)
+        .map(|(_, w)| *w)
+        .sum();
+    (ctx.satellites[s].residual() - extra).max(0.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::GaConfig;
+    use crate::satellite::Satellite;
+    use crate::topology::Torus;
+
+    fn ctx_with<'a>(
+        torus: &'a Torus,
+        sats: &'a [Satellite],
+        cands: &'a [SatId],
+        segs: &'a [f64],
+        ga: &'a GaConfig,
+    ) -> OffloadContext<'a> {
+        OffloadContext {
+            torus,
+            satellites: sats,
+            origin: 0,
+            candidates: cands,
+            segments: segs,
+            kappa: 1e-4,
+            ga,
+        }
+    }
+
+    #[test]
+    fn picks_most_residual() {
+        let torus = Torus::new(4);
+        let mut sats: Vec<Satellite> =
+            (0..16).map(|i| Satellite::new(i, 3000.0, 15000.0)).collect();
+        let cands = torus.decision_space(0, 1);
+        for &c in &cands {
+            if c != 1 {
+                sats[c].try_load(10_000.0);
+            }
+        }
+        let segs = vec![100.0];
+        let ga = GaConfig::default();
+        let ctx = ctx_with(&torus, &sats, &cands, &segs, &ga);
+        assert!(cands.contains(&1));
+        assert_eq!(RrpScheme::new().decide(&ctx), vec![1]);
+    }
+
+    #[test]
+    fn zigzags_across_fittest_satellites() {
+        // equal big segments: after planning seg1 on the argmax, the next
+        // argmax is a different satellite — the sequence hops
+        let torus = Torus::new(4);
+        let mut sats: Vec<Satellite> =
+            (0..16).map(|i| Satellite::new(i, 3000.0, 15000.0)).collect();
+        let cands = torus.decision_space(0, 1);
+        for (i, &c) in cands.iter().enumerate() {
+            sats[c].try_load(100.0 * i as f64); // strictly ordered residuals
+        }
+        let segs = vec![8_000.0, 8_000.0];
+        let ga = GaConfig::default();
+        let ctx = ctx_with(&torus, &sats, &cands, &segs, &ga);
+        let chrom = RrpScheme::new().decide(&ctx);
+        assert_ne!(chrom[0], chrom[1], "expected per-segment re-selection");
+    }
+
+    #[test]
+    fn accounts_for_own_planned_segments() {
+        let torus = Torus::new(4);
+        let mut sats: Vec<Satellite> =
+            (0..16).map(|i| Satellite::new(i, 3000.0, 15000.0)).collect();
+        let cands = torus.decision_space(0, 1);
+        for &c in &cands {
+            match c {
+                1 => {}
+                4 => {
+                    sats[c].try_load(100.0);
+                }
+                c2 => {
+                    sats[c2].try_load(5_000.0);
+                }
+            }
+        }
+        let segs = vec![8_000.0, 8_000.0];
+        let ga = GaConfig::default();
+        let ctx = ctx_with(&torus, &sats, &cands, &segs, &ga);
+        let chrom = RrpScheme::new().decide(&ctx);
+        assert_eq!(chrom[0], 1);
+        assert_eq!(chrom[1], 4);
+    }
+
+    #[test]
+    fn deterministic() {
+        let torus = Torus::new(5);
+        let sats: Vec<Satellite> =
+            (0..25).map(|i| Satellite::new(i, 3000.0, 15000.0)).collect();
+        let cands = torus.decision_space(2, 2);
+        let segs = vec![10.0, 10.0, 10.0];
+        let ga = GaConfig::default();
+        let ctx = ctx_with(&torus, &sats, &cands, &segs, &ga);
+        assert_eq!(RrpScheme::new().decide(&ctx), RrpScheme::new().decide(&ctx));
+    }
+}

@@ -1,0 +1,370 @@
+//! PJRT runtime: loads the AOT-compiled HLO-text artifacts produced by
+//! `python/compile/aot.py` and executes them from the Rust request path.
+//!
+//! Interchange is HLO **text** — jax ≥ 0.5 serializes protos with 64-bit
+//! instruction ids that xla_extension 0.5.1 rejects; the text parser
+//! reassigns ids (see /opt/xla-example/README.md). Each artifact carries a
+//! `<name>.meta.json` sidecar with input/output shapes that we validate
+//! before feeding buffers.
+//!
+//! Python never runs here: after `make artifacts` the Rust binary is
+//! self-contained.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// Shape + dtype of one artifact port.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TensorSpec {
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+impl TensorSpec {
+    pub fn num_elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// Sidecar metadata for an artifact.
+#[derive(Clone, Debug)]
+pub struct ArtifactMeta {
+    pub name: String,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+fn specs_from_json(j: &Json, key: &str) -> Result<Vec<TensorSpec>> {
+    let arr = j
+        .get(key)
+        .and_then(|x| x.as_arr())
+        .ok_or_else(|| anyhow!("meta missing '{key}'"))?;
+    arr.iter()
+        .map(|e| {
+            let shape = e
+                .get("shape")
+                .and_then(|s| s.as_arr())
+                .ok_or_else(|| anyhow!("port missing shape"))?
+                .iter()
+                .map(|d| d.as_f64().unwrap_or(0.0) as usize)
+                .collect();
+            let dtype = e
+                .get("dtype")
+                .and_then(|d| d.as_str())
+                .unwrap_or("float32")
+                .to_string();
+            Ok(TensorSpec { shape, dtype })
+        })
+        .collect()
+}
+
+impl ArtifactMeta {
+    pub fn parse(text: &str) -> Result<ArtifactMeta> {
+        let j = Json::parse(text).map_err(|e| anyhow!("meta json: {e}"))?;
+        Ok(ArtifactMeta {
+            name: j
+                .get("name")
+                .and_then(|n| n.as_str())
+                .unwrap_or("unnamed")
+                .to_string(),
+            inputs: specs_from_json(&j, "inputs")?,
+            outputs: specs_from_json(&j, "outputs")?,
+        })
+    }
+}
+
+/// One compiled artifact, ready to execute.
+pub struct LoadedArtifact {
+    pub meta: ArtifactMeta,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl LoadedArtifact {
+    /// Execute with f32 inputs; shapes are validated against the sidecar.
+    /// Returns the flattened f32 contents of each output.
+    pub fn run_f32(&self, inputs: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
+        if inputs.len() != self.meta.inputs.len() {
+            bail!(
+                "{}: expected {} inputs, got {}",
+                self.meta.name,
+                self.meta.inputs.len(),
+                inputs.len()
+            );
+        }
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (buf, spec) in inputs.iter().zip(&self.meta.inputs) {
+            if buf.len() != spec.num_elements() {
+                bail!(
+                    "{}: input needs {} elements ({:?}), got {}",
+                    self.meta.name,
+                    spec.num_elements(),
+                    spec.shape,
+                    buf.len()
+                );
+            }
+            let dims: Vec<i64> = spec.shape.iter().map(|&d| d as i64).collect();
+            literals.push(xla::Literal::vec1(buf).reshape(&dims)?);
+        }
+        let result = self.exe.execute::<xla::Literal>(&literals)?[0][0]
+            .to_literal_sync()?;
+        // aot.py lowers with return_tuple=True
+        let parts = result.to_tuple()?;
+        let mut out = Vec::with_capacity(parts.len());
+        for p in parts {
+            out.push(p.to_vec::<f32>()?);
+        }
+        Ok(out)
+    }
+}
+
+/// The PJRT engine: one CPU client + all loaded artifacts.
+pub struct Engine {
+    client: xla::PjRtClient,
+    artifacts: HashMap<String, LoadedArtifact>,
+    dir: PathBuf,
+}
+
+impl Engine {
+    /// Create a CPU PJRT client (the in-orbit compute substrate stand-in).
+    pub fn cpu() -> Result<Engine> {
+        Ok(Engine {
+            client: xla::PjRtClient::cpu().context("creating PJRT CPU client")?,
+            artifacts: HashMap::new(),
+            dir: PathBuf::new(),
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load one artifact pair (`<dir>/<name>.hlo.txt` + `.meta.json`).
+    pub fn load(&mut self, dir: &Path, name: &str) -> Result<()> {
+        let hlo = dir.join(format!("{name}.hlo.txt"));
+        let meta_p = dir.join(format!("{name}.meta.json"));
+        let meta_text = std::fs::read_to_string(&meta_p)
+            .with_context(|| format!("reading {}", meta_p.display()))?;
+        let meta = ArtifactMeta::parse(&meta_text)?;
+        let proto = xla::HloModuleProto::from_text_file(
+            hlo.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .with_context(|| format!("parsing {}", hlo.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {name}"))?;
+        self.artifacts
+            .insert(name.to_string(), LoadedArtifact { meta, exe });
+        self.dir = dir.to_path_buf();
+        Ok(())
+    }
+
+    /// Load every `*.hlo.txt` in a directory. Returns loaded names.
+    pub fn load_dir(&mut self, dir: &Path) -> Result<Vec<String>> {
+        let mut names = Vec::new();
+        for entry in std::fs::read_dir(dir)
+            .with_context(|| format!("reading {}", dir.display()))?
+        {
+            let p = entry?.path();
+            if let Some(fname) = p.file_name().and_then(|f| f.to_str()) {
+                if let Some(stem) = fname.strip_suffix(".hlo.txt") {
+                    self.load(dir, stem)?;
+                    names.push(stem.to_string());
+                }
+            }
+        }
+        names.sort();
+        Ok(names)
+    }
+
+    pub fn get(&self, name: &str) -> Result<&LoadedArtifact> {
+        self.artifacts
+            .get(name)
+            .ok_or_else(|| anyhow!("artifact '{name}' not loaded (dir: {})", self.dir.display()))
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        let mut v: Vec<&str> = self.artifacts.keys().map(String::as_str).collect();
+        v.sort();
+        v
+    }
+
+    /// Convenience: execute by name.
+    pub fn run_f32(&self, name: &str, inputs: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
+        self.get(name)?.run_f32(inputs)
+    }
+}
+
+/// Default artifact directory: `$SATKIT_ARTIFACTS` or `./artifacts`.
+pub fn default_artifact_dir() -> PathBuf {
+    std::env::var("SATKIT_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("artifacts"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn meta_parses_sidecar() {
+        let m = ArtifactMeta::parse(
+            r#"{"name":"qnet","inputs":[{"shape":[8,32],"dtype":"float32"}],
+                "outputs":[{"shape":[8,5],"dtype":"float32"}]}"#,
+        )
+        .unwrap();
+        assert_eq!(m.name, "qnet");
+        assert_eq!(m.inputs[0].shape, vec![8, 32]);
+        assert_eq!(m.inputs[0].num_elements(), 256);
+        assert_eq!(m.outputs[0].shape, vec![8, 5]);
+    }
+
+    #[test]
+    fn meta_rejects_garbage() {
+        assert!(ArtifactMeta::parse("not json").is_err());
+        assert!(ArtifactMeta::parse(r#"{"name":"x"}"#).is_err());
+    }
+
+    // PJRT-backed tests live in rust/tests/integration_runtime.rs (they
+    // need artifacts/ built by `make artifacts`).
+}
+
+// ---------------------------------------------------------------------------
+// ExecPool: PJRT execution workers.
+//
+// The `xla` crate's client/executable types are thread-confined (Rc
+// internals, not Send/Sync), so artifacts cannot be shared across a thread
+// pool. Instead each execution worker owns a full Engine — its own PJRT
+// client with all artifacts compiled — and requests are dispatched over
+// channels. This mirrors the deployment model anyway: every satellite runs
+// its own on-board runtime.
+
+use std::sync::mpsc::{channel, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+/// A slice-execution request: artifact name + flattened f32 inputs.
+pub struct ExecJob {
+    pub artifact: String,
+    pub inputs: Vec<Vec<f32>>,
+    pub reply: Sender<Result<Vec<Vec<f32>>>>,
+}
+
+/// Pool of PJRT execution workers, each with a private [`Engine`].
+pub struct ExecPool {
+    tx: Option<Sender<ExecJob>>,
+    workers: Vec<JoinHandle<()>>,
+    names: Vec<String>,
+}
+
+impl ExecPool {
+    /// Spawn `size` workers, each compiling every artifact in `dir`.
+    /// Blocks until all workers are ready (or one fails).
+    pub fn new(dir: &Path, size: usize) -> Result<ExecPool> {
+        assert!(size > 0);
+        let (tx, rx) = channel::<ExecJob>();
+        let rx = Arc::new(Mutex::new(rx));
+        let (ready_tx, ready_rx) = channel::<Result<Vec<String>>>();
+        let mut workers = Vec::with_capacity(size);
+        for i in 0..size {
+            let rx = Arc::clone(&rx);
+            let ready = ready_tx.clone();
+            let dir = dir.to_path_buf();
+            workers.push(
+                std::thread::Builder::new()
+                    .name(format!("satkit-exec-{i}"))
+                    .spawn(move || {
+                        let engine = (|| -> Result<Engine> {
+                            let mut e = Engine::cpu()?;
+                            e.load_dir(&dir)?;
+                            Ok(e)
+                        })();
+                        let engine = match engine {
+                            Ok(e) => {
+                                let _ = ready
+                                    .send(Ok(e.names().iter().map(|s| s.to_string()).collect()));
+                                e
+                            }
+                            Err(err) => {
+                                let _ = ready.send(Err(err));
+                                return;
+                            }
+                        };
+                        loop {
+                            let job = {
+                                let guard = rx.lock().unwrap();
+                                guard.recv()
+                            };
+                            match job {
+                                Ok(job) => {
+                                    let res = engine.run_f32(&job.artifact, &job.inputs);
+                                    let _ = job.reply.send(res);
+                                }
+                                Err(_) => break,
+                            }
+                        }
+                    })
+                    .expect("spawning exec worker"),
+            );
+        }
+        drop(ready_tx);
+        let mut names = Vec::new();
+        for _ in 0..size {
+            names = ready_rx.recv().expect("worker startup")?;
+        }
+        Ok(ExecPool {
+            tx: Some(tx),
+            workers,
+            names,
+        })
+    }
+
+    pub fn size(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Names of the artifacts every worker has loaded.
+    pub fn artifact_names(&self) -> &[String] {
+        &self.names
+    }
+
+    /// Submit an execution; returns a receiver for the result.
+    pub fn submit(
+        &self,
+        artifact: &str,
+        inputs: Vec<Vec<f32>>,
+    ) -> std::sync::mpsc::Receiver<Result<Vec<Vec<f32>>>> {
+        let (reply, rx) = channel();
+        self.tx
+            .as_ref()
+            .expect("pool alive")
+            .send(ExecJob {
+                artifact: artifact.to_string(),
+                inputs,
+                reply,
+            })
+            .expect("exec pool closed");
+        rx
+    }
+
+    /// Submit and block.
+    pub fn run(&self, artifact: &str, inputs: Vec<Vec<f32>>) -> Result<Vec<Vec<f32>>> {
+        self.submit(artifact, inputs)
+            .recv()
+            .map_err(|e| anyhow!("exec worker died: {e}"))?
+    }
+}
+
+impl Drop for ExecPool {
+    fn drop(&mut self) {
+        drop(self.tx.take());
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}

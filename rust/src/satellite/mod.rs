@@ -1,0 +1,184 @@
+//! Satellite compute state (§III-C): per-satellite capacity `C_x`, loaded
+//! workload `q`, the admission rule of Eq. 4 (`W = q + m_k < M_w`), and
+//! per-slot service that drains the backlog at `C_x` MFLOP per slot.
+
+use crate::topology::SatId;
+
+/// Outcome of attempting to load a segment (Eq. 4).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Admission {
+    /// Segment loaded; inference proceeds on this satellite.
+    Accepted,
+    /// `q + m_k >= M_w` — segment rejected, task dropped at this point.
+    Rejected,
+}
+
+/// One satellite's mutable compute state.
+#[derive(Clone, Debug)]
+pub struct Satellite {
+    pub id: SatId,
+    /// C_x — computation capability [MFLOP/slot].
+    pub capacity_mflops: f64,
+    /// M_w — maximum total loaded workload [MFLOP].
+    pub max_workload_mflops: f64,
+    /// q — currently loaded (queued + executing) workload [MFLOP].
+    loaded_mflops: f64,
+    /// Total workload ever assigned (the Fig. 2(c)/3(c) variance metric).
+    pub assigned_total_mflops: f64,
+    /// Count of segments accepted / rejected (diagnostics).
+    pub accepted: u64,
+    pub rejected: u64,
+}
+
+impl Satellite {
+    pub fn new(id: SatId, capacity_mflops: f64, max_workload_mflops: f64) -> Satellite {
+        assert!(capacity_mflops > 0.0 && max_workload_mflops > 0.0);
+        Satellite {
+            id,
+            capacity_mflops,
+            max_workload_mflops,
+            loaded_mflops: 0.0,
+            assigned_total_mflops: 0.0,
+            accepted: 0,
+            rejected: 0,
+        }
+    }
+
+    /// q — the workload already loaded [MFLOP].
+    pub fn loaded(&self) -> f64 {
+        self.loaded_mflops
+    }
+
+    /// Residual admissible workload `M_w − q` (the RRP scheme's ranking key).
+    pub fn residual(&self) -> f64 {
+        (self.max_workload_mflops - self.loaded_mflops).max(0.0)
+    }
+
+    /// Would a segment of `m_k` MFLOP be admitted right now? (Eq. 4,
+    /// without mutating state — used by offloading schemes to plan.)
+    pub fn would_admit(&self, m_k: f64) -> bool {
+        self.loaded_mflops + m_k < self.max_workload_mflops
+    }
+
+    /// Eq. 4: try to load a segment. On success `q += m_k`.
+    pub fn try_load(&mut self, m_k: f64) -> Admission {
+        debug_assert!(m_k >= 0.0);
+        if self.would_admit(m_k) {
+            self.loaded_mflops += m_k;
+            self.assigned_total_mflops += m_k;
+            self.accepted += 1;
+            Admission::Accepted
+        } else {
+            self.rejected += 1;
+            Admission::Rejected
+        }
+    }
+
+    /// Advance one slot: the satellite executes up to `C_x` MFLOP of its
+    /// backlog. Returns the amount actually processed.
+    pub fn service_slot(&mut self) -> f64 {
+        let done = self.loaded_mflops.min(self.capacity_mflops);
+        self.loaded_mflops -= done;
+        done
+    }
+
+    /// Computation seconds for `m_k` MFLOP on this satellite (Eq. 5 term).
+    pub fn comp_secs(&self, m_k: f64) -> f64 {
+        m_k / self.capacity_mflops
+    }
+
+    /// Queue-aware service seconds: the satellite drains its backlog FIFO
+    /// at `C_x`, so a newly loaded segment waits `(q - m_k)/C_x` before
+    /// its own `m_k/C_x` of service — i.e. `q/C_x` with `q` the post-load
+    /// backlog. This is Eq. 5 extended with waiting time; it is what makes
+    /// the paper's "fittest-satellite herding inflates delay" observation
+    /// (§V-B) measurable.
+    pub fn service_secs_with_queue(&self, m_k: f64) -> f64 {
+        // called AFTER try_load succeeded: loaded() already includes m_k
+        debug_assert!(self.loaded_mflops >= m_k);
+        self.loaded_mflops / self.capacity_mflops
+    }
+
+    /// Utilization of the admission window, `q / M_w` in [0, 1].
+    pub fn utilization(&self) -> f64 {
+        (self.loaded_mflops / self.max_workload_mflops).clamp(0.0, 1.0)
+    }
+
+    /// Reset transient load (between independent experiment repetitions).
+    pub fn reset(&mut self) {
+        self.loaded_mflops = 0.0;
+        self.assigned_total_mflops = 0.0;
+        self.accepted = 0;
+        self.rejected = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sat() -> Satellite {
+        Satellite::new(0, 3000.0, 15000.0)
+    }
+
+    #[test]
+    fn admission_rule_eq4_strict() {
+        let mut s = sat();
+        // fill to just under M_w
+        assert_eq!(s.try_load(14999.0), Admission::Accepted);
+        // q + m >= M_w rejected (strict <)
+        assert_eq!(s.try_load(1.0), Admission::Rejected);
+        assert_eq!(s.try_load(0.5), Admission::Accepted);
+        assert_eq!(s.accepted, 2);
+        assert_eq!(s.rejected, 1);
+    }
+
+    #[test]
+    fn boundary_exact_mw_rejected() {
+        let mut s = sat();
+        assert_eq!(s.try_load(15000.0), Admission::Rejected); // W == M_w
+        assert_eq!(s.try_load(14999.999), Admission::Accepted);
+    }
+
+    #[test]
+    fn service_drains_at_capacity() {
+        let mut s = sat();
+        s.try_load(7000.0);
+        assert_eq!(s.service_slot(), 3000.0);
+        assert_eq!(s.loaded(), 4000.0);
+        assert_eq!(s.service_slot(), 3000.0);
+        assert_eq!(s.service_slot(), 1000.0);
+        assert_eq!(s.service_slot(), 0.0);
+    }
+
+    #[test]
+    fn residual_tracks_load() {
+        let mut s = sat();
+        assert_eq!(s.residual(), 15000.0);
+        s.try_load(5000.0);
+        assert_eq!(s.residual(), 10000.0);
+    }
+
+    #[test]
+    fn comp_secs_eq5() {
+        let s = sat();
+        assert!((s.comp_secs(6000.0) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn utilization_bounded() {
+        let mut s = sat();
+        assert_eq!(s.utilization(), 0.0);
+        s.try_load(7500.0);
+        assert!((s.utilization() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn reset_clears_transient() {
+        let mut s = sat();
+        s.try_load(100.0);
+        s.reset();
+        assert_eq!(s.loaded(), 0.0);
+        assert_eq!(s.assigned_total_mflops, 0.0);
+    }
+}

@@ -1,0 +1,191 @@
+//! Constellation dynamics extensions (§III-A: "each satellite orbits the
+//! Earth periodically to enable the establishment of satellite-ground
+//! connections"): gateway→satellite handover as the constellation drifts
+//! overhead, and fault injection (transient satellite outages) for
+//! robustness evaluation.
+
+use crate::topology::{SatId, Torus};
+use crate::util::rng::Pcg64;
+
+/// Orbital handover model: a ground area's serving (decision) satellite
+/// advances along its orbit every `dwell_slots` slots — the in-orbit
+/// neighbour takes over the gateway link, inheriting the decision role.
+#[derive(Clone, Debug)]
+pub struct Handover {
+    /// Slots a satellite stays overhead before handing the gateway over.
+    pub dwell_slots: usize,
+    /// +1 / -1: direction of apparent ground-track motion along the orbit.
+    pub direction: isize,
+}
+
+impl Default for Handover {
+    fn default() -> Self {
+        // LEO pass ≈ 8 min over a gateway; at 1 s slots the dwell is long
+        // relative to experiment horizons, so the default keeps handover
+        // observable but not dominant.
+        Handover {
+            dwell_slots: 10,
+            direction: 1,
+        }
+    }
+}
+
+impl Handover {
+    /// The decision satellite serving an area at `slot`, given the area's
+    /// initial serving satellite. Motion is along the in-orbit ring.
+    pub fn serving_at(&self, torus: &Torus, initial: SatId, slot: usize) -> SatId {
+        let steps = (slot / self.dwell_slots.max(1)) as isize * self.direction;
+        let (o, i) = torus.coords(initial);
+        torus.id(o as isize, i as isize + steps)
+    }
+}
+
+/// Transient-outage fault injector: each slot, a healthy satellite fails
+/// with `p_fail` (losing its queued work — a radiation upset / safe-mode
+/// event), and a failed one recovers with `p_recover`.
+#[derive(Clone, Debug)]
+pub struct FaultInjector {
+    pub p_fail: f64,
+    pub p_recover: f64,
+    down: Vec<bool>,
+    rng: Pcg64,
+    /// Cumulative outage events (diagnostics).
+    pub failures: u64,
+}
+
+impl FaultInjector {
+    pub fn new(n_sats: usize, p_fail: f64, p_recover: f64, seed: u64) -> FaultInjector {
+        assert!((0.0..=1.0).contains(&p_fail) && (0.0..=1.0).contains(&p_recover));
+        FaultInjector {
+            p_fail,
+            p_recover,
+            down: vec![false; n_sats],
+            rng: Pcg64::new(seed, 0xFA11),
+            failures: 0,
+        }
+    }
+
+    /// Advance one slot; returns the ids that newly failed (their queued
+    /// work is lost — the caller resets those satellites).
+    pub fn step(&mut self) -> Vec<SatId> {
+        let mut newly_failed = Vec::new();
+        for (id, d) in self.down.iter_mut().enumerate() {
+            if *d {
+                if self.rng.bool(self.p_recover) {
+                    *d = false;
+                }
+            } else if self.rng.bool(self.p_fail) {
+                *d = true;
+                self.failures += 1;
+                newly_failed.push(id);
+            }
+        }
+        newly_failed
+    }
+
+    pub fn is_down(&self, s: SatId) -> bool {
+        self.down[s]
+    }
+
+    /// Currently-down count.
+    pub fn down_count(&self) -> usize {
+        self.down.iter().filter(|d| **d).count()
+    }
+
+    /// Filter a candidate list to healthy satellites (never empties the
+    /// list: if all candidates are down, the original is returned so the
+    /// admission check produces the drop).
+    pub fn healthy<'a>(&self, candidates: &'a [SatId]) -> Vec<SatId> {
+        let up: Vec<SatId> = candidates
+            .iter()
+            .copied()
+            .filter(|&c| !self.is_down(c))
+            .collect();
+        if up.is_empty() {
+            candidates.to_vec()
+        } else {
+            up
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn handover_advances_along_orbit() {
+        let t = Torus::new(8);
+        let h = Handover {
+            dwell_slots: 5,
+            direction: 1,
+        };
+        let s0 = t.id(3, 2);
+        assert_eq!(h.serving_at(&t, s0, 0), s0);
+        assert_eq!(h.serving_at(&t, s0, 4), s0);
+        assert_eq!(h.serving_at(&t, s0, 5), t.id(3, 3));
+        assert_eq!(h.serving_at(&t, s0, 10), t.id(3, 4));
+        // wraps around the ring
+        assert_eq!(h.serving_at(&t, s0, 5 * 8), s0);
+    }
+
+    #[test]
+    fn handover_stays_in_same_orbit() {
+        let t = Torus::new(6);
+        let h = Handover::default();
+        let s0 = t.id(2, 0);
+        for slot in 0..100 {
+            let (o, _) = t.coords(h.serving_at(&t, s0, slot));
+            assert_eq!(o, 2);
+        }
+    }
+
+    #[test]
+    fn faults_fail_and_recover() {
+        let mut f = FaultInjector::new(50, 0.3, 0.5, 1);
+        let mut saw_fail = false;
+        let mut saw_recover = false;
+        let mut prev_down = 0;
+        for _ in 0..60 {
+            let newly = f.step();
+            saw_fail |= !newly.is_empty();
+            let now_down = f.down_count();
+            saw_recover |= now_down < prev_down + newly.len();
+            prev_down = now_down;
+        }
+        assert!(saw_fail);
+        assert!(saw_recover);
+        assert!(f.failures > 0);
+    }
+
+    #[test]
+    fn zero_rates_are_inert() {
+        let mut f = FaultInjector::new(10, 0.0, 1.0, 2);
+        for _ in 0..20 {
+            assert!(f.step().is_empty());
+        }
+        assert_eq!(f.down_count(), 0);
+    }
+
+    #[test]
+    fn healthy_filter_never_empty() {
+        let mut f = FaultInjector::new(4, 1.0, 0.0, 3);
+        f.step(); // everything fails
+        assert_eq!(f.down_count(), 4);
+        let cands = vec![0, 1, 2, 3];
+        assert_eq!(f.healthy(&cands), cands);
+        let mut g = FaultInjector::new(4, 0.0, 1.0, 4);
+        g.step();
+        assert_eq!(g.healthy(&cands).len(), 4);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let run = |seed| {
+            let mut f = FaultInjector::new(30, 0.2, 0.4, seed);
+            (0..40).map(|_| f.step().len()).collect::<Vec<_>>()
+        };
+        assert_eq!(run(7), run(7));
+        assert_ne!(run(7), run(8));
+    }
+}

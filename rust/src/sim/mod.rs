@@ -1,0 +1,526 @@
+//! Slotted constellation simulator (§III): drives arrivals → splitting
+//! (Alg. 1) → offloading (a [`crate::offload::OffloadScheme`]) → execution
+//! with Eq. 4 admission, accumulating the Eq. 5–9 metrics that Figs. 2–3
+//! plot.
+//!
+//! Per slot τ:
+//! 1. every decision-making satellite receives Poisson(λ) tasks from its
+//!    gateway (uplink delay sampled from Eq. 1);
+//! 2. each task is split into L segments by Alg. 1;
+//! 3. the scheme picks the processing sequence (c_1..c_L) within A_x;
+//! 4. segments are loaded in order (Eq. 4) — the first rejection drops
+//!    the task at dp = k; accepted segments accrue computation delay
+//!    q_k/C (Eq. 5) and transmission delay MH·q_k·κ (Eq. 7);
+//! 5. all satellites service one slot of backlog at C_x.
+
+pub mod dynamics;
+
+use crate::comm::{GatewayChannel, IslLink};
+use crate::config::SimConfig;
+use crate::metrics::{MetricsCollector, Report, TaskOutcome};
+use crate::offload::{make_scheme, OffloadContext, OffloadScheme, SchemeKind};
+use crate::satellite::{Admission, Satellite};
+use crate::splitting::balanced_split;
+use crate::tasks::{decision_satellites, TaskGenerator};
+use crate::topology::{SatId, Torus};
+use crate::util::rng::Pcg64;
+
+/// How tasks are split before offloading (the ablation knob).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SplitPolicy {
+    /// Alg. 1 workload-balanced binary search (the paper's scheme).
+    Balanced,
+    /// Naive equal-layer-count cut (ablation baseline).
+    NaiveEqualLayers,
+}
+
+/// A ready-to-run simulation instance.
+pub struct Simulation {
+    cfg: SimConfig,
+    torus: Torus,
+    satellites: Vec<Satellite>,
+    decision_sats: Vec<SatId>,
+    scheme: Box<dyn OffloadScheme>,
+    gen: TaskGenerator,
+    gateway: GatewayChannel,
+    kappa: f64,
+    rng: Pcg64,
+    pub split_policy: SplitPolicy,
+    /// Cached split (per-task splits are identical when scale jitter = 0).
+    split_cache: Option<(u64, Vec<f64>)>,
+    /// Optional orbital handover of the gateway link (§III-A).
+    handover: Option<dynamics::Handover>,
+    /// Optional transient-outage fault injection.
+    faults: Option<dynamics::FaultInjector>,
+    /// Early-exit mode (§VI future work): tasks exit at the cheapest
+    /// branch meeting this accuracy floor; the truncated layer vector is
+    /// what gets split and offloaded.
+    early_exit_workloads: Option<Vec<f64>>,
+    /// Accuracy delivered under the early-exit policy (1.0 without it).
+    pub delivered_accuracy: f64,
+}
+
+impl Simulation {
+    pub fn new(cfg: &SimConfig, kind: SchemeKind) -> Simulation {
+        cfg.validate().expect("invalid SimConfig");
+        let torus = Torus::new(cfg.n);
+        let satellites: Vec<Satellite> = (0..torus.len())
+            .map(|i| {
+                Satellite::new(
+                    i,
+                    cfg.satellite.capacity_mflops,
+                    cfg.satellite.max_workload_mflops,
+                )
+            })
+            .collect();
+        let decision_sats =
+            decision_satellites(torus.len(), cfg.decision_fraction, cfg.seed);
+        let n_areas = decision_sats.len();
+        let profile = cfg.model.profile();
+        // Eq. 7 charges transmission as κ·q_k·MH: the workload q_k is the
+        // paper's proxy for the tensor shipped at the cut. κ is calibrated
+        // so κ·q̄ equals the time to push the MEAN CUT ACTIVATION over one
+        // ISL hop (DESIGN.md §6) — the physical quantity is the activation
+        // at the partition boundary, not the sum of all intermediate
+        // tensors.
+        let l_eff = cfg.effective_l();
+        let cuts = crate::splitting::balanced_split(
+            &profile.workloads(),
+            l_eff,
+            cfg.ga.epsilon,
+        );
+        let mean_cut_bytes: f64 = {
+            let b: Vec<f64> = cuts
+                .blocks
+                .iter()
+                .take(l_eff.saturating_sub(1))
+                .filter(|blk| !blk.is_empty())
+                .map(|blk| profile.cut_bytes(blk.end - 1))
+                .collect();
+            if b.is_empty() {
+                profile.layers[0].output_bytes
+            } else {
+                b.iter().sum::<f64>() / b.len() as f64
+            }
+        };
+        let mean_seg_mflops = profile.total_mflops() / l_eff as f64;
+        let isl = IslLink::new(cfg.comm.clone());
+        let kappa = isl.hop_secs(mean_cut_bytes) / mean_seg_mflops.max(1e-9);
+        Simulation {
+            torus,
+            satellites,
+            decision_sats,
+            scheme: make_scheme(kind, cfg.seed ^ 0x5EED),
+            // Table I gives ONE "generated task incidence" λ for the
+            // system: arrivals are Poisson(λ) network-wide, spread across
+            // the gateway areas (each area draws Poisson(λ/#areas)).
+            gen: TaskGenerator::new(
+                cfg.seed,
+                cfg.lambda / n_areas.max(1) as f64,
+                cfg.model,
+            ),
+            gateway: GatewayChannel::new(cfg.comm.clone()),
+            kappa,
+            rng: Pcg64::new(cfg.seed, 0x5131),
+            split_policy: SplitPolicy::Balanced,
+            split_cache: None,
+            handover: None,
+            faults: None,
+            early_exit_workloads: None,
+            delivered_accuracy: 1.0,
+            cfg: cfg.clone(),
+        }
+    }
+
+    /// Builder: enable the early-exit extension (DESIGN.md: the paper's
+    /// §VI future work). Tasks take the cheapest exit branch meeting
+    /// `min_accuracy`; returns self with the truncated workload vector
+    /// installed and `delivered_accuracy` recording the trade-off.
+    pub fn with_early_exit(mut self, min_accuracy: f64) -> Simulation {
+        let ee = crate::dnn::EarlyExitProfile::for_model(self.cfg.model);
+        let branch = ee.cheapest_exit(min_accuracy);
+        self.delivered_accuracy = ee.accuracy_for_exit(branch);
+        self.early_exit_workloads = Some(ee.workloads_for_exit(branch));
+        self.split_cache = None;
+        self
+    }
+
+    /// Builder: enable orbital gateway handover.
+    pub fn with_handover(mut self, h: dynamics::Handover) -> Simulation {
+        self.handover = Some(h);
+        self
+    }
+
+    /// Builder: enable transient satellite outages (queued work lost on
+    /// failure; failed satellites are avoided by the schemes).
+    pub fn with_faults(mut self, p_fail: f64, p_recover: f64) -> Simulation {
+        self.faults = Some(dynamics::FaultInjector::new(
+            self.torus.len(),
+            p_fail,
+            p_recover,
+            self.cfg.seed ^ 0xFA17,
+        ));
+        self
+    }
+
+    /// Builder: enable workload jitter (varied task sizes).
+    pub fn with_jitter(mut self, jitter: f64) -> Simulation {
+        self.gen = TaskGenerator::new(
+            self.cfg.seed,
+            self.cfg.lambda / self.decision_sats.len().max(1) as f64,
+            self.cfg.model,
+        )
+        .with_jitter(jitter);
+        self.split_cache = None;
+        self
+    }
+
+    /// Builder: switch the splitting policy (ablation).
+    pub fn with_split_policy(mut self, p: SplitPolicy) -> Simulation {
+        self.split_policy = p;
+        self
+    }
+
+    fn split_segments(&mut self, workloads: &[f64], l: usize, scale_key: u64) -> Vec<f64> {
+        if let Some((key, cached)) = &self.split_cache {
+            if *key == scale_key {
+                return cached.clone();
+            }
+        }
+        let segs = match self.split_policy {
+            SplitPolicy::Balanced => {
+                balanced_split(workloads, l, self.cfg.ga.epsilon).segment_workloads()
+            }
+            SplitPolicy::NaiveEqualLayers => {
+                crate::splitting::naive_equal_layers(workloads, l).segment_workloads()
+            }
+        };
+        self.split_cache = Some((scale_key, segs.clone()));
+        segs
+    }
+
+    /// Run the full Γ-slot simulation and produce the report.
+    pub fn run(mut self) -> Report {
+        let mut metrics = MetricsCollector::new(self.satellites.len());
+        let l = self.cfg.effective_l();
+        let d_max = self.cfg.effective_d_max();
+        let slots = self.cfg.slots;
+        // Constraint 11c is a property of the NETWORK (ISL reachability
+        // within D_M), so every scheme draws candidates from the same
+        // decision space A_x — the comparison stays capacity-fair.
+        let spaces: Vec<(SatId, Vec<SatId>)> = self
+            .decision_sats
+            .iter()
+            .map(|&x| (x, self.torus.decision_space(x, d_max)))
+            .collect();
+
+        // Local-observation decision model (§I: "each terminal
+        // independently determines offloading decisions based on its local
+        // observations"): resource state disseminates over ISLs once per
+        // slot, so within a slot every decision satellite sees the
+        // slot-start snapshot plus ONLY its own placements. This is what
+        // makes §V-B's herding observable: multiple decision satellites
+        // pick the same "fittest" satellite before its load updates.
+        let mut local_view: Vec<Satellite> = self.satellites.clone();
+        let mut faults = self.faults.take();
+        for slot in 0..slots {
+            // fault injection: newly failed satellites lose queued work
+            if let Some(f) = faults.as_mut() {
+                for id in f.step() {
+                    self.satellites[id].reset();
+                }
+            }
+            for (origin0, candidates0) in &spaces {
+                // orbital handover: the serving satellite (and with it the
+                // decision space) drifts along the orbit
+                let (origin, candidates_owned);
+                match &self.handover {
+                    Some(h) => {
+                        origin = h.serving_at(&self.torus, *origin0, slot);
+                        candidates_owned =
+                            self.torus.decision_space(origin, d_max);
+                    }
+                    None => {
+                        origin = *origin0;
+                        candidates_owned = candidates0.clone();
+                    }
+                }
+                // outage avoidance: schemes only see healthy candidates
+                let candidates: Vec<usize> = match &faults {
+                    Some(f) => f.healthy(&candidates_owned),
+                    None => candidates_owned,
+                };
+                let origin = &origin;
+                let candidates = &candidates;
+                // this origin's view: slot-start snapshot of everyone
+                local_view.clone_from(&self.satellites);
+                let arrivals = self.gen.arrivals(*origin, slot);
+                for task in arrivals {
+                    let workloads = match &self.early_exit_workloads {
+                        Some(w) => w.iter().map(|x| x * task.scale).collect(),
+                        None => task.layer_workloads(),
+                    };
+                    let scale_key = (task.scale * 1e6) as u64;
+                    let segments = self.split_segments(&workloads, l, scale_key);
+                    // scheme decision under the origin's local view
+                    let chrom = {
+                        let ctx = OffloadContext {
+                            torus: &self.torus,
+                            satellites: &local_view,
+                            origin: *origin,
+                            candidates,
+                            segments: &segments,
+                            kappa: self.kappa,
+                            ga: &self.cfg.ga,
+                        };
+                        self.scheme.decide(&ctx)
+                    };
+                    // the origin tracks its own placements in its view
+                    for (&c, &q) in chrom.iter().zip(&segments) {
+                        if q > 0.0 {
+                            let _ = local_view[c].try_load(q);
+                        }
+                    }
+                    debug_assert_eq!(chrom.len(), segments.len());
+
+                    // execute: walk segments, Eq. 4 admission, Eq. 5/7 delays
+                    let uplink = self.gateway.upload_secs(602_112.0 * task.scale, &mut self.rng);
+                    let mut comp = 0.0f64;
+                    let mut tran = 0.0f64;
+                    let mut drop_point = l + 1; // completed
+                    let mut dropped_at = None;
+                    for (k, (&c, &q)) in chrom.iter().zip(&segments).enumerate() {
+                        if q == 0.0 {
+                            continue; // padded empty block
+                        }
+                        match self.satellites[c].try_load(q) {
+                            Admission::Accepted => {
+                                let dt = self.satellites[c].service_secs_with_queue(q);
+                                comp += dt;
+                                metrics.sat(c).comp_delay_s += dt;
+                                metrics.sat(c).assigned_mflops += q;
+                                metrics.sat(c).segments_executed += 1;
+                                if k + 1 < chrom.len() {
+                                    let hops = self.torus.manhattan(c, chrom[k + 1]) as f64;
+                                    let tt = hops * q * self.kappa;
+                                    tran += tt;
+                                    metrics.sat(c).tran_delay_s += tt;
+                                }
+                            }
+                            Admission::Rejected => {
+                                metrics.sat(c).segments_rejected += 1;
+                                drop_point = k + 1; // dp ∈ {1..L} (11d)
+                                dropped_at = Some(k);
+                                break;
+                            }
+                        }
+                    }
+                    // learning hook (DQN)
+                    {
+                        let ctx = OffloadContext {
+                            torus: &self.torus,
+                            satellites: &local_view,
+                            origin: *origin,
+                            candidates,
+                            segments: &segments,
+                            kappa: self.kappa,
+                            ga: &self.cfg.ga,
+                        };
+                        self.scheme
+                            .observe(&ctx, &chrom, dropped_at, comp + tran);
+                    }
+                    metrics.record(TaskOutcome {
+                        task_id: task.id,
+                        origin: *origin,
+                        drop_point,
+                        l,
+                        comp_delay_s: comp,
+                        tran_delay_s: tran,
+                        uplink_delay_s: uplink,
+                    });
+                }
+            }
+            // all satellites service one slot
+            for s in &mut self.satellites {
+                s.service_slot();
+            }
+        }
+        metrics.finish(slots)
+    }
+
+    /// Access to the per-satellite end state (used by tests/examples).
+    pub fn satellites(&self) -> &[Satellite] {
+        &self.satellites
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dnn::DnnModel;
+
+    fn small_cfg(kind_model: DnnModel, lambda: f64) -> SimConfig {
+        SimConfig {
+            n: 6,
+            slots: 10,
+            lambda,
+            model: kind_model,
+            seed: 7,
+            ..SimConfig::default()
+        }
+    }
+
+    #[test]
+    fn runs_and_produces_tasks() {
+        let cfg = small_cfg(DnnModel::Vgg19, 5.0);
+        let r = Simulation::new(&cfg, SchemeKind::Random).run();
+        assert!(r.total_tasks > 0);
+        assert_eq!(r.total_tasks, r.completed_tasks + r.dropped_tasks);
+        assert!(r.completion_rate() > 0.0);
+        assert!(r.slots_run == 10);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let cfg = small_cfg(DnnModel::Vgg19, 8.0);
+        let a = Simulation::new(&cfg, SchemeKind::Scc).run();
+        let b = Simulation::new(&cfg, SchemeKind::Scc).run();
+        assert_eq!(a.total_tasks, b.total_tasks);
+        assert_eq!(a.completed_tasks, b.completed_tasks);
+        assert!((a.avg_delay_ms - b.avg_delay_ms).abs() < 1e-9);
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let mut cfg = small_cfg(DnnModel::Vgg19, 8.0);
+        let a = Simulation::new(&cfg, SchemeKind::Random).run();
+        cfg.seed = 99;
+        let b = Simulation::new(&cfg, SchemeKind::Random).run();
+        assert_ne!(a.total_tasks, b.total_tasks);
+    }
+
+    #[test]
+    fn all_schemes_run_both_models() {
+        for model in [DnnModel::Vgg19, DnnModel::Resnet101] {
+            for kind in SchemeKind::all() {
+                let cfg = small_cfg(model, 3.0);
+                let r = Simulation::new(&cfg, kind).run();
+                assert!(r.total_tasks > 0, "{kind:?}/{model:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn overload_causes_drops() {
+        // tiny capacity + heavy arrivals: drops must appear
+        let mut cfg = small_cfg(DnnModel::Vgg19, 40.0);
+        cfg.satellite.max_workload_mflops = 20_000.0;
+        cfg.slots = 12;
+        let r = Simulation::new(&cfg, SchemeKind::Random).run();
+        assert!(r.dropped_tasks > 0, "expected drops: {r:?}");
+        assert!(r.completion_rate() < 1.0);
+    }
+
+    #[test]
+    fn light_load_mostly_completes() {
+        let mut cfg = small_cfg(DnnModel::Vgg19, 0.5);
+        cfg.satellite.max_workload_mflops = 400_000.0;
+        let r = Simulation::new(&cfg, SchemeKind::Scc).run();
+        assert!(
+            r.completion_rate() > 0.95,
+            "rate = {}",
+            r.completion_rate()
+        );
+    }
+
+    #[test]
+    fn scc_beats_random_under_pressure() {
+        let mut cfg = small_cfg(DnnModel::Vgg19, 20.0);
+        cfg.slots = 15;
+        cfg.satellite.max_workload_mflops = 60_000.0;
+        let scc = Simulation::new(&cfg, SchemeKind::Scc).run();
+        let rnd = Simulation::new(&cfg, SchemeKind::Random).run();
+        assert!(
+            scc.completion_rate() >= rnd.completion_rate() - 0.02,
+            "SCC {} vs Random {}",
+            scc.completion_rate(),
+            rnd.completion_rate()
+        );
+    }
+
+    #[test]
+    fn delays_positive_when_tasks_complete() {
+        let cfg = small_cfg(DnnModel::Resnet101, 2.0);
+        let r = Simulation::new(&cfg, SchemeKind::Rrp).run();
+        if r.completed_tasks > 0 {
+            assert!(r.avg_delay_ms > 0.0);
+            assert!(r.avg_comp_ms > 0.0);
+        }
+    }
+
+    #[test]
+    fn naive_split_policy_runs() {
+        let cfg = small_cfg(DnnModel::Vgg19, 5.0);
+        let r = Simulation::new(&cfg, SchemeKind::Scc)
+            .with_split_policy(SplitPolicy::NaiveEqualLayers)
+            .run();
+        assert!(r.total_tasks > 0);
+    }
+
+    #[test]
+    fn handover_shifts_decision_satellites() {
+        let cfg = small_cfg(DnnModel::Vgg19, 5.0);
+        let r = Simulation::new(&cfg, SchemeKind::Scc)
+            .with_handover(dynamics::Handover {
+                dwell_slots: 2,
+                direction: 1,
+            })
+            .run();
+        assert!(r.total_tasks > 0);
+    }
+
+    #[test]
+    fn faults_reduce_completion_under_load() {
+        let mut cfg = small_cfg(DnnModel::Vgg19, 30.0);
+        cfg.slots = 12;
+        let clean = Simulation::new(&cfg, SchemeKind::Random).run();
+        let faulty = Simulation::new(&cfg, SchemeKind::Random)
+            .with_faults(0.10, 0.3)
+            .run();
+        assert!(faulty.total_tasks > 0);
+        assert!(
+            faulty.completion_rate() <= clean.completion_rate() + 0.05,
+            "faults should not improve completion: {} vs {}",
+            faulty.completion_rate(),
+            clean.completion_rate()
+        );
+    }
+
+    #[test]
+    fn early_exit_cuts_delay_at_accuracy_cost() {
+        let mut cfg = small_cfg(DnnModel::Vgg19, 10.0);
+        cfg.slots = 8;
+        let full = Simulation::new(&cfg, SchemeKind::Scc).run();
+        let sim = Simulation::new(&cfg, SchemeKind::Scc).with_early_exit(0.80);
+        let acc = sim.delivered_accuracy;
+        let exited = sim.run();
+        assert!(acc < 1.0, "an exit should have been taken");
+        if full.completed_tasks > 0 && exited.completed_tasks > 0 {
+            assert!(
+                exited.avg_delay_ms < full.avg_delay_ms,
+                "early exit must cut delay: {} vs {}",
+                exited.avg_delay_ms,
+                full.avg_delay_ms
+            );
+        }
+    }
+
+    #[test]
+    fn jitter_varies_task_scale() {
+        let cfg = small_cfg(DnnModel::Vgg19, 5.0);
+        let r = Simulation::new(&cfg, SchemeKind::Random)
+            .with_jitter(0.2)
+            .run();
+        assert!(r.total_tasks > 0);
+    }
+}

@@ -1,0 +1,324 @@
+//! Workload-balanced task splitting (Algorithm 1, §IV-A).
+//!
+//! Given the per-layer workloads `{w_1, …, w_{N^l}}` and an expected slice
+//! count `L ≤ N^l`, find the partition of consecutive layers into exactly
+//! `L` blocks that minimizes the largest block workload (the min-max
+//! utility of Eq. 3) via binary search on the block-size limit ("binary
+//! monotonicity" + dichotomy): `Split(limit)` greedily packs layers while
+//! the running block stays ≤ limit, and the resulting block count is
+//! non-increasing in the limit.
+//!
+//! Complexity: `O(N^l · log2(V))` time with `V = Σw − max w` the search
+//! interval, `O(L)` extra space — as analysed in §IV-A.
+
+/// One block (slice) of consecutive layers.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Block {
+    /// Index of the first layer in the block (0-based, inclusive).
+    pub start: usize,
+    /// One past the last layer (exclusive). `start == end` ⇒ empty block.
+    pub end: usize,
+    /// Total workload of the block [MFLOP] — the `m_k` of Eq. 3/4.
+    pub workload: f64,
+}
+
+impl Block {
+    pub fn is_empty(&self) -> bool {
+        self.start == self.end
+    }
+
+    pub fn num_layers(&self) -> usize {
+        self.end - self.start
+    }
+}
+
+/// The partitioning result: exactly `L` blocks covering all layers in
+/// order (possibly with trailing empty blocks, per Alg. 1 line 24).
+#[derive(Clone, Debug, PartialEq)]
+pub struct SplitResult {
+    pub blocks: Vec<Block>,
+    /// The binary-search block-size limit that produced this partition.
+    pub limit: f64,
+}
+
+impl SplitResult {
+    /// Per-segment workloads `{q_1, …, q_L}` (Alg. 2's input).
+    pub fn segment_workloads(&self) -> Vec<f64> {
+        self.blocks.iter().map(|b| b.workload).collect()
+    }
+
+    /// max_k m_k — the minimized objective (Eq. 3).
+    pub fn max_block_workload(&self) -> f64 {
+        self.blocks.iter().map(|b| b.workload).fold(0.0, f64::max)
+    }
+
+    /// Balance ratio: max block / mean non-empty block (1.0 = perfect).
+    pub fn balance_ratio(&self) -> f64 {
+        let nonempty: Vec<f64> = self
+            .blocks
+            .iter()
+            .filter(|b| !b.is_empty())
+            .map(|b| b.workload)
+            .collect();
+        if nonempty.is_empty() {
+            return 1.0;
+        }
+        let mean = nonempty.iter().sum::<f64>() / nonempty.len() as f64;
+        if mean == 0.0 {
+            1.0
+        } else {
+            self.max_block_workload() / mean
+        }
+    }
+}
+
+/// `Split(LimitSize)` (Alg. 1 lines 1–12): greedy first-fit pack of the
+/// layer sequence into blocks of workload ≤ `limit`. Returns block
+/// boundaries. `limit` must be ≥ max layer workload for this to cover all
+/// layers; the driver guarantees that via the Lower bound.
+pub fn split_with_limit(workloads: &[f64], limit: f64) -> Vec<Block> {
+    let mut blocks = Vec::new();
+    let mut start = 0usize;
+    let mut acc = 0.0f64;
+    for (i, &w) in workloads.iter().enumerate() {
+        if acc + w <= limit {
+            acc += w;
+        } else {
+            blocks.push(Block {
+                start,
+                end: i,
+                workload: acc,
+            });
+            start = i;
+            acc = w;
+        }
+    }
+    blocks.push(Block {
+        start,
+        end: workloads.len(),
+        workload: acc,
+    });
+    blocks
+}
+
+/// Algorithm 1: workload-balanced split into exactly `L` blocks.
+///
+/// `epsilon` is the binary-search precision (Table I: 1 MFLOP).
+///
+/// # Panics
+/// If `workloads` is empty, `L == 0`, or `L > N^l` (constraint 11e).
+pub fn balanced_split(workloads: &[f64], l: usize, epsilon: f64) -> SplitResult {
+    assert!(!workloads.is_empty(), "no layers to split");
+    assert!(l >= 1, "L must be >= 1");
+    assert!(
+        l <= workloads.len(),
+        "constraint 11e violated: L={l} > N^l={}",
+        workloads.len()
+    );
+    assert!(epsilon > 0.0);
+    assert!(
+        workloads.iter().all(|w| *w >= 0.0),
+        "negative layer workload"
+    );
+
+    // Lower = max_k w_k (every layer must fit in one block);
+    // Upper = Σ w_k (a single block holds everything).
+    let mut lower = workloads.iter().cloned().fold(0.0, f64::max);
+    let mut upper: f64 = workloads.iter().sum();
+
+    while upper - lower > epsilon {
+        let mid = 0.5 * (lower + upper);
+        let scheme = split_with_limit(workloads, mid);
+        if scheme.len() > l {
+            // too many blocks: limit too small
+            lower = mid;
+        } else {
+            upper = mid;
+        }
+    }
+
+    // `upper` is feasible: |Split(upper)| <= L.
+    let mut blocks = split_with_limit(workloads, upper);
+    debug_assert!(blocks.len() <= l);
+    // Alg. 1 line 24: pad with empty blocks until |result| == L.
+    let tail = workloads.len();
+    while blocks.len() < l {
+        blocks.push(Block {
+            start: tail,
+            end: tail,
+            workload: 0.0,
+        });
+    }
+    SplitResult {
+        blocks,
+        limit: upper,
+    }
+}
+
+/// Naive equal-layer-count split baseline (for the ablation bench): cut
+/// every ⌈N^l / L⌉ layers regardless of workload.
+pub fn naive_equal_layers(workloads: &[f64], l: usize) -> SplitResult {
+    assert!(l >= 1 && l <= workloads.len());
+    let n = workloads.len();
+    let per = n.div_ceil(l);
+    let mut blocks = Vec::with_capacity(l);
+    for k in 0..l {
+        let start = (k * per).min(n);
+        let end = ((k + 1) * per).min(n);
+        blocks.push(Block {
+            start,
+            end,
+            workload: workloads[start..end].iter().sum(),
+        });
+    }
+    let limit = blocks.iter().map(|b| b.workload).fold(0.0, f64::max);
+    SplitResult { blocks, limit }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dnn::DnnModel;
+
+    fn assert_valid_partition(workloads: &[f64], res: &SplitResult, l: usize) {
+        assert_eq!(res.blocks.len(), l, "exactly L blocks");
+        // coverage in order, no gaps/overlaps
+        let mut pos = 0usize;
+        for b in &res.blocks {
+            if !b.is_empty() {
+                assert_eq!(b.start, pos, "gap/overlap at {pos}");
+                pos = b.end;
+            }
+        }
+        assert_eq!(pos, workloads.len(), "all layers covered");
+        // workload sums match
+        let total: f64 = workloads.iter().sum();
+        let got: f64 = res.blocks.iter().map(|b| b.workload).sum();
+        assert!((total - got).abs() < 1e-6 * total.max(1.0));
+    }
+
+    #[test]
+    fn uniform_layers_split_evenly() {
+        let w = vec![10.0; 12];
+        let res = balanced_split(&w, 4, 0.01);
+        assert_valid_partition(&w, &res, 4);
+        assert!((res.max_block_workload() - 30.0).abs() < 1.0);
+        assert!(res.balance_ratio() < 1.05);
+    }
+
+    #[test]
+    fn single_giant_layer_dominates() {
+        let w = vec![1.0, 1.0, 100.0, 1.0, 1.0];
+        let res = balanced_split(&w, 3, 0.01);
+        assert_valid_partition(&w, &res, 3);
+        // the giant layer forms (close to) its own block
+        assert!(res.max_block_workload() <= 102.1);
+    }
+
+    #[test]
+    fn l_equals_one_single_block() {
+        let w = vec![5.0, 7.0, 3.0];
+        let res = balanced_split(&w, 1, 0.01);
+        assert_eq!(res.blocks.len(), 1);
+        assert!((res.blocks[0].workload - 15.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn l_equals_n_each_layer_own_block_or_padded() {
+        let w = vec![4.0, 4.0, 4.0, 4.0];
+        let res = balanced_split(&w, 4, 0.01);
+        assert_valid_partition(&w, &res, 4);
+        assert!((res.max_block_workload() - 4.0).abs() < 0.1);
+    }
+
+    #[test]
+    fn pads_empty_blocks_when_fewer_needed() {
+        // heavy skew: greedy may legitimately need < L blocks, padded to L
+        let w2 = vec![100.0, 0.0, 0.0];
+        let res2 = balanced_split(&w2, 3, 0.01);
+        assert_eq!(res2.blocks.len(), 3);
+        assert_valid_partition(&w2, &res2, 3);
+    }
+
+    #[test]
+    fn monotone_block_count_in_limit() {
+        let w: Vec<f64> = (1..=20).map(|i| (i as f64 * 7.0) % 13.0 + 1.0).collect();
+        let mut prev = usize::MAX;
+        let total: f64 = w.iter().sum();
+        let maxw = w.iter().cloned().fold(0.0, f64::max);
+        let mut lim = maxw;
+        while lim <= total {
+            let count = split_with_limit(&w, lim).len();
+            assert!(count <= prev, "block count must be non-increasing");
+            prev = count;
+            lim += (total - maxw) / 37.0;
+        }
+    }
+
+    #[test]
+    fn vgg19_table1_split() {
+        let w = DnnModel::Vgg19.profile().workloads();
+        let res = balanced_split(&w, 3, 1.0);
+        assert_valid_partition(&w, &res, 3);
+        let total: f64 = w.iter().sum();
+        // balanced: max block well below half the model
+        assert!(res.max_block_workload() < 0.55 * total);
+        assert!(res.balance_ratio() < 1.6, "ratio={}", res.balance_ratio());
+    }
+
+    #[test]
+    fn resnet101_table1_split() {
+        let w = DnnModel::Resnet101.profile().workloads();
+        let res = balanced_split(&w, 4, 1.0);
+        assert_valid_partition(&w, &res, 4);
+        assert!(res.balance_ratio() < 1.35, "ratio={}", res.balance_ratio());
+    }
+
+    #[test]
+    fn balanced_beats_naive_on_skewed_input() {
+        let w = DnnModel::Vgg19.profile().workloads();
+        let bal = balanced_split(&w, 3, 1.0);
+        let naive = naive_equal_layers(&w, 3);
+        assert!(bal.max_block_workload() <= naive.max_block_workload());
+    }
+
+    #[test]
+    fn optimality_vs_bruteforce_small() {
+        // exhaustive check: binary-search result equals the true min-max
+        // over all contiguous 3-partitions for a small case
+        let w = vec![3.0, 9.0, 2.0, 7.0, 4.0, 6.0];
+        let l = 3;
+        let res = balanced_split(&w, l, 1e-6);
+        let mut best = f64::INFINITY;
+        let n = w.len();
+        for c1 in 1..n {
+            for c2 in c1 + 1..n {
+                let parts = [
+                    w[..c1].iter().sum::<f64>(),
+                    w[c1..c2].iter().sum::<f64>(),
+                    w[c2..].iter().sum::<f64>(),
+                ];
+                best = best.min(parts.into_iter().fold(0.0, f64::max));
+            }
+        }
+        assert!(
+            (res.max_block_workload() - best).abs() < 1e-3,
+            "got {} want {}",
+            res.max_block_workload(),
+            best
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "constraint 11e")]
+    fn rejects_l_above_layer_count() {
+        balanced_split(&[1.0, 2.0], 3, 0.1);
+    }
+
+    #[test]
+    fn zero_workload_layers_ok() {
+        let w = vec![0.0, 5.0, 0.0, 5.0];
+        let res = balanced_split(&w, 2, 0.01);
+        assert_valid_partition(&w, &res, 2);
+    }
+}

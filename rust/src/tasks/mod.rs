@@ -1,0 +1,206 @@
+//! Task generation substrate (§III-A): UEs in remote areas generate DNN
+//! inference tasks; each area's gateway aggregates them and uplinks to the
+//! decision-making satellite overhead. Arrivals per decision satellite per
+//! slot are Poisson(λ) (Table I: λ ∈ [4, 70]).
+
+use crate::dnn::DnnModel;
+use crate::topology::SatId;
+use crate::util::rng::Pcg64;
+
+/// One DNN inference task (a "task block" after the decision satellite
+/// groups arrivals into processing units).
+#[derive(Clone, Debug)]
+pub struct Task {
+    /// Unique id (monotone per generator).
+    pub id: u64,
+    /// Decision-making satellite that received the task from its gateway.
+    pub origin: SatId,
+    /// Which DNN the task runs.
+    pub model: DnnModel,
+    /// Workload multiplier: UE inputs vary (crop sizes / batch of frames),
+    /// scaling every layer's workload uniformly. 1.0 = canonical 224².
+    pub scale: f64,
+    /// Slot in which the task arrived.
+    pub arrival_slot: usize,
+}
+
+impl Task {
+    /// Per-layer workload vector for this task [MFLOP], scaled.
+    pub fn layer_workloads(&self) -> Vec<f64> {
+        self.model
+            .profile()
+            .workloads()
+            .into_iter()
+            .map(|w| w * self.scale)
+            .collect()
+    }
+
+    /// Total workload [MFLOP].
+    pub fn total_mflops(&self) -> f64 {
+        self.model.profile().total_mflops() * self.scale
+    }
+}
+
+/// Poisson task generator for a set of decision satellites.
+#[derive(Debug)]
+pub struct TaskGenerator {
+    rng: Pcg64,
+    next_id: u64,
+    /// λ — mean tasks per decision satellite per slot.
+    pub lambda: f64,
+    pub model: DnnModel,
+    /// Half-width of the uniform workload-scale jitter around 1.0
+    /// (0.0 ⇒ all tasks identical, as in the paper's fixed-model setup).
+    pub scale_jitter: f64,
+}
+
+impl TaskGenerator {
+    pub fn new(seed: u64, lambda: f64, model: DnnModel) -> TaskGenerator {
+        TaskGenerator {
+            rng: Pcg64::new(seed, 0x7A5C),
+            next_id: 0,
+            lambda,
+            model,
+            scale_jitter: 0.0,
+        }
+    }
+
+    /// With workload jitter (exercises adaptive splitting on varied tasks).
+    pub fn with_jitter(mut self, jitter: f64) -> TaskGenerator {
+        assert!((0.0..1.0).contains(&jitter));
+        self.scale_jitter = jitter;
+        self
+    }
+
+    /// Draw this slot's arrivals for one decision satellite.
+    pub fn arrivals(&mut self, origin: SatId, slot: usize) -> Vec<Task> {
+        let k = self.rng.poisson(self.lambda);
+        (0..k).map(|_| self.one(origin, slot)).collect()
+    }
+
+    /// Generate a single task.
+    pub fn one(&mut self, origin: SatId, slot: usize) -> Task {
+        let id = self.next_id;
+        self.next_id += 1;
+        let scale = if self.scale_jitter > 0.0 {
+            self.rng
+                .f64_in(1.0 - self.scale_jitter, 1.0 + self.scale_jitter)
+        } else {
+            1.0
+        };
+        Task {
+            id,
+            origin,
+            model: self.model,
+            scale,
+            arrival_slot: slot,
+        }
+    }
+
+    /// Total tasks generated so far.
+    pub fn generated(&self) -> u64 {
+        self.next_id
+    }
+}
+
+/// Choose which satellites act as decision-making satellites: `frac` of the
+/// constellation, spread deterministically (evenly strided) so coverage
+/// areas are geographically dispersed as in Fig. 1.
+pub fn decision_satellites(n_sats: usize, frac: f64, seed: u64) -> Vec<SatId> {
+    let count = ((n_sats as f64 * frac).round() as usize).clamp(1, n_sats);
+    let mut rng = Pcg64::new(seed, 0xDEC1);
+    // stride placement + random phase: deterministic, dispersed
+    let stride = n_sats as f64 / count as f64;
+    let phase = rng.f64() * stride;
+    let mut out: Vec<SatId> = (0..count)
+        .map(|i| ((phase + i as f64 * stride) as usize) % n_sats)
+        .collect();
+    out.sort_unstable();
+    out.dedup();
+    // collisions from rounding: fill with unused ids
+    let mut i = 0;
+    while out.len() < count {
+        if !out.contains(&i) {
+            out.push(i);
+        }
+        i += 1;
+    }
+    out.sort_unstable();
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn poisson_arrival_mean() {
+        let mut g = TaskGenerator::new(1, 25.0, DnnModel::Vgg19);
+        let slots = 400;
+        let total: usize = (0..slots).map(|s| g.arrivals(0, s).len()).sum();
+        let mean = total as f64 / slots as f64;
+        assert!((mean - 25.0).abs() < 1.0, "mean={mean}");
+    }
+
+    #[test]
+    fn ids_unique_and_monotone() {
+        let mut g = TaskGenerator::new(2, 10.0, DnnModel::Resnet101);
+        let tasks: Vec<Task> = (0..20).flat_map(|s| g.arrivals(3, s)).collect();
+        for w in tasks.windows(2) {
+            assert!(w[0].id < w[1].id);
+        }
+        assert_eq!(g.generated(), tasks.len() as u64);
+    }
+
+    #[test]
+    fn no_jitter_means_identical_scale() {
+        let mut g = TaskGenerator::new(3, 5.0, DnnModel::Vgg19);
+        for t in g.arrivals(0, 0) {
+            assert_eq!(t.scale, 1.0);
+        }
+    }
+
+    #[test]
+    fn jitter_within_bounds() {
+        let mut g = TaskGenerator::new(4, 20.0, DnnModel::Vgg19).with_jitter(0.3);
+        for s in 0..10 {
+            for t in g.arrivals(0, s) {
+                assert!((0.7..=1.3).contains(&t.scale), "scale={}", t.scale);
+            }
+        }
+    }
+
+    #[test]
+    fn task_workloads_scaled() {
+        let t = Task {
+            id: 0,
+            origin: 0,
+            model: DnnModel::Vgg19,
+            scale: 2.0,
+            arrival_slot: 0,
+        };
+        let total: f64 = t.layer_workloads().iter().sum();
+        assert!((total - t.total_mflops()).abs() < 1e-6);
+        assert!((t.total_mflops() / DnnModel::Vgg19.profile().total_mflops() - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn decision_sats_deterministic_and_sized() {
+        let a = decision_satellites(100, 0.2, 7);
+        let b = decision_satellites(100, 0.2, 7);
+        assert_eq!(a, b);
+        assert_eq!(a.len(), 20);
+        for &s in &a {
+            assert!(s < 100);
+        }
+        // different seed, different phase
+        let c = decision_satellites(100, 0.2, 8);
+        assert_eq!(c.len(), 20);
+    }
+
+    #[test]
+    fn decision_sats_at_least_one() {
+        assert_eq!(decision_satellites(9, 0.0, 1).len(), 1);
+        assert_eq!(decision_satellites(9, 1.0, 1).len(), 9);
+    }
+}

@@ -1,0 +1,243 @@
+//! Constellation topology substrate (§III-A, §V-A).
+//!
+//! The paper's network is an N×N Walker-style grid: N orbits, N satellites
+//! per orbit, evenly spaced. "The neighbors of each satellite are the
+//! adjacent four satellites that can directly communicate" — i.e. a 2-D
+//! torus (both the in-orbit ring and the inter-plane ring wrap).
+//! Distances are Manhattan hop counts on that torus (Eq. 7, 11c).
+
+/// Satellite identifier: a flat index into the N×N grid.
+pub type SatId = usize;
+
+/// An N×N toroidal constellation grid.
+#[derive(Clone, Debug)]
+pub struct Torus {
+    n: usize,
+}
+
+impl Torus {
+    /// Create an N-orbit × N-satellites-per-orbit grid. Panics if `n < 2`.
+    pub fn new(n: usize) -> Torus {
+        assert!(n >= 2, "constellation needs n >= 2 (got {n})");
+        Torus { n }
+    }
+
+    /// Grid edge length N.
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Total satellites N².
+    pub fn len(&self) -> usize {
+        self.n * self.n
+    }
+
+    pub fn is_empty(&self) -> bool {
+        false
+    }
+
+    /// (orbit, index-in-orbit) of a satellite.
+    #[inline]
+    pub fn coords(&self, s: SatId) -> (usize, usize) {
+        debug_assert!(s < self.len());
+        (s / self.n, s % self.n)
+    }
+
+    /// Flat id from (orbit, index-in-orbit), with wraparound.
+    #[inline]
+    pub fn id(&self, orbit: isize, idx: isize) -> SatId {
+        let n = self.n as isize;
+        let o = orbit.rem_euclid(n) as usize;
+        let i = idx.rem_euclid(n) as usize;
+        o * self.n + i
+    }
+
+    /// Ring distance along one axis of the torus.
+    #[inline]
+    fn ring_dist(&self, a: usize, b: usize) -> usize {
+        let d = a.abs_diff(b);
+        d.min(self.n - d)
+    }
+
+    /// Manhattan hop distance `MH(i, j)` on the torus (Eq. 7).
+    #[inline]
+    pub fn manhattan(&self, a: SatId, b: SatId) -> usize {
+        let (ao, ai) = self.coords(a);
+        let (bo, bi) = self.coords(b);
+        self.ring_dist(ao, bo) + self.ring_dist(ai, bi)
+    }
+
+    /// The four ISL neighbours (up/down in orbit, left/right across planes).
+    pub fn neighbors(&self, s: SatId) -> [SatId; 4] {
+        let (o, i) = self.coords(s);
+        let (o, i) = (o as isize, i as isize);
+        [
+            self.id(o - 1, i),
+            self.id(o + 1, i),
+            self.id(o, i - 1),
+            self.id(o, i + 1),
+        ]
+    }
+
+    /// Decision space `A_x` (constraint 11c): all satellites within
+    /// Manhattan distance `d_max` of `x`, **including** `x` itself
+    /// (a decision satellite may keep a segment local).
+    pub fn decision_space(&self, x: SatId, d_max: usize) -> Vec<SatId> {
+        let mut out = Vec::new();
+        let (xo, xi) = self.coords(x);
+        let (xo, xi) = (xo as isize, xi as isize);
+        let d = d_max as isize;
+        for dor in -d..=d {
+            let rem = d - dor.abs();
+            for din in -rem..=rem {
+                let id = self.id(xo + dor, xi + din);
+                if !out.contains(&id) {
+                    out.push(id);
+                }
+            }
+        }
+        out.sort_unstable();
+        out
+    }
+
+    /// Number of distinct satellites within distance `d_max` on an infinite
+    /// grid: `2d² + 2d + 1` (the torus may have fewer when N is small).
+    pub fn ball_size_upper(d_max: usize) -> usize {
+        2 * d_max * d_max + 2 * d_max + 1
+    }
+
+    /// One shortest path from `a` to `b` (orbit axis first, then in-orbit),
+    /// as the sequence of intermediate hops — used by the coordinator to
+    /// route intermediate activations over ISLs.
+    pub fn shortest_path(&self, a: SatId, b: SatId) -> Vec<SatId> {
+        let mut path = Vec::with_capacity(self.manhattan(a, b));
+        let (mut o, mut i) = self.coords(a);
+        let (bo, bi) = self.coords(b);
+        let n = self.n;
+        let step_towards = |from: usize, to: usize| -> isize {
+            if from == to {
+                return 0;
+            }
+            let fwd = (to + n - from) % n; // steps going +1
+            let bwd = (from + n - to) % n; // steps going -1
+            if fwd <= bwd {
+                1
+            } else {
+                -1
+            }
+        };
+        while o != bo {
+            o = (o as isize + step_towards(o, bo)).rem_euclid(n as isize) as usize;
+            path.push(o * n + i);
+        }
+        while i != bi {
+            i = (i as isize + step_towards(i, bi)).rem_euclid(n as isize) as usize;
+            path.push(o * n + i);
+        }
+        path
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn coords_roundtrip() {
+        let t = Torus::new(7);
+        for s in 0..t.len() {
+            let (o, i) = t.coords(s);
+            assert_eq!(t.id(o as isize, i as isize), s);
+        }
+    }
+
+    #[test]
+    fn manhattan_symmetric_and_triangle() {
+        let t = Torus::new(6);
+        for a in 0..t.len() {
+            for b in 0..t.len() {
+                assert_eq!(t.manhattan(a, b), t.manhattan(b, a));
+                assert_eq!(t.manhattan(a, b) == 0, a == b);
+                for c in [0, 7, 20] {
+                    assert!(t.manhattan(a, b) <= t.manhattan(a, c) + t.manhattan(c, b));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn torus_wraps() {
+        let t = Torus::new(10);
+        // (0,0) and (9,0) are adjacent across the seam
+        assert_eq!(t.manhattan(t.id(0, 0), t.id(9, 0)), 1);
+        assert_eq!(t.manhattan(t.id(0, 0), t.id(5, 5)), 10);
+        assert_eq!(t.manhattan(t.id(0, 1), t.id(0, 9)), 2);
+    }
+
+    #[test]
+    fn four_distinct_neighbors_at_distance_one() {
+        let t = Torus::new(5);
+        for s in 0..t.len() {
+            let nb = t.neighbors(s);
+            for x in nb {
+                assert_eq!(t.manhattan(s, x), 1);
+            }
+            let mut u = nb.to_vec();
+            u.sort_unstable();
+            u.dedup();
+            assert_eq!(u.len(), 4, "sat {s} has dup neighbors {nb:?}");
+        }
+    }
+
+    #[test]
+    fn decision_space_ball() {
+        let t = Torus::new(10);
+        let ds = t.decision_space(0, 2);
+        assert_eq!(ds.len(), Torus::ball_size_upper(2)); // 13 on a big torus
+        assert!(ds.contains(&0));
+        for &s in &ds {
+            assert!(t.manhattan(0, s) <= 2);
+        }
+        // everything not in the ball is farther than 2
+        for s in 0..t.len() {
+            if !ds.contains(&s) {
+                assert!(t.manhattan(0, s) > 2);
+            }
+        }
+    }
+
+    #[test]
+    fn decision_space_small_torus_dedups() {
+        let t = Torus::new(4);
+        let ds = t.decision_space(5, 3);
+        // ball of radius 3 covers nearly the whole 16-sat torus, without dups
+        let mut u = ds.clone();
+        u.dedup();
+        assert_eq!(u, ds);
+        assert!(ds.len() <= t.len());
+    }
+
+    #[test]
+    fn shortest_path_length_matches_manhattan() {
+        let t = Torus::new(8);
+        for (a, b) in [(0, 0), (0, 63), (3, 42), (10, 17), (7, 56)] {
+            let p = t.shortest_path(a, b);
+            assert_eq!(p.len(), t.manhattan(a, b), "path {a}->{b}: {p:?}");
+            // consecutive hops are ISL neighbours
+            let mut prev = a;
+            for &h in &p {
+                assert_eq!(t.manhattan(prev, h), 1);
+                prev = h;
+            }
+            if a != b {
+                assert_eq!(prev, b);
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "n >= 2")]
+    fn rejects_tiny_grid() {
+        Torus::new(1);
+    }
+}

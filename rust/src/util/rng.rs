@@ -1,0 +1,308 @@
+//! Deterministic RNG substrate (no `rand` crate on this offline image).
+//!
+//! PCG64 (O'Neill's PCG-XSL-RR 128/64) with explicit seeding plus the
+//! samplers the simulator needs: uniform ints/floats, Bernoulli,
+//! Box–Muller normal, exponential, and Poisson (Knuth for small λ, the
+//! PTRS transformed-rejection sampler for large λ — §V: task incidence is
+//! Poisson(λ) with λ up to 70).
+
+/// Permuted congruential generator, 128-bit state / 64-bit output.
+///
+/// Deterministic across platforms; every simulation object derives its own
+/// stream via [`Pcg64::split`] so experiment runs are reproducible
+/// regardless of scheme-internal draw counts.
+#[derive(Clone, Debug)]
+pub struct Pcg64 {
+    state: u128,
+    inc: u128,
+}
+
+const PCG_MULT: u128 = 0x2360_ed05_1fc6_5da4_4385_df64_9fcc_f645;
+
+impl Pcg64 {
+    /// Create a generator from a seed and stream id.
+    pub fn new(seed: u64, stream: u64) -> Self {
+        let mut rng = Pcg64 {
+            state: 0,
+            inc: ((stream as u128) << 1) | 1,
+        };
+        rng.state = rng.state.wrapping_mul(PCG_MULT).wrapping_add(rng.inc);
+        rng.state = rng.state.wrapping_add(seed as u128);
+        rng.state = rng.state.wrapping_mul(PCG_MULT).wrapping_add(rng.inc);
+        rng.next_u64();
+        rng
+    }
+
+    /// Convenience: stream 0.
+    pub fn seed_from_u64(seed: u64) -> Self {
+        Self::new(seed, 0)
+    }
+
+    /// Derive an independent child stream (used per-satellite / per-scheme).
+    pub fn split(&mut self, stream: u64) -> Self {
+        Self::new(self.next_u64(), stream.wrapping_mul(0x9e37_79b9_7f4a_7c15) | 1)
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_mul(PCG_MULT).wrapping_add(self.inc);
+        let rot = (self.state >> 122) as u32;
+        let xsl = ((self.state >> 64) as u64) ^ (self.state as u64);
+        xsl.rotate_right(rot)
+    }
+
+    /// Uniform in `[0, n)` via Lemire's multiply-shift with rejection.
+    #[inline]
+    pub fn gen_range(&mut self, n: u64) -> u64 {
+        debug_assert!(n > 0);
+        let mut m = (self.next_u64() as u128).wrapping_mul(n as u128);
+        let mut lo = m as u64;
+        if lo < n {
+            let t = n.wrapping_neg() % n;
+            while lo < t {
+                m = (self.next_u64() as u128).wrapping_mul(n as u128);
+                lo = m as u64;
+            }
+        }
+        (m >> 64) as u64
+    }
+
+    /// Uniform usize in `[lo, hi)`.
+    #[inline]
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        debug_assert!(hi > lo);
+        lo + self.gen_range((hi - lo) as u64) as usize
+    }
+
+    /// Uniform f64 in `[0, 1)` with 53-bit resolution.
+    #[inline]
+    pub fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform f64 in `[lo, hi)`.
+    #[inline]
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.f64()
+    }
+
+    /// Bernoulli(p).
+    #[inline]
+    pub fn bool(&mut self, p: f64) -> bool {
+        self.f64() < p
+    }
+
+    /// Pick a uniformly random element of a non-empty slice.
+    #[inline]
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.usize_in(0, xs.len())]
+    }
+
+    /// Fisher–Yates in-place shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.usize_in(0, i + 1);
+            xs.swap(i, j);
+        }
+    }
+
+    /// Standard normal via Box–Muller (one value per call; no caching to
+    /// keep the stream position deterministic per draw).
+    pub fn normal(&mut self) -> f64 {
+        let u1 = (1.0 - self.f64()).max(f64::MIN_POSITIVE); // (0, 1]
+        let u2 = self.f64();
+        (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos()
+    }
+
+    /// Normal(mu, sigma).
+    #[inline]
+    pub fn normal_with(&mut self, mu: f64, sigma: f64) -> f64 {
+        mu + sigma * self.normal()
+    }
+
+    /// Exponential with rate `lambda`.
+    #[inline]
+    pub fn exp(&mut self, lambda: f64) -> f64 {
+        -(1.0 - self.f64()).ln() / lambda
+    }
+
+    /// Poisson(λ): Knuth's product method for λ < 30, PTRS
+    /// (Hörmann's transformed rejection) above — O(1) for the paper's
+    /// λ ∈ [4, 70] sweep.
+    pub fn poisson(&mut self, lambda: f64) -> u64 {
+        assert!(lambda >= 0.0, "poisson: negative lambda");
+        if lambda == 0.0 {
+            return 0;
+        }
+        if lambda < 30.0 {
+            let l = (-lambda).exp();
+            let mut k = 0u64;
+            let mut p = 1.0;
+            loop {
+                p *= self.f64();
+                if p <= l {
+                    return k;
+                }
+                k += 1;
+            }
+        }
+        // PTRS, Hörmann (1993).
+        let slam = lambda.sqrt();
+        let loglam = lambda.ln();
+        let b = 0.931 + 2.53 * slam;
+        let a = -0.059 + 0.02483 * b;
+        let inv_alpha = 1.1239 + 1.1328 / (b - 3.4);
+        let v_r = 0.9277 - 3.6224 / (b - 2.0);
+        loop {
+            let u = self.f64() - 0.5;
+            let v = self.f64();
+            let us = 0.5 - u.abs();
+            let k = ((2.0 * a / us + b) * u + lambda + 0.43).floor();
+            if us >= 0.07 && v <= v_r {
+                return k as u64;
+            }
+            if k < 0.0 || (us < 0.013 && v > us) {
+                continue;
+            }
+            let lhs = (v * inv_alpha / (a / (us * us) + b)).ln();
+            let rhs = -lambda + k * loglam - ln_gamma(k + 1.0);
+            if lhs <= rhs {
+                return k as u64;
+            }
+        }
+    }
+}
+
+/// Lanczos ln Γ(x) — needed by the PTRS Poisson sampler.
+pub fn ln_gamma(x: f64) -> f64 {
+    const G: [f64; 8] = [
+        676.520_368_121_885_1,
+        -1_259.139_216_722_402_8,
+        771.323_428_777_653_1,
+        -176.615_029_162_140_6,
+        12.507_343_278_686_905,
+        -0.138_571_095_265_720_12,
+        9.984_369_578_019_572e-6,
+        1.505_632_735_149_311_6e-7,
+    ];
+    if x < 0.5 {
+        // reflection
+        return (std::f64::consts::PI / (std::f64::consts::PI * x).sin()).ln()
+            - ln_gamma(1.0 - x);
+    }
+    let x = x - 1.0;
+    let mut a = 0.999_999_999_999_809_9;
+    let t = x + 7.5;
+    for (i, &g) in G.iter().enumerate() {
+        a += g / (x + (i as f64) + 1.0);
+    }
+    0.5 * (2.0 * std::f64::consts::PI).ln() + (x + 0.5) * t.ln() - t + a.ln()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_across_instances() {
+        let mut a = Pcg64::new(42, 7);
+        let mut b = Pcg64::new(42, 7);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn streams_differ() {
+        let mut a = Pcg64::new(42, 1);
+        let mut b = Pcg64::new(42, 2);
+        assert_ne!(
+            (0..8).map(|_| a.next_u64()).collect::<Vec<_>>(),
+            (0..8).map(|_| b.next_u64()).collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn gen_range_bounds() {
+        let mut r = Pcg64::seed_from_u64(1);
+        for n in [1u64, 2, 3, 10, 1000] {
+            for _ in 0..200 {
+                assert!(r.gen_range(n) < n);
+            }
+        }
+    }
+
+    #[test]
+    fn f64_in_unit_interval() {
+        let mut r = Pcg64::seed_from_u64(2);
+        for _ in 0..1000 {
+            let x = r.f64();
+            assert!((0.0..1.0).contains(&x));
+        }
+    }
+
+    #[test]
+    fn poisson_mean_small_lambda() {
+        let mut r = Pcg64::seed_from_u64(3);
+        let lam = 4.0;
+        let n = 20_000;
+        let mean = (0..n).map(|_| r.poisson(lam) as f64).sum::<f64>() / n as f64;
+        assert!((mean - lam).abs() < 0.1, "mean={mean}");
+    }
+
+    #[test]
+    fn poisson_mean_large_lambda() {
+        let mut r = Pcg64::seed_from_u64(4);
+        let lam = 70.0;
+        let n = 20_000;
+        let xs: Vec<f64> = (0..n).map(|_| r.poisson(lam) as f64).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / n as f64;
+        assert!((mean - lam).abs() < 0.5, "mean={mean}");
+        assert!((var - lam).abs() < 3.5, "var={var}");
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Pcg64::seed_from_u64(5);
+        let n = 40_000;
+        let xs: Vec<f64> = (0..n).map(|_| r.normal()).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / n as f64;
+        assert!(mean.abs() < 0.02, "mean={mean}");
+        assert!((var - 1.0).abs() < 0.05, "var={var}");
+    }
+
+    #[test]
+    fn ln_gamma_matches_factorials() {
+        // ln Γ(n+1) = ln n!
+        let mut fact = 1.0f64;
+        for n in 1..15 {
+            fact *= n as f64;
+            assert!((ln_gamma(n as f64 + 1.0) - fact.ln()).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Pcg64::seed_from_u64(6);
+        let mut xs: Vec<u32> = (0..50).collect();
+        r.shuffle(&mut xs);
+        let mut sorted = xs.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..50).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn choose_uniformish() {
+        let mut r = Pcg64::seed_from_u64(7);
+        let xs = [0usize, 1, 2, 3];
+        let mut counts = [0usize; 4];
+        for _ in 0..8000 {
+            counts[*r.choose(&xs)] += 1;
+        }
+        for c in counts {
+            assert!((1700..2300).contains(&c), "counts={counts:?}");
+        }
+    }
+}

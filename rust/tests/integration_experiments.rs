@@ -1,0 +1,68 @@
+//! Integration over the experiment harness: every figure's generator
+//! produces complete, structurally valid row sets (quick settings).
+
+use satkit::dnn::DnnModel;
+use satkit::experiments as exp;
+use satkit::offload::SchemeKind;
+
+fn quick() -> exp::SweepOpts {
+    exp::SweepOpts {
+        slots: 4,
+        seed: 11,
+        decision_fraction: 0.15,
+        repeats: 1,
+    }
+}
+
+#[test]
+fn fig2_rows_complete_grid() {
+    let rows = exp::lambda_sweep(DnnModel::Resnet101, &[4.0, 25.0], &quick());
+    assert_eq!(rows.len(), 8);
+    for s in SchemeKind::all() {
+        assert_eq!(rows.iter().filter(|r| r.scheme == s).count(), 2);
+    }
+    for r in &rows {
+        assert!(r.report.total_tasks > 0);
+        assert!(r.report.completion_rate() <= 1.0);
+    }
+}
+
+#[test]
+fn fig3_rows_complete_grid() {
+    let rows = exp::lambda_sweep(DnnModel::Vgg19, &[10.0], &quick());
+    assert_eq!(rows.len(), 4);
+}
+
+#[test]
+fn scale_rows_cover_all_ns() {
+    let rows = exp::scale(&[4, 6], &quick());
+    assert_eq!(rows.len(), 8);
+    let xs: Vec<f64> = rows.iter().map(|r| r.x).collect();
+    assert!(xs.contains(&4.0) && xs.contains(&6.0));
+}
+
+#[test]
+fn render_and_json_roundtrip() {
+    let rows = exp::lambda_sweep(DnnModel::Vgg19, &[10.0], &quick());
+    let table = exp::render_panels("t", &rows, "lambda");
+    assert!(table.contains("SCC") && table.contains("DQN"));
+    let json = exp::rows_to_json(&rows).to_string();
+    let parsed = satkit::util::json::Json::parse(&json).unwrap();
+    let arr = parsed.as_arr().unwrap();
+    assert_eq!(arr.len(), 4);
+    for row in arr {
+        assert!(row.get("scheme").is_some());
+        assert!(row.get("completion_rate").unwrap().as_f64().unwrap() <= 1.0);
+    }
+}
+
+#[test]
+fn ablations_produce_rows() {
+    let split = exp::ablation_split(DnnModel::Vgg19, &[15.0], &quick());
+    assert_eq!(split.len(), 1);
+    let ga = exp::ablation_ga(&[1, 5], &quick());
+    assert_eq!(ga.len(), 2);
+    // more GA iterations should not make the objective worse
+    // (weak check, quick settings are noisy)
+    assert!(ga[1].1.completion_rate() >= ga[0].1.completion_rate() - 0.15);
+}

@@ -1,0 +1,178 @@
+//! Integration tests over the PJRT runtime: load every AOT artifact,
+//! execute it from Rust, and verify numerics against the python-side
+//! probe checksums recorded in the meta sidecars (cross-language parity:
+//! the SAME graph, lowered once, must produce the same numbers through
+//! jax and through PJRT-from-Rust).
+//!
+//! Requires `make artifacts`. Tests are skipped (with a notice) if the
+//! artifact directory is missing so `cargo test` works pre-build.
+
+use std::path::{Path, PathBuf};
+
+use satkit::runtime::{default_artifact_dir, Engine, ExecPool};
+
+fn artifact_dir() -> Option<PathBuf> {
+    let dir = default_artifact_dir();
+    if dir.join("qnet.hlo.txt").exists() {
+        Some(dir)
+    } else {
+        // tests run from the crate root; also probe ../artifacts
+        let alt = Path::new("artifacts").to_path_buf();
+        if alt.join("qnet.hlo.txt").exists() {
+            Some(alt)
+        } else {
+            eprintln!("SKIP: artifacts/ not built (run `make artifacts`)");
+            None
+        }
+    }
+}
+
+/// The deterministic probe of python/compile/aot.py: (i % 13) * 0.1.
+fn probe(n: usize) -> Vec<f32> {
+    (0..n).map(|i| (i % 13) as f32 * 0.1).collect()
+}
+
+#[test]
+fn loads_all_four_artifacts() {
+    let Some(dir) = artifact_dir() else { return };
+    let mut e = Engine::cpu().unwrap();
+    let names = e.load_dir(&dir).unwrap();
+    assert_eq!(
+        names,
+        vec!["classifier", "qnet", "resnet_slice", "vgg_slice"]
+    );
+    assert_eq!(e.platform(), "cpu");
+}
+
+#[test]
+fn probe_checksums_match_python() {
+    let Some(dir) = artifact_dir() else { return };
+    let mut e = Engine::cpu().unwrap();
+    let names = e.load_dir(&dir).unwrap();
+    for name in names {
+        let art = e.get(&name).unwrap();
+        // read the python-side fixture
+        let meta_text =
+            std::fs::read_to_string(dir.join(format!("{name}.meta.json"))).unwrap();
+        let j = satkit::util::json::Json::parse(&meta_text).unwrap();
+        let want: Vec<f64> = j
+            .get("probe_checksums")
+            .and_then(|c| c.as_arr())
+            .expect("probe_checksums in meta (re-run make artifacts)")
+            .iter()
+            .map(|x| x.as_f64().unwrap())
+            .collect();
+        let inputs: Vec<Vec<f32>> = art
+            .meta
+            .inputs
+            .iter()
+            .map(|s| probe(s.num_elements()))
+            .collect();
+        let out = art.run_f32(&inputs).unwrap();
+        assert_eq!(out.len(), want.len(), "{name}: output arity");
+        for (o, w) in out.iter().zip(&want) {
+            let got: f64 = o.iter().map(|x| *x as f64).sum();
+            let tol = 1e-3 * w.abs().max(1.0);
+            assert!(
+                (got - w).abs() < tol,
+                "{name}: rust checksum {got} != python {w}"
+            );
+        }
+    }
+}
+
+#[test]
+fn output_shapes_match_meta() {
+    let Some(dir) = artifact_dir() else { return };
+    let mut e = Engine::cpu().unwrap();
+    for name in e.load_dir(&dir).unwrap() {
+        let art = e.get(&name).unwrap();
+        let inputs: Vec<Vec<f32>> = art
+            .meta
+            .inputs
+            .iter()
+            .map(|s| probe(s.num_elements()))
+            .collect();
+        let out = art.run_f32(&inputs).unwrap();
+        for (o, spec) in out.iter().zip(&art.meta.outputs) {
+            assert_eq!(o.len(), spec.num_elements(), "{name} output shape");
+        }
+    }
+}
+
+#[test]
+fn rejects_wrong_input_shapes() {
+    let Some(dir) = artifact_dir() else { return };
+    let mut e = Engine::cpu().unwrap();
+    e.load(&dir, "qnet").unwrap();
+    // wrong element count
+    assert!(e.run_f32("qnet", &[vec![0.0; 7]]).is_err());
+    // wrong arity
+    assert!(e.run_f32("qnet", &[vec![0.0; 256], vec![0.0; 3]]).is_err());
+    // unknown artifact
+    assert!(e.run_f32("nope", &[vec![]]).is_err());
+}
+
+#[test]
+fn qnet_is_deterministic_across_engines() {
+    let Some(dir) = artifact_dir() else { return };
+    let run = |dir: &Path| {
+        let mut e = Engine::cpu().unwrap();
+        e.load(dir, "qnet").unwrap();
+        e.run_f32("qnet", &[probe(256)]).unwrap()
+    };
+    assert_eq!(run(&dir), run(&dir));
+}
+
+#[test]
+fn exec_pool_parallel_executions_agree() {
+    let Some(dir) = artifact_dir() else { return };
+    let pool = ExecPool::new(&dir, 3).unwrap();
+    assert_eq!(pool.size(), 3);
+    assert!(pool.artifact_names().contains(&"vgg_slice".to_string()));
+    let input = probe(56 * 56 * 64);
+    // fire 9 concurrent executions, all must agree
+    let rxs: Vec<_> = (0..9)
+        .map(|_| pool.submit("vgg_slice", vec![input.clone()]))
+        .collect();
+    let results: Vec<Vec<Vec<f32>>> =
+        rxs.into_iter().map(|rx| rx.recv().unwrap().unwrap()).collect();
+    for r in &results[1..] {
+        assert_eq!(r, &results[0]);
+    }
+}
+
+#[test]
+fn coordinator_end_to_end_smoke() {
+    let Some(dir) = artifact_dir() else { return };
+    use satkit::config::SimConfig;
+    use satkit::coordinator::{Coordinator, InferenceRequest};
+    use satkit::dnn::DnnModel;
+    use satkit::offload::SchemeKind;
+
+    let cfg = SimConfig {
+        n: 4,
+        ..SimConfig::default()
+    };
+    let mut coord = Coordinator::new(&cfg, &dir, 2, SchemeKind::Scc).unwrap();
+    let resp = coord
+        .serve(&InferenceRequest {
+            id: 1,
+            origin: 5,
+            model: DnnModel::Vgg19,
+        })
+        .unwrap();
+    assert!(resp.dropped_at.is_none());
+    assert_eq!(resp.sequence.len(), cfg.effective_l());
+    assert!(resp.output_checksum.abs() > 0.0, "real compute must flow");
+    assert!(resp.wall_ms > 0.0);
+    assert!(resp.modeled_ms > 0.0);
+    coord.tick();
+    assert_eq!(
+        coord
+            .stats
+            .segments_executed
+            .load(std::sync::atomic::Ordering::Relaxed),
+        cfg.effective_l() as u64
+    );
+}

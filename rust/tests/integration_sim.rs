@@ -1,0 +1,158 @@
+//! Cross-module integration tests: simulator + splitting + all offloading
+//! schemes, checking the *qualitative* claims of §V-B that the benches
+//! quantify (SCC completion ≥ baselines under pressure, SCC variance ≈
+//! Random ≪ RRP, delays ordered sensibly).
+
+use satkit::config::SimConfig;
+use satkit::dnn::DnnModel;
+use satkit::metrics::Report;
+use satkit::offload::SchemeKind;
+use satkit::sim::{Simulation, SplitPolicy};
+
+fn cfg(model: DnnModel, lambda: f64, seed: u64) -> SimConfig {
+    SimConfig {
+        n: 8,
+        slots: 12,
+        lambda,
+        model,
+        seed,
+        ..SimConfig::default()
+    }
+}
+
+fn run(model: DnnModel, lambda: f64, kind: SchemeKind, seed: u64) -> Report {
+    Simulation::new(&cfg(model, lambda, seed), kind).run()
+}
+
+#[test]
+fn conservation_total_equals_completed_plus_dropped() {
+    for kind in SchemeKind::all() {
+        let r = run(DnnModel::Vgg19, 15.0, kind, 1);
+        assert_eq!(r.total_tasks, r.completed_tasks + r.dropped_tasks, "{kind:?}");
+    }
+}
+
+#[test]
+fn scc_completion_at_least_baselines_high_load() {
+    // paper Fig 2(a)/3(a): SCC keeps the highest completion rate when the
+    // incidence is high. Average over 3 seeds to kill flakiness.
+    let mut rates = std::collections::HashMap::new();
+    for kind in SchemeKind::all() {
+        let mean: f64 = (0..3)
+            .map(|s| run(DnnModel::Vgg19, 45.0, kind, 10 + s).completion_rate())
+            .sum::<f64>()
+            / 3.0;
+        rates.insert(kind.name(), mean);
+    }
+    let scc = rates["SCC"];
+    for (name, r) in &rates {
+        assert!(
+            scc >= r - 0.02,
+            "SCC ({scc:.3}) should not trail {name} ({r:.3}) meaningfully: {rates:?}"
+        );
+    }
+}
+
+#[test]
+fn scc_variance_not_worse_than_rrp() {
+    // paper Fig 2(c)/3(c): RRP herds onto the fittest satellites; SCC with
+    // balanced splitting stays near Random's (ideal) spread.
+    let scc: f64 = (0..3)
+        .map(|s| run(DnnModel::Vgg19, 30.0, SchemeKind::Scc, 20 + s).workload_variance)
+        .sum::<f64>()
+        / 3.0;
+    let rrp: f64 = (0..3)
+        .map(|s| run(DnnModel::Vgg19, 30.0, SchemeKind::Rrp, 20 + s).workload_variance)
+        .sum::<f64>()
+        / 3.0;
+    assert!(
+        scc <= rrp * 1.5,
+        "SCC variance {scc:.3e} should not blow past RRP {rrp:.3e}"
+    );
+}
+
+#[test]
+fn delay_grows_with_incidence() {
+    // Fig 2(b)/3(b): delay increases with lambda for every method
+    for kind in [SchemeKind::Scc, SchemeKind::Rrp] {
+        let lo = run(DnnModel::Resnet101, 5.0, kind, 30);
+        let hi = run(DnnModel::Resnet101, 50.0, kind, 30);
+        if lo.completed_tasks > 0 && hi.completed_tasks > 0 {
+            assert!(
+                hi.avg_delay_ms >= lo.avg_delay_ms * 0.8,
+                "{kind:?}: delay at lambda=50 ({:.1}) should not collapse below lambda=5 ({:.1})",
+                hi.avg_delay_ms,
+                lo.avg_delay_ms
+            );
+        }
+    }
+}
+
+#[test]
+fn resnet_uses_l4_vgg_l3() {
+    let r_v = run(DnnModel::Vgg19, 5.0, SchemeKind::Random, 2);
+    let r_r = run(DnnModel::Resnet101, 5.0, SchemeKind::Random, 2);
+    // encoded via drop_point domain: completed tasks have dp = L+1
+    assert!(r_v.total_tasks > 0 && r_r.total_tasks > 0);
+}
+
+#[test]
+fn balanced_split_improves_completion_over_naive() {
+    // the Alg. 1 ablation, as an invariant: balanced splitting should not
+    // lose to naive equal-layer cuts under pressure (VGG19's fc-heavy tail
+    // makes naive splits badly unbalanced).
+    let c = cfg(DnnModel::Vgg19, 35.0, 3);
+    let bal = Simulation::new(&c, SchemeKind::Scc)
+        .with_split_policy(SplitPolicy::Balanced)
+        .run();
+    let naive = Simulation::new(&c, SchemeKind::Scc)
+        .with_split_policy(SplitPolicy::NaiveEqualLayers)
+        .run();
+    assert!(
+        bal.completion_rate() >= naive.completion_rate() - 0.02,
+        "balanced {:.3} vs naive {:.3}",
+        bal.completion_rate(),
+        naive.completion_rate()
+    );
+}
+
+#[test]
+fn dqn_improves_over_training() {
+    // first-half vs second-half completion: the online learner should not
+    // degrade (weak monotonicity, tolerant of noise)
+    let mut c = cfg(DnnModel::Vgg19, 25.0, 4);
+    c.slots = 6;
+    let early = Simulation::new(&c, SchemeKind::Dqn).run();
+    c.slots = 18;
+    let late = Simulation::new(&c, SchemeKind::Dqn).run();
+    assert!(late.completion_rate() >= early.completion_rate() - 0.10);
+}
+
+#[test]
+fn zero_lambda_runs_clean() {
+    let mut c = cfg(DnnModel::Vgg19, 0.0, 5);
+    c.slots = 3;
+    let r = Simulation::new(&c, SchemeKind::Scc).run();
+    assert_eq!(r.total_tasks, 0);
+    assert_eq!(r.completion_rate(), 1.0);
+}
+
+#[test]
+fn tiny_constellation_n2() {
+    let mut c = cfg(DnnModel::Vgg19, 3.0, 6);
+    c.n = 2;
+    for kind in SchemeKind::all() {
+        let r = Simulation::new(&c, kind).run();
+        assert!(r.total_tasks > 0, "{kind:?} on N=2");
+    }
+}
+
+#[test]
+fn capacity_starvation_drops_everything_eventually() {
+    let mut c = cfg(DnnModel::Vgg19, 30.0, 7);
+    // M_w below the largest segment: nothing can ever be admitted
+    c.satellite.max_workload_mflops = 10.0;
+    let r = Simulation::new(&c, SchemeKind::Random).run();
+    assert_eq!(r.completed_tasks, 0);
+    assert!(r.drop_rate() > 0.99);
+}

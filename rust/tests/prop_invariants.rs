@@ -1,0 +1,425 @@
+//! Property-based tests (via the util::quickcheck substrate) on the
+//! invariants of the core algorithms: Alg. 1 splitting, Eq. 12 deficit,
+//! the GA reproduction operator, topology metrics, and Eq. 4 admission.
+
+use satkit::config::GaConfig;
+use satkit::offload::{ga::GaScheme, make_scheme, OffloadContext, OffloadScheme, SchemeKind};
+use satkit::satellite::Satellite;
+use satkit::splitting::{balanced_split, naive_equal_layers, split_with_limit};
+use satkit::topology::Torus;
+use satkit::util::quickcheck::{check, check_no_shrink, default_cases, shrink_f64_vec};
+use satkit::util::rng::Pcg64;
+
+fn gen_workloads(r: &mut Pcg64) -> Vec<f64> {
+    let n = r.usize_in(1, 40);
+    (0..n).map(|_| r.f64_in(0.0, 500.0)).collect()
+}
+
+// ---------------------------------------------------------- Algorithm 1
+
+#[test]
+fn prop_split_is_valid_partition() {
+    check(
+        "split-valid-partition",
+        default_cases(),
+        gen_workloads,
+        |w| {
+            let l = 1 + (w.len() - 1) % 7.min(w.len());
+            let res = balanced_split(w, l, 0.5);
+            if res.blocks.len() != l {
+                return Err(format!("{} blocks != L={l}", res.blocks.len()));
+            }
+            let mut pos = 0usize;
+            for b in &res.blocks {
+                if !b.is_empty() {
+                    if b.start != pos {
+                        return Err(format!("gap at {pos}"));
+                    }
+                    pos = b.end;
+                }
+            }
+            if pos != w.len() {
+                return Err("layers not covered".into());
+            }
+            let total: f64 = w.iter().sum();
+            let got: f64 = res.blocks.iter().map(|b| b.workload).sum();
+            if (total - got).abs() > 1e-6 * total.max(1.0) {
+                return Err(format!("workload leak: {total} vs {got}"));
+            }
+            Ok(())
+        },
+        shrink_f64_vec,
+    );
+}
+
+#[test]
+fn prop_split_minmax_never_worse_than_naive() {
+    check(
+        "split-beats-naive",
+        default_cases(),
+        gen_workloads,
+        |w| {
+            let l = 1 + (w.len() * 3) % 5.min(w.len());
+            let bal = balanced_split(w, l, 1e-6).max_block_workload();
+            let naive = naive_equal_layers(w, l).max_block_workload();
+            if bal <= naive + 1e-6 {
+                Ok(())
+            } else {
+                Err(format!("balanced {bal} > naive {naive} (L={l})"))
+            }
+        },
+        shrink_f64_vec,
+    );
+}
+
+#[test]
+fn prop_split_lower_bound_max_layer() {
+    // no partition can have max block < max layer
+    check(
+        "split-lower-bound",
+        default_cases(),
+        gen_workloads,
+        |w| {
+            let l = 1 + w.len() % 4.min(w.len());
+            let res = balanced_split(w, l, 1e-6);
+            let maxw = w.iter().cloned().fold(0.0, f64::max);
+            if res.max_block_workload() >= maxw - 1e-9 {
+                Ok(())
+            } else {
+                Err(format!(
+                    "max block {} below max layer {maxw}",
+                    res.max_block_workload()
+                ))
+            }
+        },
+        shrink_f64_vec,
+    );
+}
+
+#[test]
+fn prop_split_block_count_monotone_in_limit() {
+    check_no_shrink(
+        "split-monotone",
+        default_cases() / 2,
+        |r| {
+            let w = gen_workloads(r);
+            let a = r.f64_in(0.0, 1.0);
+            let b = r.f64_in(0.0, 1.0);
+            (w, a.min(b), a.max(b))
+        },
+        |(w, lo_frac, hi_frac)| {
+            let total: f64 = w.iter().sum();
+            let maxw = w.iter().cloned().fold(0.0, f64::max);
+            let lim_lo = maxw + lo_frac * (total - maxw);
+            let lim_hi = maxw + hi_frac * (total - maxw);
+            let n_lo = split_with_limit(w, lim_lo).len();
+            let n_hi = split_with_limit(w, lim_hi).len();
+            if n_hi <= n_lo {
+                Ok(())
+            } else {
+                Err(format!("limit {lim_lo}->{n_lo} blocks, {lim_hi}->{n_hi}"))
+            }
+        },
+    );
+}
+
+// ------------------------------------------------------------- topology
+
+#[test]
+fn prop_manhattan_is_a_metric() {
+    check_no_shrink(
+        "manhattan-metric",
+        default_cases(),
+        |r| {
+            let n = r.usize_in(2, 20);
+            let t = Torus::new(n);
+            let a = r.usize_in(0, t.len());
+            let b = r.usize_in(0, t.len());
+            let c = r.usize_in(0, t.len());
+            (n, a, b, c)
+        },
+        |&(n, a, b, c)| {
+            let t = Torus::new(n);
+            if t.manhattan(a, b) != t.manhattan(b, a) {
+                return Err("asymmetric".into());
+            }
+            if (t.manhattan(a, b) == 0) != (a == b) {
+                return Err("identity violated".into());
+            }
+            if t.manhattan(a, c) > t.manhattan(a, b) + t.manhattan(b, c) {
+                return Err("triangle violated".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_decision_space_sound_and_complete() {
+    check_no_shrink(
+        "decision-space",
+        default_cases(),
+        |r| {
+            let n = r.usize_in(2, 16);
+            let x = r.usize_in(0, n * n);
+            let d = r.usize_in(0, 5);
+            (n, x, d)
+        },
+        |&(n, x, d)| {
+            let t = Torus::new(n);
+            let ds = t.decision_space(x, d);
+            if !ds.contains(&x) {
+                return Err("origin missing".into());
+            }
+            for &s in &ds {
+                if t.manhattan(x, s) > d {
+                    return Err(format!("sat {s} outside ball"));
+                }
+            }
+            for s in 0..t.len() {
+                if t.manhattan(x, s) <= d && !ds.contains(&s) {
+                    return Err(format!("sat {s} inside ball but missing"));
+                }
+            }
+            let mut u = ds.clone();
+            u.dedup();
+            if u.len() != ds.len() {
+                return Err("duplicates".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_shortest_path_realizes_manhattan() {
+    check_no_shrink(
+        "shortest-path",
+        default_cases(),
+        |r| {
+            let n = r.usize_in(2, 16);
+            let t = Torus::new(n);
+            (n, r.usize_in(0, t.len()), r.usize_in(0, t.len()))
+        },
+        |&(n, a, b)| {
+            let t = Torus::new(n);
+            let p = t.shortest_path(a, b);
+            if p.len() != t.manhattan(a, b) {
+                return Err(format!("path len {} != MH {}", p.len(), t.manhattan(a, b)));
+            }
+            let mut prev = a;
+            for &h in &p {
+                if t.manhattan(prev, h) != 1 {
+                    return Err("non-adjacent hop".into());
+                }
+                prev = h;
+            }
+            Ok(())
+        },
+    );
+}
+
+// ----------------------------------------------------- schemes & deficit
+
+#[derive(Clone)]
+struct Instance {
+    n: usize,
+    loads: Vec<f64>,
+    segments: Vec<f64>,
+    origin: usize,
+    d_max: usize,
+}
+
+impl std::fmt::Debug for Instance {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "Instance(n={}, origin={}, d_max={}, segs={:?})",
+            self.n, self.origin, self.d_max, self.segments
+        )
+    }
+}
+
+fn gen_instance(r: &mut Pcg64) -> Instance {
+    let n = r.usize_in(3, 10);
+    let loads = (0..n * n).map(|_| r.f64_in(0.0, 14_000.0)).collect();
+    let l = r.usize_in(1, 6);
+    let segments = (0..l).map(|_| r.f64_in(0.0, 6_000.0)).collect();
+    Instance {
+        n,
+        loads,
+        segments,
+        origin: r.usize_in(0, n * n),
+        d_max: r.usize_in(1, 4),
+    }
+}
+
+fn build_sats(inst: &Instance) -> Vec<Satellite> {
+    inst.loads
+        .iter()
+        .enumerate()
+        .map(|(i, &q)| {
+            let mut s = Satellite::new(i, 3000.0, 15_000.0);
+            if q > 0.0 {
+                s.try_load(q.min(14_999.0));
+            }
+            s
+        })
+        .collect()
+}
+
+#[test]
+fn prop_all_schemes_emit_valid_chromosomes() {
+    check_no_shrink(
+        "schemes-valid-chromosomes",
+        default_cases() / 4,
+        gen_instance,
+        |inst| {
+            let torus = Torus::new(inst.n);
+            let sats = build_sats(inst);
+            let cands = torus.decision_space(inst.origin, inst.d_max);
+            let ga = GaConfig {
+                n_iter: 3,
+                ..GaConfig::default()
+            };
+            let ctx = OffloadContext {
+                torus: &torus,
+                satellites: &sats,
+                origin: inst.origin,
+                candidates: &cands,
+                segments: &inst.segments,
+                kappa: 1e-4,
+                ga: &ga,
+            };
+            for kind in SchemeKind::all() {
+                let mut s = make_scheme(kind, 99);
+                let chrom = s.decide(&ctx);
+                if chrom.len() != inst.segments.len() {
+                    return Err(format!("{kind:?}: wrong length"));
+                }
+                if !chrom.iter().all(|c| cands.contains(c)) {
+                    return Err(format!("{kind:?}: out-of-space sat in {chrom:?}"));
+                }
+                // constraint 11c explicitly
+                for &c in &chrom {
+                    if torus.manhattan(inst.origin, c) > inst.d_max {
+                        return Err(format!("{kind:?}: 11c violated"));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_deficit_nonnegative_and_theta_monotone() {
+    check_no_shrink(
+        "deficit-monotone",
+        default_cases() / 2,
+        gen_instance,
+        |inst| {
+            let torus = Torus::new(inst.n);
+            let sats = build_sats(inst);
+            let cands = torus.decision_space(inst.origin, inst.d_max);
+            let mut rng = Pcg64::seed_from_u64(5);
+            let chrom: Vec<usize> = (0..inst.segments.len())
+                .map(|_| *rng.choose(&cands))
+                .collect();
+            let mk = |t1: f64, t2: f64, t3: f64| GaConfig {
+                theta1: t1,
+                theta2: t2,
+                theta3: t3,
+                ..GaConfig::default()
+            };
+            let d = |ga: &GaConfig| {
+                let ctx = OffloadContext {
+                    torus: &torus,
+                    satellites: &sats,
+                    origin: inst.origin,
+                    candidates: &cands,
+                    segments: &inst.segments,
+                    kappa: 1e-4,
+                    ga,
+                };
+                ctx.deficit(&chrom)
+            };
+            let base = d(&mk(1.0, 20.0, 1e6));
+            if base < 0.0 {
+                return Err("negative deficit".into());
+            }
+            // doubling any theta must not decrease the deficit
+            for ga2 in [mk(2.0, 20.0, 1e6), mk(1.0, 40.0, 1e6), mk(1.0, 20.0, 2e6)] {
+                if d(&ga2) + 1e-9 < base {
+                    return Err("deficit decreased when a weight grew".into());
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_ga_close_to_random_best() {
+    // sanity envelope: the GA result should never be grossly worse than
+    // the best of an equal-budget random population
+    check_no_shrink(
+        "ga-vs-random-envelope",
+        default_cases() / 16,
+        gen_instance,
+        |inst| {
+            let torus = Torus::new(inst.n);
+            let sats = build_sats(inst);
+            let cands = torus.decision_space(inst.origin, inst.d_max);
+            let ga = GaConfig::default();
+            let ctx = OffloadContext {
+                torus: &torus,
+                satellites: &sats,
+                origin: inst.origin,
+                candidates: &cands,
+                segments: &inst.segments,
+                kappa: 1e-4,
+                ga: &ga,
+            };
+            let mut g = GaScheme::new(7);
+            let got = ctx.deficit(&g.decide(&ctx));
+            let mut rng = Pcg64::seed_from_u64(8);
+            let mut best = f64::INFINITY;
+            for _ in 0..ga.n_ini {
+                let chrom: Vec<usize> = (0..inst.segments.len())
+                    .map(|_| *rng.choose(&cands))
+                    .collect();
+                best = best.min(ctx.deficit(&chrom));
+            }
+            if got <= best * 3.0 + 1e3 {
+                Ok(())
+            } else {
+                Err(format!("GA deficit {got} far above random-best {best}"))
+            }
+        },
+    );
+}
+
+// ------------------------------------------------------------ satellite
+
+#[test]
+fn prop_admission_monotone_in_load() {
+    check_no_shrink(
+        "admission-monotone",
+        default_cases(),
+        |r| (r.f64_in(0.0, 20_000.0), r.f64_in(0.0, 20_000.0)),
+        |&(pre, m)| {
+            let mut lo = Satellite::new(0, 3000.0, 15_000.0);
+            let mut hi = Satellite::new(0, 3000.0, 15_000.0);
+            if pre > 0.0 && pre < 15_000.0 {
+                hi.try_load(pre);
+            }
+            // if the more-loaded satellite admits m, the empty one must too
+            if hi.would_admit(m) && !lo.would_admit(m) {
+                return Err("monotonicity violated".into());
+            }
+            let _ = (lo.try_load(m), hi.try_load(m));
+            Ok(())
+        },
+    );
+}
