@@ -1,0 +1,71 @@
+//! Bench: event-kernel scaling. The slotted engine's cost grows with
+//! wall-clock slots regardless of traffic; the event engine's grows with
+//! events (≈ arrivals × L). This target times both engines over a λ ramp
+//! and a horizon ramp so the crossover is visible, then sweeps the four
+//! traffic scenarios at a fixed operating point.
+
+use satkit::bench::{bench, quick_mode, section};
+use satkit::config::{EngineKind, ScenarioKind, SimConfig};
+use satkit::offload::SchemeKind;
+
+fn cfg(engine: EngineKind, lambda: f64, slots: usize) -> SimConfig {
+    SimConfig {
+        n: 8,
+        slots,
+        lambda,
+        seed: 42,
+        engine,
+        ..SimConfig::default()
+    }
+}
+
+fn main() {
+    let quick = quick_mode();
+    let iters = if quick { 1 } else { 3 };
+
+    section("engine wall time vs lambda (N=8, 20 s horizon, Random)");
+    let lambdas: &[f64] = if quick { &[10.0, 40.0] } else { &[4.0, 10.0, 25.0, 40.0, 70.0] };
+    for &lam in lambdas {
+        for engine in EngineKind::all() {
+            let c = cfg(engine, lam, if quick { 8 } else { 20 });
+            let r = bench(
+                &format!("{:<7} lambda={lam}", engine.name()),
+                0,
+                iters,
+                || {
+                    satkit::engine::run(&c, SchemeKind::Random);
+                },
+            );
+            println!("{}", r.row());
+        }
+    }
+
+    section("engine wall time vs horizon (N=8, lambda=10, Random)");
+    let horizons: &[usize] = if quick { &[10, 40] } else { &[10, 40, 160, 640] };
+    for &slots in horizons {
+        for engine in EngineKind::all() {
+            let c = cfg(engine, 10.0, slots);
+            let r = bench(
+                &format!("{:<7} horizon={slots}s", engine.name()),
+                0,
+                iters,
+                || {
+                    satkit::engine::run(&c, SchemeKind::Random);
+                },
+            );
+            println!("{}", r.row());
+        }
+    }
+
+    section("traffic scenarios on the event engine (lambda=25, SCC)");
+    for scenario in ScenarioKind::all() {
+        let mut c = cfg(EngineKind::Event, 25.0, if quick { 8 } else { 20 });
+        c.scenario = scenario;
+        let mut last_var = 0.0;
+        let r = bench(&format!("scenario={}", scenario.name()), 0, iters, || {
+            let rep = satkit::engine::run(&c, SchemeKind::Scc);
+            last_var = rep.workload_variance;
+        });
+        println!("{}  workload_var={last_var:.3e}", r.row());
+    }
+}

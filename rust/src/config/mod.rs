@@ -12,6 +12,83 @@ pub use toml_lite::TomlDoc;
 use crate::dnn::DnnModel;
 use crate::util::cli::Args;
 
+/// Which simulation engine executes the run.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EngineKind {
+    /// The paper's fixed-slot simulator ([`crate::sim::Simulation`]).
+    Slotted,
+    /// The continuous-time discrete-event kernel
+    /// ([`crate::eventsim::EventSim`]).
+    Event,
+}
+
+impl EngineKind {
+    pub fn parse(s: &str) -> Result<EngineKind, String> {
+        match s.to_ascii_lowercase().as_str() {
+            "slotted" | "slot" => Ok(EngineKind::Slotted),
+            "event" | "eventsim" | "des" => Ok(EngineKind::Event),
+            other => Err(format!("unknown engine '{other}' (slotted|event)")),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            EngineKind::Slotted => "slotted",
+            EngineKind::Event => "event",
+        }
+    }
+
+    pub fn all() -> [EngineKind; 2] {
+        [EngineKind::Slotted, EngineKind::Event]
+    }
+}
+
+/// Traffic profile driving the event engine's arrival processes (the
+/// slotted engine always runs the paper's homogeneous Poisson traffic).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ScenarioKind {
+    /// Homogeneous Poisson(λ) — the paper baseline (§V-A).
+    Poisson,
+    /// Sinusoidal diurnal rate, phase-staggered across gateway areas.
+    Diurnal,
+    /// Bursty MMPP on/off traffic.
+    Bursty,
+    /// Ground-track hotspot concentrating load on a moving area subset.
+    Hotspot,
+}
+
+impl ScenarioKind {
+    pub fn parse(s: &str) -> Result<ScenarioKind, String> {
+        match s.to_ascii_lowercase().as_str() {
+            "poisson" | "homogeneous" => Ok(ScenarioKind::Poisson),
+            "diurnal" | "sinusoidal" => Ok(ScenarioKind::Diurnal),
+            "bursty" | "mmpp" => Ok(ScenarioKind::Bursty),
+            "hotspot" | "ground-track" => Ok(ScenarioKind::Hotspot),
+            other => Err(format!(
+                "unknown scenario '{other}' (poisson|diurnal|bursty|hotspot)"
+            )),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            ScenarioKind::Poisson => "poisson",
+            ScenarioKind::Diurnal => "diurnal",
+            ScenarioKind::Bursty => "bursty",
+            ScenarioKind::Hotspot => "hotspot",
+        }
+    }
+
+    pub fn all() -> [ScenarioKind; 4] {
+        [
+            ScenarioKind::Poisson,
+            ScenarioKind::Diurnal,
+            ScenarioKind::Bursty,
+            ScenarioKind::Hotspot,
+        ]
+    }
+}
+
 /// GA hyper-parameters (Table I, last row).
 #[derive(Clone, Debug, PartialEq)]
 pub struct GaConfig {
@@ -143,6 +220,10 @@ pub struct SimConfig {
     pub beta: f64,
     /// RNG seed for the whole experiment.
     pub seed: u64,
+    /// Simulation engine: the paper's slotted loop or the event kernel.
+    pub engine: EngineKind,
+    /// Traffic scenario for the event engine (ignored by the slotted one).
+    pub scenario: ScenarioKind,
     pub ga: GaConfig,
     pub comm: CommConfig,
     pub satellite: SatelliteConfig,
@@ -163,6 +244,8 @@ impl Default for SimConfig {
             alpha: 1.0,
             beta: 1.0,
             seed: 42,
+            engine: EngineKind::Slotted,
+            scenario: ScenarioKind::Poisson,
             ga: GaConfig::default(),
             comm: CommConfig::default(),
             satellite: SatelliteConfig::default(),
@@ -257,6 +340,12 @@ impl SimConfig {
         if let Some(dm) = doc.get_i64("", "d_max") {
             d.d_max = Some(dm as usize);
         }
+        if let Some(e) = doc.get_str("", "engine") {
+            d.engine = EngineKind::parse(&e)?;
+        }
+        if let Some(s) = doc.get_str("", "scenario") {
+            d.scenario = ScenarioKind::parse(&s)?;
+        }
         doc.read_f64("ga", "theta1", &mut d.ga.theta1);
         doc.read_f64("ga", "theta2", &mut d.ga.theta2);
         doc.read_f64("ga", "theta3", &mut d.ga.theta3);
@@ -317,6 +406,12 @@ impl SimConfig {
         if let Some(x) = args.get_parsed::<usize>("ga-iters")? {
             self.ga.n_iter = x;
         }
+        if let Some(e) = args.get("engine") {
+            self.engine = EngineKind::parse(e)?;
+        }
+        if let Some(s) = args.get("scenario") {
+            self.scenario = ScenarioKind::parse(s)?;
+        }
         Ok(())
     }
 
@@ -334,6 +429,7 @@ impl SimConfig {
              theta1, theta2, theta3                 {}, {}, {:.0e}\n\
              N_ini, N_iter, N_K, N_summ, epsilon    {}, {}, {}, {}, {}\n\
              Model                                  {}\n\
+             Engine, scenario                       {}, {}\n\
              Slots, seed                            {}, {}",
             self.n,
             self.comm.isl_bandwidth_hz / 1e6,
@@ -352,6 +448,8 @@ impl SimConfig {
             self.ga.n_summ,
             self.ga.epsilon,
             self.model.name(),
+            self.engine.name(),
+            self.scenario.name(),
             self.slots,
             self.seed,
         )
@@ -430,6 +528,32 @@ capacity_mflops = 6000.0
         assert_eq!(c.n, 8);
         assert_eq!(c.lambda, 55.0);
         assert_eq!(c.ga.n_iter, 4);
+    }
+
+    #[test]
+    fn engine_and_scenario_parse_roundtrip() {
+        assert_eq!(EngineKind::parse("event").unwrap(), EngineKind::Event);
+        assert_eq!(EngineKind::parse("SLOTTED").unwrap(), EngineKind::Slotted);
+        assert!(EngineKind::parse("warp").is_err());
+        for k in ScenarioKind::all() {
+            assert_eq!(ScenarioKind::parse(k.name()).unwrap(), k);
+        }
+        assert!(ScenarioKind::parse("solar-storm").is_err());
+
+        let text = "engine = \"event\"\nscenario = \"hotspot\"\n";
+        let c = SimConfig::from_toml(text).unwrap();
+        assert_eq!(c.engine, EngineKind::Event);
+        assert_eq!(c.scenario, ScenarioKind::Hotspot);
+
+        let args = crate::util::cli::Args::parse(
+            "x --engine event --scenario bursty"
+                .split_whitespace()
+                .map(String::from),
+        );
+        let mut d = SimConfig::default();
+        d.apply_args(&args).unwrap();
+        assert_eq!(d.engine, EngineKind::Event);
+        assert_eq!(d.scenario, ScenarioKind::Bursty);
     }
 
     #[test]

@@ -121,6 +121,17 @@ impl EarlyExitProfile {
             .map(|(i, _)| i)
     }
 
+    /// Resolve the full early-exit policy for a simulation engine:
+    /// the cheapest branch meeting `min_accuracy`, returned as
+    /// `(delivered accuracy, truncated per-layer workload vector)`.
+    /// Shared by the slotted and event-driven engines so the exit policy
+    /// can never diverge between them.
+    pub fn plan(model: crate::dnn::DnnModel, min_accuracy: f64) -> (f64, Vec<f64>) {
+        let ee = EarlyExitProfile::for_model(model);
+        let branch = ee.cheapest_exit(min_accuracy);
+        (ee.accuracy_for_exit(branch), ee.workloads_for_exit(branch))
+    }
+
     /// Expected accuracy/workload pair for a confidence-threshold policy
     /// where a fraction `exit_probs[i]` of tasks exits at branch i (the
     /// remainder runs to completion).

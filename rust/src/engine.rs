@@ -1,0 +1,91 @@
+//! Shared abstraction over the two simulation engines.
+//!
+//! The slotted simulator ([`crate::sim::Simulation`], the paper's §V
+//! evaluation loop) and the continuous-time discrete-event kernel
+//! ([`crate::eventsim::EventSim`]) consume the same [`SimConfig`] and
+//! produce the same [`Report`], so callers — the CLI, the experiment
+//! harness, the benches — select one with [`EngineKind`] and stay
+//! agnostic about the clock underneath.
+
+use crate::config::{EngineKind, SimConfig};
+use crate::eventsim::EventSim;
+use crate::metrics::Report;
+use crate::offload::SchemeKind;
+use crate::sim::Simulation;
+
+/// A ready-to-run simulation, independent of its clock model.
+pub trait Engine {
+    /// Engine label for tables and logs.
+    fn label(&self) -> &'static str;
+
+    /// Consume the engine and produce the §V-B report.
+    fn run_boxed(self: Box<Self>) -> Report;
+}
+
+impl Engine for Simulation {
+    fn label(&self) -> &'static str {
+        EngineKind::Slotted.name()
+    }
+
+    fn run_boxed(self: Box<Self>) -> Report {
+        (*self).run()
+    }
+}
+
+impl Engine for EventSim {
+    fn label(&self) -> &'static str {
+        EngineKind::Event.name()
+    }
+
+    fn run_boxed(self: Box<Self>) -> Report {
+        (*self).run()
+    }
+}
+
+/// Instantiate the engine selected by `cfg.engine`.
+pub fn build(cfg: &SimConfig, kind: SchemeKind) -> Box<dyn Engine> {
+    match cfg.engine {
+        EngineKind::Slotted => Box::new(Simulation::new(cfg, kind)),
+        EngineKind::Event => Box::new(EventSim::new(cfg, kind)),
+    }
+}
+
+/// Build and run in one step (the common CLI/experiment path).
+pub fn run(cfg: &SimConfig, kind: SchemeKind) -> Report {
+    build(cfg, kind).run_boxed()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ScenarioKind;
+
+    fn cfg(engine: EngineKind) -> SimConfig {
+        SimConfig {
+            n: 6,
+            slots: 8,
+            lambda: 5.0,
+            seed: 3,
+            engine,
+            ..SimConfig::default()
+        }
+    }
+
+    #[test]
+    fn dispatch_selects_both_engines() {
+        for kind in EngineKind::all() {
+            let e = build(&cfg(kind), SchemeKind::Random);
+            assert_eq!(e.label(), kind.name());
+            let r = e.run_boxed();
+            assert!(r.total_tasks > 0, "{kind:?}");
+        }
+    }
+
+    #[test]
+    fn run_honours_scenario_field() {
+        let mut c = cfg(EngineKind::Event);
+        c.scenario = ScenarioKind::Diurnal;
+        let r = run(&c, SchemeKind::Rrp);
+        assert!(r.total_tasks > 0);
+    }
+}

@@ -12,7 +12,7 @@
 
 pub mod plot;
 
-use crate::config::SimConfig;
+use crate::config::{EngineKind, ScenarioKind, SimConfig};
 use crate::dnn::DnnModel;
 use crate::metrics::Report;
 use crate::offload::SchemeKind;
@@ -36,6 +36,10 @@ pub struct SweepOpts {
     pub decision_fraction: f64,
     /// Independent repetitions averaged per point (seeds seed..seed+r).
     pub repeats: usize,
+    /// Which engine runs the points (slotted = the paper's loop).
+    pub engine: EngineKind,
+    /// Traffic profile for the event engine.
+    pub scenario: ScenarioKind,
 }
 
 impl Default for SweepOpts {
@@ -45,6 +49,8 @@ impl Default for SweepOpts {
             seed: 42,
             decision_fraction: 0.05,
             repeats: 1,
+            engine: EngineKind::Slotted,
+            scenario: ScenarioKind::Poisson,
         }
     }
 }
@@ -64,6 +70,8 @@ fn base_cfg(model: DnnModel, opts: &SweepOpts) -> SimConfig {
         slots: opts.slots,
         seed: opts.seed,
         decision_fraction: opts.decision_fraction,
+        engine: opts.engine,
+        scenario: opts.scenario,
         ..SimConfig::default()
     }
 }
@@ -90,11 +98,14 @@ fn mean_reports(reports: Vec<Report>) -> Report {
         out.workload_mean = sum_f(|r| r.workload_mean);
         out.delay_p50_ms = sum_f(|r| r.delay_p50_ms);
         out.delay_p95_ms = sum_f(|r| r.delay_p95_ms);
+        out.horizon_s = sum_f(|r| r.horizon_s);
+        out.last_finish_s = sum_f(|r| r.last_finish_s);
     }
     out
 }
 
-/// Run one (model, λ, scheme) point, averaged over `opts.repeats` seeds.
+/// Run one (model, λ, scheme) point, averaged over `opts.repeats` seeds,
+/// on the engine/scenario selected by `opts` (slotted Poisson = paper).
 pub fn run_point(
     model: DnnModel,
     lambda: f64,
@@ -106,10 +117,58 @@ pub fn run_point(
             let mut cfg = base_cfg(model, opts);
             cfg.lambda = lambda;
             cfg.seed = opts.seed + r as u64 * 1000;
-            Simulation::new(&cfg, scheme).run()
+            crate::engine::run(&cfg, scheme)
         })
         .collect();
     mean_reports(reports)
+}
+
+/// Run one (model, λ, scheme) point on the EVENT engine under a traffic
+/// scenario (a [`run_point`] override, sharing its repeat/seed protocol).
+pub fn run_point_event(
+    model: DnnModel,
+    lambda: f64,
+    scheme: SchemeKind,
+    scenario: ScenarioKind,
+    opts: &SweepOpts,
+) -> Report {
+    let opts = SweepOpts {
+        engine: EngineKind::Event,
+        scenario,
+        ..opts.clone()
+    };
+    run_point(model, lambda, scheme, &opts)
+}
+
+/// λ-sweep over all four schemes on the event-driven engine (the eventsim
+/// companion to [`fig2`]/[`fig3`]).
+pub fn eventsim_sweep(
+    model: DnnModel,
+    lambdas: &[f64],
+    scenario: ScenarioKind,
+    opts: &SweepOpts,
+) -> Vec<Row> {
+    let mut rows = Vec::new();
+    for &lambda in lambdas {
+        for scheme in SchemeKind::all() {
+            rows.push(Row {
+                x: lambda,
+                scheme,
+                report: run_point_event(model, lambda, scheme, scenario, opts),
+            });
+        }
+    }
+    rows
+}
+
+/// λ grid for the eventsim experiment. `quick` shrinks it to two points so
+/// a CI smoke run finishes in seconds (pair with [`SweepOpts::quick`]).
+pub fn eventsim_lambdas(quick: bool) -> Vec<f64> {
+    if quick {
+        vec![4.0, 25.0]
+    } else {
+        default_lambdas()
+    }
 }
 
 /// λ-sweep over all four schemes (the engine behind Figs. 2 & 3).
@@ -153,7 +212,7 @@ pub fn scale(ns: &[usize], opts: &SweepOpts) -> Vec<Row> {
                     cfg.n = n;
                     cfg.lambda = 25.0;
                     cfg.seed = opts.seed + r as u64 * 1000;
-                    Simulation::new(&cfg, scheme).run()
+                    crate::engine::run(&cfg, scheme)
                 })
                 .collect();
             rows.push(Row {
@@ -326,5 +385,21 @@ mod tests {
         let opts = SweepOpts::quick();
         let rows = ablation_split(DnnModel::Vgg19, &[10.0], &opts);
         assert_eq!(rows.len(), 1);
+    }
+
+    #[test]
+    fn eventsim_sweep_quick_has_all_cells() {
+        let opts = SweepOpts::quick();
+        let lambdas = eventsim_lambdas(true);
+        assert_eq!(lambdas.len(), 2);
+        let rows =
+            eventsim_sweep(DnnModel::Vgg19, &lambdas, ScenarioKind::Poisson, &opts);
+        assert_eq!(rows.len(), 2 * 4);
+        for r in &rows {
+            assert!(r.report.total_tasks > 0);
+            assert!(r.report.horizon_s > 0.0);
+        }
+        // the full grid is the paper's λ range
+        assert_eq!(eventsim_lambdas(false), default_lambdas());
     }
 }

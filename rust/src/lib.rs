@@ -12,6 +12,26 @@
 //!   simulator ([`sim`]) implementing the system model of Eq. 1–9, and a
 //!   thread-pool coordinator ([`coordinator`]) that executes real DNN
 //!   slice inference through PJRT.
+//!
+//! ## Two simulation engines
+//!
+//! The system model runs on either of two clocks behind the shared
+//! [`engine::Engine`] abstraction (select with `SimConfig::engine` or
+//! `--engine` on the CLI):
+//!
+//! * [`sim::Simulation`] — the paper's **fixed-slot** loop (§V): arrivals,
+//!   admission, and backlog draining advance once per slot.
+//! * [`eventsim::EventSim`] — a **continuous-time discrete-event** kernel:
+//!   a binary-heap event queue with deterministic FIFO tie-breaking drives
+//!   `TaskArrival` / `SegmentStart` / `SegmentDone` / `IslTransfer` /
+//!   `Handover` / `Fault` events through per-satellite work-conserving
+//!   queues, so delay fidelity is no longer capped by slot quantization
+//!   and cost scales with events rather than wall-clock slots.
+//!
+//! The event engine draws arrivals from pluggable
+//! [`eventsim::scenario::TrafficScenario`] profiles — homogeneous Poisson
+//! (the paper baseline, on which the two engines agree), diurnal
+//! sinusoidal, bursty MMPP, and a moving ground-track hotspot.
 //! * **L2 (python/compile/model.py)** — JAX slice forwards, lowered once
 //!   to `artifacts/*.hlo.txt` at build time.
 //! * **L1 (python/compile/kernels/)** — Pallas matmul/conv kernels inside
@@ -36,6 +56,8 @@ pub mod comm;
 pub mod config;
 pub mod coordinator;
 pub mod dnn;
+pub mod engine;
+pub mod eventsim;
 pub mod metrics;
 pub mod nn;
 pub mod offload;

@@ -2,9 +2,10 @@
 //!
 //! Subcommands:
 //!   simulate            run one simulation and print the report
+//!                       (--engine slotted|event, --scenario for traffic)
 //!   sweep               λ-sweep all four schemes for one model
-//!   experiment <id>     regenerate a paper figure (fig2|fig3|scale|
-//!                       ablation-split|ablation-ga|all); writes
+//!   experiment <id>     regenerate a paper figure (fig2|fig3|eventsim|
+//!                       scale|ablation-split|ablation-ga|all); writes
 //!                       results/<id>.json next to the printed table
 //!   serve               run the coordinator on real PJRT slice inference
 //!   validate-artifacts  load + execute every artifact once
@@ -15,10 +16,10 @@
 
 use satkit::config::SimConfig;
 use satkit::coordinator::{Coordinator, InferenceRequest};
+use satkit::dnn::DnnModel;
 use satkit::experiments as exp;
 use satkit::offload::SchemeKind;
 use satkit::runtime::{default_artifact_dir, Engine};
-use satkit::sim::Simulation;
 use satkit::util::cli::Args;
 use satkit::util::stats;
 
@@ -61,7 +62,8 @@ USAGE: satkit <subcommand> [--options]
 SUBCOMMANDS
   simulate            one simulation run (--scheme scc|random|rrp|dqn)
   sweep               lambda sweep, all schemes (--model vgg19|resnet101)
-  experiment <id>     fig2 | fig3 | scale | ablation-split | ablation-ga | all
+  experiment <id>     fig2 | fig3 | eventsim | scale | ablation-split |
+                      ablation-ga | all
   serve               coordinator with real PJRT slice inference
   validate-artifacts  compile + execute each artifacts/*.hlo.txt
   print-config        effective Table-I parameters
@@ -70,6 +72,8 @@ OPTIONS
   --config FILE   TOML config   --n N          grid edge (default 10)
   --slots S       time slots    --lambda L     task incidence (4-70)
   --model M       vgg19|resnet101              --scheme S
+  --engine E      slotted|event (event = continuous-time kernel)
+  --scenario T    poisson|diurnal|bursty|hotspot (event engine traffic)
   --seed X        RNG seed      --repeats R    seeds averaged per point
   --quick         smaller slot budget          --json FILE   export rows
   --requests K    serve: number of requests    --workers W   exec workers";
@@ -88,6 +92,9 @@ fn sweep_opts(args: &Args, cfg: &SimConfig) -> exp::SweepOpts {
     o.slots = args.get_or("slots", if args.has_flag("quick") { o.slots } else { cfg.slots });
     o.decision_fraction = cfg.decision_fraction;
     o.repeats = args.get_or("repeats", 1usize);
+    // --engine / --scenario flow into sweeps and experiments too
+    o.engine = cfg.engine;
+    o.scenario = cfg.scenario;
     o
 }
 
@@ -105,7 +112,9 @@ fn simulate(args: &Args) -> Result<(), String> {
     let kind = SchemeKind::parse(args.get("scheme").unwrap_or("scc"))?;
     println!("{}", cfg.table());
     println!();
-    let report = Simulation::new(&cfg, kind).run();
+    // cfg.engine picks the slotted loop or the event kernel; cfg.scenario
+    // picks the event engine's traffic profile (--engine / --scenario)
+    let report = satkit::engine::run(&cfg, kind);
     println!("{}", report.row(kind.name()));
     println!("{}", report.to_json().to_string());
     Ok(())
@@ -153,6 +162,24 @@ fn experiment(args: &Args) -> Result<(), String> {
     match id {
         "fig2" => run_fig("fig2", exp::fig2(&opts), "lambda")?,
         "fig3" => run_fig("fig3", exp::fig3(&opts), "lambda")?,
+        "eventsim" => {
+            // the λ-sweep on the event-driven engine under cfg.scenario
+            // (default model matches fig2's ResNet101; --model overrides);
+            // --quick shrinks both the λ grid and the horizon so the CI
+            // smoke run finishes in seconds
+            let model = if args.get("model").is_some() {
+                cfg.model
+            } else {
+                DnnModel::Resnet101
+            };
+            let lams = exp::eventsim_lambdas(args.has_flag("quick"));
+            let rows = exp::eventsim_sweep(model, &lams, cfg.scenario, &opts);
+            run_fig(
+                &format!("eventsim-{}-{}", cfg.scenario.name(), model.name()),
+                rows,
+                "lambda",
+            )?
+        }
         "scale" => run_fig("scale", exp::scale(&exp::default_ns(), &opts), "N")?,
         "ablation-split" => {
             let rows = exp::ablation_split(cfg.model, &exp::default_lambdas(), &opts);

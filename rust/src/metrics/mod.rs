@@ -22,6 +22,12 @@ pub struct TaskOutcome {
     /// Gateway uplink delay [s] (Eq. 1; identical distribution across
     /// schemes, included for end-to-end realism).
     pub uplink_delay_s: f64,
+    /// Continuous timestamp at which the outcome was decided [s]: last
+    /// segment completion for completed tasks, rejection/abort instant for
+    /// dropped ones. The slotted engine synthesizes it from the arrival
+    /// slot plus the analytic delays; the event engine records the actual
+    /// event-clock instant.
+    pub finish_time_s: f64,
 }
 
 impl TaskOutcome {
@@ -70,9 +76,22 @@ impl MetricsCollector {
         &mut self.per_sat[id]
     }
 
+    /// Finalize a slotted run of `slots_run` slots (1 slot = 1 s).
     pub fn finish(self, slots_run: usize) -> Report {
         Report {
             slots_run,
+            horizon_s: slots_run as f64,
+            ..Report::from_collector(self)
+        }
+    }
+
+    /// Finalize a continuous-time run over a `horizon_s`-second arrival
+    /// window (the event engine drains in-flight work past the horizon,
+    /// but rates are normalized to the arrival window).
+    pub fn finish_continuous(self, horizon_s: f64) -> Report {
+        Report {
+            slots_run: horizon_s.ceil() as usize,
+            horizon_s,
             ..Report::from_collector(self)
         }
     }
@@ -98,6 +117,13 @@ pub struct Report {
     pub delay_p50_ms: f64,
     pub delay_p95_ms: f64,
     pub slots_run: usize,
+    /// Arrival-window length [s] (= `slots_run` for the slotted engine;
+    /// the exact continuous horizon for the event engine).
+    pub horizon_s: f64,
+    /// Latest outcome timestamp [s] (max `TaskOutcome::finish_time_s`);
+    /// with the event engine this shows how far past the horizon the
+    /// in-flight drain ran.
+    pub last_finish_s: f64,
 }
 
 impl Report {
@@ -138,6 +164,26 @@ impl Report {
             delay_p50_ms: stats::percentile(&delays_ms, 50.0),
             delay_p95_ms: stats::percentile(&delays_ms, 95.0),
             slots_run: 0,
+            horizon_s: 0.0,
+            last_finish_s: c
+                .outcomes
+                .iter()
+                .map(|o| o.finish_time_s)
+                .fold(0.0, f64::max),
+        }
+    }
+
+    /// Seconds the run drained in-flight work past the arrival window.
+    pub fn drain_secs(&self) -> f64 {
+        (self.last_finish_s - self.horizon_s).max(0.0)
+    }
+
+    /// Completed tasks per second of arrival window (0 if no horizon).
+    pub fn throughput_per_s(&self) -> f64 {
+        if self.horizon_s > 0.0 {
+            self.completed_tasks as f64 / self.horizon_s
+        } else {
+            0.0
         }
     }
 
@@ -183,6 +229,9 @@ impl Report {
             ("workload_mean", Json::Num(self.workload_mean)),
             ("workload_cv", Json::Num(self.workload_cv())),
             ("slots_run", Json::Num(self.slots_run as f64)),
+            ("horizon_s", Json::Num(self.horizon_s)),
+            ("throughput_per_s", Json::Num(self.throughput_per_s())),
+            ("drain_secs", Json::Num(self.drain_secs())),
         ])
     }
 
@@ -214,6 +263,7 @@ mod tests {
             comp_delay_s: comp,
             tran_delay_s: tran,
             uplink_delay_s: 0.05,
+            finish_time_s: comp + tran,
         }
     }
 
@@ -267,6 +317,30 @@ mod tests {
         // r_D = 0.5, mean delay = 2 s
         assert!((r.objective(1.0, 1.0) - 2.5).abs() < 1e-12);
         assert!((r.objective(2.0, 0.5) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn continuous_finish_keeps_exact_horizon() {
+        let mut c = MetricsCollector::new(2);
+        c.record(outcome(0, 3, 2, 1.0, 0.2));
+        c.record(outcome(1, 3, 2, 2.0, 0.1));
+        let r = c.finish_continuous(12.5);
+        assert!((r.horizon_s - 12.5).abs() < 1e-12);
+        assert_eq!(r.slots_run, 13);
+        assert!((r.throughput_per_s() - 2.0 / 12.5).abs() < 1e-12);
+        // outcome() stamps finish_time_s = comp + tran: latest is 2.1 s,
+        // inside the horizon, so nothing drained past the window
+        assert!((r.last_finish_s - 2.1).abs() < 1e-12);
+        assert_eq!(r.drain_secs(), 0.0);
+    }
+
+    #[test]
+    fn drain_secs_measures_overrun_past_horizon() {
+        let mut c = MetricsCollector::new(1);
+        c.record(outcome(0, 3, 2, 4.0, 1.0)); // finishes at t = 5.0
+        let r = c.finish_continuous(3.0);
+        assert!((r.last_finish_s - 5.0).abs() < 1e-12);
+        assert!((r.drain_secs() - 2.0).abs() < 1e-12);
     }
 
     #[test]

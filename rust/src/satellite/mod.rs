@@ -74,6 +74,16 @@ impl Satellite {
         }
     }
 
+    /// Release `m_k` MFLOP of committed load once its service completes.
+    /// The event-driven engine drains per segment at completion time; the
+    /// slotted engine drains per slot via [`Satellite::service_slot`].
+    /// Saturates at zero so a fault-time [`Satellite::reset`] followed by
+    /// late completions of pre-fault work cannot drive `q` negative.
+    pub fn complete(&mut self, m_k: f64) {
+        debug_assert!(m_k >= 0.0);
+        self.loaded_mflops = (self.loaded_mflops - m_k).max(0.0);
+    }
+
     /// Advance one slot: the satellite executes up to `C_x` MFLOP of its
     /// backlog. Returns the amount actually processed.
     pub fn service_slot(&mut self) -> f64 {
@@ -171,6 +181,18 @@ mod tests {
         assert_eq!(s.utilization(), 0.0);
         s.try_load(7500.0);
         assert!((s.utilization() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn complete_releases_and_saturates() {
+        let mut s = sat();
+        s.try_load(5000.0);
+        s.complete(2000.0);
+        assert_eq!(s.loaded(), 3000.0);
+        s.complete(9000.0); // more than loaded: clamps at 0
+        assert_eq!(s.loaded(), 0.0);
+        // assigned total is a lifetime counter, not released
+        assert_eq!(s.assigned_total_mflops, 5000.0);
     }
 
     #[test]

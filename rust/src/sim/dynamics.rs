@@ -34,9 +34,19 @@ impl Handover {
     /// The decision satellite serving an area at `slot`, given the area's
     /// initial serving satellite. Motion is along the in-orbit ring.
     pub fn serving_at(&self, torus: &Torus, initial: SatId, slot: usize) -> SatId {
-        let steps = (slot / self.dwell_slots.max(1)) as isize * self.direction;
+        self.serving_after(torus, initial, slot / self.dwell_slots.max(1))
+    }
+
+    /// The serving satellite after `steps` completed handovers (the event
+    /// engine advances this one step per scheduled `Handover` event).
+    pub fn serving_after(&self, torus: &Torus, initial: SatId, steps: usize) -> SatId {
         let (o, i) = torus.coords(initial);
-        torus.id(o as isize, i as isize + steps)
+        torus.id(o as isize, i as isize + steps as isize * self.direction)
+    }
+
+    /// Seconds between handovers on the continuous clock (1 slot = 1 s).
+    pub fn dwell_secs(&self) -> f64 {
+        self.dwell_slots.max(1) as f64
     }
 }
 
@@ -54,6 +64,12 @@ pub struct FaultInjector {
 }
 
 impl FaultInjector {
+    /// Period of the fault chain on the continuous clock. Both engines
+    /// advance the same per-second Bernoulli process: the slotted engine
+    /// calls [`FaultInjector::step`] once per slot, the event engine
+    /// schedules a `Fault` event every `TICK_SECS`.
+    pub const TICK_SECS: f64 = 1.0;
+
     pub fn new(n_sats: usize, p_fail: f64, p_recover: f64, seed: u64) -> FaultInjector {
         assert!((0.0..=1.0).contains(&p_fail) && (0.0..=1.0).contains(&p_recover));
         FaultInjector {
@@ -138,6 +154,23 @@ mod tests {
             let (o, _) = t.coords(h.serving_at(&t, s0, slot));
             assert_eq!(o, 2);
         }
+    }
+
+    #[test]
+    fn serving_after_matches_slot_view() {
+        let t = Torus::new(8);
+        let h = Handover {
+            dwell_slots: 4,
+            direction: -1,
+        };
+        let s0 = t.id(1, 6);
+        for slot in 0..40 {
+            assert_eq!(
+                h.serving_at(&t, s0, slot),
+                h.serving_after(&t, s0, slot / 4)
+            );
+        }
+        assert!((h.dwell_secs() - 4.0).abs() < 1e-12);
     }
 
     #[test]

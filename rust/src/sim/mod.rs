@@ -34,6 +34,69 @@ pub enum SplitPolicy {
     NaiveEqualLayers,
 }
 
+/// Calibrate the Eq. 7 transfer coefficient κ [s per MFLOP·hop] for a
+/// configuration. Eq. 7 charges transmission as κ·q_k·MH: the workload q_k
+/// is the paper's proxy for the tensor shipped at the cut. κ is calibrated
+/// so κ·q̄ equals the time to push the MEAN CUT ACTIVATION over one ISL hop
+/// (DESIGN.md §6) — the physical quantity is the activation at the
+/// partition boundary, not the sum of all intermediate tensors. Shared by
+/// the slotted and event-driven engines so their delay models agree.
+pub fn calibrate_kappa(cfg: &SimConfig) -> f64 {
+    let profile = cfg.model.profile();
+    let l_eff = cfg.effective_l();
+    let cuts = crate::splitting::balanced_split(
+        &profile.workloads(),
+        l_eff,
+        cfg.ga.epsilon,
+    );
+    let mean_cut_bytes: f64 = {
+        let b: Vec<f64> = cuts
+            .blocks
+            .iter()
+            .take(l_eff.saturating_sub(1))
+            .filter(|blk| !blk.is_empty())
+            .map(|blk| profile.cut_bytes(blk.end - 1))
+            .collect();
+        if b.is_empty() {
+            profile.layers[0].output_bytes
+        } else {
+            b.iter().sum::<f64>() / b.len() as f64
+        }
+    };
+    let mean_seg_mflops = profile.total_mflops() / l_eff as f64;
+    let isl = IslLink::new(cfg.comm.clone());
+    isl.hop_secs(mean_cut_bytes) / mean_seg_mflops.max(1e-9)
+}
+
+/// Split a task's workload vector into L segment workloads under
+/// `policy`, memoized on `scale_key` (jitter-free runs split once).
+/// Shared by the slotted and event-driven engines so their splitting
+/// semantics can never diverge.
+pub(crate) fn split_segments_cached(
+    policy: SplitPolicy,
+    cache: &mut Option<(u64, Vec<f64>)>,
+    workloads: &[f64],
+    l: usize,
+    epsilon: f64,
+    scale_key: u64,
+) -> Vec<f64> {
+    if let Some((key, cached)) = cache {
+        if *key == scale_key {
+            return cached.clone();
+        }
+    }
+    let segs = match policy {
+        SplitPolicy::Balanced => {
+            balanced_split(workloads, l, epsilon).segment_workloads()
+        }
+        SplitPolicy::NaiveEqualLayers => {
+            crate::splitting::naive_equal_layers(workloads, l).segment_workloads()
+        }
+    };
+    *cache = Some((scale_key, segs.clone()));
+    segs
+}
+
 /// A ready-to-run simulation instance.
 pub struct Simulation {
     cfg: SimConfig,
@@ -76,36 +139,7 @@ impl Simulation {
         let decision_sats =
             decision_satellites(torus.len(), cfg.decision_fraction, cfg.seed);
         let n_areas = decision_sats.len();
-        let profile = cfg.model.profile();
-        // Eq. 7 charges transmission as κ·q_k·MH: the workload q_k is the
-        // paper's proxy for the tensor shipped at the cut. κ is calibrated
-        // so κ·q̄ equals the time to push the MEAN CUT ACTIVATION over one
-        // ISL hop (DESIGN.md §6) — the physical quantity is the activation
-        // at the partition boundary, not the sum of all intermediate
-        // tensors.
-        let l_eff = cfg.effective_l();
-        let cuts = crate::splitting::balanced_split(
-            &profile.workloads(),
-            l_eff,
-            cfg.ga.epsilon,
-        );
-        let mean_cut_bytes: f64 = {
-            let b: Vec<f64> = cuts
-                .blocks
-                .iter()
-                .take(l_eff.saturating_sub(1))
-                .filter(|blk| !blk.is_empty())
-                .map(|blk| profile.cut_bytes(blk.end - 1))
-                .collect();
-            if b.is_empty() {
-                profile.layers[0].output_bytes
-            } else {
-                b.iter().sum::<f64>() / b.len() as f64
-            }
-        };
-        let mean_seg_mflops = profile.total_mflops() / l_eff as f64;
-        let isl = IslLink::new(cfg.comm.clone());
-        let kappa = isl.hop_secs(mean_cut_bytes) / mean_seg_mflops.max(1e-9);
+        let kappa = calibrate_kappa(cfg);
         Simulation {
             torus,
             satellites,
@@ -137,10 +171,10 @@ impl Simulation {
     /// `min_accuracy`; returns self with the truncated workload vector
     /// installed and `delivered_accuracy` recording the trade-off.
     pub fn with_early_exit(mut self, min_accuracy: f64) -> Simulation {
-        let ee = crate::dnn::EarlyExitProfile::for_model(self.cfg.model);
-        let branch = ee.cheapest_exit(min_accuracy);
-        self.delivered_accuracy = ee.accuracy_for_exit(branch);
-        self.early_exit_workloads = Some(ee.workloads_for_exit(branch));
+        let (accuracy, workloads) =
+            crate::dnn::EarlyExitProfile::plan(self.cfg.model, min_accuracy);
+        self.delivered_accuracy = accuracy;
+        self.early_exit_workloads = Some(workloads);
         self.split_cache = None;
         self
     }
@@ -182,21 +216,14 @@ impl Simulation {
     }
 
     fn split_segments(&mut self, workloads: &[f64], l: usize, scale_key: u64) -> Vec<f64> {
-        if let Some((key, cached)) = &self.split_cache {
-            if *key == scale_key {
-                return cached.clone();
-            }
-        }
-        let segs = match self.split_policy {
-            SplitPolicy::Balanced => {
-                balanced_split(workloads, l, self.cfg.ga.epsilon).segment_workloads()
-            }
-            SplitPolicy::NaiveEqualLayers => {
-                crate::splitting::naive_equal_layers(workloads, l).segment_workloads()
-            }
-        };
-        self.split_cache = Some((scale_key, segs.clone()));
-        segs
+        split_segments_cached(
+            self.split_policy,
+            &mut self.split_cache,
+            workloads,
+            l,
+            self.cfg.ga.epsilon,
+            scale_key,
+        )
     }
 
     /// Run the full Γ-slot simulation and produce the report.
@@ -337,6 +364,9 @@ impl Simulation {
                         comp_delay_s: comp,
                         tran_delay_s: tran,
                         uplink_delay_s: uplink,
+                        // slotted clock: the slot boundary plus the
+                        // analytic delays stands in for the event instant
+                        finish_time_s: task.arrival_time_s + comp + tran,
                     });
                 }
             }

@@ -20,8 +20,11 @@ pub struct Task {
     /// Workload multiplier: UE inputs vary (crop sizes / batch of frames),
     /// scaling every layer's workload uniformly. 1.0 = canonical 224².
     pub scale: f64,
-    /// Slot in which the task arrived.
+    /// Slot in which the task arrived (slotted engine's clock).
     pub arrival_slot: usize,
+    /// Continuous arrival timestamp [s]. The slotted engine quantizes this
+    /// to the slot start; the event-driven engine uses the exact instant.
+    pub arrival_time_s: f64,
 }
 
 impl Task {
@@ -78,8 +81,14 @@ impl TaskGenerator {
         (0..k).map(|_| self.one(origin, slot)).collect()
     }
 
-    /// Generate a single task.
+    /// Generate a single task at a slot boundary (slotted engine).
     pub fn one(&mut self, origin: SatId, slot: usize) -> Task {
+        self.at_time(origin, slot as f64)
+    }
+
+    /// Generate a single task at a continuous timestamp (event engine).
+    pub fn at_time(&mut self, origin: SatId, t: f64) -> Task {
+        debug_assert!(t >= 0.0);
         let id = self.next_id;
         self.next_id += 1;
         let scale = if self.scale_jitter > 0.0 {
@@ -93,7 +102,8 @@ impl TaskGenerator {
             origin,
             model: self.model,
             scale,
-            arrival_slot: slot,
+            arrival_slot: t as usize,
+            arrival_time_s: t,
         }
     }
 
@@ -178,10 +188,23 @@ mod tests {
             model: DnnModel::Vgg19,
             scale: 2.0,
             arrival_slot: 0,
+            arrival_time_s: 0.0,
         };
         let total: f64 = t.layer_workloads().iter().sum();
         assert!((total - t.total_mflops()).abs() < 1e-6);
         assert!((t.total_mflops() / DnnModel::Vgg19.profile().total_mflops() - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn continuous_arrival_quantizes_to_slot() {
+        let mut g = TaskGenerator::new(5, 1.0, DnnModel::Vgg19);
+        let t = g.at_time(2, 3.75);
+        assert_eq!(t.arrival_slot, 3);
+        assert!((t.arrival_time_s - 3.75).abs() < 1e-12);
+        // the slotted path lands exactly on the slot boundary
+        let u = g.one(2, 7);
+        assert_eq!(u.arrival_slot, 7);
+        assert_eq!(u.arrival_time_s, 7.0);
     }
 
     #[test]

@@ -32,8 +32,10 @@ impl Torus {
         self.n * self.n
     }
 
+    /// `len`/`is_empty` contract: true iff the grid holds no satellites.
+    /// (Construction enforces `n >= 2`, so a live `Torus` is never empty.)
     pub fn is_empty(&self) -> bool {
-        false
+        self.n == 0
     }
 
     /// (orbit, index-in-orbit) of a satellite.
@@ -239,5 +241,14 @@ mod tests {
     #[should_panic(expected = "n >= 2")]
     fn rejects_tiny_grid() {
         Torus::new(1);
+    }
+
+    #[test]
+    fn is_empty_agrees_with_len() {
+        for n in [2usize, 3, 10] {
+            let t = Torus::new(n);
+            assert_eq!(t.is_empty(), t.len() == 0);
+            assert!(!t.is_empty());
+        }
     }
 }

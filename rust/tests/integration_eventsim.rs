@@ -1,0 +1,172 @@
+//! Integration tests over the event-driven engine: slotted/event
+//! equivalence on the paper's homogeneous-Poisson setting, end-to-end
+//! traffic scenarios through the same config path the CLI uses, and
+//! cross-engine sanity of the shared report.
+
+use satkit::config::{EngineKind, ScenarioKind, SimConfig};
+use satkit::engine;
+use satkit::eventsim::EventSim;
+use satkit::metrics::Report;
+use satkit::offload::SchemeKind;
+use satkit::sim::Simulation;
+
+/// The acceptance operating point: λ = 25, N = 8, same seed.
+fn paper_point() -> SimConfig {
+    SimConfig {
+        n: 8,
+        slots: 20,
+        lambda: 25.0,
+        seed: 42,
+        ..SimConfig::default()
+    }
+}
+
+#[test]
+fn event_engine_matches_slotted_completion_rate() {
+    // Same seed, same model, paper traffic: the two engines must agree on
+    // completion rate within 5% absolute (the clocks differ, the
+    // admission/offloading physics must not).
+    let cfg = paper_point();
+    let slotted = Simulation::new(&cfg, SchemeKind::Scc).run();
+    let event = EventSim::new(&cfg, SchemeKind::Scc).run();
+    assert!(slotted.total_tasks > 0 && event.total_tasks > 0);
+    let diff = (slotted.completion_rate() - event.completion_rate()).abs();
+    assert!(
+        diff <= 0.05,
+        "slotted {:.4} vs event {:.4} (|diff| = {diff:.4})",
+        slotted.completion_rate(),
+        event.completion_rate()
+    );
+    // arrival volumes must be statistically compatible too: both draw
+    // Poisson(λ·horizon) network-wide (mean 500, sd ≈ 22)
+    let (a, b) = (slotted.total_tasks as f64, event.total_tasks as f64);
+    assert!((a - b).abs() < 6.0 * 500.0f64.sqrt(), "arrivals {a} vs {b}");
+}
+
+#[test]
+fn event_engine_matches_slotted_for_baselines_too() {
+    let cfg = paper_point();
+    for kind in [SchemeKind::Random, SchemeKind::Rrp] {
+        let slotted = Simulation::new(&cfg, kind).run();
+        let event = EventSim::new(&cfg, kind).run();
+        let diff = (slotted.completion_rate() - event.completion_rate()).abs();
+        assert!(
+            diff <= 0.05,
+            "{kind:?}: slotted {:.4} vs event {:.4}",
+            slotted.completion_rate(),
+            event.completion_rate()
+        );
+    }
+}
+
+/// Run one scenario through the exact path the CLI takes: a `SimConfig`
+/// with `engine`/`scenario` set (what `--engine event --scenario <s>`
+/// produces) dispatched via `satkit::engine::run`.
+fn run_scenario(s: ScenarioKind) -> Report {
+    let cfg = SimConfig {
+        n: 6,
+        slots: 15,
+        lambda: 25.0,
+        seed: 7,
+        decision_fraction: 0.15,
+        engine: EngineKind::Event,
+        scenario: s,
+        ..SimConfig::default()
+    };
+    engine::run(&cfg, SchemeKind::Random)
+}
+
+#[test]
+fn all_scenarios_run_end_to_end_with_distinct_load_profiles() {
+    let reports: Vec<(ScenarioKind, Report)> = ScenarioKind::all()
+        .into_iter()
+        .map(|s| (s, run_scenario(s)))
+        .collect();
+    for (s, r) in &reports {
+        assert!(r.total_tasks > 0, "{s:?} generated no tasks");
+        assert_eq!(r.total_tasks, r.completed_tasks + r.dropped_tasks, "{s:?}");
+    }
+    // distinct load profiles: no two scenarios land on the same
+    // per-satellite workload variance
+    for i in 0..reports.len() {
+        for j in (i + 1)..reports.len() {
+            assert_ne!(
+                reports[i].1.workload_variance.to_bits(),
+                reports[j].1.workload_variance.to_bits(),
+                "{:?} and {:?} produced identical load profiles",
+                reports[i].0,
+                reports[j].0
+            );
+        }
+    }
+    // the hotspot concentrates load on a moving subset of areas, so its
+    // spatial imbalance must exceed the homogeneous baseline's
+    let var_of = |k: ScenarioKind| {
+        reports
+            .iter()
+            .find(|(s, _)| *s == k)
+            .map(|(_, r)| r.workload_variance)
+            .unwrap()
+    };
+    assert!(
+        var_of(ScenarioKind::Hotspot) > var_of(ScenarioKind::Poisson),
+        "hotspot variance {:.3e} should exceed poisson {:.3e}",
+        var_of(ScenarioKind::Hotspot),
+        var_of(ScenarioKind::Poisson)
+    );
+}
+
+#[test]
+fn engine_dispatch_honours_config() {
+    let mut cfg = paper_point();
+    cfg.lambda = 5.0;
+    cfg.slots = 8;
+    for kind in EngineKind::all() {
+        cfg.engine = kind;
+        let e = engine::build(&cfg, SchemeKind::Rrp);
+        assert_eq!(e.label(), kind.name());
+        let r = e.run_boxed();
+        assert!(r.total_tasks > 0, "{kind:?}");
+    }
+}
+
+#[test]
+fn event_engine_delay_grows_with_incidence() {
+    // queueing fidelity: continuous-time delays must still rise with λ
+    let mut lo_cfg = paper_point();
+    lo_cfg.lambda = 5.0;
+    let mut hi_cfg = paper_point();
+    hi_cfg.lambda = 50.0;
+    let lo = EventSim::new(&lo_cfg, SchemeKind::Rrp).run();
+    let hi = EventSim::new(&hi_cfg, SchemeKind::Rrp).run();
+    if lo.completed_tasks > 0 && hi.completed_tasks > 0 {
+        assert!(
+            hi.avg_delay_ms >= lo.avg_delay_ms * 0.8,
+            "delay at lambda=50 ({:.1}) collapsed below lambda=5 ({:.1})",
+            hi.avg_delay_ms,
+            lo.avg_delay_ms
+        );
+    }
+}
+
+#[test]
+fn event_engine_dynamics_run_together() {
+    // handover + faults + jitter all active on the event kernel
+    let cfg = SimConfig {
+        n: 6,
+        slots: 12,
+        lambda: 15.0,
+        seed: 11,
+        ..SimConfig::default()
+    };
+    let r = EventSim::new(&cfg, SchemeKind::Scc)
+        .with_handover(satkit::sim::dynamics::Handover {
+            dwell_slots: 3,
+            direction: 1,
+        })
+        .with_faults(0.05, 0.4)
+        .with_jitter(0.2)
+        .run();
+    assert!(r.total_tasks > 0);
+    assert_eq!(r.total_tasks, r.completed_tasks + r.dropped_tasks);
+}

@@ -11,6 +11,7 @@ fn quick() -> exp::SweepOpts {
         seed: 11,
         decision_fraction: 0.15,
         repeats: 1,
+        ..exp::SweepOpts::default()
     }
 }
 

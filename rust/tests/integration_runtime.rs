@@ -11,20 +11,36 @@ use std::path::{Path, PathBuf};
 
 use satkit::runtime::{default_artifact_dir, Engine, ExecPool};
 
+/// Every artifact these tests load; a partial build must skip too, or
+/// the `.unwrap()`s below turn an interrupted `make artifacts` into red.
+const REQUIRED_ARTIFACTS: [&str; 4] = ["classifier", "qnet", "resnet_slice", "vgg_slice"];
+
+/// True iff `dir` holds the complete compiled artifact set.
+fn has_hlo_artifacts(dir: &Path) -> bool {
+    REQUIRED_ARTIFACTS
+        .iter()
+        .all(|name| dir.join(format!("{name}.hlo.txt")).exists())
+}
+
+/// Gate for every PJRT/HLO-dependent test below: returns the artifact
+/// directory, or `None` (after printing a clear skip notice) when the
+/// `artifacts/*.hlo.txt` set is absent or incomplete — a bare checkout
+/// keeps `cargo test -q` green without the Python AOT step.
 fn artifact_dir() -> Option<PathBuf> {
     let dir = default_artifact_dir();
-    if dir.join("qnet.hlo.txt").exists() {
-        Some(dir)
-    } else {
-        // tests run from the crate root; also probe ../artifacts
-        let alt = Path::new("artifacts").to_path_buf();
-        if alt.join("qnet.hlo.txt").exists() {
-            Some(alt)
-        } else {
-            eprintln!("SKIP: artifacts/ not built (run `make artifacts`)");
-            None
-        }
+    if has_hlo_artifacts(&dir) {
+        return Some(dir);
     }
+    // tests run from the crate root; also probe ../artifacts
+    let alt = Path::new("artifacts").to_path_buf();
+    if has_hlo_artifacts(&alt) {
+        return Some(alt);
+    }
+    eprintln!(
+        "SKIP: artifacts/*.hlo.txt missing or incomplete (need {REQUIRED_ARTIFACTS:?}) — \
+         run `make artifacts` to enable the PJRT runtime tests"
+    );
+    None
 }
 
 /// The deterministic probe of python/compile/aot.py: (i % 13) * 0.1.

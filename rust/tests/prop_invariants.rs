@@ -423,3 +423,102 @@ fn prop_admission_monotone_in_load() {
         },
     );
 }
+
+// -------------------------------------------------------- event kernel
+
+#[test]
+fn prop_event_queue_equal_times_pop_in_insertion_order() {
+    use satkit::eventsim::queue::EventQueue;
+    check_no_shrink(
+        "event-queue-fifo-ties",
+        default_cases(),
+        |r| {
+            // times drawn from a tiny bucket set to force many ties
+            let n = r.usize_in(1, 60);
+            (0..n)
+                .map(|_| r.usize_in(0, 4) as f64 * 0.5)
+                .collect::<Vec<f64>>()
+        },
+        |times| {
+            let mut q = EventQueue::new();
+            for (i, &t) in times.iter().enumerate() {
+                q.push(t, i);
+            }
+            let mut popped: Vec<(f64, usize)> = Vec::with_capacity(times.len());
+            while let Some(e) = q.pop() {
+                popped.push(e);
+            }
+            if popped.len() != times.len() {
+                return Err(format!("lost events: {} of {}", popped.len(), times.len()));
+            }
+            for w in popped.windows(2) {
+                let ((t0, i0), (t1, i1)) = (w[0], w[1]);
+                if t1 < t0 {
+                    return Err(format!("time order violated: {t0} before {t1}"));
+                }
+                if t0 == t1 && i1 < i0 {
+                    return Err(format!(
+                        "tie at t={t0} popped out of insertion order: {i0} before {i1}"
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_eventsim_same_seed_identical_reports() {
+    use satkit::config::{EngineKind, ScenarioKind, SimConfig};
+    use satkit::offload::SchemeKind;
+
+    // full engine runs are costly; a few dozen random cases still cover
+    // the (scenario, scheme, size) space well
+    let cases = default_cases().min(32);
+    check_no_shrink(
+        "eventsim-deterministic",
+        cases,
+        |r| {
+            let n = *r.choose(&[4usize, 6]);
+            let lambda = r.f64_in(1.0, 12.0);
+            let slots = r.usize_in(3, 9);
+            let scenario = *r.choose(&ScenarioKind::all());
+            let scheme = *r.choose(&[SchemeKind::Random, SchemeKind::Rrp, SchemeKind::Scc]);
+            let seed = r.next_u64() % 1000;
+            (n, lambda, slots, scenario, scheme, seed)
+        },
+        |&(n, lambda, slots, scenario, scheme, seed)| {
+            let cfg = SimConfig {
+                n,
+                lambda,
+                slots,
+                seed,
+                scenario,
+                engine: EngineKind::Event,
+                ..SimConfig::default()
+            };
+            let a = satkit::engine::run(&cfg, scheme);
+            let b = satkit::engine::run(&cfg, scheme);
+            if a.total_tasks != b.total_tasks {
+                return Err(format!("task counts differ: {} vs {}", a.total_tasks, b.total_tasks));
+            }
+            if a.completed_tasks != b.completed_tasks {
+                return Err("completion counts differ".into());
+            }
+            for (name, x, y) in [
+                ("avg_delay_ms", a.avg_delay_ms, b.avg_delay_ms),
+                ("avg_comp_ms", a.avg_comp_ms, b.avg_comp_ms),
+                ("avg_tran_ms", a.avg_tran_ms, b.avg_tran_ms),
+                ("avg_uplink_ms", a.avg_uplink_ms, b.avg_uplink_ms),
+                ("workload_variance", a.workload_variance, b.workload_variance),
+                ("workload_mean", a.workload_mean, b.workload_mean),
+                ("delay_p95_ms", a.delay_p95_ms, b.delay_p95_ms),
+            ] {
+                if x.to_bits() != y.to_bits() {
+                    return Err(format!("{name} differs: {x} vs {y}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
