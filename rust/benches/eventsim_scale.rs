@@ -1,12 +1,27 @@
 //! Bench: event-kernel scaling. The slotted engine's cost grows with
 //! wall-clock slots regardless of traffic; the event engine's grows with
 //! events (≈ arrivals × L). This target times both engines over a λ ramp
-//! and a horizon ramp so the crossover is visible, then sweeps the four
-//! traffic scenarios at a fixed operating point.
+//! and a horizon ramp so the crossover is visible, sweeps the four
+//! traffic scenarios at a fixed operating point, and finishes with the
+//! million-task streaming-metrics demonstration: with the default
+//! (non-retaining) metrics path, memory stays flat in task count.
 
 use satkit::bench::{bench, quick_mode, section};
 use satkit::config::{EngineKind, ScenarioKind, SimConfig};
 use satkit::offload::SchemeKind;
+
+/// Peak resident set (VmHWM) from procfs, for the memory-flat check.
+fn peak_rss() -> String {
+    std::fs::read_to_string("/proc/self/status")
+        .ok()
+        .and_then(|s| {
+            s.lines()
+                .find(|l| l.starts_with("VmHWM"))
+                .map(|l| l.split_whitespace().skip(1).collect::<Vec<_>>().join(" "))
+        })
+        .map(|v| format!("peak_rss={v}"))
+        .unwrap_or_else(|| "peak_rss=n/a".to_string())
+}
 
 fn cfg(engine: EngineKind, lambda: f64, slots: usize) -> SimConfig {
     SimConfig {
@@ -68,4 +83,38 @@ fn main() {
         });
         println!("{}  workload_var={last_var:.3e}", r.row());
     }
+
+    section("million-task streaming metrics (event engine, Random)");
+    // Heavy-overload operating point: the offered load far exceeds
+    // capacity, so most tasks resolve at admission and the run's cost per
+    // task is dominated by the decision + metrics path — exactly the
+    // streaming-accumulator regime. Quick mode scales the arrival mass
+    // down (~100k tasks) for CI; the full run crosses one million.
+    let (lambda, slots, floor) = if quick {
+        (5_000.0, 20, 50_000u64)
+    } else {
+        (25_000.0, 48, 1_000_000u64)
+    };
+    let c = cfg(EngineKind::Event, lambda, slots);
+    let t0 = std::time::Instant::now();
+    let rep = satkit::engine::run(&c, SchemeKind::Random);
+    let wall = t0.elapsed().as_secs_f64();
+    println!(
+        "tasks={} completed={} drop_rate={:.3} wall={:.2}s ({:.0} tasks/s) {}",
+        rep.total_tasks,
+        rep.completed_tasks,
+        rep.drop_rate(),
+        wall,
+        rep.total_tasks as f64 / wall.max(1e-9),
+        peak_rss()
+    );
+    assert!(
+        rep.outcomes.is_none(),
+        "streaming path must not buffer outcomes"
+    );
+    assert!(
+        rep.total_tasks >= floor,
+        "scale run produced {} tasks, expected >= {floor}",
+        rep.total_tasks
+    );
 }

@@ -1,12 +1,18 @@
 //! Hot-path microbenches (§Perf): the pieces the profiler identified —
-//! Eq. 12 deficit evaluation, GA reproduction, Alg. 1 splitting, one
-//! simulator slot per scheme, and (when artifacts exist) raw PJRT slice
-//! execution latency.
+//! Eq. 12 deficit evaluation (reference and indexed kernels), GA
+//! reproduction, Alg. 1 splitting, one simulator slot per scheme, and
+//! (when artifacts exist) raw PJRT slice execution latency.
+//!
+//! Emits `BENCH_hotpath.json` (override the path with `SATKIT_BENCH_JSON`)
+//! so the perf trajectory is machine-readable; quick mode is recorded in
+//! the file since quick numbers are not comparable to full ones.
 
-use satkit::bench::{bench, quick_mode, section};
+use satkit::bench::{bench, quick_mode, section, write_suite_json, BenchResult};
 use satkit::config::{GaConfig, SimConfig};
 use satkit::dnn::DnnModel;
-use satkit::offload::{make_scheme, OffloadContext, SchemeKind};
+use satkit::offload::{
+    make_scheme, DecisionSpaceIndex, DeficitScratch, Gene, OffloadContext, SchemeKind,
+};
 use satkit::satellite::Satellite;
 use satkit::sim::Simulation;
 use satkit::splitting::balanced_split;
@@ -16,6 +22,11 @@ use satkit::util::rng::Pcg64;
 fn main() {
     let quick = quick_mode();
     let iters = if quick { 20 } else { 200 };
+    let mut all: Vec<BenchResult> = Vec::new();
+    let mut show = |r: BenchResult| {
+        println!("{}", r.row());
+        all.push(r);
+    };
 
     section("Eq.12 deficit evaluation");
     let torus = Torus::new(10);
@@ -38,40 +49,61 @@ fn main() {
         ga: &ga,
     };
     let chrom: Vec<usize> = (0..4).map(|_| *rng.choose(&cands)).collect();
-    let r = bench("deficit(L=4, |A_x|=25)", 100, iters * 50, || {
+    show(bench("deficit(L=4, |A_x|=25) reference", 100, iters * 50, || {
         std::hint::black_box(ctx.deficit(&chrom));
-    });
-    println!("{}", r.row());
+    }));
+
+    // the indexed kernel the GA actually runs on: gene chromosome over the
+    // per-decision hop LUT + cached satellite arrays
+    let index = DecisionSpaceIndex::from_ctx(&ctx);
+    let genes: Vec<Gene> = chrom
+        .iter()
+        .map(|c| cands.iter().position(|x| x == c).unwrap() as Gene)
+        .collect();
+    show(bench("deficit(L=4, |A_x|=25) indexed", 100, iters * 50, || {
+        std::hint::black_box(index.deficit(&genes));
+    }));
+    let mut scratch = DeficitScratch::default();
+    let mut flip = genes.clone();
+    let mut which = 0usize;
+    show(bench(
+        "deficit(L=4, |A_x|=25) incremental (1-gene delta)",
+        100,
+        iters * 50,
+        || {
+            // alternate one gene so every evaluation is a single-gene delta
+            flip[0] = (which % 2) as Gene;
+            which += 1;
+            std::hint::black_box(index.deficit_with(&mut scratch, &flip));
+        },
+    ));
 
     section("scheme decide() per task");
     for kind in SchemeKind::all() {
         let mut scheme = make_scheme(kind, 7);
-        let r = bench(&format!("{} decide", kind.name()), 3, iters, || {
+        show(bench(&format!("{} decide", kind.name()), 3, iters, || {
             std::hint::black_box(scheme.decide(&ctx));
-        });
-        println!("{}", r.row());
+        }));
     }
 
     section("Alg.1 balanced split");
     for model in [DnnModel::Vgg19, DnnModel::Resnet101] {
         let w = model.profile().workloads();
         let (l, _) = model.table1_defaults();
-        let r = bench(&format!("{} split L={l}", model.name()), 10, iters * 10, || {
+        show(bench(&format!("{} split L={l}", model.name()), 10, iters * 10, || {
             std::hint::black_box(balanced_split(&w, l, 1.0));
-        });
-        println!("{}", r.row());
+        }));
     }
 
     section("one simulated slot (N=10, lambda=25)");
     for kind in SchemeKind::all() {
-        let r = bench(&format!("{} slot", kind.name()), 0, if quick { 1 } else { 3 }, || {
+        show(bench(&format!("{} slot", kind.name()), 0, if quick { 1 } else { 3 }, || {
             let cfg = SimConfig {
                 slots: 1,
                 ..SimConfig::default()
             };
             Simulation::new(&cfg, kind).run();
-        });
-        println!("{}", r.row());
+        }));
     }
 
     section("PJRT slice execution (requires artifacts)");
@@ -81,12 +113,16 @@ fn main() {
         engine.load_dir(&dir).unwrap();
         for (name, n_in) in [("vgg_slice", 56 * 56 * 64), ("resnet_slice", 56 * 56 * 256), ("qnet", 256)] {
             let input: Vec<f32> = (0..n_in).map(|i| (i % 13) as f32 * 0.1).collect();
-            let r = bench(&format!("{name} execute"), 2, if quick { 5 } else { 20 }, || {
+            show(bench(&format!("{name} execute"), 2, if quick { 5 } else { 20 }, || {
                 std::hint::black_box(engine.run_f32(name, &[input.clone()]).unwrap());
-            });
-            println!("{}", r.row());
+            }));
         }
     } else {
         println!("skipped (run `make artifacts`)");
     }
+
+    let path =
+        std::env::var("SATKIT_BENCH_JSON").unwrap_or_else(|_| "BENCH_hotpath.json".to_string());
+    write_suite_json(&path, "hotpath", quick, &all).expect("writing bench json");
+    println!("\nwrote {path} ({} results)", all.len());
 }

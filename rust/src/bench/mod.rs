@@ -1,7 +1,10 @@
 //! Bench harness substrate (the offline image has no criterion): a small
 //! wall-clock timing framework with warmup, repetitions, and
-//! mean/stddev/min reporting, used by every target in `rust/benches/`.
+//! mean/stddev/min reporting, used by every target in `rust/benches/`,
+//! plus machine-readable JSON export (`BENCH_<name>.json`) so the perf
+//! trajectory of the hot paths can be tracked across PRs and smoked in CI.
 
+use crate::util::json::Json;
 use crate::util::stats;
 use std::time::Instant;
 
@@ -22,6 +25,41 @@ impl BenchResult {
             self.name, self.mean_ms, self.stddev_ms, self.min_ms, self.iters
         )
     }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::Str(self.name.clone())),
+            ("mean_ms", Json::Num(self.mean_ms)),
+            ("stddev_ms", Json::Num(self.stddev_ms)),
+            ("min_ms", Json::Num(self.min_ms)),
+            ("iters", Json::Num(self.iters as f64)),
+        ])
+    }
+}
+
+/// Assemble a machine-readable bench report: the suite name, whether quick
+/// mode trimmed the workload (quick numbers are NOT comparable to full
+/// ones), and every case's timing.
+pub fn suite_json(suite: &str, quick: bool, results: &[BenchResult]) -> Json {
+    Json::obj(vec![
+        ("bench", Json::Str(suite.to_string())),
+        ("quick", Json::Bool(quick)),
+        (
+            "results",
+            Json::Arr(results.iter().map(|r| r.to_json()).collect()),
+        ),
+    ])
+}
+
+/// Write the suite report to `path` (conventionally `BENCH_<suite>.json`
+/// in the crate root, overridable via `SATKIT_BENCH_JSON`).
+pub fn write_suite_json(
+    path: &str,
+    suite: &str,
+    quick: bool,
+    results: &[BenchResult],
+) -> std::io::Result<()> {
+    std::fs::write(path, suite_json(suite, quick, results).to_string())
 }
 
 /// Time `f` with `warmup` throwaway runs and `iters` measured runs.
@@ -82,5 +120,24 @@ mod tests {
             iters: 3,
         };
         assert!(r.row().contains("ms"));
+    }
+
+    #[test]
+    fn suite_json_parses_back() {
+        let r = BenchResult {
+            name: "SCC decide".into(),
+            mean_ms: 0.5,
+            stddev_ms: 0.01,
+            min_ms: 0.45,
+            iters: 20,
+        };
+        let j = suite_json("hotpath", true, &[r]).to_string();
+        let parsed = Json::parse(&j).unwrap();
+        assert_eq!(parsed.get("bench").unwrap().as_str(), Some("hotpath"));
+        assert_eq!(parsed.get("quick").unwrap(), &Json::Bool(true));
+        let results = parsed.get("results").unwrap().as_arr().unwrap();
+        assert_eq!(results.len(), 1);
+        assert_eq!(results[0].get("name").unwrap().as_str(), Some("SCC decide"));
+        assert_eq!(results[0].get("mean_ms").unwrap().as_f64(), Some(0.5));
     }
 }

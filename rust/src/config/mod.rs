@@ -224,6 +224,12 @@ pub struct SimConfig {
     pub engine: EngineKind,
     /// Traffic scenario for the event engine (ignored by the slotted one).
     pub scenario: ScenarioKind,
+    /// Keep the full per-task `TaskOutcome` buffer in the report (memory
+    /// grows with task count). Default false: metrics stream into
+    /// constant-size accumulators so million-task runs stay flat in
+    /// memory; enable only when plots/traces need per-task data
+    /// (`--retain-outcomes` on the CLI, `retain_outcomes = true` in TOML).
+    pub retain_outcomes: bool,
     pub ga: GaConfig,
     pub comm: CommConfig,
     pub satellite: SatelliteConfig,
@@ -246,6 +252,7 @@ impl Default for SimConfig {
             seed: 42,
             engine: EngineKind::Slotted,
             scenario: ScenarioKind::Poisson,
+            retain_outcomes: false,
             ga: GaConfig::default(),
             comm: CommConfig::default(),
             satellite: SatelliteConfig::default(),
@@ -346,6 +353,9 @@ impl SimConfig {
         if let Some(s) = doc.get_str("", "scenario") {
             d.scenario = ScenarioKind::parse(&s)?;
         }
+        if let Some(b) = doc.get_bool("", "retain_outcomes") {
+            d.retain_outcomes = b;
+        }
         doc.read_f64("ga", "theta1", &mut d.ga.theta1);
         doc.read_f64("ga", "theta2", &mut d.ga.theta2);
         doc.read_f64("ga", "theta3", &mut d.ga.theta3);
@@ -411,6 +421,9 @@ impl SimConfig {
         }
         if let Some(s) = args.get("scenario") {
             self.scenario = ScenarioKind::parse(s)?;
+        }
+        if args.has_flag("retain-outcomes") {
+            self.retain_outcomes = true;
         }
         Ok(())
     }
@@ -540,13 +553,15 @@ capacity_mflops = 6000.0
         }
         assert!(ScenarioKind::parse("solar-storm").is_err());
 
-        let text = "engine = \"event\"\nscenario = \"hotspot\"\n";
+        let text = "engine = \"event\"\nscenario = \"hotspot\"\nretain_outcomes = true\n";
         let c = SimConfig::from_toml(text).unwrap();
         assert_eq!(c.engine, EngineKind::Event);
         assert_eq!(c.scenario, ScenarioKind::Hotspot);
+        assert!(c.retain_outcomes);
+        assert!(!SimConfig::default().retain_outcomes);
 
         let args = crate::util::cli::Args::parse(
-            "x --engine event --scenario bursty"
+            "x --engine event --scenario bursty --retain-outcomes"
                 .split_whitespace()
                 .map(String::from),
         );
@@ -554,6 +569,7 @@ capacity_mflops = 6000.0
         d.apply_args(&args).unwrap();
         assert_eq!(d.engine, EngineKind::Event);
         assert_eq!(d.scenario, ScenarioKind::Bursty);
+        assert!(d.retain_outcomes);
     }
 
     #[test]

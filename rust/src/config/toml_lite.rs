@@ -67,6 +67,13 @@ impl TomlDoc {
         }
     }
 
+    pub fn get_bool(&self, section: &str, key: &str) -> Option<bool> {
+        match self.get(section, key) {
+            Some(TomlValue::Bool(b)) => Some(*b),
+            _ => None,
+        }
+    }
+
     pub fn get_f64(&self, section: &str, key: &str) -> Option<f64> {
         match self.get(section, key) {
             Some(TomlValue::Float(f)) => Some(*f),

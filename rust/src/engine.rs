@@ -88,4 +88,29 @@ mod tests {
         let r = run(&c, SchemeKind::Rrp);
         assert!(r.total_tasks > 0);
     }
+
+    #[test]
+    fn metrics_stream_by_default_and_retain_on_flag() {
+        for kind in EngineKind::all() {
+            // default: streaming — no per-task buffer in the report
+            let streamed = run(&cfg(kind), SchemeKind::Random);
+            assert!(streamed.outcomes.is_none(), "{kind:?} buffered by default");
+
+            // flag: full outcomes retained, one per task, same headline stats
+            let mut c = cfg(kind);
+            c.retain_outcomes = true;
+            let retained = run(&c, SchemeKind::Random);
+            let outs = retained.outcomes.as_ref().expect("retained outcomes");
+            assert_eq!(outs.len() as u64, retained.total_tasks);
+            assert_eq!(streamed.total_tasks, retained.total_tasks, "{kind:?}");
+            assert_eq!(
+                streamed.avg_delay_ms.to_bits(),
+                retained.avg_delay_ms.to_bits(),
+                "{kind:?}: retaining must not change streamed statistics"
+            );
+            // retained buffer agrees with the streamed counters
+            let completed = outs.iter().filter(|o| o.completed()).count() as u64;
+            assert_eq!(completed, retained.completed_tasks);
+        }
+    }
 }

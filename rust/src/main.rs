@@ -76,6 +76,7 @@ OPTIONS
   --scenario T    poisson|diurnal|bursty|hotspot (event engine traffic)
   --seed X        RNG seed      --repeats R    seeds averaged per point
   --quick         smaller slot budget          --json FILE   export rows
+  --retain-outcomes  buffer per-task outcomes (metrics stream by default)
   --requests K    serve: number of requests    --workers W   exec workers";
 
 fn load_cfg(args: &Args) -> Result<SimConfig, String> {

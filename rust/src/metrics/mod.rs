@@ -1,10 +1,20 @@
 //! Delay / drop accounting (§III-D, Eq. 5–9) and the three evaluation
 //! metrics of §V-B: task completion rate, total average delay, and the
 //! variance of total workload assigned to each satellite.
+//!
+//! Metrics **stream**: each [`TaskOutcome`] folds into constant-size
+//! accumulators (Welford count/mean/M2 per delay component plus a
+//! fixed-size log-spaced delay histogram for percentiles) the moment it is
+//! recorded, so memory stays flat in task count and million-task runs
+//! don't buffer millions of outcomes. Full outcomes are retained only
+//! behind the [`MetricsCollector::retaining`] flag
+//! (`SimConfig::retain_outcomes` / `--retain-outcomes`), for consumers
+//! that need per-task data (plots, traces).
 
 use crate::topology::SatId;
 use crate::util::json::Json;
 use crate::util::stats;
+use crate::util::stats::Welford;
 
 /// Outcome of one task after splitting + offloading + execution.
 #[derive(Clone, Debug)]
@@ -51,10 +61,99 @@ pub struct SatelliteTotals {
     pub segments_rejected: u64,
 }
 
-/// Collects everything a simulation run produces.
+/// Fixed-size log-spaced histogram of per-task delays [ms] for streaming
+/// percentile estimates: [`HIST_BINS`] bins over
+/// `[HIST_MIN_MS, HIST_MAX_MS]` give ≈ ±1.1% relative resolution, with the
+/// extreme bins absorbing under/overflow. Memory is constant in task
+/// count — the piece that lets million-task runs keep percentiles without
+/// buffering every outcome.
+#[derive(Clone, Debug)]
+pub struct DelayHistogram {
+    counts: Vec<u64>,
+    total: u64,
+}
+
+/// Bin count (8 KiB of u64 counters).
+pub const HIST_BINS: usize = 1024;
+/// Lower edge [ms]; smaller samples land in bin 0.
+pub const HIST_MIN_MS: f64 = 1e-3;
+/// Upper edge [ms]; larger samples land in the last bin.
+pub const HIST_MAX_MS: f64 = 1e7;
+
+impl Default for DelayHistogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl DelayHistogram {
+    pub fn new() -> DelayHistogram {
+        DelayHistogram {
+            counts: vec![0; HIST_BINS],
+            total: 0,
+        }
+    }
+
+    fn bin_of(x_ms: f64) -> usize {
+        if !(x_ms > HIST_MIN_MS) {
+            return 0; // ≤ lower edge (and NaN) → first bin
+        }
+        if x_ms >= HIST_MAX_MS {
+            return HIST_BINS - 1;
+        }
+        let f = (x_ms / HIST_MIN_MS).ln() / (HIST_MAX_MS / HIST_MIN_MS).ln();
+        ((f * HIST_BINS as f64) as usize).min(HIST_BINS - 1)
+    }
+
+    pub fn record(&mut self, x_ms: f64) {
+        self.counts[Self::bin_of(x_ms)] += 1;
+        self.total += 1;
+    }
+
+    pub fn count(&self) -> u64 {
+        self.total
+    }
+
+    /// Percentile `p ∈ [0, 100]`: the log-midpoint of the bin holding the
+    /// rank-p sample (0.0 when empty). Resolution is one bin width,
+    /// ≈ ±1.1% relative.
+    pub fn percentile(&self, p: f64) -> f64 {
+        if self.total == 0 {
+            return 0.0;
+        }
+        let rank = ((p / 100.0).clamp(0.0, 1.0) * (self.total - 1) as f64).round() as u64;
+        let mut seen = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            if c == 0 {
+                continue;
+            }
+            seen += c;
+            if seen > rank {
+                let mid = (i as f64 + 0.5) / HIST_BINS as f64;
+                return HIST_MIN_MS * ((HIST_MAX_MS / HIST_MIN_MS).ln() * mid).exp();
+            }
+        }
+        HIST_MAX_MS
+    }
+}
+
+/// Collects everything a simulation run produces, streaming each outcome
+/// into constant-size accumulators at record time.
 #[derive(Clone, Debug)]
 pub struct MetricsCollector {
-    pub outcomes: Vec<TaskOutcome>,
+    total_tasks: u64,
+    completed_tasks: u64,
+    /// Welford accumulators over COMPLETED tasks [ms].
+    delay_ms: Welford,
+    comp_ms: Welford,
+    tran_ms: Welford,
+    uplink_ms: Welford,
+    delay_hist: DelayHistogram,
+    last_finish_s: f64,
+    /// Full outcome buffer, kept only when `retaining(true)` — the flag
+    /// consumers (plots/traces) opt into; `None` keeps memory flat in
+    /// task count.
+    retained: Option<Vec<TaskOutcome>>,
     pub per_sat: Vec<SatelliteTotals>,
     pub slots_run: usize,
 }
@@ -62,14 +161,54 @@ pub struct MetricsCollector {
 impl MetricsCollector {
     pub fn new(n_sats: usize) -> MetricsCollector {
         MetricsCollector {
-            outcomes: Vec::new(),
+            total_tasks: 0,
+            completed_tasks: 0,
+            delay_ms: Welford::default(),
+            comp_ms: Welford::default(),
+            tran_ms: Welford::default(),
+            uplink_ms: Welford::default(),
+            delay_hist: DelayHistogram::new(),
+            last_finish_s: 0.0,
+            retained: None,
             per_sat: vec![SatelliteTotals::default(); n_sats],
             slots_run: 0,
         }
     }
 
+    /// Builder: keep the full `TaskOutcome` buffer (memory grows with task
+    /// count — only for consumers that need per-task data).
+    pub fn retaining(mut self, retain: bool) -> MetricsCollector {
+        self.retained = if retain { Some(Vec::new()) } else { None };
+        self
+    }
+
     pub fn record(&mut self, o: TaskOutcome) {
-        self.outcomes.push(o);
+        self.total_tasks += 1;
+        if o.finish_time_s > self.last_finish_s {
+            self.last_finish_s = o.finish_time_s;
+        }
+        if o.completed() {
+            self.completed_tasks += 1;
+            let d_ms = o.total_delay_s() * 1e3;
+            self.delay_ms.push(d_ms);
+            self.delay_hist.record(d_ms);
+            self.comp_ms.push(o.comp_delay_s * 1e3);
+            self.tran_ms.push(o.tran_delay_s * 1e3);
+            self.uplink_ms.push(o.uplink_delay_s * 1e3);
+        }
+        if let Some(buf) = &mut self.retained {
+            buf.push(o);
+        }
+    }
+
+    /// Outcomes recorded so far — `Some` only under `retaining(true)`.
+    pub fn outcomes(&self) -> Option<&[TaskOutcome]> {
+        self.retained.as_deref()
+    }
+
+    /// Tasks recorded so far (streaming counter).
+    pub fn total_recorded(&self) -> u64 {
+        self.total_tasks
     }
 
     pub fn sat(&mut self, id: SatId) -> &mut SatelliteTotals {
@@ -124,52 +263,31 @@ pub struct Report {
     /// with the event engine this shows how far past the horizon the
     /// in-flight drain ran.
     pub last_finish_s: f64,
+    /// Full per-task outcomes — `Some` only when the run was collected
+    /// with `SimConfig::retain_outcomes` (plots/traces); `None` on the
+    /// default streaming path.
+    pub outcomes: Option<Vec<TaskOutcome>>,
 }
 
 impl Report {
     fn from_collector(c: MetricsCollector) -> Report {
-        let total = c.outcomes.len() as u64;
-        let completed: Vec<&TaskOutcome> =
-            c.outcomes.iter().filter(|o| o.completed()).collect();
-        let delays_ms: Vec<f64> = completed
-            .iter()
-            .map(|o| o.total_delay_s() * 1e3)
-            .collect();
         let assigned: Vec<f64> = c.per_sat.iter().map(|s| s.assigned_mflops).collect();
         Report {
-            total_tasks: total,
-            completed_tasks: completed.len() as u64,
-            dropped_tasks: total - completed.len() as u64,
-            avg_delay_ms: stats::mean(&delays_ms),
-            avg_comp_ms: stats::mean(
-                &completed
-                    .iter()
-                    .map(|o| o.comp_delay_s * 1e3)
-                    .collect::<Vec<_>>(),
-            ),
-            avg_tran_ms: stats::mean(
-                &completed
-                    .iter()
-                    .map(|o| o.tran_delay_s * 1e3)
-                    .collect::<Vec<_>>(),
-            ),
-            avg_uplink_ms: stats::mean(
-                &completed
-                    .iter()
-                    .map(|o| o.uplink_delay_s * 1e3)
-                    .collect::<Vec<_>>(),
-            ),
+            total_tasks: c.total_tasks,
+            completed_tasks: c.completed_tasks,
+            dropped_tasks: c.total_tasks - c.completed_tasks,
+            avg_delay_ms: c.delay_ms.mean(),
+            avg_comp_ms: c.comp_ms.mean(),
+            avg_tran_ms: c.tran_ms.mean(),
+            avg_uplink_ms: c.uplink_ms.mean(),
             workload_variance: stats::variance(&assigned),
             workload_mean: stats::mean(&assigned),
-            delay_p50_ms: stats::percentile(&delays_ms, 50.0),
-            delay_p95_ms: stats::percentile(&delays_ms, 95.0),
+            delay_p50_ms: c.delay_hist.percentile(50.0),
+            delay_p95_ms: c.delay_hist.percentile(95.0),
             slots_run: 0,
             horizon_s: 0.0,
-            last_finish_s: c
-                .outcomes
-                .iter()
-                .map(|o| o.finish_time_s)
-                .fold(0.0, f64::max),
+            last_finish_s: c.last_finish_s,
+            outcomes: c.retained,
         }
     }
 
@@ -341,6 +459,104 @@ mod tests {
         let r = c.finish_continuous(3.0);
         assert!((r.last_finish_s - 5.0).abs() < 1e-12);
         assert!((r.drain_secs() - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn streaming_default_retains_nothing() {
+        let mut c = MetricsCollector::new(1);
+        for i in 0..1000 {
+            c.record(outcome(i, 3, 2, 1.0 + i as f64 * 1e-3, 0.1));
+        }
+        assert!(c.outcomes().is_none());
+        assert_eq!(c.total_recorded(), 1000);
+        let r = c.finish(10);
+        assert_eq!(r.total_tasks, 1000);
+        assert!(r.outcomes.is_none());
+    }
+
+    #[test]
+    fn retaining_keeps_full_outcomes() {
+        let mut c = MetricsCollector::new(1).retaining(true);
+        c.record(outcome(0, 3, 2, 1.0, 0.2));
+        c.record(outcome(1, 1, 2, 9.0, 0.0));
+        assert_eq!(c.outcomes().unwrap().len(), 2);
+        let r = c.finish(1);
+        let outs = r.outcomes.as_ref().unwrap();
+        assert_eq!(outs.len(), 2);
+        assert_eq!(outs[1].drop_point, 1);
+    }
+
+    #[test]
+    fn streaming_means_match_batch() {
+        let mut c = MetricsCollector::new(1);
+        let mut delays = Vec::new();
+        for i in 0..5000u64 {
+            let comp = 0.5 + (i as f64).sin().abs();
+            let tran = 0.1 * ((i % 7) as f64);
+            delays.push((comp + tran) * 1e3);
+            c.record(outcome(i, 3, 2, comp, tran));
+        }
+        let r = c.finish(1);
+        let batch = stats::mean(&delays);
+        assert!(
+            (r.avg_delay_ms - batch).abs() < 1e-9 * batch,
+            "streaming {} vs batch {batch}",
+            r.avg_delay_ms
+        );
+    }
+
+    #[test]
+    fn histogram_percentiles_approximate_exact() {
+        let mut h = DelayHistogram::new();
+        let mut xs = Vec::new();
+        // log-spread sample over 4 decades
+        for i in 0..10_000 {
+            let x = 10f64.powf(0.5 + 3.5 * (i as f64 / 10_000.0));
+            h.record(x);
+            xs.push(x);
+        }
+        for p in [10.0, 50.0, 90.0, 95.0, 99.0] {
+            let exact = stats::percentile(&xs, p);
+            let est = h.percentile(p);
+            assert!(
+                (est - exact).abs() <= 0.03 * exact,
+                "p{p}: est {est} vs exact {exact}"
+            );
+        }
+        assert_eq!(h.count(), 10_000);
+    }
+
+    #[test]
+    fn histogram_edges_are_safe() {
+        let mut h = DelayHistogram::new();
+        h.record(0.0);
+        h.record(-1.0);
+        h.record(f64::NAN);
+        h.record(1e12);
+        assert_eq!(h.count(), 4);
+        assert!(h.percentile(0.0) > 0.0);
+        assert!(h.percentile(100.0) <= HIST_MAX_MS);
+        assert_eq!(DelayHistogram::new().percentile(50.0), 0.0);
+    }
+
+    #[test]
+    fn memory_flat_under_many_records() {
+        // streaming path: a million records must not grow any buffer —
+        // the collector's only growable store is the (disabled) retained
+        // buffer; everything else is fixed-size accumulators.
+        let mut c = MetricsCollector::new(4);
+        for i in 0..1_000_000u64 {
+            let dp = if i % 10 == 0 { 1 } else { 3 };
+            c.record(outcome(i, dp, 2, 0.8, 0.05));
+        }
+        assert!(c.outcomes().is_none());
+        assert_eq!(c.total_recorded(), 1_000_000);
+        let r = c.finish(100);
+        assert_eq!(r.total_tasks, 1_000_000);
+        assert_eq!(r.completed_tasks, 900_000);
+        assert!((r.avg_delay_ms - 850.0).abs() < 1e-6);
+        // p50 within histogram resolution of the single delay value
+        assert!((r.delay_p50_ms - 850.0).abs() < 0.02 * 850.0);
     }
 
     #[test]

@@ -145,9 +145,10 @@ impl DqnScheme {
 }
 
 impl OffloadScheme for DqnScheme {
-    fn decide(&mut self, ctx: &OffloadContext) -> Vec<SatId> {
+    fn decide_into(&mut self, ctx: &OffloadContext, out: &mut Vec<SatId>) {
         let l = ctx.segments.len();
-        let mut chrom = Vec::with_capacity(l);
+        out.clear();
+        out.reserve(l);
         self.pending.clear();
         let mut prev = ctx.origin;
         for k in 0..l {
@@ -165,7 +166,7 @@ impl OffloadScheme for DqnScheme {
             };
             let chosen = acts[action];
             self.pending.push((state, action, Vec::new()));
-            chrom.push(chosen);
+            out.push(chosen);
             prev = chosen;
         }
         // fill next_state links (s_{k+1} observed from the chosen position)
@@ -174,7 +175,6 @@ impl OffloadScheme for DqnScheme {
             self.pending[k].2 = next;
         }
         self.epsilon = (self.epsilon * self.epsilon_decay).max(self.epsilon_min);
-        chrom
     }
 
     fn observe(

@@ -17,21 +17,130 @@
 //! Early stop (line 3): when the best deficit improves by ≤ ε between
 //! iterations. Complexity `O(N_iter · (N_summ + N_K)² · L)` as analysed
 //! in §IV-B.
+//!
+//! ## The indexed hot path
+//!
+//! `decide` runs once per admitted task, and each run performs hundreds of
+//! Eq. 12 evaluations — at heavy traffic this kernel, not the DNN,
+//! dominates wall-clock. The implementation therefore works on
+//! candidate-local [`Gene`]s over a per-decision [`DecisionSpaceIndex`]
+//! (hop LUT + cached satellite state), with three GA-internal
+//! optimizations that preserve **bit-for-bit identical decisions per
+//! seed** (enforced by `tests/prop_invariants.rs`):
+//!
+//! * **scratch-buffer reuse** — chromosome buffers are recycled through a
+//!   free pool, so steady-state iterations allocate nothing;
+//! * **seen-chromosome memo** — duplicate splices (common once the
+//!   population converges) return their cached deficit instead of
+//!   re-walking Eq. 12; the memo key is the exact `u128`-packed gene
+//!   vector, so a hit can never alias a different chromosome;
+//! * **incremental deficit deltas** — [`DeficitScratch`] re-derives only
+//!   the per-position terms whose genes changed between consecutive
+//!   evaluations (one division instead of L for a single-gene
+//!   difference), then reduces in the reference operation order.
+//!
+//! The paper-literal implementation is retained as
+//! [`GaScheme::decide_reference`], the equivalence oracle.
 
-use super::{OffloadContext, OffloadScheme, SchemeKind};
+use super::{
+    DecisionSpaceIndex, DeficitScratch, Gene, OffloadContext, OffloadScheme, SchemeKind,
+    MEMO_MAX_L,
+};
 use crate::topology::SatId;
 use crate::util::rng::Pcg64;
+use std::collections::HashMap;
+use std::hash::{BuildHasherDefault, Hasher};
+
+/// Cheap multiply-xor hasher for the packed-chromosome memo. The key is an
+/// exact encoding of the gene vector (no collision risk — equality is
+/// checked by the map); SipHash would dominate the lookup cost at this key
+/// size, and the map is only ever probed, never iterated, so hash quality
+/// beyond bucket spread is irrelevant.
+#[derive(Default)]
+struct PackHasher(u64);
+
+impl Hasher for PackHasher {
+    fn finish(&self) -> u64 {
+        self.0
+    }
+
+    fn write(&mut self, bytes: &[u8]) {
+        // generic fallback (FNV-1a); the memo key path uses write_u128
+        for &b in bytes {
+            self.0 = (self.0 ^ b as u64).wrapping_mul(0x0000_0100_0000_01b3);
+        }
+    }
+
+    fn write_u128(&mut self, x: u128) {
+        const K1: u64 = 0x9e37_79b9_7f4a_7c15;
+        const K2: u64 = 0xff51_afd7_ed55_8ccd;
+        let h = (x as u64).wrapping_mul(K1) ^ ((x >> 64) as u64).wrapping_mul(K2);
+        self.0 = h ^ (h >> 29);
+    }
+}
+
+type Memo = HashMap<u128, f64, BuildHasherDefault<PackHasher>>;
+
+/// Pack a gene chromosome (L ≤ [`MEMO_MAX_L`]) into its exact memo key.
+#[inline]
+fn pack(genes: &[Gene]) -> u128 {
+    debug_assert!(genes.len() <= MEMO_MAX_L);
+    let mut key = 0u128;
+    for &g in genes {
+        key = (key << 16) | g as u128;
+    }
+    key
+}
 
 pub struct GaScheme {
     rng: Pcg64,
     /// Scratch population buffer, reused across decisions (hot path).
     pop: Vec<Individual>,
+    /// Recycled chromosome buffers (no per-iteration `Vec` churn).
+    free: Vec<Vec<Gene>>,
+    /// Per-decision candidate index (buffers reused across decisions).
+    index: DecisionSpaceIndex,
+    /// Incremental-deficit term cache.
+    scratch: DeficitScratch,
+    /// deficit memo keyed on the packed chromosome (cleared per decision:
+    /// satellite loads change between tasks).
+    memo: Memo,
 }
 
 #[derive(Clone, Debug)]
 struct Individual {
-    chrom: Vec<SatId>,
+    chrom: Vec<Gene>,
     deficit: f64,
+}
+
+/// Memoized deficit evaluation (free function over disjoint `GaScheme`
+/// fields so the borrow checker accepts calls while parent chromosomes are
+/// borrowed from the population).
+fn eval(index: &DecisionSpaceIndex, scratch: &mut DeficitScratch, memo: &mut Memo, genes: &[Gene]) -> f64 {
+    if genes.len() <= MEMO_MAX_L {
+        let key = pack(genes);
+        if let Some(&d) = memo.get(&key) {
+            return d;
+        }
+        let d = index.deficit_with(scratch, genes);
+        memo.insert(key, d);
+        d
+    } else {
+        index.deficit_with(scratch, genes)
+    }
+}
+
+/// Draw a fresh random chromosome into a recycled buffer. Consumes the RNG
+/// exactly like the reference's `rng.choose(candidates)` per gene, so the
+/// indexed and reference paths stay in RNG lockstep.
+fn random_genes(rng: &mut Pcg64, free: &mut Vec<Vec<Gene>>, n_cands: usize, l: usize) -> Vec<Gene> {
+    let mut chrom = free.pop().unwrap_or_default();
+    chrom.clear();
+    chrom.reserve(l);
+    for _ in 0..l {
+        chrom.push(rng.usize_in(0, n_cands) as Gene);
+    }
+    chrom
 }
 
 impl GaScheme {
@@ -39,13 +148,11 @@ impl GaScheme {
         GaScheme {
             rng: Pcg64::new(seed, 0x6A61),
             pop: Vec::new(),
+            free: Vec::new(),
+            index: DecisionSpaceIndex::new(),
+            scratch: DeficitScratch::default(),
+            memo: Memo::default(),
         }
-    }
-
-    fn random_chrom(&mut self, ctx: &OffloadContext) -> Vec<SatId> {
-        (0..ctx.segments.len())
-            .map(|_| *self.rng.choose(ctx.candidates))
-            .collect()
     }
 
     /// The paper's pairwise heuristic reproduction: for parents C and D
@@ -53,7 +160,16 @@ impl GaScheme {
     /// splicing the parents at that gene. We take, per parent pair, the
     /// first shared-gene index pair (scanning i then j) — summoning every
     /// (i, j) pair would square the population within one iteration.
-    fn reproduce(c: &[SatId], d: &[SatId]) -> Option<(Vec<SatId>, Vec<SatId>)> {
+    ///
+    /// Writes into caller-provided buffers (cleared first) and reports
+    /// whether a shared gene was found. Generic so the indexed kernel
+    /// (genes) and the reference oracle (satellite ids) share one splice.
+    pub fn reproduce_into<T: Copy + PartialEq>(
+        c: &[T],
+        d: &[T],
+        a: &mut Vec<T>,
+        b: &mut Vec<T>,
+    ) -> bool {
         let l = c.len();
         for i in 0..l {
             for j in 0..l {
@@ -62,43 +178,134 @@ impl GaScheme {
                 }
                 // Offspring A: prefix of D through j, then C after i,
                 // wrapping over C cyclically to restore length L.
-                let mut a = Vec::with_capacity(l);
+                a.clear();
                 a.extend_from_slice(&d[..=j]);
                 let mut k = i + 1;
                 while a.len() < l {
                     a.push(c[k % l]);
                     k += 1;
                 }
-                // Offspring B: suffix of D ending at j-1 (taken cyclically
-                // backwards), then C from i to the end.
-                let mut b = Vec::with_capacity(l);
-                let take = l - (l - i); // = i genes before c_i
-                // d-window of length `take` ending just before j (cyclic)
+                // Offspring B: the i genes of D just before d_j (taken
+                // cyclically backwards), then C from the shared gene on.
+                b.clear();
+                let take = i;
                 for t in 0..take {
                     let idx = (j + l - take + t) % l;
                     b.push(d[idx]);
                 }
                 b.extend_from_slice(&c[i..]);
                 debug_assert_eq!(b.len(), l);
-                return Some((a, b));
+                return true;
             }
         }
-        None
+        false
     }
-}
 
-impl OffloadScheme for GaScheme {
-    fn decide(&mut self, ctx: &OffloadContext) -> Vec<SatId> {
+    /// Allocating convenience wrapper over [`GaScheme::reproduce_into`].
+    pub fn reproduce<T: Copy + PartialEq>(c: &[T], d: &[T]) -> Option<(Vec<T>, Vec<T>)> {
+        let mut a = Vec::with_capacity(c.len());
+        let mut b = Vec::with_capacity(c.len());
+        if Self::reproduce_into(c, d, &mut a, &mut b) {
+            Some((a, b))
+        } else {
+            None
+        }
+    }
+
+    /// The paper-literal Algorithm 2 over raw satellite ids and the
+    /// reference [`OffloadContext::deficit`], kept as the equivalence
+    /// oracle for the indexed kernel: `decide` must return the identical
+    /// sequence per seed (enforced by `tests/prop_invariants.rs`).
+    pub fn decide_reference(&mut self, ctx: &OffloadContext) -> Vec<SatId> {
+        struct RefInd {
+            chrom: Vec<SatId>,
+            deficit: f64,
+        }
         let g = ctx.ga;
         let l = ctx.segments.len();
         if l == 0 {
             return Vec::new();
         }
         // Line 1: primitive group of N_ini random chromosomes.
-        self.pop.clear();
+        let mut pop: Vec<RefInd> = Vec::new();
         for _ in 0..g.n_ini {
-            let chrom = self.random_chrom(ctx);
+            let chrom: Vec<SatId> =
+                (0..l).map(|_| *self.rng.choose(ctx.candidates)).collect();
             let deficit = ctx.deficit(&chrom);
+            pop.push(RefInd { chrom, deficit });
+        }
+        let mut best_prev = f64::INFINITY;
+
+        for iter in 0..g.n_iter {
+            let best_now = pop.iter().map(|i| i.deficit).fold(f64::INFINITY, f64::min);
+            // Line 3: early stop on convergence.
+            if iter != 0 && (best_prev - best_now).abs() <= g.epsilon {
+                break;
+            }
+            best_prev = best_now;
+
+            // Line 6: reproduce distinct pairs via the heuristic splice.
+            let parents = pop.len();
+            let mut children: Vec<RefInd> = Vec::new();
+            for a in 0..parents {
+                for b in (a + 1)..parents {
+                    if pop[a].chrom == pop[b].chrom {
+                        continue;
+                    }
+                    if let Some((x, y)) = Self::reproduce(&pop[a].chrom, &pop[b].chrom) {
+                        let dx = ctx.deficit(&x);
+                        let dy = ctx.deficit(&y);
+                        children.push(RefInd { chrom: x, deficit: dx });
+                        children.push(RefInd { chrom: y, deficit: dy });
+                    }
+                }
+            }
+            pop.extend(children);
+
+            // Line 7: eliminate highest-deficit individuals until ≤ N_K.
+            if pop.len() > g.n_k {
+                pop.sort_by(|a, b| a.deficit.partial_cmp(&b.deficit).unwrap());
+                pop.truncate(g.n_k);
+            }
+
+            // Line 8: summon N_summ fresh chromosomes.
+            for _ in 0..g.n_summ {
+                let chrom: Vec<SatId> =
+                    (0..l).map(|_| *self.rng.choose(ctx.candidates)).collect();
+                let deficit = ctx.deficit(&chrom);
+                pop.push(RefInd { chrom, deficit });
+            }
+        }
+
+        // Line 10: the chromosome with the lowest deficit.
+        pop.iter()
+            .min_by(|a, b| a.deficit.partial_cmp(&b.deficit).unwrap())
+            .map(|i| i.chrom.clone())
+            .expect("population non-empty")
+    }
+}
+
+impl OffloadScheme for GaScheme {
+    fn decide_into(&mut self, ctx: &OffloadContext, out: &mut Vec<SatId>) {
+        out.clear();
+        let g = ctx.ga;
+        let l = ctx.segments.len();
+        if l == 0 {
+            return;
+        }
+        // Per-decision kernel state: candidate index, term cache, memo.
+        self.index.build(ctx);
+        self.scratch.invalidate();
+        self.memo.clear();
+        let n_cands = ctx.candidates.len();
+
+        // Line 1: primitive group of N_ini random chromosomes.
+        for ind in self.pop.drain(..) {
+            self.free.push(ind.chrom);
+        }
+        for _ in 0..g.n_ini {
+            let chrom = random_genes(&mut self.rng, &mut self.free, n_cands, l);
+            let deficit = eval(&self.index, &mut self.scratch, &mut self.memo, &chrom);
             self.pop.push(Individual { chrom, deficit });
         }
         let mut best_prev = f64::INFINITY;
@@ -116,46 +323,59 @@ impl OffloadScheme for GaScheme {
             best_prev = best_now;
 
             // Line 6: reproduce distinct pairs via the heuristic splice.
+            // Children append after index `parents`, so parent reads stay
+            // confined to the pre-reproduction population exactly like the
+            // reference's separate `children` vector.
             let parents = self.pop.len();
-            let mut children: Vec<Individual> = Vec::new();
             for a in 0..parents {
                 for b in (a + 1)..parents {
                     if self.pop[a].chrom == self.pop[b].chrom {
                         continue;
                     }
-                    if let Some((x, y)) =
-                        Self::reproduce(&self.pop[a].chrom, &self.pop[b].chrom)
-                    {
-                        let dx = ctx.deficit(&x);
-                        let dy = ctx.deficit(&y);
-                        children.push(Individual { chrom: x, deficit: dx });
-                        children.push(Individual { chrom: y, deficit: dy });
+                    let mut x = self.free.pop().unwrap_or_default();
+                    let mut y = self.free.pop().unwrap_or_default();
+                    if Self::reproduce_into(
+                        &self.pop[a].chrom,
+                        &self.pop[b].chrom,
+                        &mut x,
+                        &mut y,
+                    ) {
+                        let dx = eval(&self.index, &mut self.scratch, &mut self.memo, &x);
+                        let dy = eval(&self.index, &mut self.scratch, &mut self.memo, &y);
+                        self.pop.push(Individual { chrom: x, deficit: dx });
+                        self.pop.push(Individual { chrom: y, deficit: dy });
+                    } else {
+                        self.free.push(x);
+                        self.free.push(y);
                     }
                 }
             }
-            self.pop.extend(children);
 
-            // Line 7: eliminate highest-deficit individuals until ≤ N_K.
+            // Line 7: eliminate highest-deficit individuals until ≤ N_K
+            // (stable sort on bit-identical keys ⇒ identical survivors).
             if self.pop.len() > g.n_k {
                 self.pop
                     .sort_by(|a, b| a.deficit.partial_cmp(&b.deficit).unwrap());
-                self.pop.truncate(g.n_k);
+                for ind in self.pop.drain(g.n_k..) {
+                    self.free.push(ind.chrom);
+                }
             }
 
             // Line 8: summon N_summ fresh chromosomes.
             for _ in 0..g.n_summ {
-                let chrom = self.random_chrom(ctx);
-                let deficit = ctx.deficit(&chrom);
+                let chrom = random_genes(&mut self.rng, &mut self.free, n_cands, l);
+                let deficit = eval(&self.index, &mut self.scratch, &mut self.memo, &chrom);
                 self.pop.push(Individual { chrom, deficit });
             }
         }
 
         // Line 10: the chromosome with the lowest deficit.
-        self.pop
+        let best = self
+            .pop
             .iter()
             .min_by(|a, b| a.deficit.partial_cmp(&b.deficit).unwrap())
-            .map(|i| i.chrom.clone())
-            .expect("population non-empty")
+            .expect("population non-empty");
+        self.index.decode_into(&best.chrom, out);
     }
 
     fn kind(&self) -> SchemeKind {
@@ -215,6 +435,49 @@ mod tests {
     }
 
     #[test]
+    fn reproduce_cyclic_splice_at_i_zero() {
+        // shared gene at c_0: offspring B takes zero genes of D context and
+        // becomes C verbatim; offspring A splices D's prefix through d_j
+        // then wraps over C.
+        let c = vec![7usize, 1];
+        let d = vec![2usize, 7];
+        let (a, b) = GaScheme::reproduce(&c, &d).unwrap();
+        assert_eq!(a, vec![2, 7]);
+        assert_eq!(b, vec![7, 1]);
+
+        // shared gene at c_0 = d_0: both offspring collapse to clean splices
+        let c = vec![5usize, 6];
+        let d = vec![5usize, 8];
+        let (a, b) = GaScheme::reproduce(&c, &d).unwrap();
+        assert_eq!(a, vec![5, 6]);
+        assert_eq!(b, vec![5, 6]);
+
+        // L-length preserved for a longer i = 0 wrap
+        let c = vec![9usize, 2, 4];
+        let d = vec![3usize, 8, 9];
+        let (a, b) = GaScheme::reproduce(&c, &d).unwrap();
+        assert_eq!(a.len(), 3);
+        assert_eq!(b, vec![9, 2, 4]);
+        // A: D's prefix [3,8,9] fills all of L already
+        assert_eq!(a, vec![3, 8, 9]);
+    }
+
+    #[test]
+    fn reproduce_into_reuses_buffers() {
+        let mut a = vec![0u16; 7];
+        let mut b = Vec::new();
+        assert!(GaScheme::reproduce_into(
+            &[1u16, 2, 3],
+            &[4u16, 2, 5],
+            &mut a,
+            &mut b
+        ));
+        assert_eq!(a.len(), 3);
+        assert_eq!(b.len(), 3);
+        assert!(!GaScheme::reproduce_into(&[1u16], &[2u16], &mut a, &mut b));
+    }
+
+    #[test]
     fn decision_within_candidates() {
         let (torus, sats) = setup(6);
         let ga = GaConfig::default();
@@ -226,6 +489,30 @@ mod tests {
             let chrom = s.decide(&c);
             assert_eq!(chrom.len(), 3);
             assert!(chrom.iter().all(|x| cands.contains(x)));
+        }
+    }
+
+    #[test]
+    fn indexed_decide_matches_reference_per_seed() {
+        let (torus, mut sats) = setup(8);
+        for i in 0..sats.len() {
+            if i % 3 == 0 {
+                sats[i].try_load(11_000.0);
+            }
+        }
+        let ga = GaConfig::default();
+        let cands = torus.decision_space(20, 3);
+        let segs = vec![3800.0, 2500.0, 3100.0, 1900.0];
+        let c = ctx(&torus, &sats, &cands, &segs, &ga);
+        for seed in [0u64, 1, 7, 42, 1234] {
+            let mut fast = GaScheme::new(seed);
+            let mut slow = GaScheme::new(seed);
+            // repeated decisions exercise buffer recycling + memo clearing
+            for round in 0..3 {
+                let a = fast.decide(&c);
+                let b = slow.decide_reference(&c);
+                assert_eq!(a, b, "seed {seed} round {round} diverged");
+            }
         }
     }
 
@@ -310,5 +597,15 @@ mod tests {
         let mut g = GaScheme::new(6);
         let chrom = g.decide(&c);
         assert_eq!(chrom.len(), 3);
+    }
+
+    #[test]
+    fn memo_pack_is_injective_per_length() {
+        let a = pack(&[1, 2, 3]);
+        let b = pack(&[1, 2, 4]);
+        let c = pack(&[2, 1, 3]);
+        assert_ne!(a, b);
+        assert_ne!(a, c);
+        assert_eq!(pack(&[1, 2, 3]), a);
     }
 }

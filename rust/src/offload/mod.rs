@@ -160,10 +160,283 @@ impl<'a> OffloadContext<'a> {
     }
 }
 
+/// Candidate-local gene: an index into `OffloadContext::candidates`.
+///
+/// The GA kernel works on genes instead of raw [`SatId`]s so a chromosome
+/// is a handful of `u16`s — comparable with a memcmp, packable into a
+/// `u128` memo key, and a direct subscript into the [`DecisionSpaceIndex`]
+/// arrays. Candidates are sorted and distinct, so gene equality is
+/// equivalent to satellite equality.
+pub type Gene = u16;
+
+/// Chromosomes up to this length pack losslessly into a `u128` memo key
+/// (8 × 16-bit genes); longer ones skip memoization (L is 3–4 in Table I).
+pub const MEMO_MAX_L: usize = 8;
+
+/// Per-decision index over the decision space `A_x`: candidate-local
+/// copies of everything [`OffloadContext::deficit`] touches, so the Eq. 12
+/// evaluation that runs ~`N_iter·(N_summ+N_K)²` times per `decide()`
+/// becomes pure array arithmetic — zero [`Torus`] calls, zero heap
+/// allocation, no `Satellite` pointer chasing.
+///
+/// Built once per decision (`build` reuses its buffers across decisions);
+/// the indexed [`DecisionSpaceIndex::deficit`] is bit-for-bit identical to
+/// the reference implementation (enforced by
+/// `tests/prop_invariants.rs::prop_indexed_deficit_matches_reference`).
+#[derive(Clone, Debug, Default)]
+pub struct DecisionSpaceIndex {
+    /// `sat_ids[g]` — the satellite a gene decodes to.
+    sat_ids: Vec<SatId>,
+    /// Row-major `|A_x|²` Manhattan-hop LUT.
+    hops: Vec<u16>,
+    /// Per-candidate snapshots of the satellite state `deficit` reads.
+    loaded: Vec<f64>,
+    capacity: Vec<f64>,
+    max_workload: Vec<f64>,
+    /// Copy of the per-segment workloads `{q_1..q_L}`.
+    segments: Vec<f64>,
+    kappa: f64,
+    theta1: f64,
+    theta2: f64,
+    theta3: f64,
+}
+
+impl DecisionSpaceIndex {
+    pub fn new() -> DecisionSpaceIndex {
+        DecisionSpaceIndex::default()
+    }
+
+    /// (Re)build from a decision context, reusing all internal buffers.
+    ///
+    /// Panics if `|A_x|` exceeds the `u16` gene space (2d²+2d+1 > 65536
+    /// needs d_max ≥ 181 on an N ≥ 256 grid) — a hard assert, once per
+    /// decision, so release builds fail loudly instead of silently
+    /// truncating genes into wrong decisions.
+    pub fn build(&mut self, ctx: &OffloadContext) {
+        assert!(
+            ctx.candidates.len() <= Gene::MAX as usize + 1,
+            "decision space |A_x| = {} exceeds the u16 gene space",
+            ctx.candidates.len()
+        );
+        self.sat_ids.clear();
+        self.sat_ids.extend_from_slice(ctx.candidates);
+        ctx.torus.hops_lut(ctx.candidates, &mut self.hops);
+        self.loaded.clear();
+        self.capacity.clear();
+        self.max_workload.clear();
+        for &c in ctx.candidates {
+            let s = &ctx.satellites[c];
+            self.loaded.push(s.loaded());
+            self.capacity.push(s.capacity_mflops);
+            self.max_workload.push(s.max_workload_mflops);
+        }
+        self.segments.clear();
+        self.segments.extend_from_slice(ctx.segments);
+        self.kappa = ctx.kappa;
+        self.theta1 = ctx.ga.theta1;
+        self.theta2 = ctx.ga.theta2;
+        self.theta3 = ctx.ga.theta3;
+    }
+
+    pub fn from_ctx(ctx: &OffloadContext) -> DecisionSpaceIndex {
+        let mut idx = DecisionSpaceIndex::new();
+        idx.build(ctx);
+        idx
+    }
+
+    /// `|A_x|` — number of candidates (valid genes are `0..n_cands`).
+    pub fn n_cands(&self) -> usize {
+        self.sat_ids.len()
+    }
+
+    /// Segment count L this index was built for.
+    pub fn n_segments(&self) -> usize {
+        self.segments.len()
+    }
+
+    /// Decode one gene to its satellite.
+    #[inline]
+    pub fn sat(&self, g: Gene) -> SatId {
+        self.sat_ids[g as usize]
+    }
+
+    /// Decode a gene chromosome into satellite ids.
+    pub fn decode_into(&self, genes: &[Gene], out: &mut Vec<SatId>) {
+        out.clear();
+        out.extend(genes.iter().map(|&g| self.sat_ids[g as usize]));
+    }
+
+    #[inline]
+    fn hop(&self, a: Gene, b: Gene) -> u16 {
+        self.hops[a as usize * self.sat_ids.len() + b as usize]
+    }
+
+    #[inline]
+    fn comp_term(&self, g: Gene, q: f64) -> f64 {
+        let gi = g as usize;
+        (self.loaded[gi] + q) / self.capacity[gi]
+    }
+
+    #[inline]
+    fn tran_term(&self, genes: &[Gene], k: usize) -> f64 {
+        self.kappa * self.segments[k] * self.hop(genes[k], genes[k + 1]) as f64
+    }
+
+    /// The Eq. 4 admission walk of the reference `deficit` (θ3 drop count):
+    /// planned loads accumulate over the admitted prefix in segment order,
+    /// so the floating-point sums match the reference bit for bit.
+    fn admission_drops(&self, genes: &[Gene]) -> f64 {
+        let mut drops = 0.0;
+        let mut admitted: u128 = 0;
+        for (k, (&g, &q)) in genes.iter().zip(&self.segments).enumerate() {
+            let gi = g as usize;
+            let mut planned = 0.0;
+            for j in 0..k {
+                if admitted & (1u128 << j) != 0 && genes[j] == g {
+                    planned += self.segments[j];
+                }
+            }
+            if q > 0.0 && self.loaded[gi] + planned + q >= self.max_workload[gi] {
+                drops += 1.0;
+            } else {
+                admitted |= 1u128 << k;
+            }
+        }
+        drops
+    }
+
+    /// Eq. 12 deficit of a gene chromosome — allocation-free, identical
+    /// floating-point operation order to [`OffloadContext::deficit`].
+    pub fn deficit(&self, genes: &[Gene]) -> f64 {
+        debug_assert_eq!(genes.len(), self.segments.len());
+        if genes.len() > 128 {
+            return self.deficit_long(genes);
+        }
+        let mut comp = 0.0;
+        let mut tran = 0.0;
+        for (k, (&g, &q)) in genes.iter().zip(&self.segments).enumerate() {
+            comp += self.comp_term(g, q);
+            if k + 1 < genes.len() {
+                tran += self.kappa * q * self.hop(g, genes[k + 1]) as f64;
+            }
+        }
+        let drops = self.admission_drops(genes);
+        self.theta1 * comp + self.theta2 * tran + self.theta3 * drops
+    }
+
+    /// Fallback for L > 128 (beyond the admission bitmask width; never hit
+    /// by real configs where L is 3–4): same semantics, heap-allocated
+    /// admitted set.
+    fn deficit_long(&self, genes: &[Gene]) -> f64 {
+        let mut comp = 0.0;
+        let mut tran = 0.0;
+        let mut drops = 0.0;
+        let mut admitted = vec![false; genes.len()];
+        for (k, (&g, &q)) in genes.iter().zip(&self.segments).enumerate() {
+            let gi = g as usize;
+            comp += self.comp_term(g, q);
+            if k + 1 < genes.len() {
+                tran += self.kappa * q * self.hop(g, genes[k + 1]) as f64;
+            }
+            let mut planned = 0.0;
+            for j in 0..k {
+                if admitted[j] && genes[j] == g {
+                    planned += self.segments[j];
+                }
+            }
+            if q > 0.0 && self.loaded[gi] + planned + q >= self.max_workload[gi] {
+                drops += 1.0;
+            } else {
+                admitted[k] = true;
+            }
+        }
+        self.theta1 * comp + self.theta2 * tran + self.theta3 * drops
+    }
+
+    /// Deficit with incremental term reuse: per-position computation and
+    /// transmission terms are cached in `scratch` and recomputed only for
+    /// positions whose gene (or successor gene) changed since the last
+    /// evaluation. A single-gene difference costs one division and two
+    /// multiplications instead of L of each; the final reductions run in
+    /// the reference's left-to-right order, so results stay bit-for-bit
+    /// identical to [`DecisionSpaceIndex::deficit`].
+    pub fn deficit_with(&self, scratch: &mut DeficitScratch, genes: &[Gene]) -> f64 {
+        let l = genes.len();
+        debug_assert_eq!(l, self.segments.len());
+        if l > 128 {
+            return self.deficit_long(genes);
+        }
+        let n_tran = l.saturating_sub(1);
+        if !scratch.valid || scratch.genes.len() != l {
+            scratch.genes.clear();
+            scratch.genes.extend_from_slice(genes);
+            scratch.comp_terms.clear();
+            scratch.tran_terms.clear();
+            for k in 0..l {
+                scratch.comp_terms.push(self.comp_term(genes[k], self.segments[k]));
+            }
+            for k in 0..n_tran {
+                scratch.tran_terms.push(self.tran_term(genes, k));
+            }
+            scratch.valid = true;
+        } else {
+            for k in 0..l {
+                if genes[k] != scratch.genes[k] {
+                    scratch.comp_terms[k] = self.comp_term(genes[k], self.segments[k]);
+                }
+            }
+            for k in 0..n_tran {
+                if genes[k] != scratch.genes[k] || genes[k + 1] != scratch.genes[k + 1] {
+                    scratch.tran_terms[k] = self.tran_term(genes, k);
+                }
+            }
+            scratch.genes.copy_from_slice(genes);
+        }
+        let mut comp = 0.0;
+        for &t in &scratch.comp_terms {
+            comp += t;
+        }
+        let mut tran = 0.0;
+        for &t in &scratch.tran_terms {
+            tran += t;
+        }
+        let drops = self.admission_drops(genes);
+        self.theta1 * comp + self.theta2 * tran + self.theta3 * drops
+    }
+}
+
+/// Reusable per-scheme scratch for [`DecisionSpaceIndex::deficit_with`]:
+/// the last evaluated chromosome and its per-position deficit terms.
+#[derive(Clone, Debug, Default)]
+pub struct DeficitScratch {
+    genes: Vec<Gene>,
+    comp_terms: Vec<f64>,
+    tran_terms: Vec<f64>,
+    valid: bool,
+}
+
+impl DeficitScratch {
+    /// Drop the cached terms (call when the index is rebuilt — satellite
+    /// loads or segments changed, so every cached term is stale).
+    pub fn invalidate(&mut self) {
+        self.valid = false;
+    }
+}
+
 /// A task-offloading decision scheme.
 pub trait OffloadScheme {
+    /// Write the chromosome `(c_1..c_L)` — all members of
+    /// `ctx.candidates` — into `out` (cleared first). The buffer-reuse
+    /// entry point: engines call this with a recycled buffer so the
+    /// per-task hot path allocates nothing.
+    fn decide_into(&mut self, ctx: &OffloadContext, out: &mut Vec<SatId>);
+
     /// Chromosome `(c_1..c_L)`, all members of `ctx.candidates`.
-    fn decide(&mut self, ctx: &OffloadContext) -> Vec<SatId>;
+    fn decide(&mut self, ctx: &OffloadContext) -> Vec<SatId> {
+        let mut out = Vec::with_capacity(ctx.segments.len());
+        self.decide_into(ctx, &mut out);
+        out
+    }
 
     fn kind(&self) -> SchemeKind;
 
@@ -273,6 +546,65 @@ mod tests {
         let segs = [0.0, 0.0];
         let ctx = test_ctx(&torus, &sats, &cands, &segs, &ga);
         assert_eq!(ctx.predicted_drops(&[0, 0]), 0);
+    }
+
+    #[test]
+    fn indexed_deficit_matches_reference_bitwise() {
+        let (torus, mut sats, ga) = setup(6);
+        let mut rng = crate::util::rng::Pcg64::seed_from_u64(11);
+        for s in sats.iter_mut() {
+            s.try_load(rng.f64_in(0.0, 14_000.0));
+        }
+        let cands = torus.decision_space(7, 2);
+        let segs = [4000.0, 0.0, 3500.0, 2800.0];
+        let ctx = test_ctx(&torus, &sats, &cands, &segs, &ga);
+        let index = DecisionSpaceIndex::from_ctx(&ctx);
+        assert_eq!(index.n_cands(), cands.len());
+        assert_eq!(index.n_segments(), segs.len());
+        let mut scratch = DeficitScratch::default();
+        for _ in 0..200 {
+            let genes: Vec<Gene> = (0..segs.len())
+                .map(|_| rng.usize_in(0, cands.len()) as Gene)
+                .collect();
+            let mut chrom = Vec::new();
+            index.decode_into(&genes, &mut chrom);
+            assert!(chrom.iter().all(|c| cands.contains(c)));
+            let want = ctx.deficit(&chrom);
+            let got = index.deficit(&genes);
+            assert_eq!(
+                got.to_bits(),
+                want.to_bits(),
+                "indexed {got} != reference {want} for {chrom:?}"
+            );
+            let inc = index.deficit_with(&mut scratch, &genes);
+            assert_eq!(inc.to_bits(), want.to_bits(), "incremental path diverged");
+        }
+    }
+
+    #[test]
+    fn incremental_deficit_tracks_single_gene_mutations() {
+        let (torus, mut sats, ga) = setup(5);
+        sats[0].try_load(12_000.0);
+        sats[6].try_load(9_000.0);
+        let cands = torus.decision_space(6, 2);
+        let segs = [3000.0, 4000.0, 2000.0];
+        let ctx = test_ctx(&torus, &sats, &cands, &segs, &ga);
+        let index = DecisionSpaceIndex::from_ctx(&ctx);
+        let mut scratch = DeficitScratch::default();
+        let mut genes: Vec<Gene> = vec![0, 1, 2];
+        let _ = index.deficit_with(&mut scratch, &genes);
+        let mut rng = crate::util::rng::Pcg64::seed_from_u64(3);
+        for _ in 0..100 {
+            let pos = rng.usize_in(0, genes.len());
+            genes[pos] = rng.usize_in(0, cands.len()) as Gene;
+            let inc = index.deficit_with(&mut scratch, &genes);
+            let full = index.deficit(&genes);
+            assert_eq!(inc.to_bits(), full.to_bits());
+        }
+        // invalidation after a rebuild keeps results correct
+        scratch.invalidate();
+        let after = index.deficit_with(&mut scratch, &genes);
+        assert_eq!(after.to_bits(), index.deficit(&genes).to_bits());
     }
 
     #[test]

@@ -21,11 +21,12 @@ impl RandomScheme {
 }
 
 impl OffloadScheme for RandomScheme {
-    fn decide(&mut self, ctx: &OffloadContext) -> Vec<SatId> {
-        ctx.segments
-            .iter()
-            .map(|_| *self.rng.choose(ctx.candidates))
-            .collect()
+    fn decide_into(&mut self, ctx: &OffloadContext, out: &mut Vec<SatId>) {
+        out.clear();
+        out.reserve(ctx.segments.len());
+        for _ in 0..ctx.segments.len() {
+            out.push(*self.rng.choose(ctx.candidates));
+        }
     }
 
     fn kind(&self) -> SchemeKind {

@@ -14,51 +14,47 @@ use super::{OffloadContext, OffloadScheme, SchemeKind};
 use crate::topology::SatId;
 
 #[derive(Default)]
-pub struct RrpScheme;
+pub struct RrpScheme {
+    /// Candidate-local workload planned by the current task's earlier
+    /// segments (indexed by candidate position; reused across decisions so
+    /// the per-task hot path allocates nothing). Accumulation order equals
+    /// the old association-list sum order, so decisions are unchanged.
+    planned: Vec<f64>,
+}
 
 impl RrpScheme {
     pub fn new() -> RrpScheme {
-        RrpScheme
+        RrpScheme::default()
     }
 }
 
 impl OffloadScheme for RrpScheme {
-    fn decide(&mut self, ctx: &OffloadContext) -> Vec<SatId> {
-        let mut chrom = Vec::with_capacity(ctx.segments.len());
-        // workload planned onto candidates by this task's earlier segments
-        let mut planned: Vec<(SatId, f64)> = Vec::new();
+    fn decide_into(&mut self, ctx: &OffloadContext, out: &mut Vec<SatId>) {
+        out.clear();
+        out.reserve(ctx.segments.len());
+        self.planned.clear();
+        self.planned.resize(ctx.candidates.len(), 0.0);
         for &q in ctx.segments {
-            let best = ctx
-                .candidates
-                .iter()
-                .copied()
-                .max_by(|&a, &b| {
-                    let ra = effective_residual(ctx, &planned, a);
-                    let rb = effective_residual(ctx, &planned, b);
-                    ra.partial_cmp(&rb)
+            let best_pos = (0..ctx.candidates.len())
+                .max_by(|&i, &j| {
+                    let ri =
+                        (ctx.satellites[ctx.candidates[i]].residual() - self.planned[i]).max(0.0);
+                    let rj =
+                        (ctx.satellites[ctx.candidates[j]].residual() - self.planned[j]).max(0.0);
+                    ri.partial_cmp(&rj)
                         .unwrap()
                         // deterministic tie-break: lower id wins
-                        .then(b.cmp(&a))
+                        .then(ctx.candidates[j].cmp(&ctx.candidates[i]))
                 })
                 .expect("non-empty candidate set");
-            planned.push((best, q));
-            chrom.push(best);
+            self.planned[best_pos] += q;
+            out.push(ctx.candidates[best_pos]);
         }
-        chrom
     }
 
     fn kind(&self) -> SchemeKind {
         SchemeKind::Rrp
     }
-}
-
-fn effective_residual(ctx: &OffloadContext, planned: &[(SatId, f64)], s: SatId) -> f64 {
-    let extra: f64 = planned
-        .iter()
-        .filter(|(id, _)| *id == s)
-        .map(|(_, w)| *w)
-        .sum();
-    (ctx.satellites[s].residual() - extra).max(0.0)
 }
 
 #[cfg(test)]

@@ -69,32 +69,40 @@ pub fn calibrate_kappa(cfg: &SimConfig) -> f64 {
 }
 
 /// Split a task's workload vector into L segment workloads under
-/// `policy`, memoized on `scale_key` (jitter-free runs split once).
+/// `policy`, memoized on `scale_key` (jitter-free runs split once), and
+/// write them into `out` (a caller-recycled buffer — the per-task hot
+/// path copies from the cache instead of allocating). `workloads` is lazy
+/// so the cache-hit path skips materializing the layer vector entirely.
 /// Shared by the slotted and event-driven engines so their splitting
 /// semantics can never diverge.
-pub(crate) fn split_segments_cached(
+pub(crate) fn split_segments_cached<F>(
     policy: SplitPolicy,
     cache: &mut Option<(u64, Vec<f64>)>,
-    workloads: &[f64],
     l: usize,
     epsilon: f64,
     scale_key: u64,
-) -> Vec<f64> {
+    workloads: F,
+    out: &mut Vec<f64>,
+) where
+    F: FnOnce() -> Vec<f64>,
+{
     if let Some((key, cached)) = cache {
         if *key == scale_key {
-            return cached.clone();
+            out.clear();
+            out.extend_from_slice(cached);
+            return;
         }
     }
+    let w = workloads();
     let segs = match policy {
-        SplitPolicy::Balanced => {
-            balanced_split(workloads, l, epsilon).segment_workloads()
-        }
+        SplitPolicy::Balanced => balanced_split(&w, l, epsilon).segment_workloads(),
         SplitPolicy::NaiveEqualLayers => {
-            crate::splitting::naive_equal_layers(workloads, l).segment_workloads()
+            crate::splitting::naive_equal_layers(&w, l).segment_workloads()
         }
     };
-    *cache = Some((scale_key, segs.clone()));
-    segs
+    out.clear();
+    out.extend_from_slice(&segs);
+    *cache = Some((scale_key, segs));
 }
 
 /// A ready-to-run simulation instance.
@@ -215,20 +223,10 @@ impl Simulation {
         self
     }
 
-    fn split_segments(&mut self, workloads: &[f64], l: usize, scale_key: u64) -> Vec<f64> {
-        split_segments_cached(
-            self.split_policy,
-            &mut self.split_cache,
-            workloads,
-            l,
-            self.cfg.ga.epsilon,
-            scale_key,
-        )
-    }
-
     /// Run the full Γ-slot simulation and produce the report.
     pub fn run(mut self) -> Report {
-        let mut metrics = MetricsCollector::new(self.satellites.len());
+        let mut metrics =
+            MetricsCollector::new(self.satellites.len()).retaining(self.cfg.retain_outcomes);
         let l = self.cfg.effective_l();
         let d_max = self.cfg.effective_d_max();
         let slots = self.cfg.slots;
@@ -250,6 +248,10 @@ impl Simulation {
         // pick the same "fittest" satellite before its load updates.
         let mut local_view: Vec<Satellite> = self.satellites.clone();
         let mut faults = self.faults.take();
+        // Per-task scratch, reused across every task of the run (the
+        // decision hot path allocates nothing in steady state).
+        let mut seg_buf: Vec<f64> = Vec::new();
+        let mut chrom: Vec<SatId> = Vec::new();
         for slot in 0..slots {
             // fault injection: newly failed satellites lose queued work
             if let Some(f) = faults.as_mut() {
@@ -283,27 +285,36 @@ impl Simulation {
                 local_view.clone_from(&self.satellites);
                 let arrivals = self.gen.arrivals(*origin, slot);
                 for task in arrivals {
-                    let workloads = match &self.early_exit_workloads {
-                        Some(w) => w.iter().map(|x| x * task.scale).collect(),
-                        None => task.layer_workloads(),
-                    };
                     let scale_key = (task.scale * 1e6) as u64;
-                    let segments = self.split_segments(&workloads, l, scale_key);
+                    let early_exit = &self.early_exit_workloads;
+                    split_segments_cached(
+                        self.split_policy,
+                        &mut self.split_cache,
+                        l,
+                        self.cfg.ga.epsilon,
+                        scale_key,
+                        || match early_exit {
+                            Some(w) => w.iter().map(|x| x * task.scale).collect(),
+                            None => task.layer_workloads(),
+                        },
+                        &mut seg_buf,
+                    );
+                    let segments = &seg_buf;
                     // scheme decision under the origin's local view
-                    let chrom = {
+                    {
                         let ctx = OffloadContext {
                             torus: &self.torus,
                             satellites: &local_view,
                             origin: *origin,
                             candidates,
-                            segments: &segments,
+                            segments,
                             kappa: self.kappa,
                             ga: &self.cfg.ga,
                         };
-                        self.scheme.decide(&ctx)
-                    };
+                        self.scheme.decide_into(&ctx, &mut chrom);
+                    }
                     // the origin tracks its own placements in its view
-                    for (&c, &q) in chrom.iter().zip(&segments) {
+                    for (&c, &q) in chrom.iter().zip(segments) {
                         if q > 0.0 {
                             let _ = local_view[c].try_load(q);
                         }
@@ -316,7 +327,7 @@ impl Simulation {
                     let mut tran = 0.0f64;
                     let mut drop_point = l + 1; // completed
                     let mut dropped_at = None;
-                    for (k, (&c, &q)) in chrom.iter().zip(&segments).enumerate() {
+                    for (k, (&c, &q)) in chrom.iter().zip(segments).enumerate() {
                         if q == 0.0 {
                             continue; // padded empty block
                         }
@@ -349,7 +360,7 @@ impl Simulation {
                             satellites: &local_view,
                             origin: *origin,
                             candidates,
-                            segments: &segments,
+                            segments,
                             kappa: self.kappa,
                             ga: &self.cfg.ga,
                         };

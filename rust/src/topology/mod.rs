@@ -108,6 +108,36 @@ impl Torus {
         2 * d_max * d_max + 2 * d_max + 1
     }
 
+    /// Fill `out` with the row-major `ids.len() × ids.len()` Manhattan-hop
+    /// LUT for an arbitrary satellite subset: `out[i·len + j] =
+    /// MH(ids[i], ids[j])`. The offloading kernel precomputes this once per
+    /// decision so the Eq. 12 hot loop never re-derives torus coordinates
+    /// (hops fit `u16`: the torus diameter is `N ≤ 65535`).
+    pub fn hops_lut(&self, ids: &[SatId], out: &mut Vec<u16>) {
+        out.clear();
+        out.reserve(ids.len() * ids.len());
+        // derive each id's (orbit, index) once — the pairwise loop below is
+        // O(|A_x|²) and runs once per offloading decision. A stack buffer
+        // covers every realistic decision space (|A_x| = 2d²+2d+1 ≤ 61 for
+        // d_max ≤ 5); larger subsets fall back to the heap.
+        let mut stack = [(0usize, 0usize); 64];
+        let heap: Vec<(usize, usize)>;
+        let coords: &[(usize, usize)] = if ids.len() <= stack.len() {
+            for (slot, &s) in stack.iter_mut().zip(ids) {
+                *slot = self.coords(s);
+            }
+            &stack[..ids.len()]
+        } else {
+            heap = ids.iter().map(|&s| self.coords(s)).collect();
+            &heap
+        };
+        for &(ao, ai) in coords {
+            for &(bo, bi) in coords {
+                out.push((self.ring_dist(ao, bo) + self.ring_dist(ai, bi)) as u16);
+            }
+        }
+    }
+
     /// One shortest path from `a` to `b` (orbit axis first, then in-orbit),
     /// as the sequence of intermediate hops — used by the coordinator to
     /// route intermediate activations over ISLs.
@@ -233,6 +263,41 @@ mod tests {
             }
             if a != b {
                 assert_eq!(prev, b);
+            }
+        }
+    }
+
+    #[test]
+    fn hops_lut_matches_manhattan() {
+        let t = Torus::new(7);
+        for (x, d) in [(0usize, 1usize), (24, 2), (48, 3)] {
+            let ids = t.decision_space(x, d);
+            let mut lut = Vec::new();
+            t.hops_lut(&ids, &mut lut);
+            assert_eq!(lut.len(), ids.len() * ids.len());
+            for (i, &a) in ids.iter().enumerate() {
+                for (j, &b) in ids.iter().enumerate() {
+                    assert_eq!(
+                        lut[i * ids.len() + j] as usize,
+                        t.manhattan(a, b),
+                        "LUT mismatch at ({a},{b})"
+                    );
+                }
+            }
+        }
+        // reuse clears previous contents
+        let ids2 = t.decision_space(3, 1);
+        let mut lut = vec![99u16; 4];
+        t.hops_lut(&ids2, &mut lut);
+        assert_eq!(lut.len(), ids2.len() * ids2.len());
+
+        // > 64 ids exercises the heap coords path
+        let big: Vec<SatId> = (0..t.len()).collect();
+        t.hops_lut(&big, &mut lut);
+        assert_eq!(lut.len(), big.len() * big.len());
+        for (i, &a) in big.iter().enumerate() {
+            for (j, &b) in big.iter().enumerate() {
+                assert_eq!(lut[i * big.len() + j] as usize, t.manhattan(a, b));
             }
         }
     }

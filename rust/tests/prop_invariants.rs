@@ -3,7 +3,10 @@
 //! the GA reproduction operator, topology metrics, and Eq. 4 admission.
 
 use satkit::config::GaConfig;
-use satkit::offload::{ga::GaScheme, make_scheme, OffloadContext, OffloadScheme, SchemeKind};
+use satkit::offload::{
+    ga::GaScheme, make_scheme, DecisionSpaceIndex, DeficitScratch, Gene, OffloadContext,
+    OffloadScheme, SchemeKind,
+};
 use satkit::satellite::Satellite;
 use satkit::splitting::{balanced_split, naive_equal_layers, split_with_limit};
 use satkit::topology::Torus;
@@ -352,6 +355,108 @@ fn prop_deficit_nonnegative_and_theta_monotone() {
             for ga2 in [mk(2.0, 20.0, 1e6), mk(1.0, 40.0, 1e6), mk(1.0, 20.0, 2e6)] {
                 if d(&ga2) + 1e-9 < base {
                     return Err("deficit decreased when a weight grew".into());
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_indexed_deficit_matches_reference() {
+    // the tentpole invariant: the indexed kernel (hop LUT + cached arrays,
+    // plain and incremental paths) equals the reference Eq. 12 deficit to
+    // 1e-12 on random topologies/loads/chromosomes — in fact bit-for-bit
+    // between its own paths.
+    check_no_shrink(
+        "indexed-deficit-matches-reference",
+        default_cases(),
+        |r| {
+            let inst = gen_instance(r);
+            let raw: Vec<u64> = (0..16).map(|_| r.next_u64()).collect();
+            (inst, raw)
+        },
+        |(inst, raw)| {
+            let torus = Torus::new(inst.n);
+            let sats = build_sats(inst);
+            let cands = torus.decision_space(inst.origin, inst.d_max);
+            let ga = GaConfig::default();
+            let ctx = OffloadContext {
+                torus: &torus,
+                satellites: &sats,
+                origin: inst.origin,
+                candidates: &cands,
+                segments: &inst.segments,
+                kappa: 1e-4,
+                ga: &ga,
+            };
+            let index = DecisionSpaceIndex::from_ctx(&ctx);
+            let mut scratch = DeficitScratch::default();
+            let l = inst.segments.len();
+            let mut genes: Vec<Gene> = (0..l)
+                .map(|k| (raw[k % raw.len()] as usize % cands.len()) as Gene)
+                .collect();
+            for step in 0..6 {
+                let mut chrom = Vec::new();
+                index.decode_into(&genes, &mut chrom);
+                let want = ctx.deficit(&chrom);
+                let got = index.deficit(&genes);
+                if (got - want).abs() > 1e-12 * want.abs().max(1.0) {
+                    return Err(format!(
+                        "indexed {got} != reference {want} for {chrom:?}"
+                    ));
+                }
+                let inc = index.deficit_with(&mut scratch, &genes);
+                if inc.to_bits() != got.to_bits() {
+                    return Err(format!(
+                        "incremental {inc} != plain {got} at step {step}"
+                    ));
+                }
+                // mutate one gene so later rounds exercise the delta path
+                let pos = raw[(2 * step) % raw.len()] as usize % l;
+                genes[pos] = (raw[(2 * step + 1) % raw.len()] as usize % cands.len()) as Gene;
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_ga_decide_identical_to_reference_per_seed() {
+    // bit-for-bit decision preservation across the kernel swap: the
+    // indexed GA and the retained paper-literal oracle must return the
+    // identical chromosome for every seed, including across repeated
+    // decisions that exercise buffer recycling and memo clearing.
+    check_no_shrink(
+        "ga-indexed-equals-reference",
+        default_cases() / 8,
+        |r| (gen_instance(r), r.next_u64() % 1_000_000),
+        |(inst, seed)| {
+            let torus = Torus::new(inst.n);
+            let sats = build_sats(inst);
+            let cands = torus.decision_space(inst.origin, inst.d_max);
+            let ga = GaConfig {
+                n_iter: 4,
+                ..GaConfig::default()
+            };
+            let ctx = OffloadContext {
+                torus: &torus,
+                satellites: &sats,
+                origin: inst.origin,
+                candidates: &cands,
+                segments: &inst.segments,
+                kappa: 1e-4,
+                ga: &ga,
+            };
+            let mut fast = GaScheme::new(*seed);
+            let mut slow = GaScheme::new(*seed);
+            for round in 0..2 {
+                let a = fast.decide(&ctx);
+                let b = slow.decide_reference(&ctx);
+                if a != b {
+                    return Err(format!(
+                        "seed {seed} round {round}: indexed {a:?} != reference {b:?}"
+                    ));
                 }
             }
             Ok(())
