@@ -7,6 +7,7 @@ use satkit::config::GaConfig;
 use satkit::experiments as exp;
 use satkit::offload::{make_scheme, OffloadContext, SchemeKind};
 use satkit::satellite::Satellite;
+use satkit::state::StateView;
 use satkit::topology::Torus;
 use satkit::util::rng::Pcg64;
 
@@ -47,7 +48,7 @@ fn main() {
         };
         let ctx = OffloadContext {
             torus: &torus,
-            satellites: &sats,
+            view: StateView::live(&sats),
             origin: 42,
             candidates: &cands,
             segments: &segments,

@@ -16,6 +16,7 @@ use satkit::offload::{
 use satkit::satellite::Satellite;
 use satkit::sim::Simulation;
 use satkit::splitting::balanced_split;
+use satkit::state::StateView;
 use satkit::topology::Torus;
 use satkit::util::rng::Pcg64;
 
@@ -41,7 +42,7 @@ fn main() {
     let segments = vec![3800.0, 3900.0, 3700.0, 3800.0];
     let ctx = OffloadContext {
         torus: &torus,
-        satellites: &sats,
+        view: StateView::live(&sats),
         origin: 42,
         candidates: &cands,
         segments: &segments,

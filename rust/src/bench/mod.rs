@@ -51,6 +51,12 @@ pub fn suite_json(suite: &str, quick: bool, results: &[BenchResult]) -> Json {
     ])
 }
 
+/// Write any machine-readable report (e.g. the `experiment staleness`
+/// sweep's `BENCH_staleness.json`) alongside the timing suites.
+pub fn write_json(path: &str, json: &Json) -> std::io::Result<()> {
+    std::fs::write(path, json.to_string())
+}
+
 /// Write the suite report to `path` (conventionally `BENCH_<suite>.json`
 /// in the crate root, overridable via `SATKIT_BENCH_JSON`).
 pub fn write_suite_json(

@@ -10,6 +10,7 @@ mod toml_lite;
 pub use toml_lite::TomlDoc;
 
 use crate::dnn::DnnModel;
+use crate::state::DisseminationKind;
 use crate::util::cli::Args;
 
 /// Which simulation engine executes the run.
@@ -224,6 +225,13 @@ pub struct SimConfig {
     pub engine: EngineKind,
     /// Traffic scenario for the event engine (ignored by the slotted one).
     pub scenario: ScenarioKind,
+    /// How resource state reaches decision satellites
+    /// (`--dissemination instant|periodic:<s>|gossip[:<s>]`, TOML
+    /// `dissemination = "..."`). `None` keeps each engine's legacy model:
+    /// the event engine decides on fresh state (`instant`), the slotted
+    /// engine on its slot-start snapshot (`periodic:1`) — see
+    /// [`SimConfig::effective_dissemination_for`].
+    pub dissemination: Option<DisseminationKind>,
     /// Keep the full per-task `TaskOutcome` buffer in the report (memory
     /// grows with task count). Default false: metrics stream into
     /// constant-size accumulators so million-task runs stay flat in
@@ -252,6 +260,7 @@ impl Default for SimConfig {
             seed: 42,
             engine: EngineKind::Slotted,
             scenario: ScenarioKind::Poisson,
+            dissemination: None,
             retain_outcomes: false,
             ga: GaConfig::default(),
             comm: CommConfig::default(),
@@ -275,6 +284,36 @@ impl SimConfig {
             DnnModel::Vgg19 => 2,
             DnnModel::Resnet101 => 3,
         })
+    }
+
+    /// The dissemination model the given engine runs: the configured one,
+    /// or the engine's legacy default — `instant` for the event engine
+    /// (pre-dissemination behaviour, enforced bit-for-bit by
+    /// `tests/prop_staleness.rs`), `periodic:1` (one slot) for the slotted
+    /// engine (its classic slot-start snapshot, likewise enforced).
+    ///
+    /// The slotted clock can disseminate at most once per slot, so for
+    /// [`EngineKind::Slotted`] the configured model is quantized via
+    /// [`DisseminationKind::quantized_to_slots`] — what this returns is
+    /// what actually runs (and what [`SimConfig::table`] prints).
+    ///
+    /// Parameterized by engine rather than reading `self.engine` because
+    /// `Simulation::new` / `EventSim::new` can be called directly with a
+    /// config whose `engine` field names the *other* engine.
+    pub fn effective_dissemination_for(&self, engine: EngineKind) -> DisseminationKind {
+        let configured = self.dissemination.unwrap_or(match engine {
+            EngineKind::Event => DisseminationKind::Instant,
+            EngineKind::Slotted => DisseminationKind::Periodic { period_s: 1.0 },
+        });
+        match engine {
+            EngineKind::Event => configured,
+            EngineKind::Slotted => configured.quantized_to_slots(),
+        }
+    }
+
+    /// [`SimConfig::effective_dissemination_for`] on `self.engine`.
+    pub fn effective_dissemination(&self) -> DisseminationKind {
+        self.effective_dissemination_for(self.engine)
     }
 
     /// Validate parameter ranges; returns a description of each violation.
@@ -303,6 +342,11 @@ impl SimConfig {
         }
         if self.ga.n_ini == 0 || self.ga.n_k == 0 {
             errs.push("ga.n_ini and ga.n_k must be >= 1".into());
+        }
+        if let Some(d) = &self.dissemination {
+            if let Err(e) = d.validate() {
+                errs.push(e);
+            }
         }
         if errs.is_empty() {
             Ok(())
@@ -352,6 +396,9 @@ impl SimConfig {
         }
         if let Some(s) = doc.get_str("", "scenario") {
             d.scenario = ScenarioKind::parse(&s)?;
+        }
+        if let Some(s) = doc.get_str("", "dissemination") {
+            d.dissemination = Some(DisseminationKind::parse(&s)?);
         }
         if let Some(b) = doc.get_bool("", "retain_outcomes") {
             d.retain_outcomes = b;
@@ -422,6 +469,9 @@ impl SimConfig {
         if let Some(s) = args.get("scenario") {
             self.scenario = ScenarioKind::parse(s)?;
         }
+        if let Some(s) = args.get("dissemination") {
+            self.dissemination = Some(DisseminationKind::parse(s)?);
+        }
         if args.has_flag("retain-outcomes") {
             self.retain_outcomes = true;
         }
@@ -443,6 +493,7 @@ impl SimConfig {
              N_ini, N_iter, N_K, N_summ, epsilon    {}, {}, {}, {}, {}\n\
              Model                                  {}\n\
              Engine, scenario                       {}, {}\n\
+             State dissemination                    {}\n\
              Slots, seed                            {}, {}",
             self.n,
             self.comm.isl_bandwidth_hz / 1e6,
@@ -463,6 +514,7 @@ impl SimConfig {
             self.model.name(),
             self.engine.name(),
             self.scenario.name(),
+            self.effective_dissemination().label(),
             self.slots,
             self.seed,
         )
@@ -570,6 +622,65 @@ capacity_mflops = 6000.0
         assert_eq!(d.engine, EngineKind::Event);
         assert_eq!(d.scenario, ScenarioKind::Bursty);
         assert!(d.retain_outcomes);
+    }
+
+    #[test]
+    fn dissemination_parse_defaults_and_overrides() {
+        // unset: each engine keeps its legacy observability model
+        let mut c = SimConfig::default();
+        assert_eq!(
+            c.effective_dissemination_for(EngineKind::Event),
+            DisseminationKind::Instant
+        );
+        assert_eq!(
+            c.effective_dissemination_for(EngineKind::Slotted),
+            DisseminationKind::Periodic { period_s: 1.0 }
+        );
+        // explicit setting wins for both engines
+        c.dissemination = Some(DisseminationKind::Periodic { period_s: 2.5 });
+        for e in EngineKind::all() {
+            assert_eq!(
+                c.effective_dissemination_for(e),
+                DisseminationKind::Periodic { period_s: 2.5 }
+            );
+        }
+        // the slotted clock quantizes sub-slot intervals up to one slot;
+        // the event engine honours them as configured
+        c.dissemination = Some(DisseminationKind::Periodic { period_s: 0.25 });
+        assert_eq!(
+            c.effective_dissemination_for(EngineKind::Slotted),
+            DisseminationKind::Periodic { period_s: 1.0 }
+        );
+        assert_eq!(
+            c.effective_dissemination_for(EngineKind::Event),
+            DisseminationKind::Periodic { period_s: 0.25 }
+        );
+        c.dissemination = Some(DisseminationKind::Gossip { tick_s: 0.25 });
+        assert_eq!(
+            c.effective_dissemination_for(EngineKind::Slotted),
+            DisseminationKind::Gossip { tick_s: 1.0 }
+        );
+
+        let text = "dissemination = \"gossip:0.25\"\n";
+        let t = SimConfig::from_toml(text).unwrap();
+        assert_eq!(
+            t.dissemination,
+            Some(DisseminationKind::Gossip { tick_s: 0.25 })
+        );
+        assert!(SimConfig::from_toml("dissemination = \"warp\"\n").is_err());
+
+        let args = crate::util::cli::Args::parse(
+            "x --dissemination periodic:0.5".split_whitespace().map(String::from),
+        );
+        let mut d = SimConfig::default();
+        d.apply_args(&args).unwrap();
+        assert_eq!(
+            d.dissemination,
+            Some(DisseminationKind::Periodic { period_s: 0.5 })
+        );
+        assert!(d.validate().is_ok());
+        d.dissemination = Some(DisseminationKind::Periodic { period_s: 0.0 });
+        assert!(d.validate().is_err());
     }
 
     #[test]

@@ -135,7 +135,7 @@ impl Coordinator {
             let sats = self.satellites.lock().unwrap();
             let ctx = OffloadContext {
                 torus: &self.torus,
-                satellites: &sats,
+                view: crate::state::StateView::live(&sats),
                 origin: req.origin,
                 candidates: &candidates,
                 segments: &segments,

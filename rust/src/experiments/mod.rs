@@ -6,6 +6,9 @@
 //! * [`scale`] — completion rate vs network size N ∈ {4..32} at λ = 25.
 //! * [`ablation_split`] — balanced (Alg. 1) vs naive equal-layer splitting.
 //! * [`ablation_ga`] — GA solution quality vs iteration budget.
+//! * [`staleness_sweep`] — completion rate & p95 delay vs the state
+//!   dissemination interval `T_d` per scheme (the §V-B stale-state
+//!   herding study); exported as `BENCH_staleness.json`.
 //!
 //! Every function returns structured rows and can render the paper-style
 //! table; the benches in `rust/benches/` wrap these with timing.
@@ -17,6 +20,7 @@ use crate::dnn::DnnModel;
 use crate::metrics::Report;
 use crate::offload::SchemeKind;
 use crate::sim::{Simulation, SplitPolicy};
+use crate::state::DisseminationKind;
 use crate::util::json::Json;
 
 /// One data point of a figure: a (x, scheme) cell.
@@ -40,6 +44,9 @@ pub struct SweepOpts {
     pub engine: EngineKind,
     /// Traffic profile for the event engine.
     pub scenario: ScenarioKind,
+    /// State-dissemination override (`None` = each engine's legacy
+    /// model); [`staleness_sweep`] sets this per cell.
+    pub dissemination: Option<DisseminationKind>,
 }
 
 impl Default for SweepOpts {
@@ -51,6 +58,7 @@ impl Default for SweepOpts {
             repeats: 1,
             engine: EngineKind::Slotted,
             scenario: ScenarioKind::Poisson,
+            dissemination: None,
         }
     }
 }
@@ -72,6 +80,7 @@ fn base_cfg(model: DnnModel, opts: &SweepOpts) -> SimConfig {
         decision_fraction: opts.decision_fraction,
         engine: opts.engine,
         scenario: opts.scenario,
+        dissemination: opts.dissemination,
         ..SimConfig::default()
     }
 }
@@ -169,6 +178,165 @@ pub fn eventsim_lambdas(quick: bool) -> Vec<f64> {
     } else {
         default_lambdas()
     }
+}
+
+/// One point of the staleness sweep: a (dissemination, scheme) cell.
+#[derive(Clone, Debug)]
+pub struct StalenessRow {
+    /// Staleness scale `T_d` [s] (0 for instant; the tick for gossip).
+    pub t_d: f64,
+    /// The dissemination model this cell ran under.
+    pub dissemination: DisseminationKind,
+    pub scheme: SchemeKind,
+    pub report: Report,
+}
+
+/// Default `T_d` grid for the staleness sweep; `quick` trims it to two
+/// points for the CI smoke run.
+pub fn staleness_periods(quick: bool) -> Vec<f64> {
+    if quick {
+        vec![1.0, 4.0]
+    } else {
+        vec![0.25, 0.5, 1.0, 2.0, 4.0]
+    }
+}
+
+/// The λ the staleness sweep runs at by default: the paper's high-traffic
+/// end, where contention makes stale-state herding (§V-B) visible.
+pub const STALENESS_LAMBDA: f64 = 55.0;
+
+/// Sweep completion rate & tail delay vs the dissemination interval on
+/// the engine selected by `opts.engine` (the CLI defaults this to the
+/// event engine, which honours sub-slot intervals): `instant` (the
+/// fresh-state upper bound), `periodic` at every `T_d` in `periods`,
+/// plus the default hop-delayed gossip — each for all four schemes,
+/// averaged over `opts.repeats` seeds.
+pub fn staleness_sweep(
+    model: DnnModel,
+    lambda: f64,
+    periods: &[f64],
+    opts: &SweepOpts,
+) -> Vec<StalenessRow> {
+    let mut kinds = vec![DisseminationKind::Instant];
+    kinds.extend(
+        periods
+            .iter()
+            .map(|&p| DisseminationKind::Periodic { period_s: p }),
+    );
+    kinds.push(DisseminationKind::Gossip {
+        tick_s: crate::state::DEFAULT_GOSSIP_TICK_S,
+    });
+    let mut rows = Vec::new();
+    for &d in &kinds {
+        for scheme in SchemeKind::all() {
+            let reports: Vec<Report> = (0..opts.repeats.max(1))
+                .map(|r| {
+                    let mut cfg = base_cfg(model, opts);
+                    cfg.lambda = lambda;
+                    cfg.seed = opts.seed + r as u64 * 1000;
+                    cfg.dissemination = Some(d);
+                    crate::engine::run(&cfg, scheme)
+                })
+                .collect();
+            rows.push(StalenessRow {
+                t_d: d.t_d_s(),
+                dissemination: d,
+                scheme,
+                report: mean_reports(reports),
+            });
+        }
+    }
+    rows
+}
+
+/// Render the staleness sweep as two panels (completion rate and p95
+/// delay, dissemination × scheme).
+pub fn render_staleness(title: &str, rows: &[StalenessRow]) -> String {
+    let mut kinds: Vec<DisseminationKind> = Vec::new();
+    for r in rows {
+        if !kinds.contains(&r.dissemination) {
+            kinds.push(r.dissemination);
+        }
+    }
+    let schemes = SchemeKind::all();
+    let mut out = format!("== {title} ==\n");
+    for (panel, metric) in [
+        ("(a) task completion rate", 0usize),
+        ("(b) p95 total delay [ms]", 1),
+    ] {
+        out.push_str(&format!("-- {panel} --\n{:>14}", "dissemination"));
+        for s in schemes {
+            out.push_str(&format!("{:>14}", s.name()));
+        }
+        out.push('\n');
+        for &k in &kinds {
+            out.push_str(&format!("{:>14}", k.label()));
+            for s in schemes {
+                let row = rows
+                    .iter()
+                    .find(|r| r.dissemination == k && r.scheme == s)
+                    .expect("missing staleness row");
+                let v = match metric {
+                    0 => row.report.completion_rate(),
+                    _ => row.report.delay_p95_ms,
+                };
+                match metric {
+                    0 => out.push_str(&format!("{v:>14.4}")),
+                    _ => out.push_str(&format!("{v:>14.1}")),
+                }
+            }
+            out.push('\n');
+        }
+    }
+    out
+}
+
+/// The machine-readable `BENCH_staleness.json` payload (per-cell
+/// completion rate, mean/p95 delay, and drop counts — see the README's
+/// "Experiment cookbook" for the schema). `engine` records which clock
+/// produced the rows.
+pub fn staleness_json(
+    model: DnnModel,
+    lambda: f64,
+    engine: EngineKind,
+    quick: bool,
+    rows: &[StalenessRow],
+) -> Json {
+    Json::obj(vec![
+        ("bench", Json::Str("staleness".into())),
+        ("quick", Json::Bool(quick)),
+        ("model", Json::Str(model.name().into())),
+        ("engine", Json::Str(engine.name().into())),
+        ("lambda", Json::Num(lambda)),
+        (
+            "results",
+            Json::Arr(
+                rows.iter()
+                    .map(|r| {
+                        Json::obj(vec![
+                            ("dissemination", Json::Str(r.dissemination.label())),
+                            ("t_d_s", Json::Num(r.t_d)),
+                            ("scheme", Json::Str(r.scheme.name().into())),
+                            (
+                                "completion_rate",
+                                Json::Num(r.report.completion_rate()),
+                            ),
+                            ("avg_delay_ms", Json::Num(r.report.avg_delay_ms)),
+                            ("delay_p95_ms", Json::Num(r.report.delay_p95_ms)),
+                            (
+                                "total_tasks",
+                                Json::Num(r.report.total_tasks as f64),
+                            ),
+                            (
+                                "dropped_tasks",
+                                Json::Num(r.report.dropped_tasks as f64),
+                            ),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ])
 }
 
 /// λ-sweep over all four schemes (the engine behind Figs. 2 & 3).
@@ -385,6 +553,36 @@ mod tests {
         let opts = SweepOpts::quick();
         let rows = ablation_split(DnnModel::Vgg19, &[10.0], &opts);
         assert_eq!(rows.len(), 1);
+    }
+
+    #[test]
+    fn staleness_sweep_covers_all_cells_and_serializes() {
+        let mut opts = SweepOpts::quick();
+        opts.engine = EngineKind::Event;
+        let rows = staleness_sweep(DnnModel::Vgg19, 10.0, &[1.0], &opts);
+        // instant + periodic:1 + gossip, each × 4 schemes
+        assert_eq!(rows.len(), 3 * 4);
+        for r in &rows {
+            assert!(r.report.total_tasks > 0, "{:?}", r.dissemination);
+        }
+        assert!((rows[0].t_d - 0.0).abs() < 1e-12, "instant first");
+        let s = render_staleness("staleness", &rows);
+        assert!(s.contains("(a) task completion rate"));
+        assert!(s.contains("p95 total delay"));
+        assert!(s.contains("instant"));
+        assert!(s.contains("periodic:1"));
+        let j =
+            staleness_json(DnnModel::Vgg19, 10.0, EngineKind::Event, true, &rows).to_string();
+        let parsed = crate::util::json::Json::parse(&j).unwrap();
+        assert_eq!(
+            parsed.get("bench").unwrap().as_str(),
+            Some("staleness")
+        );
+        assert_eq!(parsed.get("engine").unwrap().as_str(), Some("event"));
+        assert_eq!(
+            parsed.get("results").unwrap().as_arr().unwrap().len(),
+            rows.len()
+        );
     }
 
     #[test]

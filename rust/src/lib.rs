@@ -24,14 +24,28 @@
 //! * [`eventsim::EventSim`] — a **continuous-time discrete-event** kernel:
 //!   a binary-heap event queue with deterministic FIFO tie-breaking drives
 //!   `TaskArrival` / `SegmentStart` / `SegmentDone` / `IslTransfer` /
-//!   `Handover` / `Fault` events through per-satellite work-conserving
-//!   queues, so delay fidelity is no longer capped by slot quantization
-//!   and cost scales with events rather than wall-clock slots.
+//!   `Handover` / `Fault` / `StateBroadcast` events through
+//!   per-satellite work-conserving queues, so delay fidelity is no
+//!   longer capped by slot quantization and cost scales with events
+//!   rather than wall-clock slots.
 //!
 //! The event engine draws arrivals from pluggable
 //! [`eventsim::scenario::TrafficScenario`] profiles — homogeneous Poisson
 //! (the paper baseline, on which the two engines agree), diurnal
 //! sinusoidal, bursty MMPP, and a moving ground-track hotspot.
+//!
+//! ## Resource-state dissemination
+//!
+//! Offloading decisions consume a disseminated [`state::StateView`], not
+//! ground truth: [`state::DisseminationKind`] selects how observations age
+//! (`instant`, `periodic:<T_d>` broadcast, or hop-delayed `gossip`), and
+//! both engines drive the same [`state::ViewTracker`]. The slotted
+//! engine's classic slot-start snapshot is the `periodic:1` special case;
+//! the event engine refreshes views on
+//! [`eventsim::Event::StateBroadcast`] events. The `experiment staleness`
+//! sweep measures how completion rate and tail delay degrade with `T_d` —
+//! the §V-B stale-state herding effect.
+//!
 //! * **L2 (python/compile/model.py)** — JAX slice forwards, lowered once
 //!   to `artifacts/*.hlo.txt` at build time.
 //! * **L1 (python/compile/kernels/)** — Pallas matmul/conv kernels inside
@@ -40,15 +54,30 @@
 //! Python never runs on the request path: [`runtime`] loads the HLO text
 //! artifacts and executes them on the PJRT CPU client from Rust.
 //!
+//! See `rust/ARCHITECTURE.md` for the full module map cross-referenced to
+//! the paper's sections and equations, including the data-flow of a task's
+//! life in both engines.
+//!
 //! ## Quickstart
 //!
-//! ```no_run
+//! A [`config::SimConfig`] plus a scheme selects a run; [`engine::run`]
+//! dispatches to the configured clock and returns the §V-B
+//! [`metrics::Report`]:
+//!
+//! ```
 //! use satkit::config::SimConfig;
 //! use satkit::offload::SchemeKind;
-//! use satkit::sim::Simulation;
 //!
-//! let cfg = SimConfig::default();
-//! let report = Simulation::new(&cfg, SchemeKind::Scc).run();
+//! let cfg = SimConfig {
+//!     n: 4,          // 4×4 torus constellation
+//!     slots: 6,      // tiny horizon so the doctest stays fast
+//!     lambda: 6.0,
+//!     seed: 7,
+//!     ..SimConfig::default()
+//! };
+//! let report = satkit::engine::run(&cfg, SchemeKind::Scc);
+//! assert!(report.total_tasks > 0);
+//! assert_eq!(report.total_tasks, report.completed_tasks + report.dropped_tasks);
 //! println!("completion rate = {:.3}", report.completion_rate());
 //! ```
 
@@ -65,6 +94,7 @@ pub mod runtime;
 pub mod satellite;
 pub mod sim;
 pub mod splitting;
+pub mod state;
 pub mod tasks;
 pub mod topology;
 pub mod util;

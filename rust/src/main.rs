@@ -5,8 +5,9 @@
 //!                       (--engine slotted|event, --scenario for traffic)
 //!   sweep               λ-sweep all four schemes for one model
 //!   experiment <id>     regenerate a paper figure (fig2|fig3|eventsim|
-//!                       scale|ablation-split|ablation-ga|all); writes
-//!                       results/<id>.json next to the printed table
+//!                       staleness|scale|ablation-split|ablation-ga|all);
+//!                       writes results/<id>.json next to the printed
+//!                       table (staleness also emits BENCH_staleness.json)
 //!   serve               run the coordinator on real PJRT slice inference
 //!   validate-artifacts  load + execute every artifact once
 //!   print-config        show the effective Table-I configuration
@@ -62,8 +63,8 @@ USAGE: satkit <subcommand> [--options]
 SUBCOMMANDS
   simulate            one simulation run (--scheme scc|random|rrp|dqn)
   sweep               lambda sweep, all schemes (--model vgg19|resnet101)
-  experiment <id>     fig2 | fig3 | eventsim | scale | ablation-split |
-                      ablation-ga | all
+  experiment <id>     fig2 | fig3 | eventsim | staleness | scale |
+                      ablation-split | ablation-ga | all
   serve               coordinator with real PJRT slice inference
   validate-artifacts  compile + execute each artifacts/*.hlo.txt
   print-config        effective Table-I parameters
@@ -74,6 +75,9 @@ OPTIONS
   --model M       vgg19|resnet101              --scheme S
   --engine E      slotted|event (event = continuous-time kernel)
   --scenario T    poisson|diurnal|bursty|hotspot (event engine traffic)
+  --dissemination D  instant|periodic:<s>|gossip[:<s>] — how stale the
+                  resource state behind offloading decisions is (default:
+                  instant on the event engine, periodic:1 on the slotted)
   --seed X        RNG seed      --repeats R    seeds averaged per point
   --quick         smaller slot budget          --json FILE   export rows
   --retain-outcomes  buffer per-task outcomes (metrics stream by default)
@@ -93,9 +97,11 @@ fn sweep_opts(args: &Args, cfg: &SimConfig) -> exp::SweepOpts {
     o.slots = args.get_or("slots", if args.has_flag("quick") { o.slots } else { cfg.slots });
     o.decision_fraction = cfg.decision_fraction;
     o.repeats = args.get_or("repeats", 1usize);
-    // --engine / --scenario flow into sweeps and experiments too
+    // --engine / --scenario / --dissemination flow into sweeps and
+    // experiments too
     o.engine = cfg.engine;
     o.scenario = cfg.scenario;
+    o.dissemination = cfg.dissemination;
     o
 }
 
@@ -180,6 +186,43 @@ fn experiment(args: &Args) -> Result<(), String> {
                 rows,
                 "lambda",
             )?
+        }
+        "staleness" => {
+            // completion rate & p95 delay vs the dissemination interval
+            // T_d per scheme at high traffic — the §V-B stale-state
+            // herding study. Runs on the event engine (which honours
+            // sub-slot T_d) unless --engine explicitly says otherwise;
+            // --lambda overrides the operating point; --quick trims the
+            // T_d grid and horizon.
+            let quick = args.has_flag("quick");
+            let lambda = args
+                .get_parsed::<f64>("lambda")?
+                .unwrap_or(exp::STALENESS_LAMBDA);
+            let mut opts = opts;
+            if args.get("engine").is_none() {
+                opts.engine = satkit::config::EngineKind::Event;
+            }
+            let periods = exp::staleness_periods(quick);
+            let rows = exp::staleness_sweep(cfg.model, lambda, &periods, &opts);
+            println!(
+                "{}",
+                exp::render_staleness(
+                    &format!(
+                        "staleness sweep ({}, {} engine, lambda={lambda})",
+                        cfg.model.name(),
+                        opts.engine.name()
+                    ),
+                    &rows
+                )
+            );
+            let json = exp::staleness_json(cfg.model, lambda, opts.engine, quick, &rows);
+            let bench_path = std::env::var("SATKIT_STALENESS_JSON")
+                .unwrap_or_else(|_| "BENCH_staleness.json".into());
+            satkit::bench::write_json(&bench_path, &json).map_err(|e| e.to_string())?;
+            println!("wrote {bench_path}");
+            satkit::bench::write_json("results/staleness.json", &json)
+                .map_err(|e| e.to_string())?;
+            println!("wrote results/staleness.json\n");
         }
         "scale" => run_fig("scale", exp::scale(&exp::default_ns(), &opts), "N")?,
         "ablation-split" => {

@@ -92,14 +92,13 @@ impl DqnScheme {
         let mut s = Vec::with_capacity(STATE_DIM);
         let l = ctx.segments.len();
         for &a in acts {
-            let sat = &ctx.satellites[a];
-            s.push(sat.utilization());
-            s.push(sat.residual() / sat.max_workload_mflops);
+            s.push(ctx.view.utilization(a));
+            s.push(ctx.view.residual(a) / ctx.view.max_workload(a));
             s.push(ctx.torus.manhattan(ctx.origin, a) as f64 / 8.0);
         }
         // 15 so far
         let q = ctx.segments[k];
-        let cap = ctx.satellites[prev].capacity_mflops;
+        let cap = ctx.view.capacity(prev);
         s.push(q / cap / 10.0); // segment compute slots (scaled)
         s.push(k as f64 / l as f64);
         s.push(l as f64 / 8.0);
@@ -108,7 +107,7 @@ impl DqnScheme {
         let mean_util: f64 = ctx
             .candidates
             .iter()
-            .map(|&c| ctx.satellites[c].utilization())
+            .map(|&c| ctx.view.utilization(c))
             .sum::<f64>()
             / ctx.candidates.len() as f64;
         s.push(mean_util);
@@ -233,7 +232,7 @@ mod tests {
     ) -> OffloadContext<'a> {
         OffloadContext {
             torus,
-            satellites: sats,
+            view: crate::state::StateView::live(sats),
             origin: cands[0],
             candidates: cands,
             segments: segs,

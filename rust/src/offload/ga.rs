@@ -407,7 +407,7 @@ mod tests {
     ) -> OffloadContext<'a> {
         OffloadContext {
             torus,
-            satellites: sats,
+            view: crate::state::StateView::live(sats),
             origin: cands[0],
             candidates: cands,
             segments: segs,

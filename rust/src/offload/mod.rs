@@ -12,7 +12,7 @@ pub mod random;
 pub mod rrp;
 
 use crate::config::GaConfig;
-use crate::satellite::Satellite;
+use crate::state::StateView;
 use crate::topology::{SatId, Torus};
 
 /// Which scheme to run (CLI / experiment selector).
@@ -58,9 +58,16 @@ impl SchemeKind {
 /// Everything a scheme may observe when deciding (local view of the
 /// decision-making satellite: its decision space and those satellites'
 /// resource state — §I's "local observations").
+///
+/// Schemes never read live satellite state: `view` is the disseminated
+/// [`StateView`] maintained by the engine's
+/// [`crate::state::ViewTracker`], so decision staleness
+/// (`--dissemination instant|periodic:<s>|gossip`) is modeled uniformly
+/// across all four schemes and both engines.
 pub struct OffloadContext<'a> {
     pub torus: &'a Torus,
-    pub satellites: &'a [Satellite],
+    /// Disseminated resource-state view of the deciding satellite.
+    pub view: StateView<'a>,
     /// Decision-making satellite x (task origin).
     pub origin: SatId,
     /// A_x — candidate satellites within D_M of x (constraint 11c).
@@ -97,11 +104,10 @@ impl<'a> OffloadContext<'a> {
             Vec::with_capacity(chrom.len())
         };
         for (k, (&c, &q)) in chrom.iter().zip(self.segments).enumerate() {
-            let sat = &self.satellites[c];
-            // θ1 term, queue-aware: the GA observes current loads (the
-            // "self-adaptive" part of Alg. 2) — waiting behind a loaded
-            // satellite's backlog is paid like service time.
-            comp += (sat.loaded() + q) / sat.capacity_mflops;
+            // θ1 term, queue-aware: the GA observes the disseminated loads
+            // (the "self-adaptive" part of Alg. 2) — waiting behind a
+            // loaded satellite's backlog is paid like service time.
+            comp += (self.view.loaded(c) + q) / self.view.capacity(c);
             if k + 1 < chrom.len() {
                 // Eq. 12 tran term in SECONDS: κ·q_k·MH is the realized
                 // Eq. 7 transmission delay of shipping segment k's cut
@@ -128,7 +134,7 @@ impl<'a> OffloadContext<'a> {
                     .map(|(_, w)| *w)
                     .sum()
             };
-            if q > 0.0 && sat.loaded() + planned + q >= sat.max_workload_mflops {
+            if q > 0.0 && self.view.loaded(c) + planned + q >= self.view.max_workload(c) {
                 drops += 1.0;
             } else if short {
                 admitted[k] = true;
@@ -144,13 +150,12 @@ impl<'a> OffloadContext<'a> {
         let mut drops = 0usize;
         let mut extra: Vec<(SatId, f64)> = Vec::with_capacity(chrom.len());
         for (&c, &q) in chrom.iter().zip(self.segments) {
-            let sat = &self.satellites[c];
             let planned: f64 = extra
                 .iter()
                 .filter(|(id, _)| *id == c)
                 .map(|(_, w)| *w)
                 .sum();
-            if q > 0.0 && sat.loaded() + planned + q >= sat.max_workload_mflops {
+            if q > 0.0 && self.view.loaded(c) + planned + q >= self.view.max_workload(c) {
                 drops += 1;
             } else {
                 extra.push((c, q));
@@ -189,7 +194,9 @@ pub struct DecisionSpaceIndex {
     sat_ids: Vec<SatId>,
     /// Row-major `|A_x|²` Manhattan-hop LUT.
     hops: Vec<u16>,
-    /// Per-candidate snapshots of the satellite state `deficit` reads.
+    /// Per-candidate copies of the observed satellite state `deficit`
+    /// reads (taken from the decision's [`StateView`], so the index
+    /// carries whatever staleness the dissemination model imposes).
     loaded: Vec<f64>,
     capacity: Vec<f64>,
     max_workload: Vec<f64>,
@@ -225,10 +232,9 @@ impl DecisionSpaceIndex {
         self.capacity.clear();
         self.max_workload.clear();
         for &c in ctx.candidates {
-            let s = &ctx.satellites[c];
-            self.loaded.push(s.loaded());
-            self.capacity.push(s.capacity_mflops);
-            self.max_workload.push(s.max_workload_mflops);
+            self.loaded.push(ctx.view.loaded(c));
+            self.capacity.push(ctx.view.capacity(c));
+            self.max_workload.push(ctx.view.max_workload(c));
         }
         self.segments.clear();
         self.segments.extend_from_slice(ctx.segments);
@@ -472,7 +478,7 @@ mod tests {
     ) -> OffloadContext<'a> {
         OffloadContext {
             torus,
-            satellites: sats,
+            view: StateView::live(sats),
             origin: 0,
             candidates,
             segments,

@@ -50,7 +50,7 @@ mod tests {
         let ga = GaConfig::default();
         let ctx = OffloadContext {
             torus: &torus,
-            satellites: &sats,
+            view: crate::state::StateView::live(&sats),
             origin: 7,
             candidates: &cands,
             segments: &segs,
@@ -74,7 +74,7 @@ mod tests {
         let ga = GaConfig::default();
         let ctx = OffloadContext {
             torus: &torus,
-            satellites: &sats,
+            view: crate::state::StateView::live(&sats),
             origin: 0,
             candidates: &cands,
             segments: &segs,

@@ -38,9 +38,9 @@ impl OffloadScheme for RrpScheme {
             let best_pos = (0..ctx.candidates.len())
                 .max_by(|&i, &j| {
                     let ri =
-                        (ctx.satellites[ctx.candidates[i]].residual() - self.planned[i]).max(0.0);
+                        (ctx.view.residual(ctx.candidates[i]) - self.planned[i]).max(0.0);
                     let rj =
-                        (ctx.satellites[ctx.candidates[j]].residual() - self.planned[j]).max(0.0);
+                        (ctx.view.residual(ctx.candidates[j]) - self.planned[j]).max(0.0);
                     ri.partial_cmp(&rj)
                         .unwrap()
                         // deterministic tie-break: lower id wins
@@ -73,7 +73,7 @@ mod tests {
     ) -> OffloadContext<'a> {
         OffloadContext {
             torus,
-            satellites: sats,
+            view: crate::state::StateView::live(sats),
             origin: 0,
             candidates: cands,
             segments: segs,

@@ -7,7 +7,9 @@
 //! 1. every decision-making satellite receives Poisson(λ) tasks from its
 //!    gateway (uplink delay sampled from Eq. 1);
 //! 2. each task is split into L segments by Alg. 1;
-//! 3. the scheme picks the processing sequence (c_1..c_L) within A_x;
+//! 3. the scheme picks the processing sequence (c_1..c_L) within A_x,
+//!    deciding on the origin's disseminated [`crate::state::StateView`]
+//!    (default: the slot-start snapshot, `T_d` = 1 slot);
 //! 4. segments are loaded in order (Eq. 4) — the first rejection drops
 //!    the task at dp = k; accepted segments accrue computation delay
 //!    q_k/C (Eq. 5) and transmission delay MH·q_k·κ (Eq. 7);
@@ -16,11 +18,12 @@
 pub mod dynamics;
 
 use crate::comm::{GatewayChannel, IslLink};
-use crate::config::SimConfig;
+use crate::config::{EngineKind, SimConfig};
 use crate::metrics::{MetricsCollector, Report, TaskOutcome};
 use crate::offload::{make_scheme, OffloadContext, OffloadScheme, SchemeKind};
 use crate::satellite::{Admission, Satellite};
 use crate::splitting::balanced_split;
+use crate::state::ViewTracker;
 use crate::tasks::{decision_satellites, TaskGenerator};
 use crate::topology::{SatId, Torus};
 use crate::util::rng::Pcg64;
@@ -241,12 +244,18 @@ impl Simulation {
 
         // Local-observation decision model (§I: "each terminal
         // independently determines offloading decisions based on its local
-        // observations"): resource state disseminates over ISLs once per
-        // slot, so within a slot every decision satellite sees the
-        // slot-start snapshot plus ONLY its own placements. This is what
-        // makes §V-B's herding observable: multiple decision satellites
-        // pick the same "fittest" satellite before its load updates.
-        let mut local_view: Vec<Satellite> = self.satellites.clone();
+        // observations"): decisions consume a disseminated StateView
+        // rather than live state. The default (periodic, T_d = 1 slot) is
+        // the classic slot-start snapshot plus ONLY the origin's own
+        // placements — what makes §V-B's herding observable: multiple
+        // decision satellites pick the same "fittest" satellite before
+        // its load updates. `--dissemination` swaps the staleness model.
+        let mut tracker = ViewTracker::new(
+            self.cfg.effective_dissemination_for(EngineKind::Slotted),
+            self.satellites.len(),
+            spaces.len(),
+            d_max,
+        );
         let mut faults = self.faults.take();
         // Per-task scratch, reused across every task of the run (the
         // decision hot path allocates nothing in steady state).
@@ -259,7 +268,22 @@ impl Simulation {
                     self.satellites[id].reset();
                 }
             }
-            for (origin0, candidates0) in &spaces {
+            let t_slot = slot as f64;
+            // gossip disseminates at slot granularity here: one snapshot
+            // per slot start, before any origin acts, so a peer's state is
+            // MH hops × 1 slot old in every origin's view
+            if tracker.is_gossip() {
+                let serving: Vec<SatId> = spaces
+                    .iter()
+                    .map(|(o, _)| match &self.handover {
+                        Some(h) => h.serving_at(&self.torus, *o, slot),
+                        None => *o,
+                    })
+                    .collect();
+                tracker.broadcast_now(t_slot, &self.satellites, &self.torus, &serving);
+            }
+            tracker.advance_to(t_slot);
+            for (area, (origin0, candidates0)) in spaces.iter().enumerate() {
                 // orbital handover: the serving satellite (and with it the
                 // decision space) drifts along the orbit
                 let (origin, candidates_owned);
@@ -279,11 +303,11 @@ impl Simulation {
                     Some(f) => f.healthy(&candidates_owned),
                     None => candidates_owned,
                 };
-                let origin = &origin;
                 let candidates = &candidates;
-                // this origin's view: slot-start snapshot of everyone
-                local_view.clone_from(&self.satellites);
-                let arrivals = self.gen.arrivals(*origin, slot);
+                // this origin's view resyncs only when a new broadcast
+                // window opened (every batch at the default T_d = 1 slot)
+                tracker.sync_batch(area, &self.satellites);
+                let arrivals = self.gen.arrivals(origin, slot);
                 for task in arrivals {
                     let scale_key = (task.scale * 1e6) as u64;
                     let early_exit = &self.early_exit_workloads;
@@ -300,12 +324,12 @@ impl Simulation {
                         &mut seg_buf,
                     );
                     let segments = &seg_buf;
-                    // scheme decision under the origin's local view
+                    // scheme decision under the origin's disseminated view
                     {
                         let ctx = OffloadContext {
                             torus: &self.torus,
-                            satellites: &local_view,
-                            origin: *origin,
+                            view: tracker.view(area, &self.satellites),
+                            origin,
                             candidates,
                             segments,
                             kappa: self.kappa,
@@ -315,9 +339,7 @@ impl Simulation {
                     }
                     // the origin tracks its own placements in its view
                     for (&c, &q) in chrom.iter().zip(segments) {
-                        if q > 0.0 {
-                            let _ = local_view[c].try_load(q);
-                        }
+                        tracker.record_local(area, c, q, t_slot, &self.satellites);
                     }
                     debug_assert_eq!(chrom.len(), segments.len());
 
@@ -357,8 +379,8 @@ impl Simulation {
                     {
                         let ctx = OffloadContext {
                             torus: &self.torus,
-                            satellites: &local_view,
-                            origin: *origin,
+                            view: tracker.view(area, &self.satellites),
+                            origin,
                             candidates,
                             segments,
                             kappa: self.kappa,
@@ -369,7 +391,7 @@ impl Simulation {
                     }
                     metrics.record(TaskOutcome {
                         task_id: task.id,
-                        origin: *origin,
+                        origin,
                         drop_point,
                         l,
                         comp_delay_s: comp,

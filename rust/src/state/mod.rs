@@ -1,0 +1,615 @@
+//! Resource-state dissemination: what a decision-making satellite can
+//! *observe* when it offloads (§I "local observations", §IV Eq. 12).
+//!
+//! The paper's offloading decisions are made on **disseminated** resource
+//! state, not on ground truth: satellite loads propagate over ISLs, so by
+//! the time a decision satellite evaluates Eq. 12 the loads it sees may be
+//! stale. That staleness is exactly what makes the §V-B herding /
+//! load-imbalance effect visible — several decision satellites pick the
+//! same "fittest" target before anyone learns its load moved. This module
+//! makes the observability model first-class and shared by both engines:
+//!
+//! * [`StateView`] — the read-only snapshot every
+//!   [`crate::offload::OffloadScheme::decide_into`] consumes instead of
+//!   live satellite state. Static parameters (`C_x`, `M_w`) are always
+//!   exact; the *loaded workload* is either live or an observed copy.
+//! * [`DisseminationKind`] — how observations age:
+//!   - `instant`: decisions see ground truth (the event engine's legacy
+//!     behaviour, and an idealized upper bound);
+//!   - `periodic:<T_d>`: a network-wide state broadcast every `T_d`
+//!     seconds; between broadcasts an origin sees the last broadcast plus
+//!     only its **own** placements (the slotted engine's classic
+//!     slot-start snapshot is the `T_d = slot` special case);
+//!   - `gossip[:<tick>]`: hop-delayed flooding — an origin's view of a
+//!     peer `p` lags by `MH(x, p)` gossip ticks, each tick standing for
+//!     one ISL store-and-forward interval.
+//! * [`ViewTracker`] — the engine-side machinery: per-area view buffers,
+//!   the broadcast/tick schedule, and the origin's self-knowledge
+//!   (placements it issued are applied to its own view immediately,
+//!   gated by the same Eq. 4 admission rule it believes holds).
+//!
+//! Both engines drive one tracker. The event engine fires a
+//! [`crate::eventsim::Event::StateBroadcast`] event per interval and
+//! captures state **eagerly** at the broadcast instant. The slotted engine
+//! keeps its legacy semantics by capturing **lazily** at the start of each
+//! origin's per-slot batch (dissemination is modeled as completing by the
+//! time the origin processes its arrivals); with `T_d = 1` slot this
+//! coincides exactly with the pre-existing local-view snapshot, which is
+//! enforced bit-for-bit by `tests/prop_staleness.rs`.
+
+use std::collections::VecDeque;
+
+use crate::satellite::Satellite;
+use crate::topology::{SatId, Torus};
+
+/// Default gossip store-and-forward interval [s] — the per-hop state
+/// propagation latency when `gossip` is selected without an argument.
+pub const DEFAULT_GOSSIP_TICK_S: f64 = 0.5;
+
+/// How resource state propagates from satellites to decision makers.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum DisseminationKind {
+    /// Decisions observe ground-truth loads (no propagation delay).
+    Instant,
+    /// Network-wide broadcast every `period_s` seconds; views refresh per
+    /// broadcast window and otherwise age together.
+    Periodic {
+        /// T_d — broadcast period [s].
+        period_s: f64,
+    },
+    /// Hop-delayed gossip: an origin's view of peer `p` lags by
+    /// `MH(origin, p)` ticks of `tick_s` seconds each.
+    Gossip {
+        /// Per-hop store-and-forward interval [s].
+        tick_s: f64,
+    },
+}
+
+impl DisseminationKind {
+    /// Parse `instant | periodic[:<secs>] | gossip[:<secs>]` (the
+    /// `--dissemination` CLI / TOML syntax). `periodic` without an
+    /// argument means one slot (1 s); `gossip` without an argument uses
+    /// [`DEFAULT_GOSSIP_TICK_S`].
+    pub fn parse(s: &str) -> Result<DisseminationKind, String> {
+        let low = s.to_ascii_lowercase();
+        let (head, arg) = match low.split_once(':') {
+            Some((h, a)) => (h, Some(a)),
+            None => (low.as_str(), None),
+        };
+        let parse_secs = |a: &str| -> Result<f64, String> {
+            a.parse::<f64>()
+                .map_err(|e| format!("dissemination interval '{a}': {e}"))
+        };
+        match head {
+            "instant" | "fresh" => match arg {
+                None => Ok(DisseminationKind::Instant),
+                Some(a) => Err(format!("instant takes no argument (got ':{a}')")),
+            },
+            "periodic" | "broadcast" => Ok(DisseminationKind::Periodic {
+                period_s: match arg {
+                    Some(a) => parse_secs(a)?,
+                    None => 1.0,
+                },
+            }),
+            "gossip" | "hop" => Ok(DisseminationKind::Gossip {
+                tick_s: match arg {
+                    Some(a) => parse_secs(a)?,
+                    None => DEFAULT_GOSSIP_TICK_S,
+                },
+            }),
+            other => Err(format!(
+                "unknown dissemination '{other}' (instant|periodic:<s>|gossip[:<s>])"
+            )),
+        }
+    }
+
+    /// Canonical label, accepted back by [`DisseminationKind::parse`].
+    pub fn label(&self) -> String {
+        match self {
+            DisseminationKind::Instant => "instant".into(),
+            DisseminationKind::Periodic { period_s } => format!("periodic:{period_s}"),
+            DisseminationKind::Gossip { tick_s } => format!("gossip:{tick_s}"),
+        }
+    }
+
+    /// The staleness scale [s]: 0 for instant, the broadcast period for
+    /// periodic, the per-hop tick for gossip (the x-axis of the
+    /// `experiment staleness` sweep).
+    pub fn t_d_s(&self) -> f64 {
+        match self {
+            DisseminationKind::Instant => 0.0,
+            DisseminationKind::Periodic { period_s } => *period_s,
+            DisseminationKind::Gossip { tick_s } => *tick_s,
+        }
+    }
+
+    /// The model as a slot-clocked engine can realize it: dissemination
+    /// can happen at most once per 1 s slot, so sub-slot intervals clamp
+    /// up to one slot (`periodic:0.25` runs as `periodic:1`) and a gossip
+    /// tick is always one slot per hop. Longer periodic windows,
+    /// including non-integer ones, pass through unchanged (the window
+    /// boundary test `floor(t / T_d)` works at slot granularity).
+    pub fn quantized_to_slots(&self) -> DisseminationKind {
+        match *self {
+            DisseminationKind::Instant => DisseminationKind::Instant,
+            DisseminationKind::Periodic { period_s } => DisseminationKind::Periodic {
+                period_s: period_s.max(1.0),
+            },
+            DisseminationKind::Gossip { .. } => DisseminationKind::Gossip { tick_s: 1.0 },
+        }
+    }
+
+    /// Range-check the model parameters.
+    pub fn validate(&self) -> Result<(), String> {
+        let secs = self.t_d_s();
+        if !secs.is_finite() || secs < 0.0 {
+            return Err(format!("dissemination interval {secs} must be finite and >= 0"));
+        }
+        match self {
+            DisseminationKind::Instant => Ok(()),
+            _ if secs > 0.0 => Ok(()),
+            _ => Err("dissemination interval must be > 0 (use 'instant' for no lag)".into()),
+        }
+    }
+}
+
+/// The resource state an offloading scheme is allowed to observe.
+///
+/// Static per-satellite parameters (`C_x` capacity, `M_w` admission
+/// ceiling) are always read exactly; the **loaded workload** `q` is either
+/// live (instant dissemination) or an observed per-area copy maintained by
+/// a [`ViewTracker`]. Derived quantities ([`StateView::residual`],
+/// [`StateView::utilization`]) use the same expressions as
+/// [`Satellite::residual`] / [`Satellite::utilization`] so instant views
+/// are bit-for-bit identical to reading the satellites directly.
+#[derive(Clone, Copy)]
+pub struct StateView<'a> {
+    sats: &'a [Satellite],
+    observed: Option<&'a [f64]>,
+}
+
+impl<'a> StateView<'a> {
+    /// A view with zero staleness: reads live satellite state.
+    pub fn live(sats: &'a [Satellite]) -> StateView<'a> {
+        StateView {
+            sats,
+            observed: None,
+        }
+    }
+
+    /// A view whose loaded workloads come from `loaded` (one entry per
+    /// satellite) while static parameters stay exact.
+    pub fn observed(sats: &'a [Satellite], loaded: &'a [f64]) -> StateView<'a> {
+        debug_assert_eq!(sats.len(), loaded.len());
+        StateView {
+            sats,
+            observed: Some(loaded),
+        }
+    }
+
+    /// Number of satellites in view.
+    pub fn len(&self) -> usize {
+        self.sats.len()
+    }
+
+    /// True when the constellation is empty.
+    pub fn is_empty(&self) -> bool {
+        self.sats.is_empty()
+    }
+
+    /// True when loads are observed copies rather than ground truth.
+    pub fn is_stale(&self) -> bool {
+        self.observed.is_some()
+    }
+
+    /// Observed loaded workload `q` of satellite `id` [MFLOP].
+    #[inline]
+    pub fn loaded(&self, id: SatId) -> f64 {
+        match self.observed {
+            Some(o) => o[id],
+            None => self.sats[id].loaded(),
+        }
+    }
+
+    /// `C_x` — computation capability [MFLOP/slot] (always exact).
+    #[inline]
+    pub fn capacity(&self, id: SatId) -> f64 {
+        self.sats[id].capacity_mflops
+    }
+
+    /// `M_w` — maximum loaded workload before Eq. 4 rejects (always exact).
+    #[inline]
+    pub fn max_workload(&self, id: SatId) -> f64 {
+        self.sats[id].max_workload_mflops
+    }
+
+    /// Observed residual admissible workload `M_w − q` (RRP's ranking key).
+    #[inline]
+    pub fn residual(&self, id: SatId) -> f64 {
+        (self.sats[id].max_workload_mflops - self.loaded(id)).max(0.0)
+    }
+
+    /// Observed admission-window utilization `q / M_w` in [0, 1].
+    #[inline]
+    pub fn utilization(&self, id: SatId) -> f64 {
+        (self.loaded(id) / self.sats[id].max_workload_mflops).clamp(0.0, 1.0)
+    }
+}
+
+/// One gossip snapshot: capture time plus per-satellite loaded workloads.
+type Snapshot = (f64, Vec<f64>);
+
+/// Engine-side dissemination machinery: per-area observed-state buffers
+/// driven by the broadcast/tick schedule of a [`DisseminationKind`].
+///
+/// * **Instant** — no buffers; [`ViewTracker::view`] returns a live view.
+/// * **Periodic** — one `loaded` buffer per decision area. The event
+///   engine refreshes every buffer eagerly at each `StateBroadcast` event
+///   ([`ViewTracker::broadcast_now`]); the slotted engine refreshes lazily
+///   at the first batch of each broadcast window
+///   ([`ViewTracker::advance_to`] + [`ViewTracker::sync_batch`]), which
+///   makes `T_d = 1` slot coincide exactly with its legacy local-view
+///   snapshot.
+/// * **Gossip** — a ring of timestamped whole-constellation snapshots; an
+///   area's view of peer `p` is the snapshot `MH(origin, p)` ticks old,
+///   with the area's own recent placements replayed on top.
+///
+/// Self-knowledge: [`ViewTracker::record_local`] applies an origin's own
+/// placement to its view immediately — gated by Eq. 4 against the *view*
+/// (the origin's belief), matching the legacy slotted `local_view` exactly.
+pub struct ViewTracker {
+    kind: DisseminationKind,
+    /// Per-area observed `loaded` vectors (empty for Instant).
+    views: Vec<Vec<f64>>,
+    /// Broadcast generation each area's view last synced to (Periodic).
+    synced: Vec<u64>,
+    /// Broadcast windows opened so far (Periodic).
+    generation: u64,
+    /// Snapshot ring, newest first: `ring[h]` is `h` ticks old (Gossip).
+    ring: VecDeque<Snapshot>,
+    /// Ring depth: `d_max + 1` (view lag is capped at `d_max` hops, the
+    /// farthest candidate constraint 11c admits).
+    depth: usize,
+    /// Per-area log of own placements `(t, sat, q)` newer than the oldest
+    /// retained snapshot, replayed on top of lagged snapshots (Gossip).
+    logs: Vec<Vec<(f64, SatId, f64)>>,
+}
+
+impl ViewTracker {
+    /// Build a tracker for `n_areas` decision areas over `n_sats`
+    /// satellites; `d_max` bounds the gossip lag (constraint 11c).
+    pub fn new(
+        kind: DisseminationKind,
+        n_sats: usize,
+        n_areas: usize,
+        d_max: usize,
+    ) -> ViewTracker {
+        let buffered = !matches!(kind, DisseminationKind::Instant);
+        let gossip = matches!(kind, DisseminationKind::Gossip { .. });
+        let mut ring = VecDeque::new();
+        if gossip {
+            // the constellation starts idle: one all-zero snapshot at t=0
+            ring.push_front((0.0, vec![0.0; n_sats]));
+        }
+        ViewTracker {
+            kind,
+            views: if buffered {
+                vec![vec![0.0; n_sats]; n_areas]
+            } else {
+                Vec::new()
+            },
+            synced: vec![0; if buffered { n_areas } else { 0 }],
+            generation: 0,
+            ring,
+            depth: d_max + 1,
+            logs: vec![Vec::new(); if gossip { n_areas } else { 0 }],
+        }
+    }
+
+    /// The model this tracker implements.
+    pub fn kind(&self) -> DisseminationKind {
+        self.kind
+    }
+
+    /// True when views are live (no buffers to maintain).
+    pub fn is_instant(&self) -> bool {
+        matches!(self.kind, DisseminationKind::Instant)
+    }
+
+    /// True for the hop-delayed gossip model.
+    pub fn is_gossip(&self) -> bool {
+        matches!(self.kind, DisseminationKind::Gossip { .. })
+    }
+
+    /// Interval between dissemination events [s]; `None` for instant
+    /// (nothing to schedule).
+    pub fn broadcast_interval(&self) -> Option<f64> {
+        match self.kind {
+            DisseminationKind::Instant => None,
+            DisseminationKind::Periodic { period_s } => Some(period_s),
+            DisseminationKind::Gossip { tick_s } => Some(tick_s),
+        }
+    }
+
+    /// Eager capture at a dissemination instant (the event engine's
+    /// `StateBroadcast` handler; the slotted engine calls this at slot
+    /// start for gossip). `serving[area]` is each area's current decision
+    /// satellite — the gossip lag reference point.
+    pub fn broadcast_now(
+        &mut self,
+        t: f64,
+        sats: &[Satellite],
+        torus: &Torus,
+        serving: &[SatId],
+    ) {
+        match self.kind {
+            DisseminationKind::Instant => {}
+            DisseminationKind::Periodic { .. } => {
+                self.generation += 1;
+                for (area, view) in self.views.iter_mut().enumerate() {
+                    for (v, s) in view.iter_mut().zip(sats) {
+                        *v = s.loaded();
+                    }
+                    self.synced[area] = self.generation;
+                }
+            }
+            DisseminationKind::Gossip { .. } => {
+                // push the new snapshot, recycling the evicted buffer
+                let mut snap = if self.ring.len() >= self.depth {
+                    self.ring.pop_back().map(|(_, v)| v).unwrap_or_default()
+                } else {
+                    Vec::new()
+                };
+                snap.clear();
+                snap.extend(sats.iter().map(|s| s.loaded()));
+                self.ring.push_front((t, snap));
+                let oldest_t = self.ring.back().map(|(ts, _)| *ts).unwrap_or(t);
+                let newest = self.ring.len() - 1;
+                for (area, log) in self.logs.iter_mut().enumerate() {
+                    // entries strictly before the oldest snapshot are
+                    // inside every retained snapshot already
+                    log.retain(|&(tp, _, _)| tp >= oldest_t);
+                    let origin = serving[area];
+                    let view = &mut self.views[area];
+                    for (p, v) in view.iter_mut().enumerate() {
+                        let h = torus.manhattan(origin, p).min(newest);
+                        *v = self.ring[h].1[p];
+                    }
+                    // replay own placements the visible snapshot cannot
+                    // contain yet: a snapshot at time ts captures state
+                    // from strictly before ts (the slotted engine stamps
+                    // slot-start snapshots and same-slot placements with
+                    // the same integer second), so tp >= ts replays
+                    for &(tp, p, q) in log.iter() {
+                        let h = torus.manhattan(origin, p).min(newest);
+                        if tp >= self.ring[h].0 {
+                            view[p] += q;
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    /// Lazy clock advance for the slotted engine: opens the broadcast
+    /// window containing time `t` (Periodic only); actual state capture is
+    /// deferred to each area's next [`ViewTracker::sync_batch`].
+    pub fn advance_to(&mut self, t: f64) {
+        if let DisseminationKind::Periodic { period_s } = self.kind {
+            self.generation = (t / period_s).floor() as u64 + 1;
+        }
+    }
+
+    /// Lazy capture at the start of an area's decision batch (slotted
+    /// engine): if a new broadcast window opened since this area last
+    /// synced, its view re-captures live state — the legacy slot-start
+    /// snapshot when `T_d = 1` slot.
+    pub fn sync_batch(&mut self, area: usize, sats: &[Satellite]) {
+        if matches!(self.kind, DisseminationKind::Periodic { .. })
+            && self.synced[area] < self.generation
+        {
+            for (v, s) in self.views[area].iter_mut().zip(sats) {
+                *v = s.loaded();
+            }
+            self.synced[area] = self.generation;
+        }
+    }
+
+    /// Record a placement the origin of `area` just issued: its own view
+    /// updates immediately (it made the decision), gated by the Eq. 4
+    /// admission rule evaluated against the *view* — the origin's belief,
+    /// exactly like the legacy slotted `local_view.try_load`. No-op for
+    /// instant (live state already reflects real admissions).
+    pub fn record_local(&mut self, area: usize, sat: SatId, q: f64, t: f64, sats: &[Satellite]) {
+        if self.is_instant() || q <= 0.0 {
+            return;
+        }
+        let view = &mut self.views[area];
+        if view[sat] + q < sats[sat].max_workload_mflops {
+            view[sat] += q;
+            if !self.logs.is_empty() {
+                self.logs[area].push((t, sat, q));
+            }
+        }
+    }
+
+    /// The state view `area`'s origin decides on right now.
+    pub fn view<'a>(&'a self, area: usize, sats: &'a [Satellite]) -> StateView<'a> {
+        match self.kind {
+            DisseminationKind::Instant => StateView::live(sats),
+            _ => StateView::observed(sats, &self.views[area]),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sats(n: usize) -> Vec<Satellite> {
+        (0..n).map(|i| Satellite::new(i, 3000.0, 15000.0)).collect()
+    }
+
+    #[test]
+    fn parse_roundtrip_and_errors() {
+        for s in ["instant", "periodic:0.5", "periodic:2", "gossip:0.25"] {
+            let k = DisseminationKind::parse(s).unwrap();
+            assert_eq!(DisseminationKind::parse(&k.label()).unwrap(), k);
+        }
+        assert_eq!(
+            DisseminationKind::parse("periodic").unwrap(),
+            DisseminationKind::Periodic { period_s: 1.0 }
+        );
+        assert_eq!(
+            DisseminationKind::parse("gossip").unwrap(),
+            DisseminationKind::Gossip {
+                tick_s: DEFAULT_GOSSIP_TICK_S
+            }
+        );
+        assert!(DisseminationKind::parse("telepathy").is_err());
+        assert!(DisseminationKind::parse("periodic:x").is_err());
+        assert!(DisseminationKind::parse("instant:1").is_err());
+        assert!(DisseminationKind::Periodic { period_s: 0.0 }.validate().is_err());
+        assert!(DisseminationKind::Gossip { tick_s: f64::NAN }.validate().is_err());
+        assert!(DisseminationKind::Instant.validate().is_ok());
+    }
+
+    #[test]
+    fn live_view_matches_satellite_reads_bitwise() {
+        let mut s = sats(4);
+        s[2].try_load(1234.5);
+        let v = StateView::live(&s);
+        assert_eq!(v.len(), 4);
+        assert!(!v.is_stale());
+        for (i, sat) in s.iter().enumerate() {
+            assert_eq!(v.loaded(i).to_bits(), sat.loaded().to_bits());
+            assert_eq!(v.residual(i).to_bits(), sat.residual().to_bits());
+            assert_eq!(v.utilization(i).to_bits(), sat.utilization().to_bits());
+            assert_eq!(v.capacity(i), sat.capacity_mflops);
+            assert_eq!(v.max_workload(i), sat.max_workload_mflops);
+        }
+    }
+
+    #[test]
+    fn observed_view_overrides_loads_only() {
+        let mut s = sats(3);
+        s[0].try_load(9000.0);
+        let obs = vec![100.0, 200.0, 300.0];
+        let v = StateView::observed(&s, &obs);
+        assert!(v.is_stale());
+        assert_eq!(v.loaded(0), 100.0); // stale, not the live 9000
+        assert_eq!(v.residual(2), 15000.0 - 300.0);
+        assert_eq!(v.capacity(0), 3000.0); // static params stay exact
+    }
+
+    #[test]
+    fn periodic_views_freeze_between_broadcasts() {
+        let torus = Torus::new(3);
+        let mut live = sats(9);
+        let mut tr = ViewTracker::new(
+            DisseminationKind::Periodic { period_s: 2.0 },
+            9,
+            1,
+            2,
+        );
+        let serving = [0usize];
+        live[4].try_load(5000.0);
+        tr.broadcast_now(2.0, &live, &torus, &serving);
+        assert_eq!(tr.view(0, &live).loaded(4), 5000.0);
+        // live moves on; the view must not
+        live[4].try_load(3000.0);
+        assert_eq!(tr.view(0, &live).loaded(4), 5000.0);
+        tr.broadcast_now(4.0, &live, &torus, &serving);
+        assert_eq!(tr.view(0, &live).loaded(4), 8000.0);
+    }
+
+    #[test]
+    fn record_local_respects_believed_admission() {
+        let torus = Torus::new(3);
+        let live = sats(9);
+        let mut tr = ViewTracker::new(
+            DisseminationKind::Periodic { period_s: 1.0 },
+            9,
+            1,
+            2,
+        );
+        tr.broadcast_now(0.0, &live, &torus, &[0]);
+        tr.record_local(0, 3, 14_000.0, 0.0, &live);
+        assert_eq!(tr.view(0, &live).loaded(3), 14_000.0);
+        // 14_000 + 2_000 >= 15_000: the origin believes this placement
+        // would be rejected, so its view must not grow
+        tr.record_local(0, 3, 2_000.0, 0.0, &live);
+        assert_eq!(tr.view(0, &live).loaded(3), 14_000.0);
+        tr.record_local(0, 3, 900.0, 0.0, &live);
+        assert_eq!(tr.view(0, &live).loaded(3), 14_900.0);
+    }
+
+    #[test]
+    fn gossip_views_lag_by_hop_count() {
+        let torus = Torus::new(4);
+        let mut live = sats(16);
+        let origin = 0usize;
+        let nb = torus.neighbors(origin)[0];
+        let mut tr = ViewTracker::new(
+            DisseminationKind::Gossip { tick_s: 1.0 },
+            16,
+            1,
+            2,
+        );
+        // tick 1: neighbor loaded 4000
+        live[nb].try_load(4000.0);
+        live[origin].try_load(1000.0);
+        tr.broadcast_now(1.0, &live, &torus, &[origin]);
+        // tick 2: neighbor loads 2000 more
+        live[nb].try_load(2000.0);
+        tr.broadcast_now(2.0, &live, &torus, &[origin]);
+        let v = tr.view(0, &live);
+        // self: freshest snapshot (lag 0)
+        assert_eq!(v.loaded(origin), 1000.0);
+        // neighbor at MH=1: one tick old — sees 4000, not 6000
+        assert_eq!(v.loaded(nb), 4000.0);
+        // after another tick the 6000 becomes visible at lag 1
+        tr.broadcast_now(3.0, &live, &torus, &[origin]);
+        assert_eq!(tr.view(0, &live).loaded(nb), 6000.0);
+    }
+
+    #[test]
+    fn gossip_replays_own_placements_on_stale_peers() {
+        let torus = Torus::new(4);
+        let live = sats(16);
+        let origin = 0usize;
+        let nb = torus.neighbors(origin)[0];
+        let mut tr = ViewTracker::new(
+            DisseminationKind::Gossip { tick_s: 1.0 },
+            16,
+            1,
+            2,
+        );
+        tr.broadcast_now(1.0, &live, &torus, &[origin]);
+        // the origin places 3000 on its neighbor between ticks: its own
+        // view must reflect it immediately...
+        tr.record_local(0, nb, 3000.0, 1.5, &live);
+        assert_eq!(tr.view(0, &live).loaded(nb), 3000.0);
+        // ...and keep reflecting it across the next tick, where the
+        // visible (1-tick-old) snapshot predates the placement. The live
+        // state never saw the load (this test never calls try_load), which
+        // stands in for the snapshot lag.
+        tr.broadcast_now(2.0, &live, &torus, &[origin]);
+        assert_eq!(tr.view(0, &live).loaded(nb), 3000.0);
+    }
+
+    #[test]
+    fn instant_tracker_is_transparent() {
+        let torus = Torus::new(3);
+        let mut live = sats(9);
+        let mut tr = ViewTracker::new(DisseminationKind::Instant, 9, 2, 2);
+        assert!(tr.is_instant());
+        assert_eq!(tr.broadcast_interval(), None);
+        tr.broadcast_now(1.0, &live, &torus, &[0, 4]);
+        tr.record_local(0, 3, 500.0, 1.0, &live);
+        live[3].try_load(700.0);
+        // the view is the live state, untouched by tracker calls
+        assert_eq!(tr.view(0, &live).loaded(3), 700.0);
+        assert!(!tr.view(0, &live).is_stale());
+    }
+}

@@ -9,6 +9,7 @@ use satkit::offload::{
 };
 use satkit::satellite::Satellite;
 use satkit::splitting::{balanced_split, naive_equal_layers, split_with_limit};
+use satkit::state::StateView;
 use satkit::topology::Torus;
 use satkit::util::quickcheck::{check, check_no_shrink, default_cases, shrink_f64_vec};
 use satkit::util::rng::Pcg64;
@@ -287,7 +288,7 @@ fn prop_all_schemes_emit_valid_chromosomes() {
             };
             let ctx = OffloadContext {
                 torus: &torus,
-                satellites: &sats,
+                view: StateView::live(&sats),
                 origin: inst.origin,
                 candidates: &cands,
                 segments: &inst.segments,
@@ -338,7 +339,7 @@ fn prop_deficit_nonnegative_and_theta_monotone() {
             let d = |ga: &GaConfig| {
                 let ctx = OffloadContext {
                     torus: &torus,
-                    satellites: &sats,
+                    view: StateView::live(&sats),
                     origin: inst.origin,
                     candidates: &cands,
                     segments: &inst.segments,
@@ -383,7 +384,7 @@ fn prop_indexed_deficit_matches_reference() {
             let ga = GaConfig::default();
             let ctx = OffloadContext {
                 torus: &torus,
-                satellites: &sats,
+                view: StateView::live(&sats),
                 origin: inst.origin,
                 candidates: &cands,
                 segments: &inst.segments,
@@ -441,7 +442,7 @@ fn prop_ga_decide_identical_to_reference_per_seed() {
             };
             let ctx = OffloadContext {
                 torus: &torus,
-                satellites: &sats,
+                view: StateView::live(&sats),
                 origin: inst.origin,
                 candidates: &cands,
                 segments: &inst.segments,
@@ -479,7 +480,7 @@ fn prop_ga_close_to_random_best() {
             let ga = GaConfig::default();
             let ctx = OffloadContext {
                 torus: &torus,
-                satellites: &sats,
+                view: StateView::live(&sats),
                 origin: inst.origin,
                 candidates: &cands,
                 segments: &inst.segments,

@@ -1,0 +1,256 @@
+//! Property tests for the resource-state dissemination subsystem
+//! (`satkit::state`): the defaults preserve each engine's pre-existing
+//! behaviour bit-for-bit, the slotted `T_d = 1` slot special case equals
+//! the legacy local-view snapshot, and staleness actually changes (and
+//! never improves) what the schemes decide under load.
+
+use satkit::config::{EngineKind, SimConfig};
+use satkit::metrics::Report;
+use satkit::offload::SchemeKind;
+use satkit::satellite::Satellite;
+use satkit::state::{DisseminationKind, ViewTracker};
+use satkit::topology::Torus;
+use satkit::util::quickcheck::{check_no_shrink, default_cases};
+use satkit::util::rng::Pcg64;
+
+/// Compare two reports field-by-field, bit-for-bit on floats.
+fn assert_reports_identical(a: &Report, b: &Report) -> Result<(), String> {
+    if a.total_tasks != b.total_tasks {
+        return Err(format!("task counts differ: {} vs {}", a.total_tasks, b.total_tasks));
+    }
+    if a.completed_tasks != b.completed_tasks {
+        return Err(format!(
+            "completion counts differ: {} vs {}",
+            a.completed_tasks, b.completed_tasks
+        ));
+    }
+    for (name, x, y) in [
+        ("avg_delay_ms", a.avg_delay_ms, b.avg_delay_ms),
+        ("avg_comp_ms", a.avg_comp_ms, b.avg_comp_ms),
+        ("avg_tran_ms", a.avg_tran_ms, b.avg_tran_ms),
+        ("avg_uplink_ms", a.avg_uplink_ms, b.avg_uplink_ms),
+        ("workload_variance", a.workload_variance, b.workload_variance),
+        ("workload_mean", a.workload_mean, b.workload_mean),
+        ("delay_p50_ms", a.delay_p50_ms, b.delay_p50_ms),
+        ("delay_p95_ms", a.delay_p95_ms, b.delay_p95_ms),
+    ] {
+        if x.to_bits() != y.to_bits() {
+            return Err(format!("{name} differs: {x} vs {y}"));
+        }
+    }
+    Ok(())
+}
+
+fn random_case(r: &mut Pcg64) -> (usize, f64, usize, SchemeKind, u64) {
+    let n = *r.choose(&[4usize, 6]);
+    let lambda = r.f64_in(2.0, 12.0);
+    let slots = r.usize_in(3, 9);
+    let scheme = *r.choose(&[SchemeKind::Random, SchemeKind::Rrp, SchemeKind::Scc]);
+    let seed = r.next_u64() % 1000;
+    (n, lambda, slots, scheme, seed)
+}
+
+/// `--dissemination instant` reproduces the event engine's default (=
+/// pre-dissemination) decisions bit-for-bit per seed: the view layer is
+/// transparent when staleness is zero.
+#[test]
+fn prop_event_engine_instant_equals_default() {
+    check_no_shrink(
+        "event-instant-equals-default",
+        default_cases().min(20),
+        random_case,
+        |&(n, lambda, slots, scheme, seed)| {
+            let mut cfg = SimConfig {
+                n,
+                lambda,
+                slots,
+                seed,
+                engine: EngineKind::Event,
+                ..SimConfig::default()
+            };
+            let default = satkit::engine::run(&cfg, scheme);
+            cfg.dissemination = Some(DisseminationKind::Instant);
+            let instant = satkit::engine::run(&cfg, scheme);
+            assert_reports_identical(&default, &instant)
+        },
+    );
+}
+
+/// `T_d = 1` slot in the slotted engine is behaviour-identical to the
+/// legacy slot-start snapshot path (the engine's default).
+#[test]
+fn prop_slotted_engine_slot_period_equals_default() {
+    check_no_shrink(
+        "slotted-slot-period-equals-default",
+        default_cases().min(20),
+        random_case,
+        |&(n, lambda, slots, scheme, seed)| {
+            let mut cfg = SimConfig {
+                n,
+                lambda,
+                slots,
+                seed,
+                engine: EngineKind::Slotted,
+                ..SimConfig::default()
+            };
+            let default = satkit::engine::run(&cfg, scheme);
+            cfg.dissemination = Some(DisseminationKind::Periodic { period_s: 1.0 });
+            let explicit = satkit::engine::run(&cfg, scheme);
+            assert_reports_identical(&default, &explicit)
+        },
+    );
+}
+
+/// The `ViewTracker` at `T_d = 1` slot reproduces the legacy slotted
+/// local-view mechanism exactly: a per-batch `clone_from` of live state
+/// plus the origin's own admission-gated placements. The shadow here IS
+/// that legacy mechanism (a `Vec<Satellite>` driven by `try_load`), and
+/// every observed load must match it bit-for-bit at every step.
+#[test]
+fn prop_tracker_slot_period_equals_legacy_local_view() {
+    check_no_shrink(
+        "tracker-equals-legacy-local-view",
+        default_cases().min(60),
+        |r| {
+            let n = r.usize_in(3, 6);
+            let slots = r.usize_in(1, 5);
+            let seed = r.next_u64();
+            (n, slots, seed)
+        },
+        |&(n, slots, seed)| {
+            let torus = Torus::new(n);
+            let n_sats = torus.len();
+            let mut rng = Pcg64::seed_from_u64(seed);
+            let mut live: Vec<Satellite> = (0..n_sats)
+                .map(|i| Satellite::new(i, 3000.0, 15_000.0))
+                .collect();
+            let n_areas = rng.usize_in(1, 4);
+            let mut tracker = ViewTracker::new(
+                DisseminationKind::Periodic { period_s: 1.0 },
+                n_sats,
+                n_areas,
+                2,
+            );
+            let mut shadow: Vec<Satellite> = live.clone();
+            for slot in 0..slots {
+                tracker.advance_to(slot as f64);
+                for area in 0..n_areas {
+                    tracker.sync_batch(area, &live);
+                    shadow.clone_from(&live); // the legacy per-batch snapshot
+                    let tasks = rng.usize_in(0, 4);
+                    for _ in 0..tasks {
+                        let l = rng.usize_in(1, 4);
+                        let placements: Vec<(usize, f64)> = (0..l)
+                            .map(|_| (rng.usize_in(0, n_sats), rng.f64_in(0.0, 9000.0)))
+                            .collect();
+                        for &(c, q) in &placements {
+                            if q > 0.0 {
+                                let _ = shadow[c].try_load(q);
+                            }
+                            tracker.record_local(area, c, q, slot as f64, &live);
+                        }
+                        let view = tracker.view(area, &live);
+                        for (s, sat) in shadow.iter().enumerate() {
+                            if view.loaded(s).to_bits() != sat.loaded().to_bits() {
+                                return Err(format!(
+                                    "slot {slot} area {area} sat {s}: view {} != legacy {}",
+                                    view.loaded(s),
+                                    sat.loaded()
+                                ));
+                            }
+                        }
+                        // ground truth moves on (execution), unseen by the
+                        // frozen views until the next batch sync
+                        for &(c, q) in &placements {
+                            if q > 0.0 {
+                                let _ = live[c].try_load(q);
+                            }
+                        }
+                    }
+                }
+                for s in live.iter_mut() {
+                    s.service_slot();
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Staleness must not change the arrival process (dissemination only
+/// affects decisions), and under contention it must actually change the
+/// event engine's behaviour.
+#[test]
+fn staleness_changes_decisions_but_not_arrivals() {
+    let mut cfg = SimConfig {
+        n: 6,
+        slots: 12,
+        lambda: 40.0,
+        seed: 11,
+        decision_fraction: 0.2,
+        engine: EngineKind::Event,
+        ..SimConfig::default()
+    };
+    cfg.satellite.max_workload_mflops = 60_000.0;
+    cfg.dissemination = Some(DisseminationKind::Instant);
+    let fresh = satkit::engine::run(&cfg, SchemeKind::Scc);
+    cfg.dissemination = Some(DisseminationKind::Periodic { period_s: 2.0 });
+    let stale = satkit::engine::run(&cfg, SchemeKind::Scc);
+    assert!(fresh.total_tasks > 0);
+    // identical arrival stream: thinning draws never depend on decisions
+    assert_eq!(fresh.total_tasks, stale.total_tasks);
+    // but the decisions (and with them completions or delays) moved
+    assert!(
+        fresh.completed_tasks != stale.completed_tasks
+            || fresh.avg_delay_ms.to_bits() != stale.avg_delay_ms.to_bits(),
+        "a 2s-stale view changed nothing at lambda=40"
+    );
+}
+
+/// The §V-B herding direction: deciding on stale state must not *improve*
+/// SCC's completion rate under contention — and each dissemination model
+/// stays deterministic per seed.
+#[test]
+fn stale_state_does_not_improve_scc_and_stays_deterministic() {
+    let mut cfg = SimConfig {
+        n: 6,
+        slots: 12,
+        lambda: 40.0,
+        seed: 7,
+        decision_fraction: 0.2,
+        engine: EngineKind::Event,
+        ..SimConfig::default()
+    };
+    cfg.satellite.max_workload_mflops = 60_000.0;
+    cfg.dissemination = Some(DisseminationKind::Instant);
+    let fresh = satkit::engine::run(&cfg, SchemeKind::Scc);
+    cfg.dissemination = Some(DisseminationKind::Periodic { period_s: 4.0 });
+    let stale_a = satkit::engine::run(&cfg, SchemeKind::Scc);
+    let stale_b = satkit::engine::run(&cfg, SchemeKind::Scc);
+    assert_reports_identical(&stale_a, &stale_b).expect("stale run not deterministic");
+    assert!(
+        stale_a.completion_rate() <= fresh.completion_rate() + 0.05,
+        "stale views should not beat fresh ones: stale {:.4} vs fresh {:.4}",
+        stale_a.completion_rate(),
+        fresh.completion_rate()
+    );
+}
+
+/// Gossip dissemination runs clean on both engines and conserves tasks.
+#[test]
+fn gossip_runs_on_both_engines() {
+    for engine in EngineKind::all() {
+        let cfg = SimConfig {
+            n: 6,
+            slots: 8,
+            lambda: 10.0,
+            seed: 3,
+            engine,
+            dissemination: Some(DisseminationKind::Gossip { tick_s: 0.5 }),
+            ..SimConfig::default()
+        };
+        let r = satkit::engine::run(&cfg, SchemeKind::Scc);
+        assert!(r.total_tasks > 0, "{engine:?}");
+        assert_eq!(r.total_tasks, r.completed_tasks + r.dropped_tasks, "{engine:?}");
+    }
+}
