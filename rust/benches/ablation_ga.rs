@@ -8,7 +8,7 @@ use satkit::experiments as exp;
 use satkit::offload::{make_scheme, OffloadContext, SchemeKind};
 use satkit::satellite::Satellite;
 use satkit::state::StateView;
-use satkit::topology::Torus;
+use satkit::topology::Constellation;
 use satkit::util::rng::Pcg64;
 
 fn main() {
@@ -31,14 +31,14 @@ fn main() {
     }
 
     section("GA decide() latency per task (Table-I params)");
-    let torus = Torus::new(10);
+    let topo = Constellation::torus(10);
     let mut sats: Vec<Satellite> =
         (0..100).map(|i| Satellite::new(i, 3000.0, 15000.0)).collect();
     let mut rng = Pcg64::seed_from_u64(1);
     for s in sats.iter_mut() {
         s.try_load(rng.f64_in(0.0, 12_000.0));
     }
-    let cands = torus.decision_space(42, 3);
+    let cands = topo.decision_space(42, 3);
     let segments = vec![3800.0, 3900.0, 3700.0, 3800.0]; // ResNet101 L=4-ish
     for (nk, ni) in [(10usize, 5usize), (20, 10), (40, 20)] {
         let ga = GaConfig {
@@ -47,7 +47,7 @@ fn main() {
             ..GaConfig::default()
         };
         let ctx = OffloadContext {
-            torus: &torus,
+            topo: &topo,
             view: StateView::live(&sats),
             origin: 42,
             candidates: &cands,

@@ -17,7 +17,7 @@ use satkit::satellite::Satellite;
 use satkit::sim::Simulation;
 use satkit::splitting::balanced_split;
 use satkit::state::StateView;
-use satkit::topology::Torus;
+use satkit::topology::Constellation;
 use satkit::util::rng::Pcg64;
 
 fn main() {
@@ -30,7 +30,7 @@ fn main() {
     };
 
     section("Eq.12 deficit evaluation");
-    let torus = Torus::new(10);
+    let topo = Constellation::torus(10);
     let mut sats: Vec<Satellite> =
         (0..100).map(|i| Satellite::new(i, 3000.0, 15000.0)).collect();
     let mut rng = Pcg64::seed_from_u64(1);
@@ -38,10 +38,10 @@ fn main() {
         s.try_load(rng.f64_in(0.0, 12_000.0));
     }
     let ga = GaConfig::default();
-    let cands = torus.decision_space(42, 3);
+    let cands = topo.decision_space(42, 3);
     let segments = vec![3800.0, 3900.0, 3700.0, 3800.0];
     let ctx = OffloadContext {
-        torus: &torus,
+        topo: &topo,
         view: StateView::live(&sats),
         origin: 42,
         candidates: &cands,

@@ -11,6 +11,7 @@ pub use toml_lite::TomlDoc;
 
 use crate::dnn::DnnModel;
 use crate::state::DisseminationKind;
+use crate::topology::{Constellation, TopologyKind};
 use crate::util::cli::Args;
 
 /// Which simulation engine executes the run.
@@ -150,6 +151,11 @@ pub struct CommConfig {
     pub shadow_sigma_db: f64,
     /// Rician K-factor for the gateway small-scale fading [dB].
     pub rician_k_db: f64,
+    /// Per-hop ISL store-and-forward latency [ms] (`--isl-latency-ms`).
+    /// Sets the default gossip dissemination tick: state flooded over
+    /// ISLs advances one hop per this interval. ~25 ms is the typical
+    /// LEO ISL store-and-forward figure.
+    pub isl_latency_ms: f64,
 }
 
 impl Default for CommConfig {
@@ -165,6 +171,7 @@ impl Default for CommConfig {
             gw_noise_dbw: -130.0,
             shadow_sigma_db: 2.0,
             rician_k_db: 10.0,
+            isl_latency_ms: 25.0,
         }
     }
 }
@@ -199,7 +206,13 @@ impl Default for SatelliteConfig {
 #[derive(Clone, Debug, PartialEq)]
 pub struct SimConfig {
     /// N — constellation is N orbits × N satellites (Table I: 4–32, default 10).
+    /// Only used when `topology` is unset (the paper-default torus).
     pub n: usize,
+    /// Constellation geometry override
+    /// (`--topology torus:<n>|walker-delta:<p>x<s>[:f]|walker-star:<p>x<s>`,
+    /// TOML `topology = "..."`). `None` keeps the paper's N×N torus from
+    /// `n` — see [`SimConfig::effective_topology`].
+    pub topology: Option<TopologyKind>,
     /// Γ — number of time slots to simulate.
     pub slots: usize,
     /// λ — Poisson task incidence per decision satellite per slot (4–70).
@@ -232,6 +245,11 @@ pub struct SimConfig {
     /// engine on its slot-start snapshot (`periodic:1`) — see
     /// [`SimConfig::effective_dissemination_for`].
     pub dissemination: Option<DisseminationKind>,
+    /// True when `dissemination` is a bare `gossip` whose tick was
+    /// derived from `comm.isl_latency_ms` — a later `--isl-latency-ms`
+    /// re-derives it. An explicit `gossip:<tick>` pins the tick and
+    /// leaves this false. Maintained by the TOML/CLI loaders.
+    pub gossip_tick_derived: bool,
     /// Keep the full per-task `TaskOutcome` buffer in the report (memory
     /// grows with task count). Default false: metrics stream into
     /// constant-size accumulators so million-task runs stay flat in
@@ -247,6 +265,7 @@ impl Default for SimConfig {
     fn default() -> Self {
         SimConfig {
             n: 10,
+            topology: None,
             slots: 40,
             lambda: 25.0,
             // "multiple remote rural areas" (Fig. 1): 5 gateway areas on
@@ -261,6 +280,7 @@ impl Default for SimConfig {
             engine: EngineKind::Slotted,
             scenario: ScenarioKind::Poisson,
             dissemination: None,
+            gossip_tick_derived: false,
             retain_outcomes: false,
             ga: GaConfig::default(),
             comm: CommConfig::default(),
@@ -284,6 +304,21 @@ impl SimConfig {
             DnnModel::Vgg19 => 2,
             DnnModel::Resnet101 => 3,
         })
+    }
+
+    /// The topology selector this run uses: the configured one, or the
+    /// paper's N×N torus built from `n`. The default path is bit-for-bit
+    /// the legacy torus behaviour (enforced by `tests/prop_topology.rs`).
+    pub fn effective_topology(&self) -> TopologyKind {
+        self.topology
+            .clone()
+            .unwrap_or(TopologyKind::Torus { n: self.n })
+    }
+
+    /// Build the constellation for this run (Walker kinds pay their
+    /// one-time BFS APSP here; engines call this once per simulation).
+    pub fn build_topology(&self) -> Constellation {
+        self.effective_topology().build()
     }
 
     /// The dissemination model the given engine runs: the configured one,
@@ -343,6 +378,17 @@ impl SimConfig {
         if self.ga.n_ini == 0 || self.ga.n_k == 0 {
             errs.push("ga.n_ini and ga.n_k must be >= 1".into());
         }
+        if let Some(t) = &self.topology {
+            if let Err(e) = t.validate() {
+                errs.push(e);
+            }
+        }
+        if !self.comm.isl_latency_ms.is_finite() || self.comm.isl_latency_ms <= 0.0 {
+            errs.push(format!(
+                "comm.isl_latency_ms={} must be finite and > 0",
+                self.comm.isl_latency_ms
+            ));
+        }
         if let Some(d) = &self.dissemination {
             if let Err(e) = d.validate() {
                 errs.push(e);
@@ -397,8 +443,8 @@ impl SimConfig {
         if let Some(s) = doc.get_str("", "scenario") {
             d.scenario = ScenarioKind::parse(&s)?;
         }
-        if let Some(s) = doc.get_str("", "dissemination") {
-            d.dissemination = Some(DisseminationKind::parse(&s)?);
+        if let Some(t) = doc.get_str("", "topology") {
+            d.topology = Some(TopologyKind::parse(&t)?);
         }
         if let Some(b) = doc.get_bool("", "retain_outcomes") {
             d.retain_outcomes = b;
@@ -425,6 +471,18 @@ impl SimConfig {
         doc.read_f64("comm", "pointing_coeff", &mut d.comm.pointing_coeff);
         doc.read_f64("comm", "noise_temp_k", &mut d.comm.noise_temp_k);
         doc.read_f64("comm", "gw_noise_dbw", &mut d.comm.gw_noise_dbw);
+        doc.read_f64("comm", "isl_latency_ms", &mut d.comm.isl_latency_ms);
+        // parsed after [comm]: a bare `gossip` derives its tick from the
+        // per-hop ISL latency knob instead of a hard-coded constant
+        if let Some(s) = doc.get_str("", "dissemination") {
+            d.dissemination = Some(DisseminationKind::parse_with(
+                &s,
+                d.comm.isl_latency_ms * 1e-3,
+            )?);
+            d.gossip_tick_derived =
+                matches!(d.dissemination, Some(DisseminationKind::Gossip { .. }))
+                    && !s.contains(':');
+        }
         Ok(cfg)
     }
 
@@ -469,8 +527,27 @@ impl SimConfig {
         if let Some(s) = args.get("scenario") {
             self.scenario = ScenarioKind::parse(s)?;
         }
+        if let Some(t) = args.get("topology") {
+            self.topology = Some(TopologyKind::parse(t)?);
+        }
+        // applied before --dissemination: a bare `gossip` derives its
+        // tick from this per-hop ISL latency knob
+        if let Some(x) = args.get_parsed::<f64>("isl-latency-ms")? {
+            self.comm.isl_latency_ms = x;
+            // a derived (bare-`gossip`) tick keeps tracking the knob; an
+            // explicit `gossip:<tick>` stays pinned
+            if self.gossip_tick_derived && args.get("dissemination").is_none() {
+                self.dissemination = Some(DisseminationKind::Gossip { tick_s: x * 1e-3 });
+            }
+        }
         if let Some(s) = args.get("dissemination") {
-            self.dissemination = Some(DisseminationKind::parse(s)?);
+            self.dissemination = Some(DisseminationKind::parse_with(
+                s,
+                self.comm.isl_latency_ms * 1e-3,
+            )?);
+            self.gossip_tick_derived =
+                matches!(self.dissemination, Some(DisseminationKind::Gossip { .. }))
+                    && !s.contains(':');
         }
         if args.has_flag("retain-outcomes") {
             self.retain_outcomes = true;
@@ -481,7 +558,7 @@ impl SimConfig {
     /// Render the effective configuration as a Table-I-style listing.
     pub fn table(&self) -> String {
         format!(
-            "Network topology N (size = NxN)        {}\n\
+            "Network topology                       {} ({} sats)\n\
              Satellite bandwidth B                  {:.0} MHz\n\
              Satellite computation capability C_x   {:.0} MFLOP/slot\n\
              Satellite transmission power P_t       {:.0} dBW\n\
@@ -495,7 +572,8 @@ impl SimConfig {
              Engine, scenario                       {}, {}\n\
              State dissemination                    {}\n\
              Slots, seed                            {}, {}",
-            self.n,
+            self.effective_topology().label(),
+            self.effective_topology().n_sats(),
             self.comm.isl_bandwidth_hz / 1e6,
             self.satellite.capacity_mflops,
             self.comm.sat_tx_power_dbw,
@@ -690,6 +768,127 @@ capacity_mflops = 6000.0
         c.lambda = -1.0;
         let errs = c.validate().unwrap_err();
         assert_eq!(errs.len(), 2);
+    }
+
+    #[test]
+    fn topology_defaults_parses_and_validates() {
+        // unset: the paper torus from n
+        let c = SimConfig::default();
+        assert_eq!(c.effective_topology(), TopologyKind::Torus { n: 10 });
+        assert_eq!(c.build_topology().len(), 100);
+
+        let t = SimConfig::from_toml("topology = \"walker-star:5x8\"\n").unwrap();
+        assert_eq!(
+            t.effective_topology(),
+            TopologyKind::WalkerStar {
+                planes: 5,
+                sats_per_plane: 8
+            }
+        );
+        assert_eq!(t.effective_topology().n_sats(), 40);
+        assert!(SimConfig::from_toml("topology = \"moebius:3\"\n").is_err());
+
+        let args = crate::util::cli::Args::parse(
+            "x --topology walker-delta:4x6:1".split_whitespace().map(String::from),
+        );
+        let mut d = SimConfig::default();
+        d.apply_args(&args).unwrap();
+        assert_eq!(
+            d.topology,
+            Some(TopologyKind::WalkerDelta {
+                planes: 4,
+                sats_per_plane: 6,
+                phasing: 1
+            })
+        );
+        assert!(d.validate().is_ok());
+        assert!(d.table().contains("walker-delta:4x6:1"));
+        // n stays valid independently; topology wins for the build
+        assert_eq!(d.build_topology().len(), 24);
+    }
+
+    #[test]
+    fn isl_latency_knob_drives_bare_gossip_tick() {
+        // bare gossip: tick = isl_latency_ms / 1000 (default 25 ms)
+        let args = crate::util::cli::Args::parse(
+            "x --dissemination gossip".split_whitespace().map(String::from),
+        );
+        let mut c = SimConfig::default();
+        c.apply_args(&args).unwrap();
+        assert_eq!(c.dissemination, Some(DisseminationKind::Gossip { tick_s: 0.025 }));
+
+        // the knob applies before --dissemination regardless of CLI order
+        let args = crate::util::cli::Args::parse(
+            "x --dissemination gossip --isl-latency-ms 40"
+                .split_whitespace()
+                .map(String::from),
+        );
+        let mut c = SimConfig::default();
+        c.apply_args(&args).unwrap();
+        assert_eq!(c.dissemination, Some(DisseminationKind::Gossip { tick_s: 0.04 }));
+
+        // an explicit tick wins over the knob
+        let args = crate::util::cli::Args::parse(
+            "x --isl-latency-ms 40 --dissemination gossip:0.5"
+                .split_whitespace()
+                .map(String::from),
+        );
+        let mut c = SimConfig::default();
+        c.apply_args(&args).unwrap();
+        assert_eq!(c.dissemination, Some(DisseminationKind::Gossip { tick_s: 0.5 }));
+
+        // TOML: [comm] isl_latency_ms feeds a bare gossip too
+        let t = SimConfig::from_toml(
+            "dissemination = \"gossip\"\n\n[comm]\nisl_latency_ms = 50.0\n",
+        )
+        .unwrap();
+        assert_eq!(t.dissemination, Some(DisseminationKind::Gossip { tick_s: 0.05 }));
+
+        // periodic / instant are untouched by the knob
+        let t = SimConfig::from_toml(
+            "dissemination = \"periodic:2\"\n\n[comm]\nisl_latency_ms = 50.0\n",
+        )
+        .unwrap();
+        assert_eq!(
+            t.dissemination,
+            Some(DisseminationKind::Periodic { period_s: 2.0 })
+        );
+
+        let mut bad = SimConfig::default();
+        bad.comm.isl_latency_ms = 0.0;
+        assert!(bad.validate().is_err());
+    }
+
+    #[test]
+    fn cli_knob_reticks_toml_bare_gossip() {
+        let knob_only = crate::util::cli::Args::parse(
+            "x --isl-latency-ms 40".split_whitespace().map(String::from),
+        );
+        // TOML bare gossip froze its tick at the TOML-time knob (25 ms);
+        // a CLI --isl-latency-ms alone must re-derive it
+        let mut c = SimConfig::from_toml("dissemination = \"gossip\"\n").unwrap();
+        assert_eq!(c.dissemination, Some(DisseminationKind::Gossip { tick_s: 0.025 }));
+        c.apply_args(&knob_only).unwrap();
+        assert_eq!(c.dissemination, Some(DisseminationKind::Gossip { tick_s: 0.04 }));
+
+        // an explicit TOML tick is preserved
+        let mut c = SimConfig::from_toml("dissemination = \"gossip:0.5\"\n").unwrap();
+        assert!(!c.gossip_tick_derived);
+        c.apply_args(&knob_only).unwrap();
+        assert_eq!(c.dissemination, Some(DisseminationKind::Gossip { tick_s: 0.5 }));
+
+        // ...even when the pinned tick happens to equal the derived value
+        let mut c = SimConfig::from_toml("dissemination = \"gossip:0.025\"\n").unwrap();
+        c.apply_args(&knob_only).unwrap();
+        assert_eq!(c.dissemination, Some(DisseminationKind::Gossip { tick_s: 0.025 }));
+
+        // periodic stays untouched by the knob
+        let mut c = SimConfig::from_toml("dissemination = \"periodic:2\"\n").unwrap();
+        c.apply_args(&knob_only).unwrap();
+        assert_eq!(
+            c.dissemination,
+            Some(DisseminationKind::Periodic { period_s: 2.0 })
+        );
     }
 
     #[test]

@@ -25,7 +25,7 @@ use crate::offload::{make_scheme, OffloadContext, OffloadScheme, SchemeKind};
 use crate::runtime::ExecPool;
 use crate::satellite::{Admission, Satellite};
 use crate::splitting::balanced_split;
-use crate::topology::Torus;
+use crate::topology::Constellation;
 use crate::util::rng::Pcg64;
 
 /// A served inference request (one DNN task from a gateway).
@@ -63,7 +63,7 @@ pub struct CoordStats {
 /// The collaborative-satellite-computing coordinator.
 pub struct Coordinator {
     cfg: SimConfig,
-    torus: Torus,
+    topo: Constellation,
     satellites: Arc<Mutex<Vec<Satellite>>>,
     exec: ExecPool,
     scheme: Box<dyn OffloadScheme>,
@@ -72,8 +72,10 @@ pub struct Coordinator {
 }
 
 impl Coordinator {
-    /// Build a coordinator over `cfg.n × cfg.n` satellites with artifacts
-    /// loaded from `artifact_dir` by `workers` PJRT execution workers.
+    /// Build a coordinator over the configured constellation
+    /// (`cfg.effective_topology()` — the `cfg.n × cfg.n` torus by
+    /// default) with artifacts loaded from `artifact_dir` by `workers`
+    /// PJRT execution workers.
     pub fn new(
         cfg: &SimConfig,
         artifact_dir: &Path,
@@ -82,8 +84,8 @@ impl Coordinator {
     ) -> Result<Coordinator> {
         let exec = ExecPool::new(artifact_dir, workers.max(1))
             .with_context(|| format!("loading artifacts from {}", artifact_dir.display()))?;
-        let torus = Torus::new(cfg.n);
-        let satellites = (0..torus.len())
+        let topo = cfg.build_topology();
+        let satellites = (0..topo.len())
             .map(|i| {
                 Satellite::new(
                     i,
@@ -98,7 +100,7 @@ impl Coordinator {
         let isl = crate::comm::IslLink::new(cfg.comm.clone());
         Ok(Coordinator {
             cfg: cfg.clone(),
-            torus,
+            topo,
             satellites: Arc::new(Mutex::new(satellites)),
             exec,
             scheme: make_scheme(scheme_kind, cfg.seed),
@@ -128,13 +130,13 @@ impl Coordinator {
         let profile = req.model.profile();
         let segments =
             balanced_split(&profile.workloads(), l, self.cfg.ga.epsilon).segment_workloads();
-        let candidates = self.torus.decision_space(req.origin, d_max);
+        let candidates = self.topo.decision_space(req.origin, d_max);
 
         // decide under the current shared satellite state
         let chrom = {
             let sats = self.satellites.lock().unwrap();
             let ctx = OffloadContext {
-                torus: &self.torus,
+                topo: &self.topo,
                 view: crate::state::StateView::live(&sats),
                 origin: req.origin,
                 candidates: &candidates,
@@ -159,7 +161,7 @@ impl Coordinator {
                         modeled_s += sats[c].service_secs_with_queue(q);
                         if k + 1 < chrom.len() {
                             modeled_s +=
-                                self.torus.manhattan(c, chrom[k + 1]) as f64 * q * self.kappa;
+                                self.topo.hops(c, chrom[k + 1]) as f64 * q * self.kappa;
                         }
                     }
                     Admission::Rejected => {

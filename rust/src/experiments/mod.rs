@@ -9,6 +9,9 @@
 //! * [`staleness_sweep`] — completion rate & p95 delay vs the state
 //!   dissemination interval `T_d` per scheme (the §V-B stale-state
 //!   herding study); exported as `BENCH_staleness.json`.
+//! * [`topology_sweep`] — completion rate & p95 delay per scheme per
+//!   constellation topology (torus vs Walker-Delta vs Walker-Star at
+//!   equal satellite count); exported as `BENCH_topology.json`.
 //!
 //! Every function returns structured rows and can render the paper-style
 //! table; the benches in `rust/benches/` wrap these with timing.
@@ -21,6 +24,7 @@ use crate::metrics::Report;
 use crate::offload::SchemeKind;
 use crate::sim::{Simulation, SplitPolicy};
 use crate::state::DisseminationKind;
+use crate::topology::TopologyKind;
 use crate::util::json::Json;
 
 /// One data point of a figure: a (x, scheme) cell.
@@ -47,6 +51,9 @@ pub struct SweepOpts {
     /// State-dissemination override (`None` = each engine's legacy
     /// model); [`staleness_sweep`] sets this per cell.
     pub dissemination: Option<DisseminationKind>,
+    /// Constellation topology override (`None` = the paper torus);
+    /// [`topology_sweep`] sets this per cell.
+    pub topology: Option<TopologyKind>,
 }
 
 impl Default for SweepOpts {
@@ -59,6 +66,7 @@ impl Default for SweepOpts {
             engine: EngineKind::Slotted,
             scenario: ScenarioKind::Poisson,
             dissemination: None,
+            topology: None,
         }
     }
 }
@@ -81,6 +89,7 @@ fn base_cfg(model: DnnModel, opts: &SweepOpts) -> SimConfig {
         engine: opts.engine,
         scenario: opts.scenario,
         dissemination: opts.dissemination,
+        topology: opts.topology.clone(),
         ..SimConfig::default()
     }
 }
@@ -339,6 +348,160 @@ pub fn staleness_json(
     ])
 }
 
+/// One point of the topology sweep: a (topology, scheme) cell.
+#[derive(Clone, Debug)]
+pub struct TopologyRow {
+    /// The constellation geometry this cell ran under.
+    pub topology: TopologyKind,
+    pub scheme: SchemeKind,
+    pub report: Report,
+}
+
+/// The λ the topology sweep runs at by default: high enough that ISL hop
+/// distances and the Walker-Star seam detour actually cost completions
+/// and tail delay.
+pub const TOPOLOGY_LAMBDA: f64 = 40.0;
+
+/// Default topology grid for [`topology_sweep`]: the paper's N×N torus
+/// plus a Walker-Delta (phasing 1) and a Walker-Star of the same
+/// satellite count, so scheme comparisons stay capacity-fair and any
+/// difference is pure geometry (the seam detour, the phasing offset).
+pub fn topology_grid(n: usize) -> Vec<TopologyKind> {
+    vec![
+        TopologyKind::Torus { n },
+        TopologyKind::WalkerDelta {
+            planes: n,
+            sats_per_plane: n,
+            phasing: 1,
+        },
+        TopologyKind::WalkerStar {
+            planes: n,
+            sats_per_plane: n,
+        },
+    ]
+}
+
+/// Sweep completion rate & tail delay per scheme per constellation
+/// topology on the engine selected by `opts.engine` (the CLI defaults
+/// this to the event engine), averaged over `opts.repeats` seeds.
+pub fn topology_sweep(
+    model: DnnModel,
+    lambda: f64,
+    kinds: &[TopologyKind],
+    opts: &SweepOpts,
+) -> Vec<TopologyRow> {
+    let mut rows = Vec::new();
+    for kind in kinds {
+        for scheme in SchemeKind::all() {
+            let reports: Vec<Report> = (0..opts.repeats.max(1))
+                .map(|r| {
+                    let mut cfg = base_cfg(model, opts);
+                    cfg.lambda = lambda;
+                    cfg.seed = opts.seed + r as u64 * 1000;
+                    cfg.topology = Some(kind.clone());
+                    crate::engine::run(&cfg, scheme)
+                })
+                .collect();
+            rows.push(TopologyRow {
+                topology: kind.clone(),
+                scheme,
+                report: mean_reports(reports),
+            });
+        }
+    }
+    rows
+}
+
+/// Render the topology sweep as two panels (completion rate and p95
+/// delay, topology × scheme).
+pub fn render_topology(title: &str, rows: &[TopologyRow]) -> String {
+    let mut kinds: Vec<TopologyKind> = Vec::new();
+    for r in rows {
+        if !kinds.contains(&r.topology) {
+            kinds.push(r.topology.clone());
+        }
+    }
+    let schemes = SchemeKind::all();
+    let mut out = format!("== {title} ==\n");
+    for (panel, metric) in [
+        ("(a) task completion rate", 0usize),
+        ("(b) p95 total delay [ms]", 1),
+    ] {
+        out.push_str(&format!("-- {panel} --\n{:>22}", "topology"));
+        for s in schemes {
+            out.push_str(&format!("{:>14}", s.name()));
+        }
+        out.push('\n');
+        for k in &kinds {
+            out.push_str(&format!("{:>22}", k.label()));
+            for s in schemes {
+                let row = rows
+                    .iter()
+                    .find(|r| r.topology == *k && r.scheme == s)
+                    .expect("missing topology row");
+                let v = match metric {
+                    0 => row.report.completion_rate(),
+                    _ => row.report.delay_p95_ms,
+                };
+                match metric {
+                    0 => out.push_str(&format!("{v:>14.4}")),
+                    _ => out.push_str(&format!("{v:>14.1}")),
+                }
+            }
+            out.push('\n');
+        }
+    }
+    out
+}
+
+/// The machine-readable `BENCH_topology.json` payload (per-cell
+/// completion rate, mean/p95 delay, and drop counts — see the README's
+/// "Experiment cookbook" for the schema). `engine` records which clock
+/// produced the rows.
+pub fn topology_json(
+    model: DnnModel,
+    lambda: f64,
+    engine: EngineKind,
+    quick: bool,
+    rows: &[TopologyRow],
+) -> Json {
+    Json::obj(vec![
+        ("bench", Json::Str("topology".into())),
+        ("quick", Json::Bool(quick)),
+        ("model", Json::Str(model.name().into())),
+        ("engine", Json::Str(engine.name().into())),
+        ("lambda", Json::Num(lambda)),
+        (
+            "results",
+            Json::Arr(
+                rows.iter()
+                    .map(|r| {
+                        Json::obj(vec![
+                            ("topology", Json::Str(r.topology.label())),
+                            ("n_sats", Json::Num(r.topology.n_sats() as f64)),
+                            ("scheme", Json::Str(r.scheme.name().into())),
+                            (
+                                "completion_rate",
+                                Json::Num(r.report.completion_rate()),
+                            ),
+                            ("avg_delay_ms", Json::Num(r.report.avg_delay_ms)),
+                            ("delay_p95_ms", Json::Num(r.report.delay_p95_ms)),
+                            (
+                                "total_tasks",
+                                Json::Num(r.report.total_tasks as f64),
+                            ),
+                            (
+                                "dropped_tasks",
+                                Json::Num(r.report.dropped_tasks as f64),
+                            ),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ])
+}
+
 /// λ-sweep over all four schemes (the engine behind Figs. 2 & 3).
 pub fn lambda_sweep(model: DnnModel, lambdas: &[f64], opts: &SweepOpts) -> Vec<Row> {
     let mut rows = Vec::new();
@@ -378,6 +541,10 @@ pub fn scale(ns: &[usize], opts: &SweepOpts) -> Vec<Row> {
                 .map(|r| {
                     let mut cfg = base_cfg(DnnModel::Vgg19, opts);
                     cfg.n = n;
+                    // the sweep coordinate IS the torus size: a --topology
+                    // override would pin the geometry and turn the N-axis
+                    // into a lie, so it is cleared per cell
+                    cfg.topology = None;
                     cfg.lambda = 25.0;
                     cfg.seed = opts.seed + r as u64 * 1000;
                     crate::engine::run(&cfg, scheme)
@@ -579,6 +746,60 @@ mod tests {
             Some("staleness")
         );
         assert_eq!(parsed.get("engine").unwrap().as_str(), Some("event"));
+        assert_eq!(
+            parsed.get("results").unwrap().as_arr().unwrap().len(),
+            rows.len()
+        );
+    }
+
+    #[test]
+    fn scale_ignores_topology_override() {
+        // the N-sweep varies the torus size; a --topology override in the
+        // opts must not pin every cell to one fixed geometry
+        let plain = SweepOpts::quick();
+        let mut pinned = SweepOpts::quick();
+        pinned.topology = Some(crate::topology::TopologyKind::WalkerDelta {
+            planes: 6,
+            sats_per_plane: 6,
+            phasing: 1,
+        });
+        let a = scale(&[4, 6], &plain);
+        let b = scale(&[4, 6], &pinned);
+        assert_eq!(a.len(), b.len());
+        for (ra, rb) in a.iter().zip(&b) {
+            assert_eq!(ra.report.total_tasks, rb.report.total_tasks);
+            assert_eq!(
+                ra.report.avg_delay_ms.to_bits(),
+                rb.report.avg_delay_ms.to_bits(),
+                "scale cell (x={}, {:?}) depended on the topology override",
+                ra.x,
+                ra.scheme
+            );
+        }
+    }
+
+    #[test]
+    fn topology_sweep_covers_all_cells_and_serializes() {
+        let mut opts = SweepOpts::quick();
+        opts.engine = EngineKind::Event;
+        let kinds = topology_grid(6);
+        assert_eq!(kinds.len(), 3);
+        let rows = topology_sweep(DnnModel::Vgg19, 8.0, &kinds, &opts);
+        // torus + walker-delta + walker-star, each × 4 schemes
+        assert_eq!(rows.len(), 3 * 4);
+        for r in &rows {
+            assert!(r.report.total_tasks > 0, "{:?}", r.topology);
+        }
+        let s = render_topology("topology", &rows);
+        assert!(s.contains("(a) task completion rate"));
+        assert!(s.contains("p95 total delay"));
+        assert!(s.contains("torus:6"));
+        assert!(s.contains("walker-delta:6x6:1"));
+        assert!(s.contains("walker-star:6x6"));
+        let j =
+            topology_json(DnnModel::Vgg19, 8.0, EngineKind::Event, true, &rows).to_string();
+        let parsed = crate::util::json::Json::parse(&j).unwrap();
+        assert_eq!(parsed.get("bench").unwrap().as_str(), Some("topology"));
         assert_eq!(
             parsed.get("results").unwrap().as_arr().unwrap().len(),
             rows.len()

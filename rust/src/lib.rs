@@ -34,6 +34,20 @@
 //! (the paper baseline, on which the two engines agree), diurnal
 //! sinusoidal, bursty MMPP, and a moving ground-track hotspot.
 //!
+//! ## Pluggable constellation topology
+//!
+//! The geometry under both engines is a [`topology::Constellation`]
+//! (select with `SimConfig::topology` / `--topology`): the paper's N×N
+//! torus (the default — bit-for-bit the legacy closed-form Manhattan
+//! path), a Walker-Delta (`walker-delta:<p>x<s>[:f]`, wrapping
+//! inter-plane ring with phasing offset F), or a Walker-Star
+//! (`walker-star:<p>x<s>`, polar seam with no cross-seam ISLs). Walker
+//! hop distances come from a per-topology BFS LUT computed once at
+//! construction; every consumer — schemes, the indexed decision kernel,
+//! gossip hop-lag, eventsim routing, handover — goes through the
+//! abstraction. The `experiment topology` sweep compares completion
+//! rate and tail delay per scheme across the three geometries.
+//!
 //! ## Resource-state dissemination
 //!
 //! Offloading decisions consume a disseminated [`state::StateView`], not

@@ -5,9 +5,10 @@
 //!                       (--engine slotted|event, --scenario for traffic)
 //!   sweep               λ-sweep all four schemes for one model
 //!   experiment <id>     regenerate a paper figure (fig2|fig3|eventsim|
-//!                       staleness|scale|ablation-split|ablation-ga|all);
-//!                       writes results/<id>.json next to the printed
-//!                       table (staleness also emits BENCH_staleness.json)
+//!                       staleness|topology|scale|ablation-split|
+//!                       ablation-ga|all); writes results/<id>.json next
+//!                       to the printed table (staleness/topology also
+//!                       emit BENCH_staleness.json / BENCH_topology.json)
 //!   serve               run the coordinator on real PJRT slice inference
 //!   validate-artifacts  load + execute every artifact once
 //!   print-config        show the effective Table-I configuration
@@ -63,8 +64,8 @@ USAGE: satkit <subcommand> [--options]
 SUBCOMMANDS
   simulate            one simulation run (--scheme scc|random|rrp|dqn)
   sweep               lambda sweep, all schemes (--model vgg19|resnet101)
-  experiment <id>     fig2 | fig3 | eventsim | staleness | scale |
-                      ablation-split | ablation-ga | all
+  experiment <id>     fig2 | fig3 | eventsim | staleness | topology |
+                      scale | ablation-split | ablation-ga | all
   serve               coordinator with real PJRT slice inference
   validate-artifacts  compile + execute each artifacts/*.hlo.txt
   print-config        effective Table-I parameters
@@ -75,9 +76,14 @@ OPTIONS
   --model M       vgg19|resnet101              --scheme S
   --engine E      slotted|event (event = continuous-time kernel)
   --scenario T    poisson|diurnal|bursty|hotspot (event engine traffic)
+  --topology T    torus:<n> | walker-delta:<p>x<s>[:f] | walker-star:<p>x<s>
+                  constellation geometry (default: the paper torus from --n;
+                  walker-star has a polar seam with no cross-seam ISLs)
   --dissemination D  instant|periodic:<s>|gossip[:<s>] — how stale the
                   resource state behind offloading decisions is (default:
                   instant on the event engine, periodic:1 on the slotted)
+  --isl-latency-ms M  per-hop ISL store-and-forward latency (default 25);
+                  sets the tick of a bare --dissemination gossip
   --seed X        RNG seed      --repeats R    seeds averaged per point
   --quick         smaller slot budget          --json FILE   export rows
   --retain-outcomes  buffer per-task outcomes (metrics stream by default)
@@ -97,11 +103,12 @@ fn sweep_opts(args: &Args, cfg: &SimConfig) -> exp::SweepOpts {
     o.slots = args.get_or("slots", if args.has_flag("quick") { o.slots } else { cfg.slots });
     o.decision_fraction = cfg.decision_fraction;
     o.repeats = args.get_or("repeats", 1usize);
-    // --engine / --scenario / --dissemination flow into sweeps and
-    // experiments too
+    // --engine / --scenario / --dissemination / --topology flow into
+    // sweeps and experiments too
     o.engine = cfg.engine;
     o.scenario = cfg.scenario;
     o.dissemination = cfg.dissemination;
+    o.topology = cfg.topology.clone();
     o
 }
 
@@ -224,6 +231,44 @@ fn experiment(args: &Args) -> Result<(), String> {
                 .map_err(|e| e.to_string())?;
             println!("wrote results/staleness.json\n");
         }
+        "topology" => {
+            // completion rate & p95 delay per scheme per constellation
+            // topology (torus vs walker-delta vs walker-star at equal
+            // satellite count). Runs on the event engine unless --engine
+            // explicitly says otherwise; --lambda overrides the operating
+            // point; --quick trims the horizon.
+            let quick = args.has_flag("quick");
+            let lambda = args
+                .get_parsed::<f64>("lambda")?
+                .unwrap_or(exp::TOPOLOGY_LAMBDA);
+            let mut opts = opts;
+            if args.get("engine").is_none() {
+                opts.engine = satkit::config::EngineKind::Event;
+            }
+            // per-cell topologies replace any --topology override
+            opts.topology = None;
+            let kinds = exp::topology_grid(cfg.n);
+            let rows = exp::topology_sweep(cfg.model, lambda, &kinds, &opts);
+            println!(
+                "{}",
+                exp::render_topology(
+                    &format!(
+                        "topology sweep ({}, {} engine, lambda={lambda})",
+                        cfg.model.name(),
+                        opts.engine.name()
+                    ),
+                    &rows
+                )
+            );
+            let json = exp::topology_json(cfg.model, lambda, opts.engine, quick, &rows);
+            let bench_path = std::env::var("SATKIT_TOPOLOGY_JSON")
+                .unwrap_or_else(|_| "BENCH_topology.json".into());
+            satkit::bench::write_json(&bench_path, &json).map_err(|e| e.to_string())?;
+            println!("wrote {bench_path}");
+            satkit::bench::write_json("results/topology.json", &json)
+                .map_err(|e| e.to_string())?;
+            println!("wrote results/topology.json\n");
+        }
         "scale" => run_fig("scale", exp::scale(&exp::default_ns(), &opts), "N")?,
         "ablation-split" => {
             let rows = exp::ablation_split(cfg.model, &exp::default_lambdas(), &opts);
@@ -275,7 +320,7 @@ fn serve(args: &Args) -> anyhow::Result<()> {
     let dir = default_artifact_dir();
     println!(
         "starting coordinator: {} sats, scheme={}, {} exec workers, artifacts={}",
-        cfg.n * cfg.n,
+        cfg.effective_topology().n_sats(),
         kind.name(),
         workers,
         dir.display()
@@ -284,7 +329,11 @@ fn serve(args: &Args) -> anyhow::Result<()> {
     println!("artifacts loaded: {:?}", coord.artifact_names());
 
     let mut rng = satkit::util::rng::Pcg64::new(cfg.seed, 0x53E5);
-    let origins = satkit::tasks::decision_satellites(cfg.n * cfg.n, cfg.decision_fraction, cfg.seed);
+    let origins = satkit::tasks::decision_satellites(
+        cfg.effective_topology().n_sats(),
+        cfg.decision_fraction,
+        cfg.seed,
+    );
     let reqs: Vec<InferenceRequest> = (0..n_req)
         .map(|i| InferenceRequest {
             id: i as u64,

@@ -20,7 +20,7 @@ use crate::util::rng::Pcg64;
 
 /// Observation feature count — must match python/compile/model.py STATE_DIM.
 pub const STATE_DIM: usize = 32;
-/// Stay + 4 torus neighbours — must match model.py N_ACTIONS.
+/// Stay + up to 4 ISL neighbours — must match model.py N_ACTIONS.
 pub const N_ACTIONS: usize = 5;
 
 pub struct DqnScheme {
@@ -68,11 +68,12 @@ impl DqnScheme {
         }
     }
 
-    /// Candidate satellites for one step: previous position + its 4
-    /// neighbours, filtered to the decision space (padded by repeating the
-    /// previous position so the action set is always 5).
+    /// Candidate satellites for one step: previous position + its (up to)
+    /// 4 ISL neighbours, filtered to the decision space (padded by
+    /// repeating the previous position so the action set is always 5; a
+    /// Walker-Star seam satellite's missing link pads the same way).
     fn action_sats(ctx: &OffloadContext, prev: SatId) -> [SatId; N_ACTIONS] {
-        let nb = ctx.torus.neighbors(prev);
+        let nb = ctx.topo.neighbors4(prev);
         let mut out = [prev; N_ACTIONS];
         for (slot, cand) in nb.into_iter().enumerate() {
             if ctx.candidates.contains(&cand) {
@@ -94,7 +95,7 @@ impl DqnScheme {
         for &a in acts {
             s.push(ctx.view.utilization(a));
             s.push(ctx.view.residual(a) / ctx.view.max_workload(a));
-            s.push(ctx.torus.manhattan(ctx.origin, a) as f64 / 8.0);
+            s.push(ctx.topo.hops(ctx.origin, a) as f64 / 8.0);
         }
         // 15 so far
         let q = ctx.segments[k];
@@ -221,17 +222,17 @@ mod tests {
     use super::*;
     use crate::config::GaConfig;
     use crate::satellite::Satellite;
-    use crate::topology::Torus;
+    use crate::topology::Constellation;
 
     fn setup<'a>(
-        torus: &'a Torus,
+        topo: &'a Constellation,
         sats: &'a [Satellite],
         cands: &'a [SatId],
         segs: &'a [f64],
         ga: &'a GaConfig,
     ) -> OffloadContext<'a> {
         OffloadContext {
-            torus,
+            topo,
             view: crate::state::StateView::live(sats),
             origin: cands[0],
             candidates: cands,
@@ -243,13 +244,13 @@ mod tests {
 
     #[test]
     fn state_dim_matches_artifact() {
-        let torus = Torus::new(6);
+        let topo = Constellation::torus(6);
         let sats: Vec<Satellite> =
             (0..36).map(|i| Satellite::new(i, 3000.0, 15000.0)).collect();
-        let cands = torus.decision_space(0, 2);
+        let cands = topo.decision_space(0, 2);
         let segs = vec![100.0, 200.0];
         let ga = GaConfig::default();
-        let ctx = setup(&torus, &sats, &cands, &segs, &ga);
+        let ctx = setup(&topo, &sats, &cands, &segs, &ga);
         let acts = DqnScheme::action_sats(&ctx, 0);
         let s = DqnScheme::observe_state(&ctx, 0, 0, &acts);
         assert_eq!(s.len(), STATE_DIM);
@@ -258,13 +259,13 @@ mod tests {
 
     #[test]
     fn decisions_stay_in_candidate_space() {
-        let torus = Torus::new(6);
+        let topo = Constellation::torus(6);
         let sats: Vec<Satellite> =
             (0..36).map(|i| Satellite::new(i, 3000.0, 15000.0)).collect();
-        let cands = torus.decision_space(10, 2);
+        let cands = topo.decision_space(10, 2);
         let segs = vec![100.0, 200.0, 300.0];
         let ga = GaConfig::default();
-        let ctx = setup(&torus, &sats, &cands, &segs, &ga);
+        let ctx = setup(&topo, &sats, &cands, &segs, &ga);
         let mut agent = DqnScheme::new(1);
         for _ in 0..30 {
             let chrom = agent.decide(&ctx);
@@ -277,15 +278,15 @@ mod tests {
     fn learns_to_avoid_overloaded_satellite() {
         // one neighbour is permanently saturated; after training the agent
         // should drop it from its greedy policy.
-        let torus = Torus::new(4);
+        let topo = Constellation::torus(4);
         let mut sats: Vec<Satellite> =
             (0..16).map(|i| Satellite::new(i, 3000.0, 15000.0)).collect();
-        let bad = torus.neighbors(0)[0];
+        let bad = topo.neighbors(0)[0];
         sats[bad].try_load(14_999.0);
-        let cands = torus.decision_space(0, 2);
+        let cands = topo.decision_space(0, 2);
         let segs = vec![2000.0];
         let ga = GaConfig::default();
-        let ctx = setup(&torus, &sats, &cands, &segs, &ga);
+        let ctx = setup(&topo, &sats, &cands, &segs, &ga);
         let mut agent = DqnScheme::new(2);
         // train: selecting `bad` yields a drop penalty
         for _ in 0..400 {
@@ -306,13 +307,13 @@ mod tests {
 
     #[test]
     fn epsilon_anneals() {
-        let torus = Torus::new(4);
+        let topo = Constellation::torus(4);
         let sats: Vec<Satellite> =
             (0..16).map(|i| Satellite::new(i, 3000.0, 15000.0)).collect();
-        let cands = torus.decision_space(0, 1);
+        let cands = topo.decision_space(0, 1);
         let segs = vec![10.0];
         let ga = GaConfig::default();
-        let ctx = setup(&torus, &sats, &cands, &segs, &ga);
+        let ctx = setup(&topo, &sats, &cands, &segs, &ga);
         let mut agent = DqnScheme::new(3);
         let e0 = agent.epsilon;
         for _ in 0..100 {

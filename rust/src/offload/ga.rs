@@ -155,6 +155,13 @@ impl GaScheme {
         }
     }
 
+    /// (hits, misses) of the per-decision [`DecisionSpaceIndex`] reuse
+    /// cache: a hit means a decision reused the previous index verbatim
+    /// because origin, candidate set, and observed view were unchanged.
+    pub fn index_cache_stats(&self) -> (u64, u64) {
+        (self.index.cache_hits(), self.index.cache_misses())
+    }
+
     /// The paper's pairwise heuristic reproduction: for parents C and D
     /// with a shared gene (c_i = d_j), two offspring are formed by
     /// splicing the parents at that gene. We take, per parent pair, the
@@ -293,8 +300,11 @@ impl OffloadScheme for GaScheme {
         if l == 0 {
             return;
         }
-        // Per-decision kernel state: candidate index, term cache, memo.
-        self.index.build(ctx);
+        // Per-decision kernel state: candidate index (reused verbatim
+        // across consecutive decisions when origin, candidates, and the
+        // observed view are unchanged — the rebuild is skipped, the
+        // decision is bit-for-bit the same), term cache, memo.
+        self.index.build_cached(ctx);
         self.scratch.invalidate();
         self.memo.clear();
         let n_cands = ctx.candidates.len();
@@ -388,25 +398,25 @@ mod tests {
     use super::*;
     use crate::config::GaConfig;
     use crate::satellite::Satellite;
-    use crate::topology::Torus;
+    use crate::topology::Constellation;
 
-    fn setup(n: usize) -> (Torus, Vec<Satellite>) {
-        let torus = Torus::new(n);
-        let sats = (0..torus.len())
+    fn setup(n: usize) -> (Constellation, Vec<Satellite>) {
+        let topo = Constellation::torus(n);
+        let sats = (0..topo.len())
             .map(|i| Satellite::new(i, 3000.0, 15000.0))
             .collect();
-        (torus, sats)
+        (topo, sats)
     }
 
     fn ctx<'a>(
-        torus: &'a Torus,
+        topo: &'a Constellation,
         sats: &'a [Satellite],
         cands: &'a [SatId],
         segs: &'a [f64],
         ga: &'a GaConfig,
     ) -> OffloadContext<'a> {
         OffloadContext {
-            torus,
+            topo,
             view: crate::state::StateView::live(sats),
             origin: cands[0],
             candidates: cands,
@@ -479,11 +489,11 @@ mod tests {
 
     #[test]
     fn decision_within_candidates() {
-        let (torus, sats) = setup(6);
+        let (topo, sats) = setup(6);
         let ga = GaConfig::default();
-        let cands = torus.decision_space(8, 2);
+        let cands = topo.decision_space(8, 2);
         let segs = vec![500.0, 700.0, 300.0];
-        let c = ctx(&torus, &sats, &cands, &segs, &ga);
+        let c = ctx(&topo, &sats, &cands, &segs, &ga);
         let mut s = GaScheme::new(1);
         for _ in 0..10 {
             let chrom = s.decide(&c);
@@ -494,16 +504,16 @@ mod tests {
 
     #[test]
     fn indexed_decide_matches_reference_per_seed() {
-        let (torus, mut sats) = setup(8);
+        let (topo, mut sats) = setup(8);
         for i in 0..sats.len() {
             if i % 3 == 0 {
                 sats[i].try_load(11_000.0);
             }
         }
         let ga = GaConfig::default();
-        let cands = torus.decision_space(20, 3);
+        let cands = topo.decision_space(20, 3);
         let segs = vec![3800.0, 2500.0, 3100.0, 1900.0];
-        let c = ctx(&torus, &sats, &cands, &segs, &ga);
+        let c = ctx(&topo, &sats, &cands, &segs, &ga);
         for seed in [0u64, 1, 7, 42, 1234] {
             let mut fast = GaScheme::new(seed);
             let mut slow = GaScheme::new(seed);
@@ -518,7 +528,7 @@ mod tests {
 
     #[test]
     fn ga_beats_random_on_deficit() {
-        let (torus, mut sats) = setup(8);
+        let (topo, mut sats) = setup(8);
         // heavily load half the neighborhood to create a real decision
         for i in 0..sats.len() {
             if i % 2 == 0 {
@@ -526,9 +536,9 @@ mod tests {
             }
         }
         let ga = GaConfig::default();
-        let cands = torus.decision_space(9, 3);
+        let cands = topo.decision_space(9, 3);
         let segs = vec![4000.0, 2500.0, 3500.0, 1500.0];
-        let c = ctx(&torus, &sats, &cands, &segs, &ga);
+        let c = ctx(&topo, &sats, &cands, &segs, &ga);
 
         let mut g = GaScheme::new(2);
         let ga_deficit = c.deficit(&g.decide(&c));
@@ -550,15 +560,15 @@ mod tests {
     #[test]
     fn ga_finds_near_optimal_small_instance() {
         // exhaustive optimum over a 5-candidate, L=2 instance
-        let (torus, mut sats) = setup(4);
+        let (topo, mut sats) = setup(4);
         sats[0].try_load(14_000.0);
         let ga = GaConfig {
             n_iter: 20,
             ..GaConfig::default()
         };
-        let cands = torus.decision_space(0, 1); // 5 sats
+        let cands = topo.decision_space(0, 1); // 5 sats
         let segs = vec![2000.0, 2000.0];
-        let c = ctx(&torus, &sats, &cands, &segs, &ga);
+        let c = ctx(&topo, &sats, &cands, &segs, &ga);
         let mut best = f64::INFINITY;
         for &a in &cands {
             for &b in &cands {
@@ -577,23 +587,23 @@ mod tests {
     fn converges_early_with_tight_epsilon() {
         // with a single candidate every chromosome is identical: the GA
         // must early-stop and still return a valid sequence
-        let (torus, sats) = setup(4);
+        let (topo, sats) = setup(4);
         let ga = GaConfig::default();
         let cands = vec![5usize];
         let segs = vec![100.0, 100.0];
-        let c = ctx(&torus, &sats, &cands, &segs, &ga);
+        let c = ctx(&topo, &sats, &cands, &segs, &ga);
         let mut g = GaScheme::new(5);
         assert_eq!(g.decide(&c), vec![5, 5]);
     }
 
     #[test]
     fn empty_segments_ok() {
-        let (torus, sats) = setup(4);
+        let (topo, sats) = setup(4);
         let ga = GaConfig::default();
-        let cands = torus.decision_space(0, 1);
+        let cands = topo.decision_space(0, 1);
         // L=3 but one block is empty (padded by Alg. 1)
         let segs = vec![500.0, 0.0, 300.0];
-        let c = ctx(&torus, &sats, &cands, &segs, &ga);
+        let c = ctx(&topo, &sats, &cands, &segs, &ga);
         let mut g = GaScheme::new(6);
         let chrom = g.decide(&c);
         assert_eq!(chrom.len(), 3);

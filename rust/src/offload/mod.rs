@@ -13,7 +13,7 @@ pub mod rrp;
 
 use crate::config::GaConfig;
 use crate::state::StateView;
-use crate::topology::{SatId, Torus};
+use crate::topology::{Constellation, SatId};
 
 /// Which scheme to run (CLI / experiment selector).
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
@@ -65,7 +65,9 @@ impl SchemeKind {
 /// (`--dissemination instant|periodic:<s>|gossip`) is modeled uniformly
 /// across all four schemes and both engines.
 pub struct OffloadContext<'a> {
-    pub torus: &'a Torus,
+    /// Constellation topology: ISL hop distances and the decision space
+    /// come from here (torus, walker-delta, or walker-star).
+    pub topo: &'a Constellation,
     /// Disseminated resource-state view of the deciding satellite.
     pub view: StateView<'a>,
     /// Decision-making satellite x (task origin).
@@ -116,7 +118,7 @@ impl<'a> OffloadContext<'a> {
                 // (θ3·drop ≫ θ2·tran ≳ θ1·comp); with raw q·MH a single
                 // 4-hop ship would outweigh a dropped task and the GA
                 // would trade completions for hops.
-                tran += self.kappa * q * self.torus.manhattan(c, chrom[k + 1]) as f64;
+                tran += self.kappa * q * self.topo.hops(c, chrom[k + 1]) as f64;
             }
             // Eq. 4 admission against loaded + planned-extra workload
             let planned: f64 = if short {
@@ -181,18 +183,21 @@ pub const MEMO_MAX_L: usize = 8;
 /// Per-decision index over the decision space `A_x`: candidate-local
 /// copies of everything [`OffloadContext::deficit`] touches, so the Eq. 12
 /// evaluation that runs ~`N_iter·(N_summ+N_K)²` times per `decide()`
-/// becomes pure array arithmetic — zero [`Torus`] calls, zero heap
-/// allocation, no `Satellite` pointer chasing.
+/// becomes pure array arithmetic — zero [`Constellation`] calls, zero
+/// heap allocation, no `Satellite` pointer chasing.
 ///
-/// Built once per decision (`build` reuses its buffers across decisions);
-/// the indexed [`DecisionSpaceIndex::deficit`] is bit-for-bit identical to
-/// the reference implementation (enforced by
+/// Built once per decision (`build` reuses its buffers across decisions,
+/// and [`DecisionSpaceIndex::build_cached`] skips even that when the
+/// decision inputs are unchanged since the last build); the indexed
+/// [`DecisionSpaceIndex::deficit`] is bit-for-bit identical to the
+/// reference implementation (enforced by
 /// `tests/prop_invariants.rs::prop_indexed_deficit_matches_reference`).
 #[derive(Clone, Debug, Default)]
 pub struct DecisionSpaceIndex {
     /// `sat_ids[g]` — the satellite a gene decodes to.
     sat_ids: Vec<SatId>,
-    /// Row-major `|A_x|²` Manhattan-hop LUT.
+    /// Row-major `|A_x|²` ISL-hop LUT (Manhattan on the torus, BFS
+    /// distances on a Walker topology).
     hops: Vec<u16>,
     /// Per-candidate copies of the observed satellite state `deficit`
     /// reads (taken from the decision's [`StateView`], so the index
@@ -206,6 +211,13 @@ pub struct DecisionSpaceIndex {
     theta1: f64,
     theta2: f64,
     theta3: f64,
+    /// Origin the current contents were built for (reuse-cache key).
+    origin: SatId,
+    /// True once `build` has populated the index (cache validity gate).
+    built: bool,
+    /// Reuse-cache counters ([`DecisionSpaceIndex::build_cached`]).
+    hits: u64,
+    misses: u64,
 }
 
 impl DecisionSpaceIndex {
@@ -227,7 +239,7 @@ impl DecisionSpaceIndex {
         );
         self.sat_ids.clear();
         self.sat_ids.extend_from_slice(ctx.candidates);
-        ctx.torus.hops_lut(ctx.candidates, &mut self.hops);
+        ctx.topo.hops_lut(ctx.candidates, &mut self.hops);
         self.loaded.clear();
         self.capacity.clear();
         self.max_workload.clear();
@@ -242,6 +254,61 @@ impl DecisionSpaceIndex {
         self.theta1 = ctx.ga.theta1;
         self.theta2 = ctx.ga.theta2;
         self.theta3 = ctx.ga.theta3;
+        self.origin = ctx.origin;
+        self.built = true;
+    }
+
+    /// Rebuild only when the decision inputs changed since the last
+    /// build: same origin, same candidate set, bit-identical observed
+    /// state, segments, κ and θ weights (ROADMAP follow-up to PR 2).
+    /// Returns true on a cache hit — the `O(|A_x|²)` hop-LUT fill and the
+    /// array copies are skipped, and the retained contents are exactly
+    /// what `build` would have produced, so decisions stay bit-for-bit
+    /// identical (enforced by
+    /// `tests/prop_invariants.rs::prop_index_cache_preserves_decisions`).
+    /// Callers keep one index per scheme instance over a single topology,
+    /// so candidate-set equality implies hop-LUT equality.
+    pub fn build_cached(&mut self, ctx: &OffloadContext) -> bool {
+        if self.built && self.matches(ctx) {
+            self.hits += 1;
+            return true;
+        }
+        self.build(ctx);
+        self.misses += 1;
+        false
+    }
+
+    /// True when the cached contents equal what `build(ctx)` would write.
+    fn matches(&self, ctx: &OffloadContext) -> bool {
+        let same_static = self.origin == ctx.origin
+            && self.sat_ids.as_slice() == ctx.candidates
+            && self.kappa.to_bits() == ctx.kappa.to_bits()
+            && self.theta1.to_bits() == ctx.ga.theta1.to_bits()
+            && self.theta2.to_bits() == ctx.ga.theta2.to_bits()
+            && self.theta3.to_bits() == ctx.ga.theta3.to_bits()
+            && self.segments.len() == ctx.segments.len()
+            && self
+                .segments
+                .iter()
+                .zip(ctx.segments)
+                .all(|(a, b)| a.to_bits() == b.to_bits());
+        same_static
+            && ctx.candidates.iter().enumerate().all(|(i, &c)| {
+                self.loaded[i].to_bits() == ctx.view.loaded(c).to_bits()
+                    && self.capacity[i].to_bits() == ctx.view.capacity(c).to_bits()
+                    && self.max_workload[i].to_bits() == ctx.view.max_workload(c).to_bits()
+            })
+    }
+
+    /// Reuse-cache hits counted by [`DecisionSpaceIndex::build_cached`].
+    pub fn cache_hits(&self) -> u64 {
+        self.hits
+    }
+
+    /// Reuse-cache misses (full rebuilds) counted by
+    /// [`DecisionSpaceIndex::build_cached`].
+    pub fn cache_misses(&self) -> u64 {
+        self.misses
     }
 
     pub fn from_ctx(ctx: &OffloadContext) -> DecisionSpaceIndex {
@@ -467,17 +534,17 @@ mod tests {
     use super::*;
     use crate::config::GaConfig;
     use crate::satellite::Satellite;
-    use crate::topology::Torus;
+    use crate::topology::Constellation;
 
     pub(crate) fn test_ctx<'a>(
-        torus: &'a Torus,
+        topo: &'a Constellation,
         sats: &'a [Satellite],
         candidates: &'a [SatId],
         segments: &'a [f64],
         ga: &'a GaConfig,
     ) -> OffloadContext<'a> {
         OffloadContext {
-            torus,
+            topo,
             view: StateView::live(sats),
             origin: 0,
             candidates,
@@ -487,37 +554,37 @@ mod tests {
         }
     }
 
-    fn setup(n: usize) -> (Torus, Vec<Satellite>, GaConfig) {
-        let torus = Torus::new(n);
-        let sats = (0..torus.len())
+    fn setup(n: usize) -> (Constellation, Vec<Satellite>, GaConfig) {
+        let topo = Constellation::torus(n);
+        let sats = (0..topo.len())
             .map(|i| Satellite::new(i, 3000.0, 15000.0))
             .collect();
-        (torus, sats, GaConfig::default())
+        (topo, sats, GaConfig::default())
     }
 
     #[test]
     fn deficit_computation_term() {
-        let (torus, sats, mut ga) = setup(4);
+        let (topo, sats, mut ga) = setup(4);
         ga.theta2 = 0.0;
         ga.theta3 = 0.0;
-        let cands = torus.decision_space(0, 2);
+        let cands = topo.decision_space(0, 2);
         let segs = [3000.0, 6000.0];
-        let ctx = test_ctx(&torus, &sats, &cands, &segs, &ga);
+        let ctx = test_ctx(&topo, &sats, &cands, &segs, &ga);
         // both on sat 0: comp = 3000/3000 + 6000/3000 = 3
         assert!((ctx.deficit(&[0, 0]) - 3.0).abs() < 1e-12);
     }
 
     #[test]
     fn deficit_transmission_term_eq12() {
-        let (torus, sats, mut ga) = setup(4);
+        let (topo, sats, mut ga) = setup(4);
         ga.theta1 = 0.0;
         ga.theta3 = 0.0;
         ga.theta2 = 2.0;
-        let cands = torus.decision_space(0, 2);
+        let cands = topo.decision_space(0, 2);
         let segs = [100.0, 50.0, 10.0];
-        let ctx = test_ctx(&torus, &sats, &cands, &segs, &ga);
+        let ctx = test_ctx(&topo, &sats, &cands, &segs, &ga);
         let a = 0;
-        let b = torus.neighbors(0)[0];
+        let b = topo.neighbors(0)[0];
         // hops: MH(a,b)=1 after seg1, MH(b,b)=0 after seg2; last segment
         // ships nothing. tran = kappa*q*MH summed, weighted by theta2.
         let d = ctx.deficit(&[a, b, b]);
@@ -527,43 +594,43 @@ mod tests {
 
     #[test]
     fn deficit_counts_drops_with_accumulation() {
-        let (torus, mut sats, mut ga) = setup(4);
+        let (topo, mut sats, mut ga) = setup(4);
         ga.theta1 = 0.0;
         ga.theta2 = 0.0;
         ga.theta3 = 1.0;
         // satellite 0 can only admit < 15000 total
         sats[0].try_load(9000.0);
-        let cands = torus.decision_space(0, 2);
+        let cands = topo.decision_space(0, 2);
         let segs = [4000.0, 4000.0];
-        let ctx = test_ctx(&torus, &sats, &cands, &segs, &ga);
+        let ctx = test_ctx(&topo, &sats, &cands, &segs, &ga);
         // first 4000 fits (13000 < 15000), second does not (17000 >= 15000)
         assert!((ctx.deficit(&[0, 0]) - 1.0).abs() < 1e-12);
         assert_eq!(ctx.predicted_drops(&[0, 0]), 1);
         // spreading avoids the drop
-        let nb = torus.neighbors(0)[0];
+        let nb = topo.neighbors(0)[0];
         assert_eq!(ctx.predicted_drops(&[0, nb]), 0);
     }
 
     #[test]
     fn empty_segments_never_counted_as_drops() {
-        let (torus, mut sats, ga) = setup(4);
+        let (topo, mut sats, ga) = setup(4);
         sats[0].try_load(14999.0);
-        let cands = torus.decision_space(0, 2);
+        let cands = topo.decision_space(0, 2);
         let segs = [0.0, 0.0];
-        let ctx = test_ctx(&torus, &sats, &cands, &segs, &ga);
+        let ctx = test_ctx(&topo, &sats, &cands, &segs, &ga);
         assert_eq!(ctx.predicted_drops(&[0, 0]), 0);
     }
 
     #[test]
     fn indexed_deficit_matches_reference_bitwise() {
-        let (torus, mut sats, ga) = setup(6);
+        let (topo, mut sats, ga) = setup(6);
         let mut rng = crate::util::rng::Pcg64::seed_from_u64(11);
         for s in sats.iter_mut() {
             s.try_load(rng.f64_in(0.0, 14_000.0));
         }
-        let cands = torus.decision_space(7, 2);
+        let cands = topo.decision_space(7, 2);
         let segs = [4000.0, 0.0, 3500.0, 2800.0];
-        let ctx = test_ctx(&torus, &sats, &cands, &segs, &ga);
+        let ctx = test_ctx(&topo, &sats, &cands, &segs, &ga);
         let index = DecisionSpaceIndex::from_ctx(&ctx);
         assert_eq!(index.n_cands(), cands.len());
         assert_eq!(index.n_segments(), segs.len());
@@ -589,12 +656,12 @@ mod tests {
 
     #[test]
     fn incremental_deficit_tracks_single_gene_mutations() {
-        let (torus, mut sats, ga) = setup(5);
+        let (topo, mut sats, ga) = setup(5);
         sats[0].try_load(12_000.0);
         sats[6].try_load(9_000.0);
-        let cands = torus.decision_space(6, 2);
+        let cands = topo.decision_space(6, 2);
         let segs = [3000.0, 4000.0, 2000.0];
-        let ctx = test_ctx(&torus, &sats, &cands, &segs, &ga);
+        let ctx = test_ctx(&topo, &sats, &cands, &segs, &ga);
         let index = DecisionSpaceIndex::from_ctx(&ctx);
         let mut scratch = DeficitScratch::default();
         let mut genes: Vec<Gene> = vec![0, 1, 2];

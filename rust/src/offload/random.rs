@@ -39,17 +39,17 @@ mod tests {
     use super::*;
     use crate::config::GaConfig;
     use crate::satellite::Satellite;
-    use crate::topology::Torus;
+    use crate::topology::Constellation;
 
     #[test]
     fn picks_only_candidates_and_right_length() {
-        let torus = Torus::new(6);
+        let topo = Constellation::torus(6);
         let sats: Vec<Satellite> = (0..36).map(|i| Satellite::new(i, 3000.0, 15000.0)).collect();
-        let cands = torus.decision_space(7, 2);
+        let cands = topo.decision_space(7, 2);
         let segs = vec![100.0; 5];
         let ga = GaConfig::default();
         let ctx = OffloadContext {
-            torus: &torus,
+            topo: &topo,
             view: crate::state::StateView::live(&sats),
             origin: 7,
             candidates: &cands,
@@ -67,13 +67,13 @@ mod tests {
 
     #[test]
     fn spreads_over_candidates() {
-        let torus = Torus::new(8);
+        let topo = Constellation::torus(8);
         let sats: Vec<Satellite> = (0..64).map(|i| Satellite::new(i, 3000.0, 15000.0)).collect();
-        let cands = torus.decision_space(0, 2);
+        let cands = topo.decision_space(0, 2);
         let segs = vec![1.0];
         let ga = GaConfig::default();
         let ctx = OffloadContext {
-            torus: &torus,
+            topo: &topo,
             view: crate::state::StateView::live(&sats),
             origin: 0,
             candidates: &cands,

@@ -62,17 +62,17 @@ mod tests {
     use super::*;
     use crate::config::GaConfig;
     use crate::satellite::Satellite;
-    use crate::topology::Torus;
+    use crate::topology::Constellation;
 
     fn ctx_with<'a>(
-        torus: &'a Torus,
+        topo: &'a Constellation,
         sats: &'a [Satellite],
         cands: &'a [SatId],
         segs: &'a [f64],
         ga: &'a GaConfig,
     ) -> OffloadContext<'a> {
         OffloadContext {
-            torus,
+            topo,
             view: crate::state::StateView::live(sats),
             origin: 0,
             candidates: cands,
@@ -84,10 +84,10 @@ mod tests {
 
     #[test]
     fn picks_most_residual() {
-        let torus = Torus::new(4);
+        let topo = Constellation::torus(4);
         let mut sats: Vec<Satellite> =
             (0..16).map(|i| Satellite::new(i, 3000.0, 15000.0)).collect();
-        let cands = torus.decision_space(0, 1);
+        let cands = topo.decision_space(0, 1);
         for &c in &cands {
             if c != 1 {
                 sats[c].try_load(10_000.0);
@@ -95,7 +95,7 @@ mod tests {
         }
         let segs = vec![100.0];
         let ga = GaConfig::default();
-        let ctx = ctx_with(&torus, &sats, &cands, &segs, &ga);
+        let ctx = ctx_with(&topo, &sats, &cands, &segs, &ga);
         assert!(cands.contains(&1));
         assert_eq!(RrpScheme::new().decide(&ctx), vec![1]);
     }
@@ -104,26 +104,26 @@ mod tests {
     fn zigzags_across_fittest_satellites() {
         // equal big segments: after planning seg1 on the argmax, the next
         // argmax is a different satellite — the sequence hops
-        let torus = Torus::new(4);
+        let topo = Constellation::torus(4);
         let mut sats: Vec<Satellite> =
             (0..16).map(|i| Satellite::new(i, 3000.0, 15000.0)).collect();
-        let cands = torus.decision_space(0, 1);
+        let cands = topo.decision_space(0, 1);
         for (i, &c) in cands.iter().enumerate() {
             sats[c].try_load(100.0 * i as f64); // strictly ordered residuals
         }
         let segs = vec![8_000.0, 8_000.0];
         let ga = GaConfig::default();
-        let ctx = ctx_with(&torus, &sats, &cands, &segs, &ga);
+        let ctx = ctx_with(&topo, &sats, &cands, &segs, &ga);
         let chrom = RrpScheme::new().decide(&ctx);
         assert_ne!(chrom[0], chrom[1], "expected per-segment re-selection");
     }
 
     #[test]
     fn accounts_for_own_planned_segments() {
-        let torus = Torus::new(4);
+        let topo = Constellation::torus(4);
         let mut sats: Vec<Satellite> =
             (0..16).map(|i| Satellite::new(i, 3000.0, 15000.0)).collect();
-        let cands = torus.decision_space(0, 1);
+        let cands = topo.decision_space(0, 1);
         for &c in &cands {
             match c {
                 1 => {}
@@ -137,7 +137,7 @@ mod tests {
         }
         let segs = vec![8_000.0, 8_000.0];
         let ga = GaConfig::default();
-        let ctx = ctx_with(&torus, &sats, &cands, &segs, &ga);
+        let ctx = ctx_with(&topo, &sats, &cands, &segs, &ga);
         let chrom = RrpScheme::new().decide(&ctx);
         assert_eq!(chrom[0], 1);
         assert_eq!(chrom[1], 4);
@@ -145,13 +145,13 @@ mod tests {
 
     #[test]
     fn deterministic() {
-        let torus = Torus::new(5);
+        let topo = Constellation::torus(5);
         let sats: Vec<Satellite> =
             (0..25).map(|i| Satellite::new(i, 3000.0, 15000.0)).collect();
-        let cands = torus.decision_space(2, 2);
+        let cands = topo.decision_space(2, 2);
         let segs = vec![10.0, 10.0, 10.0];
         let ga = GaConfig::default();
-        let ctx = ctx_with(&torus, &sats, &cands, &segs, &ga);
+        let ctx = ctx_with(&topo, &sats, &cands, &segs, &ga);
         assert_eq!(RrpScheme::new().decide(&ctx), RrpScheme::new().decide(&ctx));
     }
 }

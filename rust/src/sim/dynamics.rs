@@ -4,7 +4,7 @@
 //! overhead, and fault injection (transient satellite outages) for
 //! robustness evaluation.
 
-use crate::topology::{SatId, Torus};
+use crate::topology::{Constellation, SatId};
 use crate::util::rng::Pcg64;
 
 /// Orbital handover model: a ground area's serving (decision) satellite
@@ -31,22 +31,31 @@ impl Default for Handover {
 }
 
 impl Handover {
+    /// Effective dwell (clamped to ≥ 1 slot) — the single place the
+    /// `dwell_slots` floor is applied.
+    fn dwell(&self) -> usize {
+        self.dwell_slots.max(1)
+    }
+
     /// The decision satellite serving an area at `slot`, given the area's
-    /// initial serving satellite. Motion is along the in-orbit ring.
-    pub fn serving_at(&self, torus: &Torus, initial: SatId, slot: usize) -> SatId {
-        self.serving_after(torus, initial, slot / self.dwell_slots.max(1))
+    /// initial serving satellite. Motion is along the satellite's own
+    /// orbital plane.
+    pub fn serving_at(&self, topo: &Constellation, initial: SatId, slot: usize) -> SatId {
+        self.serving_after(topo, initial, slot / self.dwell())
     }
 
     /// The serving satellite after `steps` completed handovers (the event
-    /// engine advances this one step per scheduled `Handover` event).
-    pub fn serving_after(&self, torus: &Torus, initial: SatId, steps: usize) -> SatId {
-        let (o, i) = torus.coords(initial);
-        torus.id(o as isize, i as isize + steps as isize * self.direction)
+    /// engine advances this one step per scheduled `Handover` event). The
+    /// gateway link advances along the actual orbital plane of the
+    /// topology — the in-orbit ring on the torus, the plane ring on a
+    /// Walker — never across planes.
+    pub fn serving_after(&self, topo: &Constellation, initial: SatId, steps: usize) -> SatId {
+        topo.advance_in_plane(initial, steps as isize * self.direction)
     }
 
     /// Seconds between handovers on the continuous clock (1 slot = 1 s).
     pub fn dwell_secs(&self) -> f64 {
-        self.dwell_slots.max(1) as f64
+        self.dwell() as f64
     }
 }
 
@@ -131,39 +140,44 @@ mod tests {
 
     #[test]
     fn handover_advances_along_orbit() {
-        let t = Torus::new(8);
+        let t = Constellation::torus(8);
         let h = Handover {
             dwell_slots: 5,
             direction: 1,
         };
-        let s0 = t.id(3, 2);
+        let s0 = 3 * 8 + 2; // plane 3, slot 2
         assert_eq!(h.serving_at(&t, s0, 0), s0);
         assert_eq!(h.serving_at(&t, s0, 4), s0);
-        assert_eq!(h.serving_at(&t, s0, 5), t.id(3, 3));
-        assert_eq!(h.serving_at(&t, s0, 10), t.id(3, 4));
+        assert_eq!(h.serving_at(&t, s0, 5), s0 + 1);
+        assert_eq!(h.serving_at(&t, s0, 10), s0 + 2);
         // wraps around the ring
         assert_eq!(h.serving_at(&t, s0, 5 * 8), s0);
     }
 
     #[test]
     fn handover_stays_in_same_orbit() {
-        let t = Torus::new(6);
-        let h = Handover::default();
-        let s0 = t.id(2, 0);
-        for slot in 0..100 {
-            let (o, _) = t.coords(h.serving_at(&t, s0, slot));
-            assert_eq!(o, 2);
+        for t in [
+            Constellation::torus(6),
+            Constellation::walker_delta(6, 6, 2),
+            Constellation::walker_star(6, 6),
+        ] {
+            let h = Handover::default();
+            let s0 = 2 * 6; // plane 2, slot 0
+            for slot in 0..100 {
+                let (o, _) = t.coords(h.serving_at(&t, s0, slot));
+                assert_eq!(o, 2);
+            }
         }
     }
 
     #[test]
     fn serving_after_matches_slot_view() {
-        let t = Torus::new(8);
+        let t = Constellation::torus(8);
         let h = Handover {
             dwell_slots: 4,
             direction: -1,
         };
-        let s0 = t.id(1, 6);
+        let s0 = 8 + 6; // plane 1, slot 6
         for slot in 0..40 {
             assert_eq!(
                 h.serving_at(&t, s0, slot),
@@ -171,6 +185,19 @@ mod tests {
             );
         }
         assert!((h.dwell_secs() - 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn handover_wraps_within_a_walker_plane() {
+        // a 3x4 star: plane 1 is slots 4..8; backwards motion wraps in it
+        let t = Constellation::walker_star(3, 4);
+        let h = Handover {
+            dwell_slots: 1,
+            direction: -1,
+        };
+        let s0 = 4; // plane 1, slot 0
+        assert_eq!(h.serving_at(&t, s0, 1), 7);
+        assert_eq!(h.serving_at(&t, s0, 4), s0);
     }
 
     #[test]

@@ -25,7 +25,7 @@ use crate::satellite::{Admission, Satellite};
 use crate::splitting::balanced_split;
 use crate::state::ViewTracker;
 use crate::tasks::{decision_satellites, TaskGenerator};
-use crate::topology::{SatId, Torus};
+use crate::topology::{Constellation, SatId};
 use crate::util::rng::Pcg64;
 
 /// How tasks are split before offloading (the ablation knob).
@@ -111,7 +111,7 @@ pub(crate) fn split_segments_cached<F>(
 /// A ready-to-run simulation instance.
 pub struct Simulation {
     cfg: SimConfig,
-    torus: Torus,
+    topo: Constellation,
     satellites: Vec<Satellite>,
     decision_sats: Vec<SatId>,
     scheme: Box<dyn OffloadScheme>,
@@ -137,8 +137,8 @@ pub struct Simulation {
 impl Simulation {
     pub fn new(cfg: &SimConfig, kind: SchemeKind) -> Simulation {
         cfg.validate().expect("invalid SimConfig");
-        let torus = Torus::new(cfg.n);
-        let satellites: Vec<Satellite> = (0..torus.len())
+        let topo = cfg.build_topology();
+        let satellites: Vec<Satellite> = (0..topo.len())
             .map(|i| {
                 Satellite::new(
                     i,
@@ -148,11 +148,11 @@ impl Simulation {
             })
             .collect();
         let decision_sats =
-            decision_satellites(torus.len(), cfg.decision_fraction, cfg.seed);
+            decision_satellites(topo.len(), cfg.decision_fraction, cfg.seed);
         let n_areas = decision_sats.len();
         let kappa = calibrate_kappa(cfg);
         Simulation {
-            torus,
+            topo,
             satellites,
             decision_sats,
             scheme: make_scheme(kind, cfg.seed ^ 0x5EED),
@@ -200,7 +200,7 @@ impl Simulation {
     /// failure; failed satellites are avoided by the schemes).
     pub fn with_faults(mut self, p_fail: f64, p_recover: f64) -> Simulation {
         self.faults = Some(dynamics::FaultInjector::new(
-            self.torus.len(),
+            self.topo.len(),
             p_fail,
             p_recover,
             self.cfg.seed ^ 0xFA17,
@@ -239,7 +239,7 @@ impl Simulation {
         let spaces: Vec<(SatId, Vec<SatId>)> = self
             .decision_sats
             .iter()
-            .map(|&x| (x, self.torus.decision_space(x, d_max)))
+            .map(|&x| (x, self.topo.decision_space(x, d_max)))
             .collect();
 
         // Local-observation decision model (§I: "each terminal
@@ -276,11 +276,11 @@ impl Simulation {
                 let serving: Vec<SatId> = spaces
                     .iter()
                     .map(|(o, _)| match &self.handover {
-                        Some(h) => h.serving_at(&self.torus, *o, slot),
+                        Some(h) => h.serving_at(&self.topo, *o, slot),
                         None => *o,
                     })
                     .collect();
-                tracker.broadcast_now(t_slot, &self.satellites, &self.torus, &serving);
+                tracker.broadcast_now(t_slot, &self.satellites, &self.topo, &serving);
             }
             tracker.advance_to(t_slot);
             for (area, (origin0, candidates0)) in spaces.iter().enumerate() {
@@ -289,9 +289,9 @@ impl Simulation {
                 let (origin, candidates_owned);
                 match &self.handover {
                     Some(h) => {
-                        origin = h.serving_at(&self.torus, *origin0, slot);
+                        origin = h.serving_at(&self.topo, *origin0, slot);
                         candidates_owned =
-                            self.torus.decision_space(origin, d_max);
+                            self.topo.decision_space(origin, d_max);
                     }
                     None => {
                         origin = *origin0;
@@ -327,7 +327,7 @@ impl Simulation {
                     // scheme decision under the origin's disseminated view
                     {
                         let ctx = OffloadContext {
-                            torus: &self.torus,
+                            topo: &self.topo,
                             view: tracker.view(area, &self.satellites),
                             origin,
                             candidates,
@@ -361,7 +361,7 @@ impl Simulation {
                                 metrics.sat(c).assigned_mflops += q;
                                 metrics.sat(c).segments_executed += 1;
                                 if k + 1 < chrom.len() {
-                                    let hops = self.torus.manhattan(c, chrom[k + 1]) as f64;
+                                    let hops = self.topo.hops(c, chrom[k + 1]) as f64;
                                     let tt = hops * q * self.kappa;
                                     tran += tt;
                                     metrics.sat(c).tran_delay_s += tt;
@@ -378,7 +378,7 @@ impl Simulation {
                     // learning hook (DQN)
                     {
                         let ctx = OffloadContext {
-                            torus: &self.torus,
+                            topo: &self.topo,
                             view: tracker.view(area, &self.satellites),
                             origin,
                             candidates,
@@ -583,6 +583,47 @@ mod tests {
         let cfg = small_cfg(DnnModel::Vgg19, 5.0);
         let r = Simulation::new(&cfg, SchemeKind::Random)
             .with_jitter(0.2)
+            .run();
+        assert!(r.total_tasks > 0);
+    }
+
+    #[test]
+    fn walker_topologies_run_all_schemes() {
+        use crate::topology::TopologyKind;
+        for topo in [
+            TopologyKind::WalkerDelta {
+                planes: 6,
+                sats_per_plane: 6,
+                phasing: 1,
+            },
+            TopologyKind::WalkerStar {
+                planes: 6,
+                sats_per_plane: 6,
+            },
+        ] {
+            for kind in SchemeKind::all() {
+                let mut cfg = small_cfg(DnnModel::Vgg19, 4.0);
+                cfg.topology = Some(topo.clone());
+                let r = Simulation::new(&cfg, kind).run();
+                assert!(r.total_tasks > 0, "{kind:?}/{topo:?}");
+                assert_eq!(r.total_tasks, r.completed_tasks + r.dropped_tasks);
+            }
+        }
+    }
+
+    #[test]
+    fn walker_handover_runs() {
+        use crate::topology::TopologyKind;
+        let mut cfg = small_cfg(DnnModel::Vgg19, 5.0);
+        cfg.topology = Some(TopologyKind::WalkerStar {
+            planes: 6,
+            sats_per_plane: 6,
+        });
+        let r = Simulation::new(&cfg, SchemeKind::Scc)
+            .with_handover(dynamics::Handover {
+                dwell_slots: 2,
+                direction: -1,
+            })
             .run();
         assert!(r.total_tasks > 0);
     }

@@ -40,11 +40,14 @@
 use std::collections::VecDeque;
 
 use crate::satellite::Satellite;
-use crate::topology::{SatId, Torus};
+use crate::topology::{Constellation, SatId};
 
 /// Default gossip store-and-forward interval [s] — the per-hop state
-/// propagation latency when `gossip` is selected without an argument.
-pub const DEFAULT_GOSSIP_TICK_S: f64 = 0.5;
+/// propagation latency when `gossip` is selected without an argument and
+/// no config is in scope (25 ms, the typical LEO ISL store-and-forward
+/// figure). Config-aware callers derive the tick from the
+/// `--isl-latency-ms` knob via [`DisseminationKind::parse_with`] instead.
+pub const DEFAULT_GOSSIP_TICK_S: f64 = 0.025;
 
 /// How resource state propagates from satellites to decision makers.
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -69,8 +72,21 @@ impl DisseminationKind {
     /// Parse `instant | periodic[:<secs>] | gossip[:<secs>]` (the
     /// `--dissemination` CLI / TOML syntax). `periodic` without an
     /// argument means one slot (1 s); `gossip` without an argument uses
-    /// [`DEFAULT_GOSSIP_TICK_S`].
+    /// [`DEFAULT_GOSSIP_TICK_S`]. Config-aware callers should prefer
+    /// [`DisseminationKind::parse_with`], which derives the bare-gossip
+    /// tick from the per-hop ISL latency knob.
     pub fn parse(s: &str) -> Result<DisseminationKind, String> {
+        DisseminationKind::parse_with(s, DEFAULT_GOSSIP_TICK_S)
+    }
+
+    /// [`DisseminationKind::parse`] with the tick a bare `gossip` gets
+    /// (the config layer passes `isl_latency_ms / 1000`, so the gossip
+    /// cadence tracks the modeled ISL store-and-forward latency instead
+    /// of a hard-coded constant). Explicit `gossip:<secs>` always wins.
+    pub fn parse_with(
+        s: &str,
+        gossip_tick_default_s: f64,
+    ) -> Result<DisseminationKind, String> {
         let low = s.to_ascii_lowercase();
         let (head, arg) = match low.split_once(':') {
             Some((h, a)) => (h, Some(a)),
@@ -94,7 +110,7 @@ impl DisseminationKind {
             "gossip" | "hop" => Ok(DisseminationKind::Gossip {
                 tick_s: match arg {
                     Some(a) => parse_secs(a)?,
-                    None => DEFAULT_GOSSIP_TICK_S,
+                    None => gossip_tick_default_s,
                 },
             }),
             other => Err(format!(
@@ -339,7 +355,7 @@ impl ViewTracker {
         &mut self,
         t: f64,
         sats: &[Satellite],
-        torus: &Torus,
+        topo: &Constellation,
         serving: &[SatId],
     ) {
         match self.kind {
@@ -372,7 +388,7 @@ impl ViewTracker {
                     let origin = serving[area];
                     let view = &mut self.views[area];
                     for (p, v) in view.iter_mut().enumerate() {
-                        let h = torus.manhattan(origin, p).min(newest);
+                        let h = topo.hops(origin, p).min(newest);
                         *v = self.ring[h].1[p];
                     }
                     // replay own placements the visible snapshot cannot
@@ -381,7 +397,7 @@ impl ViewTracker {
                     // slot-start snapshots and same-slot placements with
                     // the same integer second), so tp >= ts replays
                     for &(tp, p, q) in log.iter() {
-                        let h = torus.manhattan(origin, p).min(newest);
+                        let h = topo.hops(origin, p).min(newest);
                         if tp >= self.ring[h].0 {
                             view[p] += q;
                         }
@@ -504,7 +520,7 @@ mod tests {
 
     #[test]
     fn periodic_views_freeze_between_broadcasts() {
-        let torus = Torus::new(3);
+        let topo = Constellation::torus(3);
         let mut live = sats(9);
         let mut tr = ViewTracker::new(
             DisseminationKind::Periodic { period_s: 2.0 },
@@ -514,18 +530,18 @@ mod tests {
         );
         let serving = [0usize];
         live[4].try_load(5000.0);
-        tr.broadcast_now(2.0, &live, &torus, &serving);
+        tr.broadcast_now(2.0, &live, &topo, &serving);
         assert_eq!(tr.view(0, &live).loaded(4), 5000.0);
         // live moves on; the view must not
         live[4].try_load(3000.0);
         assert_eq!(tr.view(0, &live).loaded(4), 5000.0);
-        tr.broadcast_now(4.0, &live, &torus, &serving);
+        tr.broadcast_now(4.0, &live, &topo, &serving);
         assert_eq!(tr.view(0, &live).loaded(4), 8000.0);
     }
 
     #[test]
     fn record_local_respects_believed_admission() {
-        let torus = Torus::new(3);
+        let topo = Constellation::torus(3);
         let live = sats(9);
         let mut tr = ViewTracker::new(
             DisseminationKind::Periodic { period_s: 1.0 },
@@ -533,7 +549,7 @@ mod tests {
             1,
             2,
         );
-        tr.broadcast_now(0.0, &live, &torus, &[0]);
+        tr.broadcast_now(0.0, &live, &topo, &[0]);
         tr.record_local(0, 3, 14_000.0, 0.0, &live);
         assert_eq!(tr.view(0, &live).loaded(3), 14_000.0);
         // 14_000 + 2_000 >= 15_000: the origin believes this placement
@@ -546,10 +562,10 @@ mod tests {
 
     #[test]
     fn gossip_views_lag_by_hop_count() {
-        let torus = Torus::new(4);
+        let topo = Constellation::torus(4);
         let mut live = sats(16);
         let origin = 0usize;
-        let nb = torus.neighbors(origin)[0];
+        let nb = topo.neighbors(origin)[0];
         let mut tr = ViewTracker::new(
             DisseminationKind::Gossip { tick_s: 1.0 },
             16,
@@ -559,33 +575,33 @@ mod tests {
         // tick 1: neighbor loaded 4000
         live[nb].try_load(4000.0);
         live[origin].try_load(1000.0);
-        tr.broadcast_now(1.0, &live, &torus, &[origin]);
+        tr.broadcast_now(1.0, &live, &topo, &[origin]);
         // tick 2: neighbor loads 2000 more
         live[nb].try_load(2000.0);
-        tr.broadcast_now(2.0, &live, &torus, &[origin]);
+        tr.broadcast_now(2.0, &live, &topo, &[origin]);
         let v = tr.view(0, &live);
         // self: freshest snapshot (lag 0)
         assert_eq!(v.loaded(origin), 1000.0);
         // neighbor at MH=1: one tick old — sees 4000, not 6000
         assert_eq!(v.loaded(nb), 4000.0);
         // after another tick the 6000 becomes visible at lag 1
-        tr.broadcast_now(3.0, &live, &torus, &[origin]);
+        tr.broadcast_now(3.0, &live, &topo, &[origin]);
         assert_eq!(tr.view(0, &live).loaded(nb), 6000.0);
     }
 
     #[test]
     fn gossip_replays_own_placements_on_stale_peers() {
-        let torus = Torus::new(4);
+        let topo = Constellation::torus(4);
         let live = sats(16);
         let origin = 0usize;
-        let nb = torus.neighbors(origin)[0];
+        let nb = topo.neighbors(origin)[0];
         let mut tr = ViewTracker::new(
             DisseminationKind::Gossip { tick_s: 1.0 },
             16,
             1,
             2,
         );
-        tr.broadcast_now(1.0, &live, &torus, &[origin]);
+        tr.broadcast_now(1.0, &live, &topo, &[origin]);
         // the origin places 3000 on its neighbor between ticks: its own
         // view must reflect it immediately...
         tr.record_local(0, nb, 3000.0, 1.5, &live);
@@ -594,18 +610,18 @@ mod tests {
         // visible (1-tick-old) snapshot predates the placement. The live
         // state never saw the load (this test never calls try_load), which
         // stands in for the snapshot lag.
-        tr.broadcast_now(2.0, &live, &torus, &[origin]);
+        tr.broadcast_now(2.0, &live, &topo, &[origin]);
         assert_eq!(tr.view(0, &live).loaded(nb), 3000.0);
     }
 
     #[test]
     fn instant_tracker_is_transparent() {
-        let torus = Torus::new(3);
+        let topo = Constellation::torus(3);
         let mut live = sats(9);
         let mut tr = ViewTracker::new(DisseminationKind::Instant, 9, 2, 2);
         assert!(tr.is_instant());
         assert_eq!(tr.broadcast_interval(), None);
-        tr.broadcast_now(1.0, &live, &torus, &[0, 4]);
+        tr.broadcast_now(1.0, &live, &topo, &[0, 4]);
         tr.record_local(0, 3, 500.0, 1.0, &live);
         live[3].try_load(700.0);
         // the view is the live state, untouched by tracker calls

@@ -5,8 +5,30 @@
 //! adjacent four satellites that can directly communicate" — i.e. a 2-D
 //! torus (both the in-orbit ring and the inter-plane ring wrap).
 //! Distances are Manhattan hop counts on that torus (Eq. 7, 11c).
+//!
+//! Real LEO systems are Walker constellations with a polar seam and
+//! phasing offsets, so the torus is only one [`Constellation`] among
+//! three:
+//!
+//! * [`Constellation::Torus`] — the paper default: closed-form Manhattan
+//!   hop arithmetic on the N×N double ring ([`Torus`], re-homed here).
+//! * `walker-delta:<p>x<s>[:f]` — P planes × S satellites per plane;
+//!   inter-plane links wrap (plane P−1 ↔ plane 0) with a phasing slot
+//!   offset F applied across the wrap.
+//! * `walker-star:<p>x<s>` — the counter-rotating seam: **no** inter-plane
+//!   links between plane P−1 and plane 0, so hop distances are no longer
+//!   closed-form Manhattan arithmetic.
+//!
+//! Walker hop distances come from an all-pairs BFS LUT computed once at
+//! construction ([`Walker`]); every consumer — the offloading schemes, the
+//! [`crate::offload::DecisionSpaceIndex`] fast path, gossip hop-lag,
+//! eventsim routing and handover — goes through [`Constellation`], so the
+//! geometry is swappable from config (`--topology`, [`TopologyKind`]).
 
-/// Satellite identifier: a flat index into the N×N grid.
+use std::collections::VecDeque;
+
+/// Satellite identifier: a flat index into the constellation
+/// (`plane * sats_per_plane + slot`).
 pub type SatId = usize;
 
 /// An N×N toroidal constellation grid.
@@ -32,10 +54,10 @@ impl Torus {
         self.n * self.n
     }
 
-    /// `len`/`is_empty` contract: true iff the grid holds no satellites.
-    /// (Construction enforces `n >= 2`, so a live `Torus` is never empty.)
+    /// `len`/`is_empty` contract companion: construction enforces
+    /// `n >= 2`, so a live `Torus` is never empty.
     pub fn is_empty(&self) -> bool {
-        self.n == 0
+        false
     }
 
     /// (orbit, index-in-orbit) of a satellite.
@@ -167,6 +189,499 @@ impl Torus {
             path.push(o * n + i);
         }
         path
+    }
+}
+
+/// Inter-plane link pattern of a Walker constellation.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum WalkerKind {
+    /// Walker-Delta: the inter-plane ring wraps (plane P−1 ↔ plane 0),
+    /// with the phasing slot offset F applied across the wrap.
+    Delta,
+    /// Walker-Star: counter-rotating seam — no inter-plane links between
+    /// plane P−1 and plane 0.
+    Star,
+}
+
+/// A Walker constellation: `planes` orbital planes × `sats_per_plane`
+/// evenly spaced satellites, in-plane rings always closed, inter-plane
+/// links per [`WalkerKind`]. Hop distances are a precomputed all-pairs
+/// BFS LUT (the seam breaks the closed-form Manhattan arithmetic), built
+/// once at construction and cached for the lifetime of the topology.
+#[derive(Clone, Debug)]
+pub struct Walker {
+    kind: WalkerKind,
+    planes: usize,
+    sats_per_plane: usize,
+    /// F — slot offset applied when an inter-plane link crosses the
+    /// plane wrap (Delta only; 0 for Star).
+    phasing: usize,
+    /// Row-major all-pairs shortest-path hop LUT: `lut[a·n + b]`.
+    lut: Vec<u16>,
+}
+
+impl Walker {
+    /// Build a Walker-Delta constellation. Panics unless `planes >= 2`,
+    /// `sats_per_plane >= 2`, and `phasing < sats_per_plane`.
+    pub fn delta(planes: usize, sats_per_plane: usize, phasing: usize) -> Walker {
+        Walker::build(WalkerKind::Delta, planes, sats_per_plane, phasing)
+    }
+
+    /// Build a Walker-Star constellation (seam between plane P−1 and 0).
+    pub fn star(planes: usize, sats_per_plane: usize) -> Walker {
+        Walker::build(WalkerKind::Star, planes, sats_per_plane, 0)
+    }
+
+    fn build(kind: WalkerKind, planes: usize, sats_per_plane: usize, phasing: usize) -> Walker {
+        assert!(
+            planes >= 2 && sats_per_plane >= 2,
+            "walker needs >= 2 planes and >= 2 sats per plane (got {planes}x{sats_per_plane})"
+        );
+        assert!(
+            phasing < sats_per_plane,
+            "phasing {phasing} must be < sats_per_plane {sats_per_plane}"
+        );
+        let mut w = Walker {
+            kind,
+            planes,
+            sats_per_plane,
+            phasing,
+            lut: Vec::new(),
+        };
+        w.lut = w.apsp();
+        w
+    }
+
+    /// The inter-plane link pattern.
+    pub fn kind(&self) -> WalkerKind {
+        self.kind
+    }
+
+    /// Number of orbital planes P.
+    pub fn planes(&self) -> usize {
+        self.planes
+    }
+
+    /// Satellites per plane S.
+    pub fn sats_per_plane(&self) -> usize {
+        self.sats_per_plane
+    }
+
+    /// Phasing slot offset F (0 for Star).
+    pub fn phasing(&self) -> usize {
+        self.phasing
+    }
+
+    /// Total satellites P·S.
+    pub fn len(&self) -> usize {
+        self.planes * self.sats_per_plane
+    }
+
+    /// Construction enforces `planes, sats_per_plane >= 2`: never empty.
+    pub fn is_empty(&self) -> bool {
+        false
+    }
+
+    /// (plane, slot-in-plane) of a satellite.
+    #[inline]
+    pub fn coords(&self, s: SatId) -> (usize, usize) {
+        debug_assert!(s < self.len());
+        (s / self.sats_per_plane, s % self.sats_per_plane)
+    }
+
+    #[inline]
+    fn id(&self, plane: usize, slot: usize) -> SatId {
+        plane * self.sats_per_plane + slot
+    }
+
+    /// The inter-plane neighbour of `(p, i)` in direction `dir` (±1), or
+    /// `None` at the Walker-Star seam. Crossing the Delta plane wrap
+    /// applies the phasing offset (+F going up past P−1, −F going down
+    /// past 0), keeping the link relation symmetric.
+    fn plane_neighbor(&self, p: usize, i: usize, dir: isize) -> Option<SatId> {
+        let planes = self.planes as isize;
+        let tp = p as isize + dir;
+        if (0..planes).contains(&tp) {
+            return Some(self.id(tp as usize, i));
+        }
+        match self.kind {
+            WalkerKind::Star => None,
+            WalkerKind::Delta => {
+                let wp = tp.rem_euclid(planes) as usize;
+                let s = self.sats_per_plane as isize;
+                let di = if dir > 0 {
+                    self.phasing as isize
+                } else {
+                    -(self.phasing as isize)
+                };
+                let wi = (i as isize + di).rem_euclid(s) as usize;
+                Some(self.id(wp, wi))
+            }
+        }
+    }
+
+    /// ISL neighbours of `s`, in the torus ordering (plane −1, plane +1,
+    /// slot −1, slot +1); seam satellites of a Star have degree 3.
+    pub fn neighbors(&self, s: SatId) -> Vec<SatId> {
+        let (p, i) = self.coords(s);
+        let mut out = Vec::with_capacity(4);
+        if let Some(nb) = self.plane_neighbor(p, i, -1) {
+            out.push(nb);
+        }
+        if let Some(nb) = self.plane_neighbor(p, i, 1) {
+            out.push(nb);
+        }
+        let sp = self.sats_per_plane;
+        out.push(self.id(p, (i + sp - 1) % sp));
+        out.push(self.id(p, (i + 1) % sp));
+        out
+    }
+
+    /// ISL hop distance from the precomputed BFS LUT.
+    #[inline]
+    pub fn hops(&self, a: SatId, b: SatId) -> usize {
+        self.lut[a * self.len() + b] as usize
+    }
+
+    /// All-pairs shortest-path hop counts via one BFS per satellite. Runs
+    /// once per constellation construction; O(n²) memory as `u16`.
+    fn apsp(&self) -> Vec<u16> {
+        let n = self.len();
+        let mut lut = vec![0u16; n * n];
+        let mut dist = vec![u32::MAX; n];
+        let mut queue = VecDeque::new();
+        for src in 0..n {
+            dist.fill(u32::MAX);
+            dist[src] = 0;
+            queue.clear();
+            queue.push_back(src);
+            while let Some(u) = queue.pop_front() {
+                let du = dist[u];
+                for nb in self.neighbors(u) {
+                    if dist[nb] == u32::MAX {
+                        dist[nb] = du + 1;
+                        queue.push_back(nb);
+                    }
+                }
+            }
+            for (t, &d) in dist.iter().enumerate() {
+                assert!(d != u32::MAX, "walker topology disconnected at {src}->{t}");
+                assert!(d <= u16::MAX as u32, "walker diameter exceeds u16");
+                lut[src * n + t] = d as u16;
+            }
+        }
+        lut
+    }
+}
+
+/// A pluggable constellation topology: satellite count, plane coords, ISL
+/// neighbours, hop distances, and the batched hop LUT the decision kernel
+/// indexes. [`Constellation::Torus`] delegates to the paper's closed-form
+/// [`Torus`] arithmetic (so the default path is bit-for-bit the legacy
+/// one, enforced by `tests/prop_topology.rs`); [`Constellation::Walker`]
+/// answers from the per-topology BFS LUT.
+#[derive(Clone, Debug)]
+pub enum Constellation {
+    /// The paper's N×N torus (closed-form Manhattan hops).
+    Torus(Torus),
+    /// Walker-Delta / Walker-Star with a precomputed BFS hop LUT.
+    Walker(Walker),
+}
+
+impl Constellation {
+    /// The paper-default N×N torus.
+    pub fn torus(n: usize) -> Constellation {
+        Constellation::Torus(Torus::new(n))
+    }
+
+    /// A Walker-Delta constellation (wrapping inter-plane ring, phasing F).
+    pub fn walker_delta(planes: usize, sats_per_plane: usize, phasing: usize) -> Constellation {
+        Constellation::Walker(Walker::delta(planes, sats_per_plane, phasing))
+    }
+
+    /// A Walker-Star constellation (polar seam, no cross-seam links).
+    pub fn walker_star(planes: usize, sats_per_plane: usize) -> Constellation {
+        Constellation::Walker(Walker::star(planes, sats_per_plane))
+    }
+
+    /// Total satellites.
+    pub fn len(&self) -> usize {
+        match self {
+            Constellation::Torus(t) => t.len(),
+            Constellation::Walker(w) => w.len(),
+        }
+    }
+
+    /// Construction enforces a non-degenerate grid: never empty.
+    pub fn is_empty(&self) -> bool {
+        false
+    }
+
+    /// (plane, slot-in-plane) of a satellite.
+    #[inline]
+    pub fn coords(&self, s: SatId) -> (usize, usize) {
+        match self {
+            Constellation::Torus(t) => t.coords(s),
+            Constellation::Walker(w) => w.coords(s),
+        }
+    }
+
+    /// ISL hop distance between two satellites — Manhattan `MH(i, j)` on
+    /// the torus (Eq. 7), BFS shortest-path hops on a Walker.
+    #[inline]
+    pub fn hops(&self, a: SatId, b: SatId) -> usize {
+        match self {
+            Constellation::Torus(t) => t.manhattan(a, b),
+            Constellation::Walker(w) => w.hops(a, b),
+        }
+    }
+
+    /// ISL neighbours of `s` (4 on the torus and Walker-Delta interior;
+    /// 3 at a Walker-Star seam plane).
+    pub fn neighbors(&self, s: SatId) -> Vec<SatId> {
+        match self {
+            Constellation::Torus(t) => t.neighbors(s).to_vec(),
+            Constellation::Walker(w) => w.neighbors(s),
+        }
+    }
+
+    /// Fixed-arity neighbour view for the DQN's 5-action grid walk: the
+    /// (up to) 4 ISL neighbours, padded with `s` itself where a link is
+    /// missing (a padded slot behaves exactly like the "stay" action).
+    /// Identical to [`Torus::neighbors`] on the torus.
+    pub fn neighbors4(&self, s: SatId) -> [SatId; 4] {
+        match self {
+            Constellation::Torus(t) => t.neighbors(s),
+            Constellation::Walker(w) => {
+                let mut out = [s; 4];
+                for (slot, nb) in w.neighbors(s).into_iter().enumerate() {
+                    out[slot] = nb;
+                }
+                out
+            }
+        }
+    }
+
+    /// Decision space `A_x` (constraint 11c): all satellites within hop
+    /// distance `d_max` of `x`, including `x`, sorted ascending.
+    pub fn decision_space(&self, x: SatId, d_max: usize) -> Vec<SatId> {
+        match self {
+            Constellation::Torus(t) => t.decision_space(x, d_max),
+            Constellation::Walker(w) => {
+                (0..w.len()).filter(|&s| w.hops(x, s) <= d_max).collect()
+            }
+        }
+    }
+
+    /// Fill `out` with the row-major `ids.len() × ids.len()` hop LUT for
+    /// an arbitrary satellite subset (see [`Torus::hops_lut`]); the
+    /// Walker path copies straight out of the cached APSP table, so both
+    /// stay allocation-free per decision beyond the reused `out` buffer.
+    pub fn hops_lut(&self, ids: &[SatId], out: &mut Vec<u16>) {
+        match self {
+            Constellation::Torus(t) => t.hops_lut(ids, out),
+            Constellation::Walker(w) => {
+                out.clear();
+                out.reserve(ids.len() * ids.len());
+                let n = w.len();
+                for &a in ids {
+                    let row = &w.lut[a * n..(a + 1) * n];
+                    for &b in ids {
+                        out.push(row[b]);
+                    }
+                }
+            }
+        }
+    }
+
+    /// One shortest path from `a` to `b` as the sequence of intermediate
+    /// hops (torus: orbit axis first; Walker: greedy LUT descent, lowest
+    /// neighbour id first — deterministic).
+    pub fn shortest_path(&self, a: SatId, b: SatId) -> Vec<SatId> {
+        match self {
+            Constellation::Torus(t) => t.shortest_path(a, b),
+            Constellation::Walker(w) => {
+                let mut path = Vec::with_capacity(w.hops(a, b));
+                let mut cur = a;
+                while cur != b {
+                    let d = w.hops(cur, b);
+                    let next = w
+                        .neighbors(cur)
+                        .into_iter()
+                        .filter(|&nb| w.hops(nb, b) + 1 == d)
+                        .min()
+                        .expect("hop LUT inconsistent with adjacency");
+                    path.push(next);
+                    cur = next;
+                }
+                path
+            }
+        }
+    }
+
+    /// The satellite `steps` slots further along `s`'s own orbital plane
+    /// (negative steps go backwards; wraps within the plane). This is the
+    /// handover motion: the gateway link advances along the actual orbit,
+    /// never across planes. On the torus this is the in-orbit ring step
+    /// the legacy handover used.
+    pub fn advance_in_plane(&self, s: SatId, steps: isize) -> SatId {
+        match self {
+            Constellation::Torus(t) => {
+                let (o, i) = t.coords(s);
+                t.id(o as isize, i as isize + steps)
+            }
+            Constellation::Walker(w) => {
+                let (p, i) = w.coords(s);
+                let sp = w.sats_per_plane as isize;
+                let idx = (i as isize + steps).rem_euclid(sp) as usize;
+                w.id(p, idx)
+            }
+        }
+    }
+}
+
+/// Declarative topology selector (config/CLI surface): which
+/// [`Constellation`] a run builds. Parsed from
+/// `torus:<n> | walker-delta:<p>x<s>[:f] | walker-star:<p>x<s>`.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum TopologyKind {
+    /// The paper's N×N torus.
+    Torus {
+        /// Grid edge N.
+        n: usize,
+    },
+    /// Walker-Delta: wrapping inter-plane ring with phasing offset F.
+    WalkerDelta {
+        planes: usize,
+        sats_per_plane: usize,
+        phasing: usize,
+    },
+    /// Walker-Star: polar seam, no cross-seam inter-plane links.
+    WalkerStar {
+        planes: usize,
+        sats_per_plane: usize,
+    },
+}
+
+impl TopologyKind {
+    /// Parse `torus:<n> | walker-delta:<p>x<s>[:f] | walker-star:<p>x<s>`
+    /// (the `--topology` CLI / TOML syntax), validating ranges.
+    pub fn parse(s: &str) -> Result<TopologyKind, String> {
+        let low = s.to_ascii_lowercase();
+        let (head, arg) = match low.split_once(':') {
+            Some((h, a)) => (h, a),
+            None => {
+                return Err(format!(
+                    "topology '{low}' needs a size \
+                     (torus:<n>|walker-delta:<p>x<s>[:f]|walker-star:<p>x<s>)"
+                ))
+            }
+        };
+        let parse_usize = |a: &str, what: &str| -> Result<usize, String> {
+            a.parse::<usize>().map_err(|e| format!("topology {what} '{a}': {e}"))
+        };
+        let parse_pxs = |a: &str| -> Result<(usize, usize), String> {
+            let (p, sp) = a
+                .split_once('x')
+                .ok_or_else(|| format!("expected <planes>x<sats>, got '{a}'"))?;
+            Ok((parse_usize(p, "planes")?, parse_usize(sp, "sats-per-plane")?))
+        };
+        let kind = match head {
+            "torus" | "grid" => TopologyKind::Torus {
+                n: parse_usize(arg, "size")?,
+            },
+            "walker-delta" | "delta" => {
+                let (geom, f) = match arg.split_once(':') {
+                    Some((g, f)) => (g, parse_usize(f, "phasing")?),
+                    None => (arg, 0),
+                };
+                let (planes, sats_per_plane) = parse_pxs(geom)?;
+                TopologyKind::WalkerDelta {
+                    planes,
+                    sats_per_plane,
+                    phasing: f,
+                }
+            }
+            "walker-star" | "star" => {
+                let (planes, sats_per_plane) = parse_pxs(arg)?;
+                TopologyKind::WalkerStar {
+                    planes,
+                    sats_per_plane,
+                }
+            }
+            other => {
+                return Err(format!(
+                    "unknown topology '{other}' \
+                     (torus:<n>|walker-delta:<p>x<s>[:f]|walker-star:<p>x<s>)"
+                ))
+            }
+        };
+        kind.validate()?;
+        Ok(kind)
+    }
+
+    /// Canonical label, accepted back by [`TopologyKind::parse`].
+    pub fn label(&self) -> String {
+        match self {
+            TopologyKind::Torus { n } => format!("torus:{n}"),
+            TopologyKind::WalkerDelta { planes, sats_per_plane, phasing } => {
+                format!("walker-delta:{planes}x{sats_per_plane}:{phasing}")
+            }
+            TopologyKind::WalkerStar { planes, sats_per_plane } => {
+                format!("walker-star:{planes}x{sats_per_plane}")
+            }
+        }
+    }
+
+    /// Total satellites without building the topology.
+    pub fn n_sats(&self) -> usize {
+        match self {
+            TopologyKind::Torus { n } => n * n,
+            TopologyKind::WalkerDelta { planes, sats_per_plane, .. } => planes * sats_per_plane,
+            TopologyKind::WalkerStar { planes, sats_per_plane } => planes * sats_per_plane,
+        }
+    }
+
+    /// Range-check the geometry parameters.
+    pub fn validate(&self) -> Result<(), String> {
+        let (planes, sats_per_plane, phasing) = match self {
+            TopologyKind::Torus { n } => {
+                if *n < 2 {
+                    return Err(format!("torus size {n} must be >= 2"));
+                }
+                return Ok(());
+            }
+            TopologyKind::WalkerDelta { planes, sats_per_plane, phasing } => {
+                (*planes, *sats_per_plane, *phasing)
+            }
+            TopologyKind::WalkerStar { planes, sats_per_plane } => (*planes, *sats_per_plane, 0),
+        };
+        if planes < 2 || sats_per_plane < 2 {
+            return Err(format!(
+                "walker needs >= 2 planes and >= 2 sats per plane \
+                 (got {planes}x{sats_per_plane})"
+            ));
+        }
+        if phasing >= sats_per_plane {
+            return Err(format!(
+                "phasing {phasing} must be < sats per plane {sats_per_plane}"
+            ));
+        }
+        Ok(())
+    }
+
+    /// Build the constellation this selector describes (Walker kinds pay
+    /// the one-time BFS APSP here).
+    pub fn build(&self) -> Constellation {
+        match self {
+            TopologyKind::Torus { n } => Constellation::torus(*n),
+            TopologyKind::WalkerDelta { planes, sats_per_plane, phasing } => {
+                Constellation::walker_delta(*planes, *sats_per_plane, *phasing)
+            }
+            TopologyKind::WalkerStar { planes, sats_per_plane } => {
+                Constellation::walker_star(*planes, *sats_per_plane)
+            }
+        }
     }
 }
 
@@ -315,5 +830,170 @@ mod tests {
             assert_eq!(t.is_empty(), t.len() == 0);
             assert!(!t.is_empty());
         }
+    }
+
+    #[test]
+    fn constellation_torus_delegates_exactly() {
+        let t = Torus::new(6);
+        let c = Constellation::torus(6);
+        assert_eq!(c.len(), t.len());
+        assert!(!c.is_empty());
+        for a in 0..t.len() {
+            assert_eq!(c.coords(a), t.coords(a));
+            assert_eq!(c.neighbors4(a), t.neighbors(a));
+            assert_eq!(c.neighbors(a), t.neighbors(a).to_vec());
+            for b in 0..t.len() {
+                assert_eq!(c.hops(a, b), t.manhattan(a, b));
+            }
+        }
+        for (x, d) in [(0usize, 1usize), (17, 2), (35, 3)] {
+            assert_eq!(c.decision_space(x, d), t.decision_space(x, d));
+            let ids = c.decision_space(x, d);
+            let (mut lc, mut lt) = (Vec::new(), Vec::new());
+            c.hops_lut(&ids, &mut lc);
+            t.hops_lut(&ids, &mut lt);
+            assert_eq!(lc, lt);
+        }
+        assert_eq!(c.shortest_path(1, 22), t.shortest_path(1, 22));
+    }
+
+    #[test]
+    fn walker_delta_zero_phasing_is_the_torus() {
+        for n in [3usize, 4, 6] {
+            let t = Torus::new(n);
+            let w = Constellation::walker_delta(n, n, 0);
+            for a in 0..t.len() {
+                for b in 0..t.len() {
+                    assert_eq!(w.hops(a, b), t.manhattan(a, b), "n={n} {a}->{b}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn walker_star_seam_breaks_the_plane_ring() {
+        let p = 5;
+        let s = 4;
+        let star = Constellation::walker_star(p, s);
+        let delta = Constellation::walker_delta(p, s, 0);
+        // adjacent across the wrap on delta, P-1 plane hops apart on star
+        assert_eq!(delta.hops(0, (p - 1) * s), 1);
+        assert_eq!(star.hops(0, (p - 1) * s), p - 1);
+        // seam planes have degree 3, interior planes degree 4
+        assert_eq!(star.neighbors(0).len(), 3);
+        assert_eq!(star.neighbors((p - 1) * s).len(), 3);
+        assert_eq!(star.neighbors(s).len(), 4);
+        // neighbors4 pads the missing seam link with the satellite itself
+        let nb4 = star.neighbors4(0);
+        assert_eq!(nb4.iter().filter(|&&x| x == 0).count(), 1);
+    }
+
+    #[test]
+    fn walker_delta_phasing_shifts_the_wrap_link() {
+        let w = Constellation::walker_delta(4, 6, 2);
+        // plane 3 slot 0 wraps up to plane 0 slot 0+F=2
+        let top = 3 * 6;
+        assert!(w.neighbors(top).contains(&2));
+        // and the link is symmetric
+        assert!(w.neighbors(2).contains(&top));
+        for a in 0..w.len() {
+            for &nb in &w.neighbors(a) {
+                assert_eq!(w.hops(a, nb), 1);
+                assert!(w.neighbors(nb).contains(&a), "asymmetric link {a}<->{nb}");
+            }
+        }
+    }
+
+    #[test]
+    fn walker_decision_space_and_lut_agree_with_hops() {
+        let w = Constellation::walker_star(4, 5);
+        let ds = w.decision_space(7, 2);
+        assert!(ds.contains(&7));
+        assert!(ds.windows(2).all(|p| p[0] < p[1]), "sorted: {ds:?}");
+        for s in 0..w.len() {
+            assert_eq!(ds.contains(&s), w.hops(7, s) <= 2);
+        }
+        let mut lut = Vec::new();
+        w.hops_lut(&ds, &mut lut);
+        assert_eq!(lut.len(), ds.len() * ds.len());
+        for (i, &a) in ds.iter().enumerate() {
+            for (j, &b) in ds.iter().enumerate() {
+                assert_eq!(lut[i * ds.len() + j] as usize, w.hops(a, b));
+            }
+        }
+    }
+
+    #[test]
+    fn walker_shortest_path_realizes_hops() {
+        for c in [
+            Constellation::walker_delta(4, 5, 1),
+            Constellation::walker_star(4, 5),
+        ] {
+            for (a, b) in [(0usize, 19usize), (3, 12), (7, 7), (15, 2)] {
+                let p = c.shortest_path(a, b);
+                assert_eq!(p.len(), c.hops(a, b), "{a}->{b}: {p:?}");
+                let mut prev = a;
+                for &h in &p {
+                    assert_eq!(c.hops(prev, h), 1);
+                    prev = h;
+                }
+                if a != b {
+                    assert_eq!(prev, b);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn advance_in_plane_wraps_and_stays_in_plane() {
+        let c = Constellation::walker_star(3, 4);
+        let s0 = 6; // plane 1, slot 2
+        assert_eq!(c.advance_in_plane(s0, 0), s0);
+        assert_eq!(c.advance_in_plane(s0, 1), 4 + 3);
+        assert_eq!(c.advance_in_plane(s0, 2), 4); // wraps to slot 0
+        assert_eq!(c.advance_in_plane(s0, -3), 4 + 3);
+        assert_eq!(c.advance_in_plane(s0, 4), s0);
+        // torus delegation matches the legacy id() ring step
+        let t = Torus::new(5);
+        let ct = Constellation::torus(5);
+        for s in 0..t.len() {
+            for steps in [-7isize, -1, 0, 1, 3, 12] {
+                let (o, i) = t.coords(s);
+                assert_eq!(
+                    ct.advance_in_plane(s, steps),
+                    t.id(o as isize, i as isize + steps)
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn topology_kind_parse_label_roundtrip() {
+        for s in ["torus:10", "walker-delta:6x8:2", "walker-star:5x7"] {
+            let k = TopologyKind::parse(s).unwrap();
+            assert_eq!(TopologyKind::parse(&k.label()).unwrap(), k);
+            assert_eq!(k.n_sats(), k.build().len());
+        }
+        assert_eq!(
+            TopologyKind::parse("walker-delta:6x8").unwrap(),
+            TopologyKind::WalkerDelta {
+                planes: 6,
+                sats_per_plane: 8,
+                phasing: 0
+            }
+        );
+        assert_eq!(TopologyKind::parse("torus:4").unwrap().n_sats(), 16);
+        assert!(TopologyKind::parse("torus").is_err());
+        assert!(TopologyKind::parse("torus:1").is_err());
+        assert!(TopologyKind::parse("walker-delta:1x8").is_err());
+        assert!(TopologyKind::parse("walker-delta:6x8:9").is_err());
+        assert!(TopologyKind::parse("walker-star:6").is_err());
+        assert!(TopologyKind::parse("hexgrid:3").is_err());
+    }
+
+    #[test]
+    #[should_panic(expected = "phasing")]
+    fn walker_rejects_phasing_out_of_range() {
+        Walker::delta(4, 4, 4);
     }
 }

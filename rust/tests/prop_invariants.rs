@@ -10,7 +10,7 @@ use satkit::offload::{
 use satkit::satellite::Satellite;
 use satkit::splitting::{balanced_split, naive_equal_layers, split_with_limit};
 use satkit::state::StateView;
-use satkit::topology::Torus;
+use satkit::topology::{Constellation, Torus};
 use satkit::util::quickcheck::{check, check_no_shrink, default_cases, shrink_f64_vec};
 use satkit::util::rng::Pcg64;
 
@@ -279,15 +279,15 @@ fn prop_all_schemes_emit_valid_chromosomes() {
         default_cases() / 4,
         gen_instance,
         |inst| {
-            let torus = Torus::new(inst.n);
+            let topo = Constellation::torus(inst.n);
             let sats = build_sats(inst);
-            let cands = torus.decision_space(inst.origin, inst.d_max);
+            let cands = topo.decision_space(inst.origin, inst.d_max);
             let ga = GaConfig {
                 n_iter: 3,
                 ..GaConfig::default()
             };
             let ctx = OffloadContext {
-                torus: &torus,
+                topo: &topo,
                 view: StateView::live(&sats),
                 origin: inst.origin,
                 candidates: &cands,
@@ -306,7 +306,7 @@ fn prop_all_schemes_emit_valid_chromosomes() {
                 }
                 // constraint 11c explicitly
                 for &c in &chrom {
-                    if torus.manhattan(inst.origin, c) > inst.d_max {
+                    if topo.hops(inst.origin, c) > inst.d_max {
                         return Err(format!("{kind:?}: 11c violated"));
                     }
                 }
@@ -323,9 +323,9 @@ fn prop_deficit_nonnegative_and_theta_monotone() {
         default_cases() / 2,
         gen_instance,
         |inst| {
-            let torus = Torus::new(inst.n);
+            let topo = Constellation::torus(inst.n);
             let sats = build_sats(inst);
-            let cands = torus.decision_space(inst.origin, inst.d_max);
+            let cands = topo.decision_space(inst.origin, inst.d_max);
             let mut rng = Pcg64::seed_from_u64(5);
             let chrom: Vec<usize> = (0..inst.segments.len())
                 .map(|_| *rng.choose(&cands))
@@ -338,7 +338,7 @@ fn prop_deficit_nonnegative_and_theta_monotone() {
             };
             let d = |ga: &GaConfig| {
                 let ctx = OffloadContext {
-                    torus: &torus,
+                    topo: &topo,
                     view: StateView::live(&sats),
                     origin: inst.origin,
                     candidates: &cands,
@@ -378,12 +378,12 @@ fn prop_indexed_deficit_matches_reference() {
             (inst, raw)
         },
         |(inst, raw)| {
-            let torus = Torus::new(inst.n);
+            let topo = Constellation::torus(inst.n);
             let sats = build_sats(inst);
-            let cands = torus.decision_space(inst.origin, inst.d_max);
+            let cands = topo.decision_space(inst.origin, inst.d_max);
             let ga = GaConfig::default();
             let ctx = OffloadContext {
-                torus: &torus,
+                topo: &topo,
                 view: StateView::live(&sats),
                 origin: inst.origin,
                 candidates: &cands,
@@ -423,6 +423,85 @@ fn prop_indexed_deficit_matches_reference() {
 }
 
 #[test]
+fn prop_index_cache_preserves_decisions() {
+    // ROADMAP follow-up (PR 2): `build_cached` reuses the per-origin
+    // index across consecutive decisions when origin, candidate set, and
+    // observed view are unchanged — and the cached path must stay
+    // bit-for-bit identical to a fresh build. A changed load must miss.
+    check_no_shrink(
+        "index-cache-bit-identical",
+        default_cases() / 4,
+        |r| {
+            let inst = gen_instance(r);
+            let raw: Vec<u64> = (0..8).map(|_| r.next_u64()).collect();
+            (inst, raw)
+        },
+        |(inst, raw)| {
+            let topo = Constellation::torus(inst.n);
+            let mut sats = build_sats(inst);
+            let cands = topo.decision_space(inst.origin, inst.d_max);
+            let ga = GaConfig::default();
+            let l = inst.segments.len();
+            let genes: Vec<Gene> = (0..l)
+                .map(|k| (raw[k % raw.len()] as usize % cands.len()) as Gene)
+                .collect();
+            let mut cached = DecisionSpaceIndex::new();
+            let (fresh_deficit, cached_deficit) = {
+                let ctx = OffloadContext {
+                    topo: &topo,
+                    view: StateView::live(&sats),
+                    origin: inst.origin,
+                    candidates: &cands,
+                    segments: &inst.segments,
+                    kappa: 1e-4,
+                    ga: &ga,
+                };
+                if cached.build_cached(&ctx) {
+                    return Err("first build reported a hit".into());
+                }
+                if !cached.build_cached(&ctx) {
+                    return Err("identical rebuild missed the cache".into());
+                }
+                if (cached.cache_hits(), cached.cache_misses()) != (1, 1) {
+                    return Err(format!(
+                        "counters: {} hits / {} misses, want 1/1",
+                        cached.cache_hits(),
+                        cached.cache_misses()
+                    ));
+                }
+                let fresh = DecisionSpaceIndex::from_ctx(&ctx);
+                (fresh.deficit(&genes), cached.deficit(&genes))
+            };
+            if cached_deficit.to_bits() != fresh_deficit.to_bits() {
+                return Err(format!(
+                    "cached {cached_deficit} != fresh {fresh_deficit}"
+                ));
+            }
+            // a load change on any candidate must invalidate the cache
+            sats[cands[0]].try_load(1.0);
+            let ctx2 = OffloadContext {
+                topo: &topo,
+                view: StateView::live(&sats),
+                origin: inst.origin,
+                candidates: &cands,
+                segments: &inst.segments,
+                kappa: 1e-4,
+                ga: &ga,
+            };
+            if cached.build_cached(&ctx2) {
+                return Err("stale cache hit after a load change".into());
+            }
+            let fresh2 = DecisionSpaceIndex::from_ctx(&ctx2);
+            let (a, b) = (cached.deficit(&genes), fresh2.deficit(&genes));
+            if a.to_bits() != b.to_bits() {
+                return Err(format!("post-miss cached {a} != fresh {b}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
 fn prop_ga_decide_identical_to_reference_per_seed() {
     // bit-for-bit decision preservation across the kernel swap: the
     // indexed GA and the retained paper-literal oracle must return the
@@ -433,15 +512,15 @@ fn prop_ga_decide_identical_to_reference_per_seed() {
         default_cases() / 8,
         |r| (gen_instance(r), r.next_u64() % 1_000_000),
         |(inst, seed)| {
-            let torus = Torus::new(inst.n);
+            let topo = Constellation::torus(inst.n);
             let sats = build_sats(inst);
-            let cands = torus.decision_space(inst.origin, inst.d_max);
+            let cands = topo.decision_space(inst.origin, inst.d_max);
             let ga = GaConfig {
                 n_iter: 4,
                 ..GaConfig::default()
             };
             let ctx = OffloadContext {
-                torus: &torus,
+                topo: &topo,
                 view: StateView::live(&sats),
                 origin: inst.origin,
                 candidates: &cands,
@@ -460,6 +539,16 @@ fn prop_ga_decide_identical_to_reference_per_seed() {
                     ));
                 }
             }
+            // round 2 decided on an unchanged context: the per-origin
+            // index cache must have served it without a rebuild — and the
+            // loop above just proved the cached decision is bit-for-bit
+            // the reference one.
+            if fast.index_cache_stats() != (1, 1) {
+                return Err(format!(
+                    "index cache stats {:?}, want (1 hit, 1 miss)",
+                    fast.index_cache_stats()
+                ));
+            }
             Ok(())
         },
     );
@@ -474,12 +563,12 @@ fn prop_ga_close_to_random_best() {
         default_cases() / 16,
         gen_instance,
         |inst| {
-            let torus = Torus::new(inst.n);
+            let topo = Constellation::torus(inst.n);
             let sats = build_sats(inst);
-            let cands = torus.decision_space(inst.origin, inst.d_max);
+            let cands = topo.decision_space(inst.origin, inst.d_max);
             let ga = GaConfig::default();
             let ctx = OffloadContext {
-                torus: &torus,
+                topo: &topo,
                 view: StateView::live(&sats),
                 origin: inst.origin,
                 candidates: &cands,

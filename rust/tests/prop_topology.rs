@@ -1,0 +1,277 @@
+//! Property tests for the pluggable constellation topology layer
+//! (`satkit::topology`): an explicit `--topology torus:<n>` reproduces
+//! the legacy default decisions bit-for-bit on both engines and all four
+//! schemes, the hop distance is a metric on every topology kind,
+//! `neighbors`/`hops` agree, and Walker-Delta with zero phasing is
+//! hop-equivalent to the torus.
+
+use satkit::config::{EngineKind, SimConfig};
+use satkit::metrics::Report;
+use satkit::offload::SchemeKind;
+use satkit::topology::{Constellation, TopologyKind, Torus};
+use satkit::util::quickcheck::{check_no_shrink, default_cases};
+use satkit::util::rng::Pcg64;
+
+/// Compare two reports field-by-field, bit-for-bit on floats.
+fn assert_reports_identical(a: &Report, b: &Report) -> Result<(), String> {
+    if a.total_tasks != b.total_tasks {
+        return Err(format!(
+            "task counts differ: {} vs {}",
+            a.total_tasks, b.total_tasks
+        ));
+    }
+    if a.completed_tasks != b.completed_tasks {
+        return Err(format!(
+            "completion counts differ: {} vs {}",
+            a.completed_tasks, b.completed_tasks
+        ));
+    }
+    for (name, x, y) in [
+        ("avg_delay_ms", a.avg_delay_ms, b.avg_delay_ms),
+        ("avg_comp_ms", a.avg_comp_ms, b.avg_comp_ms),
+        ("avg_tran_ms", a.avg_tran_ms, b.avg_tran_ms),
+        ("avg_uplink_ms", a.avg_uplink_ms, b.avg_uplink_ms),
+        ("workload_variance", a.workload_variance, b.workload_variance),
+        ("workload_mean", a.workload_mean, b.workload_mean),
+        ("delay_p50_ms", a.delay_p50_ms, b.delay_p50_ms),
+        ("delay_p95_ms", a.delay_p95_ms, b.delay_p95_ms),
+    ] {
+        if x.to_bits() != y.to_bits() {
+            return Err(format!("{name} differs: {x} vs {y}"));
+        }
+    }
+    Ok(())
+}
+
+/// The tentpole acceptance invariant, deterministically over every
+/// (engine, scheme) cell: selecting `torus:<n>` explicitly reproduces the
+/// legacy default run bit-for-bit — the `Constellation` abstraction is
+/// transparent on the paper path.
+#[test]
+fn explicit_torus_matches_default_all_engines_and_schemes() {
+    for engine in EngineKind::all() {
+        for scheme in SchemeKind::all() {
+            let mut cfg = SimConfig {
+                n: 6,
+                slots: 6,
+                lambda: 8.0,
+                seed: 11,
+                engine,
+                ..SimConfig::default()
+            };
+            let default = satkit::engine::run(&cfg, scheme);
+            cfg.topology = Some(TopologyKind::Torus { n: 6 });
+            let explicit = satkit::engine::run(&cfg, scheme);
+            assert_reports_identical(&default, &explicit)
+                .unwrap_or_else(|e| panic!("{engine:?}/{scheme:?}: {e}"));
+        }
+    }
+}
+
+/// The same invariant over random (n, λ, slots, engine, scheme, seed)
+/// whole-run cases, in the style of `tests/prop_staleness.rs`.
+#[test]
+fn prop_explicit_torus_topology_is_bit_identical_to_default() {
+    check_no_shrink(
+        "torus-topology-default-identical",
+        default_cases().min(16),
+        |r| {
+            let n = *r.choose(&[4usize, 6]);
+            let lambda = r.f64_in(2.0, 10.0);
+            let slots = r.usize_in(3, 7);
+            let engine = *r.choose(&EngineKind::all());
+            let scheme = *r.choose(&[SchemeKind::Random, SchemeKind::Rrp, SchemeKind::Scc]);
+            let seed = r.next_u64() % 1000;
+            (n, lambda, slots, engine, scheme, seed)
+        },
+        |&(n, lambda, slots, engine, scheme, seed)| {
+            let mut cfg = SimConfig {
+                n,
+                lambda,
+                slots,
+                seed,
+                engine,
+                ..SimConfig::default()
+            };
+            let default = satkit::engine::run(&cfg, scheme);
+            cfg.topology = Some(TopologyKind::Torus { n });
+            let explicit = satkit::engine::run(&cfg, scheme);
+            assert_reports_identical(&default, &explicit)
+        },
+    );
+}
+
+fn random_constellation(r: &mut Pcg64) -> (String, Constellation) {
+    match r.usize_in(0, 3) {
+        0 => {
+            let n = r.usize_in(2, 9);
+            (format!("torus:{n}"), Constellation::torus(n))
+        }
+        1 => {
+            let p = r.usize_in(2, 7);
+            let s = r.usize_in(2, 7);
+            let f = r.usize_in(0, s);
+            (
+                format!("walker-delta:{p}x{s}:{f}"),
+                Constellation::walker_delta(p, s, f),
+            )
+        }
+        _ => {
+            let p = r.usize_in(2, 7);
+            let s = r.usize_in(2, 7);
+            (format!("walker-star:{p}x{s}"), Constellation::walker_star(p, s))
+        }
+    }
+}
+
+/// Hop distance is a metric on every topology kind: symmetric, zero
+/// exactly on the diagonal, and triangle-inequal.
+#[test]
+fn prop_hops_is_a_metric_on_all_topologies() {
+    check_no_shrink(
+        "hops-metric-all-kinds",
+        default_cases(),
+        |r| {
+            let (label, c) = random_constellation(r);
+            let a = r.usize_in(0, c.len());
+            let b = r.usize_in(0, c.len());
+            let m = r.usize_in(0, c.len());
+            (label, c, a, b, m)
+        },
+        |(label, c, a, b, m)| {
+            let (a, b, m) = (*a, *b, *m);
+            if c.hops(a, b) != c.hops(b, a) {
+                return Err(format!("{label}: asymmetric at ({a},{b})"));
+            }
+            if (c.hops(a, b) == 0) != (a == b) {
+                return Err(format!("{label}: identity violated at ({a},{b})"));
+            }
+            if c.hops(a, m) > c.hops(a, b) + c.hops(b, m) {
+                return Err(format!("{label}: triangle violated at ({a},{b},{m})"));
+            }
+            Ok(())
+        },
+    );
+}
+
+/// `neighbors` and `hops` agree on every topology kind: every neighbour
+/// is at hop distance exactly 1, every satellite at hop distance 1 is a
+/// neighbour, and `neighbors4` pads only with the satellite itself.
+#[test]
+fn prop_neighbors_and_hops_consistent() {
+    check_no_shrink(
+        "neighbors-hops-consistent",
+        default_cases() / 2,
+        |r| {
+            let (label, c) = random_constellation(r);
+            let s = r.usize_in(0, c.len());
+            (label, c, s)
+        },
+        |(label, c, s)| {
+            let s = *s;
+            let nbs = c.neighbors(s);
+            if nbs.is_empty() || nbs.len() > 4 {
+                return Err(format!("{label}: degree {} at {s}", nbs.len()));
+            }
+            for &nb in &nbs {
+                if nb == s {
+                    return Err(format!("{label}: self-loop at {s}"));
+                }
+                if c.hops(s, nb) != 1 {
+                    return Err(format!(
+                        "{label}: neighbor {nb} of {s} at hop {}",
+                        c.hops(s, nb)
+                    ));
+                }
+                if !c.neighbors(nb).contains(&s) {
+                    return Err(format!("{label}: asymmetric link {s}<->{nb}"));
+                }
+            }
+            for t in 0..c.len() {
+                if c.hops(s, t) == 1 && !nbs.contains(&t) {
+                    return Err(format!("{label}: {t} at hop 1 of {s} but not a neighbor"));
+                }
+            }
+            for x in c.neighbors4(s) {
+                if x != s && !nbs.contains(&x) {
+                    return Err(format!("{label}: neighbors4 invented {x} at {s}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Walker-Delta with zero phasing is the torus: identical hop distances
+/// and decision spaces for every origin and radius.
+#[test]
+fn prop_walker_delta_zero_phasing_equals_torus_hops() {
+    check_no_shrink(
+        "walker-delta-f0-equals-torus",
+        default_cases() / 2,
+        |r| {
+            let n = r.usize_in(2, 7);
+            let a = r.usize_in(0, n * n);
+            let b = r.usize_in(0, n * n);
+            let d = r.usize_in(0, 4);
+            (n, a, b, d)
+        },
+        |&(n, a, b, d)| {
+            let t = Torus::new(n);
+            let w = Constellation::walker_delta(n, n, 0);
+            if w.hops(a, b) != t.manhattan(a, b) {
+                return Err(format!(
+                    "n={n}: walker {} != torus {} at ({a},{b})",
+                    w.hops(a, b),
+                    t.manhattan(a, b)
+                ));
+            }
+            if w.decision_space(a, d) != t.decision_space(a, d) {
+                return Err(format!("n={n}: decision spaces differ at ({a},{d})"));
+            }
+            Ok(())
+        },
+    );
+}
+
+/// The decision space is sound and complete against `hops` on every
+/// topology kind (the 11c ball, including the origin, sorted, deduped).
+#[test]
+fn prop_decision_space_sound_on_all_topologies() {
+    check_no_shrink(
+        "decision-space-all-kinds",
+        default_cases() / 2,
+        |r| {
+            let (label, c) = random_constellation(r);
+            let x = r.usize_in(0, c.len());
+            let d = r.usize_in(0, 5);
+            (label, c, x, d)
+        },
+        |(label, c, x, d)| {
+            let (x, d) = (*x, *d);
+            let ds = c.decision_space(x, d);
+            if !ds.contains(&x) {
+                return Err(format!("{label}: origin missing"));
+            }
+            if !ds.windows(2).all(|p| p[0] < p[1]) {
+                return Err(format!("{label}: not sorted/deduped: {ds:?}"));
+            }
+            for s in 0..c.len() {
+                if ds.contains(&s) != (c.hops(x, s) <= d) {
+                    return Err(format!("{label}: ball membership wrong at {s}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Walker-Star hop distances respect the seam: crossing from plane 0 to
+/// plane P−1 must walk P−1 inter-plane links, never one.
+#[test]
+fn walker_star_seam_distance() {
+    for (p, s) in [(3usize, 4usize), (5, 4), (6, 3)] {
+        let star = Constellation::walker_star(p, s);
+        assert_eq!(star.hops(0, (p - 1) * s), p - 1, "{p}x{s}");
+    }
+}
