@@ -2,13 +2,25 @@
 //! wall-clock slots regardless of traffic; the event engine's grows with
 //! events (≈ arrivals × L). This target times both engines over a λ ramp
 //! and a horizon ramp so the crossover is visible, sweeps the four
-//! traffic scenarios at a fixed operating point, and finishes with the
-//! million-task streaming-metrics demonstration: with the default
-//! (non-retaining) metrics path, memory stays flat in task count.
+//! traffic scenarios at a fixed operating point, measures the live-task
+//! bookkeeping structures head to head (the BTreeMap the kernel used
+//! before the slab arena vs the arena itself), and finishes with the
+//! ≥ 10⁶-task operating points: the admission-bound regime (streaming
+//! metrics, memory flat in task count) and the execution-bound regime
+//! (every segment through the queues — the live-task hot path).
+//!
+//! Emits `BENCH_eventsim.json` (override the path with
+//! `SATKIT_EVENTSIM_JSON`): the timed rows under `results`, the
+//! million-task operating points under `scale` with `tasks_per_s` — the
+//! headline series of the event-kernel perf trajectory.
 
-use satkit::bench::{bench, quick_mode, section};
+use std::collections::BTreeMap;
+
+use satkit::bench::{bench, quick_mode, section, write_json, BenchResult};
 use satkit::config::{EngineKind, ScenarioKind, SimConfig};
+use satkit::eventsim::arena::Slab;
 use satkit::offload::SchemeKind;
+use satkit::util::json::Json;
 
 /// Peak resident set (VmHWM) from procfs, for the memory-flat check.
 fn peak_rss() -> String {
@@ -34,24 +46,65 @@ fn cfg(engine: EngineKind, lambda: f64, slots: usize) -> SimConfig {
     }
 }
 
+/// A live-task-sized payload (the arena's win is structural, not
+/// payload-dependent; four words approximate `LiveTask`'s scalar part).
+type Payload = [u64; 4];
+
+/// Run one ≥ `floor`-task event-engine point, print its row, and return
+/// the `scale` JSON record.
+fn scale_point(name: &str, c: &SimConfig, floor: u64) -> Json {
+    let t0 = std::time::Instant::now();
+    let rep = satkit::engine::run(c, SchemeKind::Random);
+    let wall = t0.elapsed().as_secs_f64();
+    let tasks_per_s = rep.total_tasks as f64 / wall.max(1e-9);
+    println!(
+        "{name}: tasks={} completed={} drop_rate={:.3} wall={:.2}s ({tasks_per_s:.0} tasks/s) {}",
+        rep.total_tasks,
+        rep.completed_tasks,
+        rep.drop_rate(),
+        wall,
+        peak_rss()
+    );
+    assert!(
+        rep.outcomes.is_none(),
+        "streaming path must not buffer outcomes"
+    );
+    assert!(
+        rep.total_tasks >= floor,
+        "scale run produced {} tasks, expected >= {floor}",
+        rep.total_tasks
+    );
+    Json::obj(vec![
+        ("point", Json::Str(name.to_string())),
+        ("tasks", Json::Num(rep.total_tasks as f64)),
+        ("completed", Json::Num(rep.completed_tasks as f64)),
+        ("wall_s", Json::Num(wall)),
+        ("tasks_per_s", Json::Num(tasks_per_s)),
+    ])
+}
+
 fn main() {
     let quick = quick_mode();
     let iters = if quick { 1 } else { 3 };
+    let mut all: Vec<BenchResult> = Vec::new();
+    let mut show = |r: BenchResult| {
+        println!("{}", r.row());
+        all.push(r);
+    };
 
     section("engine wall time vs lambda (N=8, 20 s horizon, Random)");
     let lambdas: &[f64] = if quick { &[10.0, 40.0] } else { &[4.0, 10.0, 25.0, 40.0, 70.0] };
     for &lam in lambdas {
         for engine in EngineKind::all() {
             let c = cfg(engine, lam, if quick { 8 } else { 20 });
-            let r = bench(
+            show(bench(
                 &format!("{:<7} lambda={lam}", engine.name()),
                 0,
                 iters,
                 || {
                     satkit::engine::run(&c, SchemeKind::Random);
                 },
-            );
-            println!("{}", r.row());
+            ));
         }
     }
 
@@ -60,15 +113,14 @@ fn main() {
     for &slots in horizons {
         for engine in EngineKind::all() {
             let c = cfg(engine, 10.0, slots);
-            let r = bench(
+            show(bench(
                 &format!("{:<7} horizon={slots}s", engine.name()),
                 0,
                 iters,
                 || {
                     satkit::engine::run(&c, SchemeKind::Random);
                 },
-            );
-            println!("{}", r.row());
+            ));
         }
     }
 
@@ -81,8 +133,68 @@ fn main() {
             let rep = satkit::engine::run(&c, SchemeKind::Scc);
             last_var = rep.workload_variance;
         });
-        println!("{}  workload_var={last_var:.3e}", r.row());
+        show(r);
+        println!("{:<44} workload_var={last_var:.3e}", "");
     }
+
+    section("live-task bookkeeping: BTreeMap era vs slab arena");
+    // The exact op mix a task with L=3 segments costs the live structure:
+    // one insert, three lookups per segment (start/done/transfer), one
+    // remove — against a steady concurrent population. The BTreeMap row
+    // is what the kernel paid before the arena (PR ≤ 4); the arena row is
+    // what it pays now.
+    let churn_tasks: u64 = if quick { 100_000 } else { 1_000_000 };
+    let resident: u64 = 4096;
+    show(bench(
+        &format!("live-map btreemap churn ({churn_tasks} tasks)"),
+        0,
+        iters,
+        || {
+            let mut map: BTreeMap<u64, Payload> = BTreeMap::new();
+            for id in 0..resident {
+                map.insert(id, [id; 4]);
+            }
+            let mut acc = 0u64;
+            for id in resident..churn_tasks + resident {
+                map.insert(id, [id; 4]);
+                let dead = id - resident;
+                for _ in 0..9 {
+                    if let Some(p) = map.get(&id) {
+                        acc = acc.wrapping_add(p[0]);
+                    }
+                }
+                map.remove(&dead);
+            }
+            std::hint::black_box((acc, map.len()));
+        },
+    ));
+    show(bench(
+        &format!("live-map arena churn ({churn_tasks} tasks)"),
+        0,
+        iters,
+        || {
+            let mut slab: Slab<Payload> = Slab::new();
+            let mut slots: Vec<u32> = Vec::new();
+            for id in 0..resident {
+                slots.push(slab.insert(id, [id; 4]));
+            }
+            let mut acc = 0u64;
+            for id in resident..churn_tasks + resident {
+                let slot = slab.insert(id, [id; 4]);
+                slots.push(slot);
+                let dead = id - resident;
+                for _ in 0..9 {
+                    if let Some(p) = slab.get(slot, id) {
+                        acc = acc.wrapping_add(p[0]);
+                    }
+                }
+                slab.remove(slots[dead as usize], dead);
+            }
+            std::hint::black_box((acc, slab.len()));
+        },
+    ));
+
+    let mut scale_rows: Vec<Json> = Vec::new();
 
     section("million-task streaming metrics (event engine, Random)");
     // Heavy-overload operating point: the offered load far exceeds
@@ -96,25 +208,34 @@ fn main() {
         (25_000.0, 48, 1_000_000u64)
     };
     let c = cfg(EngineKind::Event, lambda, slots);
-    let t0 = std::time::Instant::now();
-    let rep = satkit::engine::run(&c, SchemeKind::Random);
-    let wall = t0.elapsed().as_secs_f64();
+    scale_rows.push(scale_point("admission-bound", &c, floor));
+
+    section("million-task live path (event engine, Random, capacity-matched)");
+    // Execution-bound operating point: satellite capacity is raised so
+    // the offered load is admissible and (nearly) every task walks the
+    // full segment pipeline — arrival → FIFO → SegmentStart/Done →
+    // IslTransfer — making the live-task arena and the pending-event heap
+    // the hot structures. This is the row the slab arena exists for.
+    let mut c = cfg(EngineKind::Event, lambda, slots);
+    c.satellite.capacity_mflops = 5_000_000.0;
+    c.satellite.max_workload_mflops = 50_000_000.0;
+    scale_rows.push(scale_point("execution-bound", &c, floor));
+
+    let path = std::env::var("SATKIT_EVENTSIM_JSON")
+        .unwrap_or_else(|_| "BENCH_eventsim.json".to_string());
+    let n_scale = scale_rows.len();
+    let json = Json::obj(vec![
+        ("bench", Json::Str("eventsim".into())),
+        ("quick", Json::Bool(quick)),
+        (
+            "results",
+            Json::Arr(all.iter().map(|r| r.to_json()).collect()),
+        ),
+        ("scale", Json::Arr(scale_rows)),
+    ]);
+    write_json(&path, &json).expect("writing bench json");
     println!(
-        "tasks={} completed={} drop_rate={:.3} wall={:.2}s ({:.0} tasks/s) {}",
-        rep.total_tasks,
-        rep.completed_tasks,
-        rep.drop_rate(),
-        wall,
-        rep.total_tasks as f64 / wall.max(1e-9),
-        peak_rss()
-    );
-    assert!(
-        rep.outcomes.is_none(),
-        "streaming path must not buffer outcomes"
-    );
-    assert!(
-        rep.total_tasks >= floor,
-        "scale run produced {} tasks, expected >= {floor}",
-        rep.total_tasks
+        "\nwrote {path} ({} results, {n_scale} scale points)",
+        all.len()
     );
 }

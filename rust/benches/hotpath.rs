@@ -7,11 +7,12 @@
 //! so the perf trajectory is machine-readable; quick mode is recorded in
 //! the file since quick numbers are not comparable to full ones.
 
-use satkit::bench::{bench, quick_mode, section, write_suite_json, BenchResult};
+use satkit::bench::{bench, bench_per_item, quick_mode, section, write_suite_json, BenchResult};
 use satkit::config::{GaConfig, SimConfig};
 use satkit::dnn::DnnModel;
 use satkit::offload::{
-    make_scheme, DecisionSpaceIndex, DeficitScratch, Gene, OffloadContext, SchemeKind,
+    make_scheme, BatchScratch, DecisionSpaceIndex, DeficitScratch, Gene, OffloadContext,
+    SchemeKind,
 };
 use satkit::satellite::Satellite;
 use satkit::sim::Simulation;
@@ -76,6 +77,47 @@ fn main() {
             flip[0] = (which % 2) as Gene;
             which += 1;
             std::hint::black_box(index.deficit_with(&mut scratch, &flip));
+        },
+    ));
+
+    // the whole-generation batched kernel vs a scalar loop over the same
+    // GA-generation-sized chromosome matrix; both rows are normalized per
+    // chromosome so they compare directly with the scalar/incremental
+    // rows above (CI gates on batched <= scalar)
+    let gen_size = 64usize;
+    let mut brng = Pcg64::seed_from_u64(2);
+    let flat: Vec<Gene> = (0..gen_size * segments.len())
+        .map(|_| brng.usize_in(0, cands.len()) as Gene)
+        .collect();
+    let mut batch = BatchScratch::default();
+    let mut outs: Vec<f64> = Vec::new();
+    index.deficit_batch(&mut batch, &flat, &mut outs);
+    for (c, &d) in flat.chunks(segments.len()).zip(&outs) {
+        assert_eq!(
+            d.to_bits(),
+            index.deficit(c).to_bits(),
+            "batched kernel diverged from the scalar oracle"
+        );
+    }
+    show(bench_per_item(
+        "deficit(L=4, |A_x|=25) scalar x64 (per-chrom)",
+        gen_size,
+        100,
+        iters * 50,
+        || {
+            for c in flat.chunks(segments.len()) {
+                std::hint::black_box(index.deficit(c));
+            }
+        },
+    ));
+    show(bench_per_item(
+        "deficit_batch(L=4, |A_x|=25, B=64) per-chrom",
+        gen_size,
+        100,
+        iters * 50,
+        || {
+            index.deficit_batch(&mut batch, &flat, &mut outs);
+            std::hint::black_box(outs.last().copied());
         },
     ));
 

@@ -88,6 +88,25 @@ pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> B
     }
 }
 
+/// Time like [`bench`], then normalize every statistic by `items`: for
+/// kernels that process a whole batch per closure call but whose row
+/// should stay comparable with single-element cases (e.g. the batched
+/// deficit kernel reported per chromosome next to the scalar rows).
+pub fn bench_per_item<F: FnMut()>(
+    name: &str,
+    items: usize,
+    warmup: usize,
+    iters: usize,
+    f: F,
+) -> BenchResult {
+    let mut r = bench(name, warmup, iters, f);
+    let d = items.max(1) as f64;
+    r.mean_ms /= d;
+    r.stddev_ms /= d;
+    r.min_ms /= d;
+    r
+}
+
 /// Standard bench-binary preamble: honour `SATKIT_BENCH_QUICK=1`.
 pub fn quick_mode() -> bool {
     std::env::var("SATKIT_BENCH_QUICK").map(|v| v == "1").unwrap_or(false)
@@ -114,6 +133,20 @@ mod tests {
         assert!(r.mean_ms >= 0.0);
         assert_eq!(r.iters, 5);
         assert!(r.min_ms <= r.mean_ms + 1e-9);
+    }
+
+    #[test]
+    fn per_item_normalizes_stats() {
+        let r = bench_per_item("batchy", 10, 0, 3, || {
+            std::hint::black_box((0..100_000u64).sum::<u64>());
+        });
+        let raw = bench("raw", 0, 3, || {
+            std::hint::black_box((0..100_000u64).sum::<u64>());
+        });
+        // same work, but reported per item: ~10x smaller statistics
+        assert!(r.mean_ms <= raw.mean_ms, "{} vs {}", r.mean_ms, raw.mean_ms);
+        assert!(r.min_ms <= r.mean_ms + 1e-9);
+        assert_eq!(r.iters, 3);
     }
 
     #[test]

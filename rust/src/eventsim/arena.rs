@@ -1,0 +1,203 @@
+//! Slab arena for live-task state: dense `u32` slot ids with free-list
+//! reuse.
+//!
+//! The event kernel keeps one record per in-flight task. The original
+//! implementation used a `BTreeMap<u64, LiveTask>` keyed on the task id —
+//! every segment event paid an `O(log |live|)` pointer-chasing walk, and
+//! insert/remove churned tree nodes at millions of tasks. The slab stores
+//! records in a flat `Vec` instead: a slot id is a direct array index, a
+//! freed slot goes on a free list and is reused by the next insert, and
+//! the record's buffers (the `Vec`s inside the payload) stay allocated
+//! across reuse.
+//!
+//! **ABA safety.** Events carry `(slot, id)` pairs: a slot id alone could
+//! alias a *different* task after the slot was freed and reused, so every
+//! access checks the occupant's id against the id the event carries. A
+//! stale event therefore misses — exactly the semantics a `BTreeMap`
+//! lookup of a removed key had.
+//!
+//! The structural win over the BTreeMap era is measured head-to-head by
+//! `benches/eventsim_scale.rs` ("live-task bookkeeping" section) and the
+//! engine-level determinism of slot reuse is enforced by
+//! `tests/integration_eventsim.rs::arena_slot_reuse_is_deterministic_under_fault_churn`.
+
+/// One slot of the arena: occupancy flag, occupant id, payload.
+struct Slot<T> {
+    occupied: bool,
+    id: u64,
+    value: T,
+}
+
+/// Free-list slab keyed by `(u32 slot, u64 id)` pairs.
+pub struct Slab<T> {
+    slots: Vec<Slot<T>>,
+    free: Vec<u32>,
+    live: usize,
+}
+
+impl<T: Default> Default for Slab<T> {
+    fn default() -> Self {
+        Slab::new()
+    }
+}
+
+impl<T: Default> Slab<T> {
+    pub fn new() -> Slab<T> {
+        Slab::with_capacity(0)
+    }
+
+    pub fn with_capacity(cap: usize) -> Slab<T> {
+        Slab {
+            slots: Vec::with_capacity(cap),
+            free: Vec::new(),
+            live: 0,
+        }
+    }
+
+    /// Insert a record under `id`, returning its slot. Reuses a freed slot
+    /// when one exists (the common steady-state case), so the slot array
+    /// stays as dense as the peak live population.
+    pub fn insert(&mut self, id: u64, value: T) -> u32 {
+        self.live += 1;
+        if let Some(slot) = self.free.pop() {
+            let s = &mut self.slots[slot as usize];
+            debug_assert!(!s.occupied, "free-list slot still occupied");
+            s.occupied = true;
+            s.id = id;
+            s.value = value;
+            slot
+        } else {
+            let slot = u32::try_from(self.slots.len()).expect("slab slot space exhausted");
+            self.slots.push(Slot {
+                occupied: true,
+                id,
+                value,
+            });
+            slot
+        }
+    }
+
+    /// The record in `slot` if it is still the one `id` names.
+    pub fn get(&self, slot: u32, id: u64) -> Option<&T> {
+        let s = &self.slots[slot as usize];
+        if s.occupied && s.id == id {
+            Some(&s.value)
+        } else {
+            None
+        }
+    }
+
+    /// Mutable access with the same ABA check as [`Slab::get`].
+    pub fn get_mut(&mut self, slot: u32, id: u64) -> Option<&mut T> {
+        let s = &mut self.slots[slot as usize];
+        if s.occupied && s.id == id {
+            Some(&mut s.value)
+        } else {
+            None
+        }
+    }
+
+    /// True when `slot` currently holds the record `id` names.
+    pub fn contains(&self, slot: u32, id: u64) -> bool {
+        let s = &self.slots[slot as usize];
+        s.occupied && s.id == id
+    }
+
+    /// Remove and return the record in `slot` (checked against `id`).
+    /// The payload is moved out and replaced with `T::default()`, so a
+    /// payload whose buffers the caller recycles gives the slot fresh
+    /// (empty) buffers for its next occupant.
+    pub fn remove(&mut self, slot: u32, id: u64) -> Option<T> {
+        let s = &mut self.slots[slot as usize];
+        if !(s.occupied && s.id == id) {
+            return None;
+        }
+        s.occupied = false;
+        self.live -= 1;
+        self.free.push(slot);
+        Some(std::mem::take(&mut s.value))
+    }
+
+    /// Number of live records.
+    pub fn len(&self) -> usize {
+        self.live
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.live == 0
+    }
+
+    /// Number of slots ever allocated (the high-water mark of the live
+    /// population — freed slots are retained for reuse).
+    pub fn capacity(&self) -> usize {
+        self.slots.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn insert_get_remove_roundtrip() {
+        let mut s: Slab<Vec<u64>> = Slab::new();
+        let a = s.insert(10, vec![1, 2]);
+        let b = s.insert(11, vec![3]);
+        assert_ne!(a, b);
+        assert_eq!(s.len(), 2);
+        assert_eq!(s.get(a, 10).unwrap(), &[1, 2]);
+        assert_eq!(s.get_mut(b, 11).map(|v| v.pop()), Some(Some(3)));
+        assert_eq!(s.remove(a, 10), Some(vec![1, 2]));
+        assert_eq!(s.len(), 1);
+        assert!(s.get(a, 10).is_none());
+    }
+
+    #[test]
+    fn freed_slots_are_reused_densely() {
+        let mut s: Slab<u64> = Slab::new();
+        let a = s.insert(1, 100);
+        let b = s.insert(2, 200);
+        s.remove(a, 1);
+        s.remove(b, 2);
+        // LIFO reuse: the most recently freed slot comes back first
+        assert_eq!(s.insert(3, 300), b);
+        assert_eq!(s.insert(4, 400), a);
+        assert_eq!(s.capacity(), 2, "no new slots were allocated");
+        assert_eq!(s.len(), 2);
+    }
+
+    #[test]
+    fn stale_slot_id_cannot_alias_new_occupant() {
+        let mut s: Slab<u64> = Slab::new();
+        let a = s.insert(7, 700);
+        s.remove(a, 7);
+        let b = s.insert(8, 800);
+        assert_eq!(a, b, "slot was reused");
+        // an event still carrying (a, 7) must miss, not read task 8
+        assert!(s.get(a, 7).is_none());
+        assert!(!s.contains(a, 7));
+        assert!(s.remove(a, 7).is_none());
+        assert_eq!(s.get(b, 8), Some(&800));
+    }
+
+    #[test]
+    fn remove_leaves_default_payload_in_slot() {
+        let mut s: Slab<Vec<u8>> = Slab::new();
+        let a = s.insert(1, vec![9; 16]);
+        let taken = s.remove(a, 1).unwrap();
+        assert_eq!(taken.len(), 16);
+        let b = s.insert(2, Vec::new());
+        assert_eq!(a, b);
+        assert!(s.get(b, 2).unwrap().is_empty());
+    }
+
+    #[test]
+    fn len_and_empty_track_live_records() {
+        let mut s: Slab<u8> = Slab::with_capacity(8);
+        assert!(s.is_empty());
+        let a = s.insert(1, 0);
+        assert_eq!(s.len(), 1);
+        s.remove(a, 1);
+        assert!(s.is_empty());
+    }
+}

@@ -53,8 +53,16 @@ impl<E> Default for EventQueue<E> {
 
 impl<E> EventQueue<E> {
     pub fn new() -> EventQueue<E> {
+        EventQueue::with_capacity(0)
+    }
+
+    /// Pre-sized queue: reserves heap storage for `cap` concurrently
+    /// scheduled events up front, so a long run whose outstanding-event
+    /// count is known (≈ one per live task plus one pending arrival per
+    /// area) never pays mid-run heap regrowth.
+    pub fn with_capacity(cap: usize) -> EventQueue<E> {
         EventQueue {
-            heap: BinaryHeap::new(),
+            heap: BinaryHeap::with_capacity(cap),
             next_seq: 0,
         }
     }
@@ -126,6 +134,16 @@ mod tests {
         assert_eq!(q.pop().unwrap().1, "tie-1");
         assert_eq!(q.pop().unwrap().1, "tie-2");
         assert_eq!(q.pop().unwrap().1, "tie-3");
+    }
+
+    #[test]
+    fn with_capacity_behaves_like_new() {
+        let mut q = EventQueue::with_capacity(128);
+        q.push(2.0, "b");
+        q.push(1.0, "a");
+        assert_eq!(q.pop(), Some((1.0, "a")));
+        assert_eq!(q.pop(), Some((2.0, "b")));
+        assert_eq!(q.pop(), None);
     }
 
     #[test]

@@ -54,6 +54,9 @@ pub struct SweepOpts {
     /// Constellation topology override (`None` = the paper torus);
     /// [`topology_sweep`] sets this per cell.
     pub topology: Option<TopologyKind>,
+    /// Worker threads for [`run_cells`]: 0 = one per available core,
+    /// 1 = force the sequential path (the parallel runner's oracle).
+    pub threads: usize,
 }
 
 impl Default for SweepOpts {
@@ -67,6 +70,7 @@ impl Default for SweepOpts {
             scenario: ScenarioKind::Poisson,
             dissemination: None,
             topology: None,
+            threads: 0,
         }
     }
 }
@@ -78,6 +82,68 @@ impl SweepOpts {
             ..SweepOpts::default()
         }
     }
+}
+
+/// Fan independent sweep cells across cores on `std::thread::scope` (no
+/// external dependencies): `f` runs once per item, workers pull cells
+/// from a shared cursor, and results return **in input order** regardless
+/// of which worker finished first. Every cell builds its own engine from
+/// its own `SimConfig`, so cell results are independent of scheduling and
+/// the assembled rows are byte-identical to a sequential run (enforced by
+/// `tests/integration_experiments.rs::parallel_sweep_rows_match_sequential`).
+///
+/// `threads`: 0 = one worker per available core, 1 = run inline
+/// (sequential oracle), n = exactly n workers (capped at the cell count).
+pub fn run_cells<T, R, F>(threads: usize, items: Vec<T>, f: F) -> Vec<R>
+where
+    T: Send,
+    R: Send,
+    F: Fn(T) -> R + Sync,
+{
+    let n = items.len();
+    let workers = match threads {
+        0 => std::thread::available_parallelism()
+            .map(|p| p.get())
+            .unwrap_or(1),
+        t => t,
+    }
+    .min(n.max(1));
+    if workers <= 1 {
+        return items.into_iter().map(f).collect();
+    }
+    let next = std::sync::atomic::AtomicUsize::new(0);
+    let jobs: Vec<std::sync::Mutex<Option<T>>> = items
+        .into_iter()
+        .map(|t| std::sync::Mutex::new(Some(t)))
+        .collect();
+    let mut collected: Vec<(usize, R)> = std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..workers)
+            .map(|_| {
+                scope.spawn(|| {
+                    let mut done: Vec<(usize, R)> = Vec::new();
+                    loop {
+                        let i = next.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                        if i >= n {
+                            break;
+                        }
+                        let item = jobs[i]
+                            .lock()
+                            .expect("job mutex poisoned")
+                            .take()
+                            .expect("cell dispatched twice");
+                        done.push((i, f(item)));
+                    }
+                    done
+                })
+            })
+            .collect();
+        handles
+            .into_iter()
+            .flat_map(|h| h.join().expect("sweep worker panicked"))
+            .collect()
+    });
+    collected.sort_by_key(|&(i, _)| i);
+    collected.into_iter().map(|(_, r)| r).collect()
 }
 
 fn base_cfg(model: DnnModel, opts: &SweepOpts) -> SimConfig {
@@ -122,6 +188,27 @@ fn mean_reports(reports: Vec<Report>) -> Report {
     out
 }
 
+/// Average one sweep cell over `opts.repeats` independent seeds
+/// (`opts.seed + r·1000`, the repeat protocol every sweep shares):
+/// `tweak` stamps the cell's coordinates (λ, topology, dissemination, N,
+/// …) onto the base config before each run.
+fn repeat_mean(
+    model: DnnModel,
+    scheme: SchemeKind,
+    opts: &SweepOpts,
+    tweak: impl Fn(&mut SimConfig),
+) -> Report {
+    let reports: Vec<Report> = (0..opts.repeats.max(1))
+        .map(|r| {
+            let mut cfg = base_cfg(model, opts);
+            cfg.seed = opts.seed + r as u64 * 1000;
+            tweak(&mut cfg);
+            crate::engine::run(&cfg, scheme)
+        })
+        .collect();
+    mean_reports(reports)
+}
+
 /// Run one (model, λ, scheme) point, averaged over `opts.repeats` seeds,
 /// on the engine/scenario selected by `opts` (slotted Poisson = paper).
 pub fn run_point(
@@ -130,15 +217,7 @@ pub fn run_point(
     scheme: SchemeKind,
     opts: &SweepOpts,
 ) -> Report {
-    let reports: Vec<Report> = (0..opts.repeats.max(1))
-        .map(|r| {
-            let mut cfg = base_cfg(model, opts);
-            cfg.lambda = lambda;
-            cfg.seed = opts.seed + r as u64 * 1000;
-            crate::engine::run(&cfg, scheme)
-        })
-        .collect();
-    mean_reports(reports)
+    repeat_mean(model, scheme, opts, |cfg| cfg.lambda = lambda)
 }
 
 /// Run one (model, λ, scheme) point on the EVENT engine under a traffic
@@ -159,24 +238,22 @@ pub fn run_point_event(
 }
 
 /// λ-sweep over all four schemes on the event-driven engine (the eventsim
-/// companion to [`fig2`]/[`fig3`]).
+/// companion to [`fig2`]/[`fig3`]), cells fanned across cores.
 pub fn eventsim_sweep(
     model: DnnModel,
     lambdas: &[f64],
     scenario: ScenarioKind,
     opts: &SweepOpts,
 ) -> Vec<Row> {
-    let mut rows = Vec::new();
-    for &lambda in lambdas {
-        for scheme in SchemeKind::all() {
-            rows.push(Row {
-                x: lambda,
-                scheme,
-                report: run_point_event(model, lambda, scheme, scenario, opts),
-            });
-        }
-    }
-    rows
+    let cells: Vec<(f64, SchemeKind)> = lambdas
+        .iter()
+        .flat_map(|&lambda| SchemeKind::all().into_iter().map(move |s| (lambda, s)))
+        .collect();
+    run_cells(opts.threads, cells, |(lambda, scheme)| Row {
+        x: lambda,
+        scheme,
+        report: run_point_event(model, lambda, scheme, scenario, opts),
+    })
 }
 
 /// λ grid for the eventsim experiment. `quick` shrinks it to two points so
@@ -235,27 +312,19 @@ pub fn staleness_sweep(
     kinds.push(DisseminationKind::Gossip {
         tick_s: crate::state::DEFAULT_GOSSIP_TICK_S,
     });
-    let mut rows = Vec::new();
-    for &d in &kinds {
-        for scheme in SchemeKind::all() {
-            let reports: Vec<Report> = (0..opts.repeats.max(1))
-                .map(|r| {
-                    let mut cfg = base_cfg(model, opts);
-                    cfg.lambda = lambda;
-                    cfg.seed = opts.seed + r as u64 * 1000;
-                    cfg.dissemination = Some(d);
-                    crate::engine::run(&cfg, scheme)
-                })
-                .collect();
-            rows.push(StalenessRow {
-                t_d: d.t_d_s(),
-                dissemination: d,
-                scheme,
-                report: mean_reports(reports),
-            });
-        }
-    }
-    rows
+    let cells: Vec<(DisseminationKind, SchemeKind)> = kinds
+        .iter()
+        .flat_map(|&d| SchemeKind::all().into_iter().map(move |s| (d, s)))
+        .collect();
+    run_cells(opts.threads, cells, |(d, scheme)| StalenessRow {
+        t_d: d.t_d_s(),
+        dissemination: d,
+        scheme,
+        report: repeat_mean(model, scheme, opts, |cfg| {
+            cfg.lambda = lambda;
+            cfg.dissemination = Some(d);
+        }),
+    })
 }
 
 /// Render the staleness sweep as two panels (completion rate and p95
@@ -390,26 +459,25 @@ pub fn topology_sweep(
     kinds: &[TopologyKind],
     opts: &SweepOpts,
 ) -> Vec<TopologyRow> {
-    let mut rows = Vec::new();
-    for kind in kinds {
-        for scheme in SchemeKind::all() {
-            let reports: Vec<Report> = (0..opts.repeats.max(1))
-                .map(|r| {
-                    let mut cfg = base_cfg(model, opts);
-                    cfg.lambda = lambda;
-                    cfg.seed = opts.seed + r as u64 * 1000;
-                    cfg.topology = Some(kind.clone());
-                    crate::engine::run(&cfg, scheme)
-                })
-                .collect();
-            rows.push(TopologyRow {
-                topology: kind.clone(),
-                scheme,
-                report: mean_reports(reports),
-            });
+    let cells: Vec<(TopologyKind, SchemeKind)> = kinds
+        .iter()
+        .flat_map(|kind| {
+            SchemeKind::all()
+                .into_iter()
+                .map(move |s| (kind.clone(), s))
+        })
+        .collect();
+    run_cells(opts.threads, cells, |(kind, scheme)| {
+        let report = repeat_mean(model, scheme, opts, |cfg| {
+            cfg.lambda = lambda;
+            cfg.topology = Some(kind.clone());
+        });
+        TopologyRow {
+            topology: kind,
+            scheme,
+            report,
         }
-    }
-    rows
+    })
 }
 
 /// Render the topology sweep as two panels (completion rate and p95
@@ -502,19 +570,18 @@ pub fn topology_json(
     ])
 }
 
-/// λ-sweep over all four schemes (the engine behind Figs. 2 & 3).
+/// λ-sweep over all four schemes (the engine behind Figs. 2 & 3), cells
+/// fanned across cores with deterministic row order.
 pub fn lambda_sweep(model: DnnModel, lambdas: &[f64], opts: &SweepOpts) -> Vec<Row> {
-    let mut rows = Vec::new();
-    for &lambda in lambdas {
-        for scheme in SchemeKind::all() {
-            rows.push(Row {
-                x: lambda,
-                scheme,
-                report: run_point(model, lambda, scheme, opts),
-            });
-        }
-    }
-    rows
+    let cells: Vec<(f64, SchemeKind)> = lambdas
+        .iter()
+        .flat_map(|&lambda| SchemeKind::all().into_iter().map(move |s| (lambda, s)))
+        .collect();
+    run_cells(opts.threads, cells, |(lambda, scheme)| Row {
+        x: lambda,
+        scheme,
+        report: run_point(model, lambda, scheme, opts),
+    })
 }
 
 /// Paper default λ grid (§V-A: λ ∈ 4–70).
@@ -532,32 +599,25 @@ pub fn fig3(opts: &SweepOpts) -> Vec<Row> {
     lambda_sweep(DnnModel::Vgg19, &default_lambdas(), opts)
 }
 
-/// §V-B network-scale study: completion rate vs N at fixed λ = 25.
+/// §V-B network-scale study: completion rate vs N at fixed λ = 25,
+/// cells fanned across cores.
 pub fn scale(ns: &[usize], opts: &SweepOpts) -> Vec<Row> {
-    let mut rows = Vec::new();
-    for &n in ns {
-        for scheme in SchemeKind::all() {
-            let reports: Vec<Report> = (0..opts.repeats.max(1))
-                .map(|r| {
-                    let mut cfg = base_cfg(DnnModel::Vgg19, opts);
-                    cfg.n = n;
-                    // the sweep coordinate IS the torus size: a --topology
-                    // override would pin the geometry and turn the N-axis
-                    // into a lie, so it is cleared per cell
-                    cfg.topology = None;
-                    cfg.lambda = 25.0;
-                    cfg.seed = opts.seed + r as u64 * 1000;
-                    crate::engine::run(&cfg, scheme)
-                })
-                .collect();
-            rows.push(Row {
-                x: n as f64,
-                scheme,
-                report: mean_reports(reports),
-            });
-        }
-    }
-    rows
+    let cells: Vec<(usize, SchemeKind)> = ns
+        .iter()
+        .flat_map(|&n| SchemeKind::all().into_iter().map(move |s| (n, s)))
+        .collect();
+    run_cells(opts.threads, cells, |(n, scheme)| Row {
+        x: n as f64,
+        scheme,
+        report: repeat_mean(DnnModel::Vgg19, scheme, opts, |cfg| {
+            cfg.n = n;
+            // the sweep coordinate IS the torus size: a --topology
+            // override would pin the geometry and turn the N-axis
+            // into a lie, so it is cleared per cell
+            cfg.topology = None;
+            cfg.lambda = 25.0;
+        }),
+    })
 }
 
 /// Default N grid for the scale study (paper: 4 – 32).

@@ -34,6 +34,16 @@
 //! (the paper baseline, on which the two engines agree), diurnal
 //! sinusoidal, bursty MMPP, and a moving ground-track hotspot.
 //!
+//! The million-task hot path is structural: live tasks sit in the
+//! [`eventsim::arena::Slab`] slot arena (events carry ABA-checked
+//! `(slot, id)` pairs; fault scans go through a per-satellite reverse
+//! index), the GA evaluates whole generations through the
+//! structure-of-arrays [`offload::DecisionSpaceIndex::deficit_batch`]
+//! kernel (bit-for-bit the scalar Eq. 12), and
+//! [`experiments::run_cells`] fans independent sweep cells across cores
+//! with byte-identical row output. `benches/eventsim_scale.rs` tracks
+//! the resulting tasks/s in `BENCH_eventsim.json`.
+//!
 //! ## Pluggable constellation topology
 //!
 //! The geometry under both engines is a [`topology::Constellation`]

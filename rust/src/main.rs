@@ -85,6 +85,8 @@ OPTIONS
   --isl-latency-ms M  per-hop ISL store-and-forward latency (default 25);
                   sets the tick of a bare --dissemination gossip
   --seed X        RNG seed      --repeats R    seeds averaged per point
+  --threads T     sweep cells fanned over T workers (0 = all cores, the
+                  default; 1 = sequential — rows are byte-identical)
   --quick         smaller slot budget          --json FILE   export rows
   --retain-outcomes  buffer per-task outcomes (metrics stream by default)
   --requests K    serve: number of requests    --workers W   exec workers";
@@ -103,6 +105,7 @@ fn sweep_opts(args: &Args, cfg: &SimConfig) -> exp::SweepOpts {
     o.slots = args.get_or("slots", if args.has_flag("quick") { o.slots } else { cfg.slots });
     o.decision_fraction = cfg.decision_fraction;
     o.repeats = args.get_or("repeats", 1usize);
+    o.threads = args.get_or("threads", 0usize);
     // --engine / --scenario / --dissemination / --topology flow into
     // sweeps and experiments too
     o.engine = cfg.engine;

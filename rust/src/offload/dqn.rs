@@ -215,6 +215,10 @@ impl OffloadScheme for DqnScheme {
     fn kind(&self) -> SchemeKind {
         SchemeKind::Dqn
     }
+
+    fn learns(&self) -> bool {
+        true
+    }
 }
 
 #[cfg(test)]

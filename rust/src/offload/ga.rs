@@ -34,16 +34,21 @@
 //!   population converges) return their cached deficit instead of
 //!   re-walking Eq. 12; the memo key is the exact `u128`-packed gene
 //!   vector, so a hit can never alias a different chromosome;
-//! * **incremental deficit deltas** — [`DeficitScratch`] re-derives only
-//!   the per-position terms whose genes changed between consecutive
-//!   evaluations (one division instead of L for a single-gene
-//!   difference), then reduces in the reference operation order.
+//! * **whole-generation batched evaluation** — each GA phase (initial
+//!   population, the reproduction brood, the summoned refresh) stages its
+//!   chromosomes first, then evaluates the memo misses in one
+//!   [`DecisionSpaceIndex::deficit_batch`] pass over the
+//!   structure-of-arrays side tables (comp-term LUT, `κ·q_k`, hop LUT) —
+//!   fixed-stride lanes the autovectorizer can chew, reduced in the
+//!   scalar kernel's operation order so every value is bit-identical.
+//!   ([`super::DeficitScratch`]'s incremental path remains available as
+//!   the scalar oracle.)
 //!
 //! The paper-literal implementation is retained as
 //! [`GaScheme::decide_reference`], the equivalence oracle.
 
 use super::{
-    DecisionSpaceIndex, DeficitScratch, Gene, OffloadContext, OffloadScheme, SchemeKind,
+    BatchScratch, DecisionSpaceIndex, Gene, OffloadContext, OffloadScheme, SchemeKind,
     MEMO_MAX_L,
 };
 use crate::topology::SatId;
@@ -100,8 +105,10 @@ pub struct GaScheme {
     free: Vec<Vec<Gene>>,
     /// Per-decision candidate index (buffers reused across decisions).
     index: DecisionSpaceIndex,
-    /// Incremental-deficit term cache.
-    scratch: DeficitScratch,
+    /// Batched-deficit accumulator lanes (whole-generation Eq. 12 pass).
+    batch: BatchScratch,
+    /// Staging buffers for [`eval_generation`], reused across decisions.
+    bufs: EvalBuffers,
     /// deficit memo keyed on the packed chromosome (cleared per decision:
     /// satellite loads change between tasks).
     memo: Memo,
@@ -113,20 +120,56 @@ struct Individual {
     deficit: f64,
 }
 
-/// Memoized deficit evaluation (free function over disjoint `GaScheme`
-/// fields so the borrow checker accepts calls while parent chromosomes are
-/// borrowed from the population).
-fn eval(index: &DecisionSpaceIndex, scratch: &mut DeficitScratch, memo: &mut Memo, genes: &[Gene]) -> f64 {
-    if genes.len() <= MEMO_MAX_L {
-        let key = pack(genes);
-        if let Some(&d) = memo.get(&key) {
-            return d;
+/// Reused staging of one generation's memo-missing chromosomes: the dense
+/// gene matrix handed to the batch kernel, which population indices the
+/// rows belong to, and the kernel's outputs.
+#[derive(Default)]
+struct EvalBuffers {
+    genes: Vec<Gene>,
+    miss: Vec<usize>,
+    out: Vec<f64>,
+}
+
+/// Evaluate the deficits of one whole generation (`pop`, typically a
+/// fresh slice of the population) in a single batched pass: memo hits
+/// fill directly, misses are compacted into a dense chromosome matrix and
+/// handed to [`DecisionSpaceIndex::deficit_batch`] (the SoA kernel), then
+/// written back and memoized. Every value is bit-for-bit what the scalar
+/// kernel would produce, so decisions are unchanged (enforced by
+/// `tests/prop_invariants.rs::prop_ga_decide_identical_to_reference_per_seed`).
+///
+/// Free function over disjoint `GaScheme` fields so the borrow checker
+/// accepts calls against population slices.
+fn eval_generation(
+    index: &DecisionSpaceIndex,
+    batch: &mut BatchScratch,
+    bufs: &mut EvalBuffers,
+    memo: &mut Memo,
+    pop: &mut [Individual],
+) {
+    let memoizable = index.n_segments() <= MEMO_MAX_L;
+    bufs.genes.clear();
+    bufs.miss.clear();
+    for (i, ind) in pop.iter_mut().enumerate() {
+        if memoizable {
+            if let Some(&d) = memo.get(&pack(&ind.chrom)) {
+                ind.deficit = d;
+                continue;
+            }
         }
-        let d = index.deficit_with(scratch, genes);
-        memo.insert(key, d);
-        d
-    } else {
-        index.deficit_with(scratch, genes)
+        bufs.genes.extend_from_slice(&ind.chrom);
+        bufs.miss.push(i);
+    }
+    if bufs.miss.is_empty() {
+        return;
+    }
+    index.deficit_batch(batch, &bufs.genes, &mut bufs.out);
+    debug_assert_eq!(bufs.out.len(), bufs.miss.len());
+    for (&i, &d) in bufs.miss.iter().zip(&bufs.out) {
+        pop[i].deficit = d;
+        if memoizable {
+            memo.insert(pack(&pop[i].chrom), d);
+        }
     }
 }
 
@@ -150,7 +193,8 @@ impl GaScheme {
             pop: Vec::new(),
             free: Vec::new(),
             index: DecisionSpaceIndex::new(),
-            scratch: DeficitScratch::default(),
+            batch: BatchScratch::default(),
+            bufs: EvalBuffers::default(),
             memo: Memo::default(),
         }
     }
@@ -303,21 +347,29 @@ impl OffloadScheme for GaScheme {
         // Per-decision kernel state: candidate index (reused verbatim
         // across consecutive decisions when origin, candidates, and the
         // observed view are unchanged — the rebuild is skipped, the
-        // decision is bit-for-bit the same), term cache, memo.
+        // decision is bit-for-bit the same), memo.
         self.index.build_cached(ctx);
-        self.scratch.invalidate();
         self.memo.clear();
         let n_cands = ctx.candidates.len();
 
-        // Line 1: primitive group of N_ini random chromosomes.
+        // Line 1: primitive group of N_ini random chromosomes, evaluated
+        // as one batched generation (values identical to per-chromosome
+        // evaluation; the RNG stream is consumed before any deficit is
+        // computed, exactly like the reference's draw order).
         for ind in self.pop.drain(..) {
             self.free.push(ind.chrom);
         }
         for _ in 0..g.n_ini {
             let chrom = random_genes(&mut self.rng, &mut self.free, n_cands, l);
-            let deficit = eval(&self.index, &mut self.scratch, &mut self.memo, &chrom);
-            self.pop.push(Individual { chrom, deficit });
+            self.pop.push(Individual { chrom, deficit: 0.0 });
         }
+        eval_generation(
+            &self.index,
+            &mut self.batch,
+            &mut self.bufs,
+            &mut self.memo,
+            &mut self.pop,
+        );
         let mut best_prev = f64::INFINITY;
 
         for iter in 0..g.n_iter {
@@ -335,7 +387,10 @@ impl OffloadScheme for GaScheme {
             // Line 6: reproduce distinct pairs via the heuristic splice.
             // Children append after index `parents`, so parent reads stay
             // confined to the pre-reproduction population exactly like the
-            // reference's separate `children` vector.
+            // reference's separate `children` vector. No child's deficit
+            // is read during reproduction, so the whole brood is staged
+            // first and evaluated in one batched pass at the generation
+            // barrier — decision-preserving by value equality.
             let parents = self.pop.len();
             for a in 0..parents {
                 for b in (a + 1)..parents {
@@ -350,16 +405,21 @@ impl OffloadScheme for GaScheme {
                         &mut x,
                         &mut y,
                     ) {
-                        let dx = eval(&self.index, &mut self.scratch, &mut self.memo, &x);
-                        let dy = eval(&self.index, &mut self.scratch, &mut self.memo, &y);
-                        self.pop.push(Individual { chrom: x, deficit: dx });
-                        self.pop.push(Individual { chrom: y, deficit: dy });
+                        self.pop.push(Individual { chrom: x, deficit: 0.0 });
+                        self.pop.push(Individual { chrom: y, deficit: 0.0 });
                     } else {
                         self.free.push(x);
                         self.free.push(y);
                     }
                 }
             }
+            eval_generation(
+                &self.index,
+                &mut self.batch,
+                &mut self.bufs,
+                &mut self.memo,
+                &mut self.pop[parents..],
+            );
 
             // Line 7: eliminate highest-deficit individuals until ≤ N_K
             // (stable sort on bit-identical keys ⇒ identical survivors).
@@ -371,12 +431,20 @@ impl OffloadScheme for GaScheme {
                 }
             }
 
-            // Line 8: summon N_summ fresh chromosomes.
+            // Line 8: summon N_summ fresh chromosomes (drawn first, then
+            // batch-evaluated — same RNG stream, same values).
+            let summoned_from = self.pop.len();
             for _ in 0..g.n_summ {
                 let chrom = random_genes(&mut self.rng, &mut self.free, n_cands, l);
-                let deficit = eval(&self.index, &mut self.scratch, &mut self.memo, &chrom);
-                self.pop.push(Individual { chrom, deficit });
+                self.pop.push(Individual { chrom, deficit: 0.0 });
             }
+            eval_generation(
+                &self.index,
+                &mut self.batch,
+                &mut self.bufs,
+                &mut self.memo,
+                &mut self.pop[summoned_from..],
+            );
         }
 
         // Line 10: the chromosome with the lowest deficit.

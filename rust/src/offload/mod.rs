@@ -207,6 +207,16 @@ pub struct DecisionSpaceIndex {
     max_workload: Vec<f64>,
     /// Copy of the per-segment workloads `{q_1..q_L}`.
     segments: Vec<f64>,
+    /// k-major `L × |A_x|` computation-term LUT:
+    /// `comp_lut[k·|A_x| + g] = (loaded[g] + q_k) / capacity[g]` — the
+    /// exact float [`DecisionSpaceIndex::deficit`]'s θ1 term computes, so
+    /// the batched kernel replaces its per-evaluation division with a
+    /// table load while staying bit-for-bit identical.
+    comp_lut: Vec<f64>,
+    /// `kq[k] = κ·q_k` — the Eq. 7 prefix of the θ2 term (the scalar
+    /// kernel computes `κ·q_k·MH` left-to-right, so `kq[k]·MH` reproduces
+    /// it bit-for-bit).
+    kq: Vec<f64>,
     kappa: f64,
     theta1: f64,
     theta2: f64,
@@ -250,6 +260,20 @@ impl DecisionSpaceIndex {
         }
         self.segments.clear();
         self.segments.extend_from_slice(ctx.segments);
+        // SoA side tables for the batched kernel, derived from the arrays
+        // above with the scalar kernel's exact expressions (the per-build
+        // cost — L·|A_x| divisions — amortizes over the ~10² to 10³
+        // evaluations of one GA decide).
+        let nc = self.sat_ids.len();
+        self.comp_lut.clear();
+        self.comp_lut.reserve(self.segments.len() * nc);
+        for &q in &self.segments {
+            for g in 0..nc {
+                self.comp_lut.push((self.loaded[g] + q) / self.capacity[g]);
+            }
+        }
+        self.kq.clear();
+        self.kq.extend(self.segments.iter().map(|&q| ctx.kappa * q));
         self.kappa = ctx.kappa;
         self.theta1 = ctx.ga.theta1;
         self.theta2 = ctx.ga.theta2;
@@ -476,6 +500,71 @@ impl DecisionSpaceIndex {
         let drops = self.admission_drops(genes);
         self.theta1 * comp + self.theta2 * tran + self.theta3 * drops
     }
+
+    /// Eq. 12 deficits of a whole GA generation in one pass: `genes`
+    /// holds `n` chromosomes of length `L = n_segments()` back to back
+    /// (fixed stride `L`); `out` receives one deficit per chromosome, in
+    /// order.
+    ///
+    /// The θ1/θ2 accumulations run k-outer over fixed-stride chromosome
+    /// lanes against the structure-of-arrays side tables (`comp_lut`,
+    /// `kq`, the hop LUT) — the layout the autovectorizer can chew — and
+    /// every per-chromosome reduction happens in the scalar kernel's
+    /// left-to-right order, so each result is **bit-for-bit identical**
+    /// to [`DecisionSpaceIndex::deficit`] on the same chromosome
+    /// (enforced by
+    /// `tests/prop_invariants.rs::prop_deficit_batch_matches_scalar`).
+    pub fn deficit_batch(&self, scratch: &mut BatchScratch, genes: &[Gene], out: &mut Vec<f64>) {
+        let l = self.segments.len();
+        out.clear();
+        if l == 0 || genes.is_empty() {
+            return;
+        }
+        debug_assert_eq!(genes.len() % l, 0, "ragged chromosome matrix");
+        let n = genes.len() / l;
+        if l > 128 {
+            out.extend(genes.chunks(l).map(|c| self.deficit_long(c)));
+            return;
+        }
+        let nc = self.sat_ids.len();
+        scratch.comp.clear();
+        scratch.comp.resize(n, 0.0);
+        scratch.tran.clear();
+        scratch.tran.resize(n, 0.0);
+        for k in 0..l {
+            let lut = &self.comp_lut[k * nc..(k + 1) * nc];
+            for (i, acc) in scratch.comp.iter_mut().enumerate() {
+                *acc += lut[genes[i * l + k] as usize];
+            }
+        }
+        for k in 0..l.saturating_sub(1) {
+            let kq = self.kq[k];
+            for (i, acc) in scratch.tran.iter_mut().enumerate() {
+                let a = genes[i * l + k] as usize;
+                let b = genes[i * l + k + 1] as usize;
+                *acc += kq * self.hops[a * nc + b] as f64;
+            }
+        }
+        out.reserve(n);
+        for i in 0..n {
+            let drops = self.admission_drops(&genes[i * l..(i + 1) * l]);
+            out.push(
+                self.theta1 * scratch.comp[i]
+                    + self.theta2 * scratch.tran[i]
+                    + self.theta3 * drops,
+            );
+        }
+    }
+}
+
+/// Reusable θ1/θ2 accumulator lanes for
+/// [`DecisionSpaceIndex::deficit_batch`] (one slot per chromosome of the
+/// generation being evaluated), kept by the caller so steady-state batch
+/// evaluation allocates nothing.
+#[derive(Clone, Debug, Default)]
+pub struct BatchScratch {
+    comp: Vec<f64>,
+    tran: Vec<f64>,
 }
 
 /// Reusable per-scheme scratch for [`DecisionSpaceIndex::deficit_with`]:
@@ -516,7 +605,19 @@ pub trait OffloadScheme {
     /// Learning hook: called after the decided sequence executed.
     /// `dropped_at` = Some(k) if segment k was rejected; `delay_s` is the
     /// realized task delay. Default: no-op (only DQN learns online).
+    ///
+    /// Engines only call this when [`OffloadScheme::learns`] is true — a
+    /// scheme that overrides `observe` MUST also override `learns` to
+    /// return true, or its observations are silently skipped.
     fn observe(&mut self, _ctx: &OffloadContext, _chrom: &[SatId], _dropped_at: Option<usize>, _delay_s: f64) {}
+
+    /// True when [`OffloadScheme::observe`] does real work. Engines skip
+    /// building the observation context (and the Eq. 5/7 delay estimate
+    /// that feeds it) for schemes that keep the default no-op — a pure
+    /// hot-path gate that cannot change any decision.
+    fn learns(&self) -> bool {
+        false
+    }
 }
 
 /// Construct a scheme instance.
@@ -678,6 +779,48 @@ mod tests {
         scratch.invalidate();
         let after = index.deficit_with(&mut scratch, &genes);
         assert_eq!(after.to_bits(), index.deficit(&genes).to_bits());
+    }
+
+    #[test]
+    fn batched_deficit_matches_scalar_bitwise() {
+        let (topo, mut sats, ga) = setup(6);
+        let mut rng = crate::util::rng::Pcg64::seed_from_u64(21);
+        for s in sats.iter_mut() {
+            s.try_load(rng.f64_in(0.0, 14_000.0));
+        }
+        let cands = topo.decision_space(9, 2);
+        let segs = [4100.0, 0.0, 2600.0, 3300.0];
+        let ctx = test_ctx(&topo, &sats, &cands, &segs, &ga);
+        let index = DecisionSpaceIndex::from_ctx(&ctx);
+        let n = 37usize;
+        let flat: Vec<Gene> = (0..n * segs.len())
+            .map(|_| rng.usize_in(0, cands.len()) as Gene)
+            .collect();
+        let mut scratch = BatchScratch::default();
+        let mut out = Vec::new();
+        index.deficit_batch(&mut scratch, &flat, &mut out);
+        assert_eq!(out.len(), n);
+        for (chrom, &got) in flat.chunks(segs.len()).zip(&out) {
+            let want = index.deficit(chrom);
+            assert_eq!(got.to_bits(), want.to_bits(), "batch diverged on {chrom:?}");
+        }
+        // scratch reuse across differently-sized generations stays exact
+        index.deficit_batch(&mut scratch, &flat[..segs.len() * 3], &mut out);
+        assert_eq!(out.len(), 3);
+        for (chrom, &got) in flat[..segs.len() * 3].chunks(segs.len()).zip(&out) {
+            assert_eq!(got.to_bits(), index.deficit(chrom).to_bits());
+        }
+        // empty generation is a clean no-op
+        index.deficit_batch(&mut scratch, &[], &mut out);
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn only_dqn_learns() {
+        for kind in SchemeKind::all() {
+            let s = make_scheme(kind, 3);
+            assert_eq!(s.learns(), kind == SchemeKind::Dqn, "{kind:?}");
+        }
     }
 
     #[test]

@@ -375,8 +375,9 @@ impl Simulation {
                             }
                         }
                     }
-                    // learning hook (DQN)
-                    {
+                    // learning hook (DQN; skipped — context and all — for
+                    // schemes whose observe is a no-op)
+                    if self.scheme.learns() {
                         let ctx = OffloadContext {
                             topo: &self.topo,
                             view: tracker.view(area, &self.satellites),

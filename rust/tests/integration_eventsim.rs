@@ -150,6 +150,47 @@ fn event_engine_delay_grows_with_incidence() {
 }
 
 #[test]
+fn arena_slot_reuse_is_deterministic_under_fault_churn() {
+    // fault ticks wipe queued work and abort in-flight tasks, so arena
+    // slots churn hard (free → reuse → free); two runs with the same seed
+    // must still agree on every headline statistic to the bit — slot
+    // reuse, the per-satellite fault reverse index, and stale-event ABA
+    // checks must all be invisible to the simulation's arithmetic.
+    let cfg = SimConfig {
+        n: 6,
+        slots: 14,
+        lambda: 20.0,
+        seed: 13,
+        ..SimConfig::default()
+    };
+    let run = || {
+        EventSim::new(&cfg, SchemeKind::Scc)
+            .with_faults(0.15, 0.5)
+            .run()
+    };
+    let a = run();
+    let b = run();
+    assert!(a.total_tasks > 0);
+    assert_eq!(a.total_tasks, a.completed_tasks + a.dropped_tasks);
+    assert!(
+        a.dropped_tasks > 0,
+        "the churn point should abort some tasks"
+    );
+    assert_eq!(a.total_tasks, b.total_tasks);
+    assert_eq!(a.completed_tasks, b.completed_tasks);
+    for (name, x, y) in [
+        ("avg_delay_ms", a.avg_delay_ms, b.avg_delay_ms),
+        ("avg_comp_ms", a.avg_comp_ms, b.avg_comp_ms),
+        ("avg_tran_ms", a.avg_tran_ms, b.avg_tran_ms),
+        ("workload_variance", a.workload_variance, b.workload_variance),
+        ("delay_p95_ms", a.delay_p95_ms, b.delay_p95_ms),
+        ("last_finish_s", a.last_finish_s, b.last_finish_s),
+    ] {
+        assert_eq!(x.to_bits(), y.to_bits(), "{name} diverged: {x} vs {y}");
+    }
+}
+
+#[test]
 fn event_engine_dynamics_run_together() {
     // handover + faults + jitter all active on the event kernel
     let cfg = SimConfig {

@@ -1,6 +1,8 @@
 //! Integration over the experiment harness: every figure's generator
-//! produces complete, structurally valid row sets (quick settings).
+//! produces complete, structurally valid row sets (quick settings), and
+//! the parallel sweep runner is byte-identical to a sequential run.
 
+use satkit::config::EngineKind;
 use satkit::dnn::DnnModel;
 use satkit::experiments as exp;
 use satkit::offload::SchemeKind;
@@ -55,6 +57,65 @@ fn render_and_json_roundtrip() {
         assert!(row.get("scheme").is_some());
         assert!(row.get("completion_rate").unwrap().as_f64().unwrap() <= 1.0);
     }
+}
+
+#[test]
+fn parallel_sweep_rows_match_sequential() {
+    // the whole-run property of the parallel runner: fanning the cells
+    // over worker threads must serialize to the SAME bytes as the forced
+    // single-thread run — row order, every float bit, everything.
+    let mut seq = quick();
+    seq.engine = EngineKind::Event;
+    seq.threads = 1;
+    let mut par = seq.clone();
+    par.threads = 4;
+    let a = exp::eventsim_sweep(
+        DnnModel::Vgg19,
+        &[4.0, 25.0],
+        satkit::config::ScenarioKind::Poisson,
+        &seq,
+    );
+    let b = exp::eventsim_sweep(
+        DnnModel::Vgg19,
+        &[4.0, 25.0],
+        satkit::config::ScenarioKind::Poisson,
+        &par,
+    );
+    assert_eq!(
+        exp::rows_to_json(&a).to_string(),
+        exp::rows_to_json(&b).to_string(),
+        "parallel eventsim sweep diverged from sequential"
+    );
+
+    // same property through the staleness sweep's JSON artifact path
+    let rows_seq = exp::staleness_sweep(DnnModel::Vgg19, 10.0, &[1.0], &seq);
+    let rows_par = exp::staleness_sweep(DnnModel::Vgg19, 10.0, &[1.0], &par);
+    let ja = exp::staleness_json(DnnModel::Vgg19, 10.0, EngineKind::Event, true, &rows_seq);
+    let jb = exp::staleness_json(DnnModel::Vgg19, 10.0, EngineKind::Event, true, &rows_par);
+    assert_eq!(
+        ja.to_string(),
+        jb.to_string(),
+        "parallel staleness sweep diverged from sequential"
+    );
+}
+
+#[test]
+fn run_cells_preserves_input_order_and_runs_every_cell() {
+    // order is by input index, not completion time: staggered workloads
+    // would reorder under a completion-order merge
+    let items: Vec<usize> = (0..37).collect();
+    let out = exp::run_cells(4, items.clone(), |i| {
+        if i % 5 == 0 {
+            std::thread::sleep(std::time::Duration::from_millis(2));
+        }
+        i * 10
+    });
+    assert_eq!(out, items.iter().map(|i| i * 10).collect::<Vec<_>>());
+    // degenerate worker counts
+    assert_eq!(exp::run_cells(1, vec![3usize, 1, 2], |i| i + 1), vec![4, 2, 3]);
+    assert_eq!(exp::run_cells(64, vec![7usize], |i| i), vec![7]);
+    let empty: Vec<usize> = Vec::new();
+    assert_eq!(exp::run_cells(0, empty, |i: usize| i), Vec::<usize>::new());
 }
 
 #[test]

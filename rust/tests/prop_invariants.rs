@@ -4,8 +4,8 @@
 
 use satkit::config::GaConfig;
 use satkit::offload::{
-    ga::GaScheme, make_scheme, DecisionSpaceIndex, DeficitScratch, Gene, OffloadContext,
-    OffloadScheme, SchemeKind,
+    ga::GaScheme, make_scheme, BatchScratch, DecisionSpaceIndex, DeficitScratch, Gene,
+    OffloadContext, OffloadScheme, SchemeKind,
 };
 use satkit::satellite::Satellite;
 use satkit::splitting::{balanced_split, naive_equal_layers, split_with_limit};
@@ -416,6 +416,67 @@ fn prop_indexed_deficit_matches_reference() {
                 // mutate one gene so later rounds exercise the delta path
                 let pos = raw[(2 * step) % raw.len()] as usize % l;
                 genes[pos] = (raw[(2 * step + 1) % raw.len()] as usize % cands.len()) as Gene;
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_deficit_batch_matches_scalar() {
+    // the batched whole-generation kernel must agree with the scalar
+    // indexed kernel bit for bit, chromosome by chromosome, for any
+    // generation size — including memo-free duplicates within a batch.
+    check_no_shrink(
+        "deficit-batch-bitwise",
+        default_cases() / 2,
+        |r| {
+            let inst = gen_instance(r);
+            let n = r.usize_in(1, 33);
+            let raw: Vec<u64> = (0..n * inst.segments.len().max(1))
+                .map(|_| r.next_u64())
+                .collect();
+            (inst, n, raw)
+        },
+        |(inst, n, raw)| {
+            let topo = Constellation::torus(inst.n);
+            let sats = build_sats(inst);
+            let cands = topo.decision_space(inst.origin, inst.d_max);
+            let ga = GaConfig::default();
+            let ctx = OffloadContext {
+                topo: &topo,
+                view: StateView::live(&sats),
+                origin: inst.origin,
+                candidates: &cands,
+                segments: &inst.segments,
+                kappa: 1e-4,
+                ga: &ga,
+            };
+            let index = DecisionSpaceIndex::from_ctx(&ctx);
+            let l = inst.segments.len();
+            let mut flat: Vec<Gene> = raw
+                .iter()
+                .map(|&x| (x as usize % cands.len()) as Gene)
+                .collect();
+            flat.truncate(n * l);
+            // force a duplicated chromosome when the batch has >= 2 rows
+            if *n >= 2 {
+                let (head, tail) = flat.split_at_mut(l);
+                tail[..l].copy_from_slice(head);
+            }
+            let mut scratch = BatchScratch::default();
+            let mut out = Vec::new();
+            index.deficit_batch(&mut scratch, &flat, &mut out);
+            if out.len() != *n {
+                return Err(format!("{} outputs for {n} chromosomes", out.len()));
+            }
+            for (chrom, &got) in flat.chunks(l).zip(&out) {
+                let want = index.deficit(chrom);
+                if got.to_bits() != want.to_bits() {
+                    return Err(format!(
+                        "batched {got} != scalar {want} for {chrom:?}"
+                    ));
+                }
             }
             Ok(())
         },
