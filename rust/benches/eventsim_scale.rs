@@ -221,8 +221,7 @@ fn main() {
     c.satellite.max_workload_mflops = 50_000_000.0;
     scale_rows.push(scale_point("execution-bound", &c, floor));
 
-    let path = std::env::var("SATKIT_EVENTSIM_JSON")
-        .unwrap_or_else(|_| "BENCH_eventsim.json".to_string());
+    let path = satkit::bench::out_path("SATKIT_EVENTSIM_JSON", "BENCH_eventsim.json");
     let n_scale = scale_rows.len();
     let json = Json::obj(vec![
         ("bench", Json::Str("eventsim".into())),

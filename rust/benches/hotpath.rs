@@ -7,7 +7,9 @@
 //! so the perf trajectory is machine-readable; quick mode is recorded in
 //! the file since quick numbers are not comparable to full ones.
 
-use satkit::bench::{bench, bench_per_item, quick_mode, section, write_suite_json, BenchResult};
+use satkit::bench::{
+    bench, bench_per_item, out_path, quick_mode, section, write_suite_json, BenchResult,
+};
 use satkit::config::{GaConfig, SimConfig};
 use satkit::dnn::DnnModel;
 use satkit::offload::{
@@ -149,6 +151,30 @@ fn main() {
         }));
     }
 
+    section("telemetry overhead (event engine, N=8, lambda=25)");
+    // The off-row is what CI gates (<= 2% over the on-row would be
+    // meaningless; the gate is off <= on * 1.02 — disabled hooks must not
+    // cost more than the noise floor of the fully-instrumented run). The
+    // hard guarantee that off-runs are BIT-IDENTICAL to the pre-telemetry
+    // path is carried by tests/prop_telemetry.rs; this row tracks the
+    // residual branch cost.
+    let telem_cfg = SimConfig {
+        n: 8,
+        slots: if quick { 4 } else { 10 },
+        lambda: 25.0,
+        engine: satkit::config::EngineKind::Event,
+        ..SimConfig::default()
+    };
+    let telem_iters = if quick { 5 } else { 20 };
+    show(bench("telemetry-off", 1, telem_iters, || {
+        std::hint::black_box(satkit::engine::run(&telem_cfg, SchemeKind::Scc));
+    }));
+    let mut telem_on = telem_cfg.clone();
+    telem_on.obs.telemetry = true;
+    show(bench("telemetry-on", 1, telem_iters, || {
+        std::hint::black_box(satkit::engine::run(&telem_on, SchemeKind::Scc));
+    }));
+
     section("PJRT slice execution (requires artifacts)");
     let dir = satkit::runtime::default_artifact_dir();
     if dir.join("vgg_slice.hlo.txt").exists() {
@@ -164,8 +190,7 @@ fn main() {
         println!("skipped (run `make artifacts`)");
     }
 
-    let path =
-        std::env::var("SATKIT_BENCH_JSON").unwrap_or_else(|_| "BENCH_hotpath.json".to_string());
+    let path = out_path("SATKIT_BENCH_JSON", "BENCH_hotpath.json");
     write_suite_json(&path, "hotpath", quick, &all).expect("writing bench json");
     println!("\nwrote {path} ({} results)", all.len());
 }

@@ -112,6 +112,14 @@ pub fn quick_mode() -> bool {
     std::env::var("SATKIT_BENCH_QUICK").map(|v| v == "1").unwrap_or(false)
 }
 
+/// Resolve an output path from its `SATKIT_*_JSON` env override, falling
+/// back to `default`. One helper for every bench/sweep emitter (hotpath,
+/// eventsim, staleness, topology) so the override convention can't drift
+/// per call site.
+pub fn out_path(env_key: &str, default: &str) -> String {
+    std::env::var(env_key).unwrap_or_else(|_| default.to_string())
+}
+
 /// Print a section header.
 pub fn section(title: &str) {
     println!("\n=== {title} ===");
@@ -159,6 +167,18 @@ mod tests {
             iters: 3,
         };
         assert!(r.row().contains("ms"));
+    }
+
+    #[test]
+    fn out_path_prefers_env_override() {
+        // key unique to this test: cargo runs tests in-process threads,
+        // so a shared key could race with another test's env mutation
+        let key = "SATKIT_TEST_OUT_PATH_JSON";
+        std::env::remove_var(key);
+        assert_eq!(out_path(key, "BENCH_default.json"), "BENCH_default.json");
+        std::env::set_var(key, "/tmp/override.json");
+        assert_eq!(out_path(key, "BENCH_default.json"), "/tmp/override.json");
+        std::env::remove_var(key);
     }
 
     #[test]

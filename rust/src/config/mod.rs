@@ -10,6 +10,7 @@ mod toml_lite;
 pub use toml_lite::TomlDoc;
 
 use crate::dnn::DnnModel;
+use crate::obs::{ObsConfig, TraceConfig};
 use crate::state::DisseminationKind;
 use crate::topology::{Constellation, TopologyKind};
 use crate::util::cli::Args;
@@ -256,6 +257,11 @@ pub struct SimConfig {
     /// memory; enable only when plots/traces need per-task data
     /// (`--retain-outcomes` on the CLI, `retain_outcomes = true` in TOML).
     pub retain_outcomes: bool,
+    /// Observability knobs (`--telemetry`, `--trace`, `--counter-period`,
+    /// TOML `[obs]`). Default: everything off — engines then skip every
+    /// telemetry hook behind one `enabled` branch, keeping runs
+    /// bit-for-bit identical to pre-telemetry builds.
+    pub obs: ObsConfig,
     pub ga: GaConfig,
     pub comm: CommConfig,
     pub satellite: SatelliteConfig,
@@ -282,6 +288,7 @@ impl Default for SimConfig {
             dissemination: None,
             gossip_tick_derived: false,
             retain_outcomes: false,
+            obs: ObsConfig::default(),
             ga: GaConfig::default(),
             comm: CommConfig::default(),
             satellite: SatelliteConfig::default(),
@@ -394,6 +401,9 @@ impl SimConfig {
                 errs.push(e);
             }
         }
+        if let Err(e) = self.obs.validate() {
+            errs.push(format!("obs: {e}"));
+        }
         if errs.is_empty() {
             Ok(())
         } else {
@@ -449,6 +459,13 @@ impl SimConfig {
         if let Some(b) = doc.get_bool("", "retain_outcomes") {
             d.retain_outcomes = b;
         }
+        if let Some(b) = doc.get_bool("obs", "telemetry") {
+            d.obs.telemetry = b;
+        }
+        if let Some(t) = doc.get_str("obs", "trace") {
+            d.obs.trace = Some(TraceConfig::parse(&t)?);
+        }
+        doc.read_f64("obs", "counter_period_s", &mut d.obs.counter_period_s);
         doc.read_f64("ga", "theta1", &mut d.ga.theta1);
         doc.read_f64("ga", "theta2", &mut d.ga.theta2);
         doc.read_f64("ga", "theta3", &mut d.ga.theta3);
@@ -552,12 +569,25 @@ impl SimConfig {
         if args.has_flag("retain-outcomes") {
             self.retain_outcomes = true;
         }
+        if args.has_flag("telemetry") {
+            self.obs.telemetry = true;
+        }
+        if let Some(spec) = args.get("trace") {
+            self.obs.trace = Some(TraceConfig::parse(spec)?);
+        } else if args.has_flag("trace") {
+            return Err("--trace requires a path: --trace <path>[:<max-events>]".into());
+        }
+        if let Some(x) = args.get_parsed::<f64>("counter-period")? {
+            self.obs.counter_period_s = x;
+        }
         Ok(())
     }
 
     /// Render the effective configuration as a Table-I-style listing.
+    /// The telemetry line appears only when observability is enabled, so
+    /// default runs print byte-identically to pre-telemetry builds.
     pub fn table(&self) -> String {
-        format!(
+        let mut t = format!(
             "Network topology                       {} ({} sats)\n\
              Satellite bandwidth B                  {:.0} MHz\n\
              Satellite computation capability C_x   {:.0} MFLOP/slot\n\
@@ -595,7 +625,19 @@ impl SimConfig {
             self.effective_dissemination().label(),
             self.slots,
             self.seed,
-        )
+        );
+        if self.obs.enabled() {
+            use std::fmt::Write as _;
+            let _ = write!(
+                t,
+                "\nTelemetry                              counters @ {} s",
+                self.obs.counter_period_s
+            );
+            if let Some(tr) = &self.obs.trace {
+                let _ = write!(t, ", trace -> {} (cap {})", tr.path, tr.max_events);
+            }
+        }
+        t
     }
 }
 
@@ -896,5 +938,56 @@ capacity_mflops = 6000.0
         let t = SimConfig::default().table();
         assert!(t.contains("N_ini"));
         assert!(t.contains("20 MHz"));
+    }
+
+    #[test]
+    fn obs_defaults_off_and_knobs_parse() {
+        let c = SimConfig::default();
+        assert!(!c.obs.enabled());
+        assert!(!c.table().contains("Telemetry"));
+
+        // TOML [obs] section
+        let t = SimConfig::from_toml(
+            "[obs]\ntelemetry = true\ntrace = \"t.json:500\"\ncounter_period_s = 0.25\n",
+        )
+        .unwrap();
+        assert!(t.obs.telemetry);
+        assert_eq!(t.obs.trace.as_ref().unwrap().path, "t.json");
+        assert_eq!(t.obs.trace.as_ref().unwrap().max_events, 500);
+        assert_eq!(t.obs.counter_period_s, 0.25);
+        assert!(t.validate().is_ok());
+
+        // CLI: --trace enables, --telemetry alone enables counters only
+        let args = crate::util::cli::Args::parse(
+            "x --trace out.json --counter-period 2".split_whitespace().map(String::from),
+        );
+        let mut d = SimConfig::default();
+        d.apply_args(&args).unwrap();
+        assert!(d.obs.enabled());
+        assert!(!d.obs.telemetry);
+        assert_eq!(d.obs.trace.as_ref().unwrap().path, "out.json");
+        assert_eq!(d.obs.counter_period_s, 2.0);
+        assert!(d.table().contains("Telemetry"));
+        assert!(d.table().contains("out.json"));
+
+        let args = crate::util::cli::Args::parse(
+            "x --telemetry".split_whitespace().map(String::from),
+        );
+        let mut d = SimConfig::default();
+        d.apply_args(&args).unwrap();
+        assert!(d.obs.enabled());
+        assert!(d.obs.trace.is_none());
+
+        // a bare --trace with no path is a clear error, not a silent flag
+        let args =
+            crate::util::cli::Args::parse("x --trace".split_whitespace().map(String::from));
+        let mut d = SimConfig::default();
+        assert!(d.apply_args(&args).is_err());
+
+        // validation catches a bad cadence
+        let mut bad = SimConfig::default();
+        bad.obs.telemetry = true;
+        bad.obs.counter_period_s = -1.0;
+        assert!(bad.validate().is_err());
     }
 }

@@ -57,6 +57,9 @@ pub struct SweepOpts {
     /// Worker threads for [`run_cells`]: 0 = one per available core,
     /// 1 = force the sequential path (the parallel runner's oracle).
     pub threads: usize,
+    /// Per-cell progress lines on **stderr** (`--progress` on the CLI):
+    /// stdout (tables, JSON) is untouched, rows are unchanged.
+    pub progress: bool,
 }
 
 impl Default for SweepOpts {
@@ -71,6 +74,7 @@ impl Default for SweepOpts {
             dissemination: None,
             topology: None,
             threads: 0,
+            progress: false,
         }
     }
 }
@@ -81,6 +85,43 @@ impl SweepOpts {
             slots: 6,
             ..SweepOpts::default()
         }
+    }
+}
+
+/// Per-cell sweep progress on stderr (`--progress`): one `start` and one
+/// `done` line per cell, numbered against the sweep total. Sits beside
+/// [`run_cells`] — workers share it by reference (atomic counters), stdout
+/// (tables, JSON) is untouched, and rows are byte-identical either way.
+pub struct Progress {
+    enabled: bool,
+    total: usize,
+    started: std::sync::atomic::AtomicUsize,
+    done: std::sync::atomic::AtomicUsize,
+}
+
+impl Progress {
+    pub fn new(enabled: bool, total: usize) -> Progress {
+        Progress {
+            enabled,
+            total,
+            started: std::sync::atomic::AtomicUsize::new(0),
+            done: std::sync::atomic::AtomicUsize::new(0),
+        }
+    }
+
+    /// Run one cell under progress accounting. `label` is lazy so the
+    /// disabled path is a single branch — no formatting, no allocation.
+    pub fn cell<R>(&self, label: impl Fn() -> String, f: impl FnOnce() -> R) -> R {
+        if !self.enabled {
+            return f();
+        }
+        let label = label();
+        let k = self.started.fetch_add(1, std::sync::atomic::Ordering::Relaxed) + 1;
+        eprintln!("[{k}/{}] start {label}", self.total);
+        let r = f();
+        let d = self.done.fetch_add(1, std::sync::atomic::Ordering::Relaxed) + 1;
+        eprintln!("[{d}/{}] done  {label}", self.total);
+        r
     }
 }
 
@@ -249,10 +290,16 @@ pub fn eventsim_sweep(
         .iter()
         .flat_map(|&lambda| SchemeKind::all().into_iter().map(move |s| (lambda, s)))
         .collect();
-    run_cells(opts.threads, cells, |(lambda, scheme)| Row {
-        x: lambda,
-        scheme,
-        report: run_point_event(model, lambda, scheme, scenario, opts),
+    let progress = Progress::new(opts.progress, cells.len());
+    run_cells(opts.threads, cells, |(lambda, scheme)| {
+        progress.cell(
+            || format!("lambda={lambda} scheme={}", scheme.name()),
+            || Row {
+                x: lambda,
+                scheme,
+                report: run_point_event(model, lambda, scheme, scenario, opts),
+            },
+        )
     })
 }
 
@@ -316,14 +363,20 @@ pub fn staleness_sweep(
         .iter()
         .flat_map(|&d| SchemeKind::all().into_iter().map(move |s| (d, s)))
         .collect();
-    run_cells(opts.threads, cells, |(d, scheme)| StalenessRow {
-        t_d: d.t_d_s(),
-        dissemination: d,
-        scheme,
-        report: repeat_mean(model, scheme, opts, |cfg| {
-            cfg.lambda = lambda;
-            cfg.dissemination = Some(d);
-        }),
+    let progress = Progress::new(opts.progress, cells.len());
+    run_cells(opts.threads, cells, |(d, scheme)| {
+        progress.cell(
+            || format!("dissemination={} scheme={}", d.label(), scheme.name()),
+            || StalenessRow {
+                t_d: d.t_d_s(),
+                dissemination: d,
+                scheme,
+                report: repeat_mean(model, scheme, opts, |cfg| {
+                    cfg.lambda = lambda;
+                    cfg.dissemination = Some(d);
+                }),
+            },
+        )
     })
 }
 
@@ -467,16 +520,22 @@ pub fn topology_sweep(
                 .map(move |s| (kind.clone(), s))
         })
         .collect();
+    let progress = Progress::new(opts.progress, cells.len());
     run_cells(opts.threads, cells, |(kind, scheme)| {
-        let report = repeat_mean(model, scheme, opts, |cfg| {
-            cfg.lambda = lambda;
-            cfg.topology = Some(kind.clone());
-        });
-        TopologyRow {
-            topology: kind,
-            scheme,
-            report,
-        }
+        progress.cell(
+            || format!("topology={} scheme={}", kind.label(), scheme.name()),
+            || {
+                let report = repeat_mean(model, scheme, opts, |cfg| {
+                    cfg.lambda = lambda;
+                    cfg.topology = Some(kind.clone());
+                });
+                TopologyRow {
+                    topology: kind.clone(),
+                    scheme,
+                    report,
+                }
+            },
+        )
     })
 }
 
@@ -577,10 +636,16 @@ pub fn lambda_sweep(model: DnnModel, lambdas: &[f64], opts: &SweepOpts) -> Vec<R
         .iter()
         .flat_map(|&lambda| SchemeKind::all().into_iter().map(move |s| (lambda, s)))
         .collect();
-    run_cells(opts.threads, cells, |(lambda, scheme)| Row {
-        x: lambda,
-        scheme,
-        report: run_point(model, lambda, scheme, opts),
+    let progress = Progress::new(opts.progress, cells.len());
+    run_cells(opts.threads, cells, |(lambda, scheme)| {
+        progress.cell(
+            || format!("lambda={lambda} scheme={}", scheme.name()),
+            || Row {
+                x: lambda,
+                scheme,
+                report: run_point(model, lambda, scheme, opts),
+            },
+        )
     })
 }
 
@@ -606,17 +671,23 @@ pub fn scale(ns: &[usize], opts: &SweepOpts) -> Vec<Row> {
         .iter()
         .flat_map(|&n| SchemeKind::all().into_iter().map(move |s| (n, s)))
         .collect();
-    run_cells(opts.threads, cells, |(n, scheme)| Row {
-        x: n as f64,
-        scheme,
-        report: repeat_mean(DnnModel::Vgg19, scheme, opts, |cfg| {
-            cfg.n = n;
-            // the sweep coordinate IS the torus size: a --topology
-            // override would pin the geometry and turn the N-axis
-            // into a lie, so it is cleared per cell
-            cfg.topology = None;
-            cfg.lambda = 25.0;
-        }),
+    let progress = Progress::new(opts.progress, cells.len());
+    run_cells(opts.threads, cells, |(n, scheme)| {
+        progress.cell(
+            || format!("n={n} scheme={}", scheme.name()),
+            || Row {
+                x: n as f64,
+                scheme,
+                report: repeat_mean(DnnModel::Vgg19, scheme, opts, |cfg| {
+                    cfg.n = n;
+                    // the sweep coordinate IS the torus size: a --topology
+                    // override would pin the geometry and turn the N-axis
+                    // into a lie, so it is cleared per cell
+                    cfg.topology = None;
+                    cfg.lambda = 25.0;
+                }),
+            },
+        )
     })
 }
 

@@ -70,6 +70,17 @@
 //! sweep measures how completion rate and tail delay degrade with `T_d` —
 //! the §V-B stale-state herding effect.
 //!
+//! ## Observability
+//!
+//! Both engines thread an [`obs::Obs`] telemetry instance through their
+//! hot paths: a ring-buffered task-lifecycle trace recorder with a
+//! Chrome-trace/Perfetto JSON exporter (`--trace <path>[:<max-events>]`),
+//! a runtime counter registry serialized as the `telemetry` block of
+//! [`metrics::Report::to_json`] (`--telemetry`), and per-cell sweep
+//! progress on stderr (`--progress`). Every hook branches on a single
+//! `enabled` flag, so disabled runs stay bit-for-bit identical
+//! (property-enforced by `tests/prop_telemetry.rs`).
+//!
 //! * **L2 (python/compile/model.py)** — JAX slice forwards, lowered once
 //!   to `artifacts/*.hlo.txt` at build time.
 //! * **L1 (python/compile/kernels/)** — Pallas matmul/conv kernels inside
@@ -113,6 +124,7 @@ pub mod engine;
 pub mod eventsim;
 pub mod metrics;
 pub mod nn;
+pub mod obs;
 pub mod offload;
 pub mod runtime;
 pub mod satellite;

@@ -89,6 +89,15 @@ OPTIONS
                   default; 1 = sequential — rows are byte-identical)
   --quick         smaller slot budget          --json FILE   export rows
   --retain-outcomes  buffer per-task outcomes (metrics stream by default)
+  --telemetry     runtime counters: adds a `telemetry` block to the report
+                  JSON (queue/utilization samples, GA kernel stats, ...)
+  --trace F[:M]   record task-lifecycle spans to a Chrome-trace/Perfetto
+                  JSON file (ring buffer of M events, default 1000000);
+                  implies the counters of --telemetry
+  --counter-period S  sim-seconds between telemetry counter samples
+                  (default 1)
+  --progress      per-cell sweep progress lines on stderr (stdout clean)
+  --force         experiment: overwrite existing results/*.json files
   --requests K    serve: number of requests    --workers W   exec workers";
 
 fn load_cfg(args: &Args) -> Result<SimConfig, String> {
@@ -112,6 +121,7 @@ fn sweep_opts(args: &Args, cfg: &SimConfig) -> exp::SweepOpts {
     o.scenario = cfg.scenario;
     o.dissemination = cfg.dissemination;
     o.topology = cfg.topology.clone();
+    o.progress = args.has_flag("progress");
     o
 }
 
@@ -168,17 +178,32 @@ fn experiment(args: &Args) -> Result<(), String> {
         .map(String::as_str)
         .unwrap_or("all");
     std::fs::create_dir_all("results").map_err(|e| e.to_string())?;
-    let run_fig = |name: &str, rows: Vec<exp::Row>, xn: &str| -> Result<(), String> {
-        println!("{}", exp::render_panels_with_charts(name, &rows, xn));
-        let path = format!("results/{name}.json");
-        std::fs::write(&path, exp::rows_to_json(&rows).to_string())
-            .map_err(|e| e.to_string())?;
-        println!("wrote {path}\n");
+    // Refuse to clobber an existing results/*.json without --force: sweep
+    // outputs are expensive to regenerate, and the guard runs BEFORE the
+    // sweep so a refused run costs nothing.
+    let force = args.has_flag("force");
+    let guard = |path: &str| -> Result<(), String> {
+        if !force && std::path::Path::new(path).exists() {
+            return Err(format!(
+                "refusing to overwrite {path}; pass --force to replace it"
+            ));
+        }
         Ok(())
     };
+    let run_fig =
+        |name: &str, make_rows: &dyn Fn() -> Vec<exp::Row>, xn: &str| -> Result<(), String> {
+            let path = format!("results/{name}.json");
+            guard(&path)?;
+            let rows = make_rows();
+            println!("{}", exp::render_panels_with_charts(name, &rows, xn));
+            std::fs::write(&path, exp::rows_to_json(&rows).to_string())
+                .map_err(|e| e.to_string())?;
+            println!("wrote {path}\n");
+            Ok(())
+        };
     match id {
-        "fig2" => run_fig("fig2", exp::fig2(&opts), "lambda")?,
-        "fig3" => run_fig("fig3", exp::fig3(&opts), "lambda")?,
+        "fig2" => run_fig("fig2", &|| exp::fig2(&opts), "lambda")?,
+        "fig3" => run_fig("fig3", &|| exp::fig3(&opts), "lambda")?,
         "eventsim" => {
             // the λ-sweep on the event-driven engine under cfg.scenario
             // (default model matches fig2's ResNet101; --model overrides);
@@ -190,10 +215,9 @@ fn experiment(args: &Args) -> Result<(), String> {
                 DnnModel::Resnet101
             };
             let lams = exp::eventsim_lambdas(args.has_flag("quick"));
-            let rows = exp::eventsim_sweep(model, &lams, cfg.scenario, &opts);
             run_fig(
                 &format!("eventsim-{}-{}", cfg.scenario.name(), model.name()),
-                rows,
+                &|| exp::eventsim_sweep(model, &lams, cfg.scenario, &opts),
                 "lambda",
             )?
         }
@@ -212,6 +236,7 @@ fn experiment(args: &Args) -> Result<(), String> {
             if args.get("engine").is_none() {
                 opts.engine = satkit::config::EngineKind::Event;
             }
+            guard("results/staleness.json")?;
             let periods = exp::staleness_periods(quick);
             let rows = exp::staleness_sweep(cfg.model, lambda, &periods, &opts);
             println!(
@@ -226,8 +251,8 @@ fn experiment(args: &Args) -> Result<(), String> {
                 )
             );
             let json = exp::staleness_json(cfg.model, lambda, opts.engine, quick, &rows);
-            let bench_path = std::env::var("SATKIT_STALENESS_JSON")
-                .unwrap_or_else(|_| "BENCH_staleness.json".into());
+            let bench_path =
+                satkit::bench::out_path("SATKIT_STALENESS_JSON", "BENCH_staleness.json");
             satkit::bench::write_json(&bench_path, &json).map_err(|e| e.to_string())?;
             println!("wrote {bench_path}");
             satkit::bench::write_json("results/staleness.json", &json)
@@ -250,6 +275,7 @@ fn experiment(args: &Args) -> Result<(), String> {
             }
             // per-cell topologies replace any --topology override
             opts.topology = None;
+            guard("results/topology.json")?;
             let kinds = exp::topology_grid(cfg.n);
             let rows = exp::topology_sweep(cfg.model, lambda, &kinds, &opts);
             println!(
@@ -264,15 +290,15 @@ fn experiment(args: &Args) -> Result<(), String> {
                 )
             );
             let json = exp::topology_json(cfg.model, lambda, opts.engine, quick, &rows);
-            let bench_path = std::env::var("SATKIT_TOPOLOGY_JSON")
-                .unwrap_or_else(|_| "BENCH_topology.json".into());
+            let bench_path =
+                satkit::bench::out_path("SATKIT_TOPOLOGY_JSON", "BENCH_topology.json");
             satkit::bench::write_json(&bench_path, &json).map_err(|e| e.to_string())?;
             println!("wrote {bench_path}");
             satkit::bench::write_json("results/topology.json", &json)
                 .map_err(|e| e.to_string())?;
             println!("wrote results/topology.json\n");
         }
-        "scale" => run_fig("scale", exp::scale(&exp::default_ns(), &opts), "N")?,
+        "scale" => run_fig("scale", &|| exp::scale(&exp::default_ns(), &opts), "N")?,
         "ablation-split" => {
             let rows = exp::ablation_split(cfg.model, &exp::default_lambdas(), &opts);
             println!("== ablation: Alg.1 balanced vs naive equal-layer split ({}) ==", cfg.model.name());
@@ -302,9 +328,9 @@ fn experiment(args: &Args) -> Result<(), String> {
             }
         }
         "all" => {
-            run_fig("fig2", exp::fig2(&opts), "lambda")?;
-            run_fig("fig3", exp::fig3(&opts), "lambda")?;
-            run_fig("scale", exp::scale(&exp::default_ns(), &opts), "N")?;
+            run_fig("fig2", &|| exp::fig2(&opts), "lambda")?;
+            run_fig("fig3", &|| exp::fig3(&opts), "lambda")?;
+            run_fig("scale", &|| exp::scale(&exp::default_ns(), &opts), "N")?;
         }
         other => return Err(format!("unknown experiment '{other}'")),
     }

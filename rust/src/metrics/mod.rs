@@ -267,6 +267,11 @@ pub struct Report {
     /// with `SimConfig::retain_outcomes` (plots/traces); `None` on the
     /// default streaming path.
     pub outcomes: Option<Vec<TaskOutcome>>,
+    /// Runtime-counter block from the observability layer — `Some` only
+    /// when telemetry was enabled (`--telemetry` / `--trace`); `None`
+    /// keeps the default JSON output byte-identical to pre-telemetry
+    /// builds. See `crate::obs`.
+    pub telemetry: Option<Json>,
 }
 
 impl Report {
@@ -288,6 +293,7 @@ impl Report {
             horizon_s: 0.0,
             last_finish_s: c.last_finish_s,
             outcomes: c.retained,
+            telemetry: None,
         }
     }
 
@@ -333,7 +339,7 @@ impl Report {
     }
 
     pub fn to_json(&self) -> Json {
-        Json::obj(vec![
+        let mut pairs = vec![
             ("total_tasks", Json::Num(self.total_tasks as f64)),
             ("completed_tasks", Json::Num(self.completed_tasks as f64)),
             ("completion_rate", Json::Num(self.completion_rate())),
@@ -350,7 +356,11 @@ impl Report {
             ("horizon_s", Json::Num(self.horizon_s)),
             ("throughput_per_s", Json::Num(self.throughput_per_s())),
             ("drain_secs", Json::Num(self.drain_secs())),
-        ])
+        ];
+        if let Some(t) = &self.telemetry {
+            pairs.push(("telemetry", t.clone()));
+        }
+        Json::obj(pairs)
     }
 
     /// One figure-style table row.

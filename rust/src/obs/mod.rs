@@ -1,0 +1,808 @@
+//! Run-time observability: task-lifecycle tracing, runtime counters, and
+//! Chrome-trace/Perfetto export (`--trace`, `--telemetry`).
+//!
+//! Both engines own one [`Obs`] instance and call its inline hooks from
+//! their hot paths. Every hook branches on a single `enabled` flag and
+//! returns immediately when telemetry is off — no trait objects, no RNG
+//! draws, no float arithmetic, no allocation — so disabled runs stay
+//! bit-for-bit identical to an uninstrumented engine (enforced by
+//! `tests/prop_telemetry.rs`). All timestamps are **simulation time**
+//! (seconds, exported as microseconds); the subsystem never reads a wall
+//! clock, so traces are deterministic per seed.
+//!
+//! Three surfaces:
+//!
+//! * **Trace recorder** — a bounded ring buffer of [`SpanKind`] spans
+//!   (task lifetime, ground-to-satellite uplink, segment execution, ISL
+//!   transfer) and [`InstantKind`] instants (offload decisions, faults,
+//!   handovers, state broadcasts), exported as Chrome-trace-event JSON
+//!   loadable by `chrome://tracing` and <https://ui.perfetto.dev> via
+//!   [`Obs::write_trace`]. When the buffer fills, the **oldest** records
+//!   are overwritten (and counted), so the tail of a long run survives.
+//! * **Counter registry** — cheap aggregate counters ([`Counters`]) plus
+//!   per-satellite queue-depth/utilization samples on a sim-time cadence
+//!   ([`Obs::maybe_sample`]) and engine gauges (event-queue depth,
+//!   live-task slab occupancy, [`Obs::sample_engine`]), serialized as the
+//!   `telemetry` block of [`crate::metrics::Report::to_json`] via
+//!   [`Obs::telemetry_json`].
+//! * **Sweep progress** — `--progress` per-cell start/finish lines on
+//!   stderr, implemented by `satkit::experiments` (stdout untouched).
+//!
+//! Trace pid/tid mapping: task-scoped spans (`task`, `uplink`) live in
+//! pid 0 with `tid = task id`; per-satellite spans (`exec`, `isl`) live
+//! in `pid = 1 + satellite id` with `tid = task id`; instants are global
+//! (pid 0, tid 0); counter samples attach to their satellite's pid.
+
+use crate::satellite::Satellite;
+use crate::util::json::Json;
+
+/// Ring-buffer capacity used when `--trace <path>` gives no `:<max-events>`
+/// suffix (~40 MB of records; a quick-mode run stays far below it).
+pub const DEFAULT_MAX_EVENTS: usize = 1_000_000;
+
+/// Where (and how much) to trace: parsed from `--trace <path>[:<max-events>]`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TraceConfig {
+    /// Output path of the Chrome-trace-event JSON file.
+    pub path: String,
+    /// Ring-buffer capacity in records; oldest records are overwritten
+    /// once exceeded.
+    pub max_events: usize,
+}
+
+impl TraceConfig {
+    /// Parse `<path>[:<max-events>]`. A trailing `:<integer>` is the ring
+    /// capacity; any other suffix (e.g. a Windows drive or a `:` in the
+    /// filename) stays part of the path.
+    pub fn parse(spec: &str) -> Result<TraceConfig, String> {
+        if let Some((path, suffix)) = spec.rsplit_once(':') {
+            if let Ok(n) = suffix.parse::<usize>() {
+                if n == 0 {
+                    return Err("--trace: max-events must be >= 1".into());
+                }
+                if path.is_empty() {
+                    return Err("--trace: path must be non-empty".into());
+                }
+                return Ok(TraceConfig {
+                    path: path.to_string(),
+                    max_events: n,
+                });
+            }
+        }
+        if spec.is_empty() {
+            return Err("--trace: path must be non-empty".into());
+        }
+        Ok(TraceConfig {
+            path: spec.to_string(),
+            max_events: DEFAULT_MAX_EVENTS,
+        })
+    }
+}
+
+/// Telemetry configuration carried on [`crate::config::SimConfig`] (so
+/// both engines receive it through their ordinary constructors).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ObsConfig {
+    /// Collect runtime counters and emit the `telemetry` report block
+    /// (`--telemetry`; implied by `--trace`).
+    pub telemetry: bool,
+    /// Record and export a task-lifecycle trace (`--trace`).
+    pub trace: Option<TraceConfig>,
+    /// Sim-time cadence of per-satellite counter samples [s]
+    /// (`--counter-period`; the event engine samples at the first event
+    /// on or after each due time, the slotted engine at slot starts).
+    pub counter_period_s: f64,
+}
+
+impl Default for ObsConfig {
+    fn default() -> Self {
+        ObsConfig {
+            telemetry: false,
+            trace: None,
+            counter_period_s: 1.0,
+        }
+    }
+}
+
+impl ObsConfig {
+    /// True when any telemetry surface is on — the single flag every
+    /// engine hook branches on.
+    pub fn enabled(&self) -> bool {
+        self.telemetry || self.trace.is_some()
+    }
+
+    /// Range-check the knobs.
+    pub fn validate(&self) -> Result<(), String> {
+        if !self.counter_period_s.is_finite() || self.counter_period_s <= 0.0 {
+            return Err(format!(
+                "counter period {} must be finite and > 0",
+                self.counter_period_s
+            ));
+        }
+        Ok(())
+    }
+}
+
+/// Duration-event classes of the task lifecycle.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SpanKind {
+    /// Whole task lifetime: arrival to completion/drop.
+    Task,
+    /// Ground-to-satellite uplink of the raw input (Eq. 5 prefix).
+    Uplink,
+    /// One segment executing on its satellite.
+    Exec,
+    /// Intermediate activation hopping ISLs to the next satellite (Eq. 7).
+    Isl,
+}
+
+impl SpanKind {
+    /// Chrome-trace event name.
+    pub fn name(self) -> &'static str {
+        match self {
+            SpanKind::Task => "task",
+            SpanKind::Uplink => "uplink",
+            SpanKind::Exec => "exec",
+            SpanKind::Isl => "isl",
+        }
+    }
+}
+
+/// Instant-event classes (zero-duration marks on the global track).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum InstantKind {
+    /// An offload decision was made (arg = origin satellite).
+    Decide,
+    /// A fault-injector tick toggled satellites (arg = newly failed count).
+    Fault,
+    /// A serving-satellite handover (arg = affected areas).
+    Handover,
+    /// A `StateBroadcast` / gossip tick refreshed disseminated views
+    /// (arg = broadcast ordinal).
+    Broadcast,
+}
+
+impl InstantKind {
+    /// Chrome-trace event name.
+    pub fn name(self) -> &'static str {
+        match self {
+            InstantKind::Decide => "decide",
+            InstantKind::Fault => "fault",
+            InstantKind::Handover => "handover",
+            InstantKind::Broadcast => "broadcast",
+        }
+    }
+}
+
+/// One ring-buffer record (kept `Copy`-small: the hot path stores these
+/// by value, the exporter does all formatting after the run).
+#[derive(Clone, Copy, Debug)]
+enum Rec {
+    Span {
+        kind: SpanKind,
+        t0: f64,
+        t1: f64,
+        sat: u32,
+        task: u64,
+        k: u16,
+        ok: bool,
+    },
+    Instant {
+        kind: InstantKind,
+        t: f64,
+        arg: u32,
+    },
+    SatSample {
+        t: f64,
+        sat: u32,
+        queue: f64,
+        util: f64,
+    },
+    EngineSample {
+        t: f64,
+        events: u32,
+        live: u32,
+        slots: u32,
+    },
+}
+
+/// Bounded trace storage: a `Vec` ring with overwrite-oldest semantics.
+struct TraceRecorder {
+    path: String,
+    cap: usize,
+    buf: Vec<Rec>,
+    /// Index of the oldest record once the ring has wrapped.
+    head: usize,
+    dropped: u64,
+    total: u64,
+}
+
+impl TraceRecorder {
+    fn new(cfg: &TraceConfig) -> TraceRecorder {
+        TraceRecorder {
+            path: cfg.path.clone(),
+            cap: cfg.max_events.max(1),
+            buf: Vec::new(),
+            head: 0,
+            dropped: 0,
+            total: 0,
+        }
+    }
+
+    #[inline]
+    fn push(&mut self, r: Rec) {
+        self.total += 1;
+        if self.buf.len() < self.cap {
+            self.buf.push(r);
+        } else {
+            self.buf[self.head] = r;
+            self.head += 1;
+            if self.head == self.cap {
+                self.head = 0;
+            }
+            self.dropped += 1;
+        }
+    }
+
+    /// Records in chronological order (ring unrolled from the oldest).
+    fn iter(&self) -> impl Iterator<Item = &Rec> {
+        self.buf[self.head..].iter().chain(self.buf[..self.head].iter())
+    }
+
+    fn write_events(&self, out: &mut String) {
+        use std::fmt::Write as _;
+        // sim seconds -> trace microseconds
+        let us = |t: f64| t * 1e6;
+        let mut first = true;
+        for r in self.iter() {
+            if !first {
+                out.push(',');
+            }
+            first = false;
+            match *r {
+                Rec::Span {
+                    kind,
+                    t0,
+                    t1,
+                    sat,
+                    task,
+                    k,
+                    ok,
+                } => {
+                    let pid = match kind {
+                        SpanKind::Task | SpanKind::Uplink => 0,
+                        SpanKind::Exec | SpanKind::Isl => 1 + sat,
+                    };
+                    let _ = write!(
+                        out,
+                        "{{\"name\":\"{}\",\"cat\":\"{}\",\"ph\":\"X\",\"ts\":{},\"dur\":{},\"pid\":{pid},\"tid\":{task},\"args\":{{\"sat\":{sat},\"seg\":{k},\"ok\":{ok}}}}}",
+                        kind.name(),
+                        kind.name(),
+                        us(t0),
+                        (us(t1) - us(t0)).max(0.0),
+                    );
+                }
+                Rec::Instant { kind, t, arg } => {
+                    let _ = write!(
+                        out,
+                        "{{\"name\":\"{}\",\"cat\":\"mark\",\"ph\":\"i\",\"s\":\"g\",\"ts\":{},\"pid\":0,\"tid\":0,\"args\":{{\"v\":{arg}}}}}",
+                        kind.name(),
+                        us(t),
+                    );
+                }
+                Rec::SatSample {
+                    t,
+                    sat,
+                    queue,
+                    util,
+                } => {
+                    let _ = write!(
+                        out,
+                        "{{\"name\":\"sat{sat}\",\"ph\":\"C\",\"ts\":{},\"pid\":{},\"tid\":0,\"args\":{{\"queue_mflops\":{queue},\"utilization\":{util}}}}}",
+                        us(t),
+                        1 + sat,
+                    );
+                }
+                Rec::EngineSample {
+                    t,
+                    events,
+                    live,
+                    slots,
+                } => {
+                    let _ = write!(
+                        out,
+                        "{{\"name\":\"engine\",\"ph\":\"C\",\"ts\":{},\"pid\":0,\"tid\":0,\"args\":{{\"event_queue\":{events},\"live_tasks\":{live},\"arena_slots\":{slots}}}}}",
+                        us(t),
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// Aggregate runtime counters, summed whenever telemetry is enabled and
+/// serialized into the report's `telemetry` block.
+#[derive(Clone, Debug, Default)]
+pub struct Counters {
+    /// Task-lifetime spans recorded (= tasks that reached an outcome).
+    pub spans_task: u64,
+    /// Uplink spans recorded.
+    pub spans_uplink: u64,
+    /// Segment-execution spans recorded.
+    pub spans_exec: u64,
+    /// ISL-transfer spans recorded.
+    pub spans_isl: u64,
+    /// Task spans that ended in completion.
+    pub tasks_completed: u64,
+    /// Task spans that ended in a drop.
+    pub tasks_dropped: u64,
+    /// Offload-decision instants.
+    pub instants_decide: u64,
+    /// Fault-tick instants (ticks that toggled at least one satellite).
+    pub instants_fault: u64,
+    /// Handover instants.
+    pub instants_handover: u64,
+    /// State-broadcast / gossip-tick instants.
+    pub instants_broadcast: u64,
+    /// Per-satellite counter sampling rounds taken.
+    pub samples: u64,
+    /// Highest sampled per-satellite queue depth [MFLOP].
+    pub queue_peak_mflops: f64,
+    /// Sum of sampled utilizations (mean = `util_sum / util_points`).
+    pub util_sum: f64,
+    /// Number of per-satellite utilization points sampled.
+    pub util_points: u64,
+    /// Peak sampled event-queue depth (event engine).
+    pub event_queue_peak: u64,
+    /// Peak sampled live-task count (event engine slab arena).
+    pub live_tasks_peak: u64,
+    /// Peak sampled slab-arena slot count (allocation high-water mark).
+    pub arena_slots_peak: u64,
+}
+
+/// The engine-facing telemetry instance: counters plus the optional
+/// trace ring, behind one `enabled` flag.
+pub struct Obs {
+    enabled: bool,
+    counter_period_s: f64,
+    next_sample_s: f64,
+    trace: Option<TraceRecorder>,
+    counters: Counters,
+}
+
+impl Obs {
+    /// A disabled instance: every hook is a single predicted-false branch.
+    pub fn off() -> Obs {
+        Obs {
+            enabled: false,
+            counter_period_s: 1.0,
+            next_sample_s: 0.0,
+            trace: None,
+            counters: Counters::default(),
+        }
+    }
+
+    /// Build from the config block ([`Obs::off`] when nothing is on).
+    pub fn from_config(cfg: &ObsConfig) -> Obs {
+        if !cfg.enabled() {
+            return Obs::off();
+        }
+        Obs {
+            enabled: true,
+            counter_period_s: cfg.counter_period_s,
+            next_sample_s: 0.0,
+            trace: cfg.trace.as_ref().map(TraceRecorder::new),
+            counters: Counters::default(),
+        }
+    }
+
+    /// The single flag every hook branches on.
+    #[inline]
+    pub fn enabled(&self) -> bool {
+        self.enabled
+    }
+
+    /// The aggregate counters collected so far.
+    pub fn counters(&self) -> &Counters {
+        &self.counters
+    }
+
+    /// Record a whole-task lifetime span (arrival to completion/drop).
+    #[inline]
+    pub fn task_span(&mut self, t0: f64, t1: f64, origin: usize, task: u64, completed: bool) {
+        if !self.enabled {
+            return;
+        }
+        self.counters.spans_task += 1;
+        if completed {
+            self.counters.tasks_completed += 1;
+        } else {
+            self.counters.tasks_dropped += 1;
+        }
+        if let Some(tr) = &mut self.trace {
+            tr.push(Rec::Span {
+                kind: SpanKind::Task,
+                t0,
+                t1,
+                sat: origin as u32,
+                task,
+                k: 0,
+                ok: completed,
+            });
+        }
+    }
+
+    /// Record an uplink / segment-exec / ISL-transfer span for segment `k`
+    /// of `task` on satellite `sat`.
+    #[inline]
+    pub fn seg_span(&mut self, kind: SpanKind, t0: f64, t1: f64, sat: usize, task: u64, k: usize) {
+        if !self.enabled {
+            return;
+        }
+        match kind {
+            SpanKind::Task => self.counters.spans_task += 1,
+            SpanKind::Uplink => self.counters.spans_uplink += 1,
+            SpanKind::Exec => self.counters.spans_exec += 1,
+            SpanKind::Isl => self.counters.spans_isl += 1,
+        }
+        if let Some(tr) = &mut self.trace {
+            tr.push(Rec::Span {
+                kind,
+                t0,
+                t1,
+                sat: sat as u32,
+                task,
+                k: k as u16,
+                ok: true,
+            });
+        }
+    }
+
+    /// Record an instant event (fault, handover, broadcast, decision).
+    #[inline]
+    pub fn instant(&mut self, kind: InstantKind, t: f64, arg: usize) {
+        if !self.enabled {
+            return;
+        }
+        match kind {
+            InstantKind::Decide => self.counters.instants_decide += 1,
+            InstantKind::Fault => self.counters.instants_fault += 1,
+            InstantKind::Handover => self.counters.instants_handover += 1,
+            InstantKind::Broadcast => self.counters.instants_broadcast += 1,
+        }
+        if let Some(tr) = &mut self.trace {
+            tr.push(Rec::Instant {
+                kind,
+                t,
+                arg: arg as u32,
+            });
+        }
+    }
+
+    /// Sample per-satellite queue depth and utilization if the sim-time
+    /// cadence is due at `t`; returns true when a sample was taken (the
+    /// event engine follows up with [`Obs::sample_engine`]). Samples land
+    /// on the first call at or after each due time, so consecutive
+    /// samples are at least one period apart.
+    #[inline]
+    pub fn maybe_sample(&mut self, t: f64, sats: &[Satellite]) -> bool {
+        if !self.enabled || t < self.next_sample_s {
+            return false;
+        }
+        self.next_sample_s = t + self.counter_period_s;
+        self.counters.samples += 1;
+        for (id, s) in sats.iter().enumerate() {
+            let queue = s.loaded();
+            let util = s.utilization();
+            if queue > self.counters.queue_peak_mflops {
+                self.counters.queue_peak_mflops = queue;
+            }
+            self.counters.util_sum += util;
+            self.counters.util_points += 1;
+            if let Some(tr) = &mut self.trace {
+                tr.push(Rec::SatSample {
+                    t,
+                    sat: id as u32,
+                    queue,
+                    util,
+                });
+            }
+        }
+        true
+    }
+
+    /// Engine-level gauges (event engine): pending-event-queue depth,
+    /// live-task count, and slab-arena slot high-water mark.
+    #[inline]
+    pub fn sample_engine(
+        &mut self,
+        t: f64,
+        event_queue: usize,
+        live_tasks: usize,
+        arena_slots: usize,
+    ) {
+        if !self.enabled {
+            return;
+        }
+        let c = &mut self.counters;
+        c.event_queue_peak = c.event_queue_peak.max(event_queue as u64);
+        c.live_tasks_peak = c.live_tasks_peak.max(live_tasks as u64);
+        c.arena_slots_peak = c.arena_slots_peak.max(arena_slots as u64);
+        if let Some(tr) = &mut self.trace {
+            tr.push(Rec::EngineSample {
+                t,
+                events: event_queue as u32,
+                live: live_tasks as u32,
+                slots: arena_slots as u32,
+            });
+        }
+    }
+
+    /// The full trace as a Chrome-trace-event JSON document
+    /// (`{"traceEvents":[...]}`), empty when no trace is configured.
+    pub fn to_chrome_json(&self) -> String {
+        let mut out = String::from("{\"traceEvents\":[");
+        if let Some(tr) = &self.trace {
+            tr.write_events(&mut out);
+        }
+        out.push_str("]}");
+        out
+    }
+
+    /// Write the trace file if one was configured (end of run). IO
+    /// failures are reported on stderr, never panicking a finished run.
+    pub fn write_trace(&self) {
+        let Some(tr) = &self.trace else {
+            return;
+        };
+        let json = self.to_chrome_json();
+        match std::fs::write(&tr.path, json) {
+            Ok(()) => eprintln!(
+                "trace: wrote {} ({} of {} events retained, {} dropped)",
+                tr.path,
+                tr.buf.len(),
+                tr.total,
+                tr.dropped
+            ),
+            Err(e) => eprintln!("trace: writing {} failed: {e}", tr.path),
+        }
+    }
+
+    /// The `telemetry` block for [`crate::metrics::Report::to_json`]:
+    /// counter aggregates, trace bookkeeping, dissemination broadcasts,
+    /// and the scheme's kernel stats (`scheme`, e.g. GA memo/index-cache
+    /// hit rates — `None` for schemes without internal caches).
+    pub fn telemetry_json(&self, engine: &str, broadcasts: u64, scheme: Option<Json>) -> Json {
+        let c = &self.counters;
+        let num = |x: u64| Json::Num(x as f64);
+        let mut pairs = vec![
+            ("engine", Json::Str(engine.into())),
+            ("counter_period_s", Json::Num(self.counter_period_s)),
+            (
+                "spans",
+                Json::obj(vec![
+                    ("task", num(c.spans_task)),
+                    ("uplink", num(c.spans_uplink)),
+                    ("exec", num(c.spans_exec)),
+                    ("isl", num(c.spans_isl)),
+                ]),
+            ),
+            (
+                "instants",
+                Json::obj(vec![
+                    ("decide", num(c.instants_decide)),
+                    ("fault", num(c.instants_fault)),
+                    ("handover", num(c.instants_handover)),
+                    ("broadcast", num(c.instants_broadcast)),
+                ]),
+            ),
+            ("samples", num(c.samples)),
+            ("queue_peak_mflops", Json::Num(c.queue_peak_mflops)),
+            (
+                "utilization_mean",
+                Json::Num(if c.util_points > 0 {
+                    c.util_sum / c.util_points as f64
+                } else {
+                    0.0
+                }),
+            ),
+            ("event_queue_peak", num(c.event_queue_peak)),
+            ("live_tasks_peak", num(c.live_tasks_peak)),
+            ("arena_slots_peak", num(c.arena_slots_peak)),
+            ("state_broadcasts", num(broadcasts)),
+        ];
+        if let Some(tr) = &self.trace {
+            pairs.push((
+                "trace",
+                Json::obj(vec![
+                    ("path", Json::Str(tr.path.clone())),
+                    ("events", num(tr.total)),
+                    ("retained", num(tr.buf.len() as u64)),
+                    ("dropped", num(tr.dropped)),
+                    ("max_events", num(tr.cap as u64)),
+                ]),
+            ));
+        }
+        if let Some(s) = scheme {
+            pairs.push(("scheme", s));
+        }
+        Json::obj(pairs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn traced(max_events: usize) -> Obs {
+        Obs::from_config(&ObsConfig {
+            telemetry: true,
+            trace: Some(TraceConfig {
+                path: "unused.json".into(),
+                max_events,
+            }),
+            counter_period_s: 1.0,
+        })
+    }
+
+    #[test]
+    fn trace_spec_parses_path_and_cap() {
+        let t = TraceConfig::parse("trace.json").unwrap();
+        assert_eq!(t.path, "trace.json");
+        assert_eq!(t.max_events, DEFAULT_MAX_EVENTS);
+        let t = TraceConfig::parse("out/run.json:5000").unwrap();
+        assert_eq!(t.path, "out/run.json");
+        assert_eq!(t.max_events, 5000);
+        // a non-numeric suffix belongs to the path
+        let t = TraceConfig::parse("odd:name.json").unwrap();
+        assert_eq!(t.path, "odd:name.json");
+        assert_eq!(t.max_events, DEFAULT_MAX_EVENTS);
+        assert!(TraceConfig::parse("").is_err());
+        assert!(TraceConfig::parse(":5").is_err());
+        assert!(TraceConfig::parse("t.json:0").is_err());
+    }
+
+    #[test]
+    fn obs_config_enable_and_validate() {
+        let mut c = ObsConfig::default();
+        assert!(!c.enabled());
+        assert!(c.validate().is_ok());
+        c.telemetry = true;
+        assert!(c.enabled());
+        c.telemetry = false;
+        c.trace = Some(TraceConfig::parse("t.json").unwrap());
+        assert!(c.enabled());
+        c.counter_period_s = 0.0;
+        assert!(c.validate().is_err());
+        c.counter_period_s = f64::NAN;
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn disabled_hooks_record_nothing() {
+        let mut o = Obs::off();
+        assert!(!o.enabled());
+        o.task_span(0.0, 1.0, 0, 1, true);
+        o.seg_span(SpanKind::Exec, 0.0, 1.0, 0, 1, 0);
+        o.instant(InstantKind::Fault, 0.5, 1);
+        let sats = vec![Satellite::new(0, 3000.0, 15_000.0)];
+        assert!(!o.maybe_sample(5.0, &sats));
+        o.sample_engine(5.0, 10, 10, 10);
+        assert_eq!(o.counters().spans_task, 0);
+        assert_eq!(o.counters().samples, 0);
+        assert_eq!(o.to_chrome_json(), "{\"traceEvents\":[]}");
+    }
+
+    #[test]
+    fn ring_overwrites_oldest_and_exports_chronologically() {
+        let mut o = traced(4);
+        for i in 0..6 {
+            o.instant(InstantKind::Broadcast, i as f64, i);
+        }
+        let doc = Json::parse(&o.to_chrome_json()).unwrap();
+        let events = doc.get("traceEvents").unwrap().as_arr().unwrap();
+        assert_eq!(events.len(), 4);
+        // oldest two (t=0, t=1) were overwritten; order stays chronological
+        let ts: Vec<f64> = events
+            .iter()
+            .map(|e| e.get("ts").unwrap().as_f64().unwrap())
+            .collect();
+        assert_eq!(ts, vec![2e6, 3e6, 4e6, 5e6]);
+        let tj = o.telemetry_json("event", 0, None);
+        let trace = tj.get("trace").unwrap();
+        assert_eq!(trace.get("events").unwrap().as_f64(), Some(6.0));
+        assert_eq!(trace.get("retained").unwrap().as_f64(), Some(4.0));
+        assert_eq!(trace.get("dropped").unwrap().as_f64(), Some(2.0));
+    }
+
+    #[test]
+    fn sampling_follows_sim_time_cadence() {
+        let mut o = traced(64);
+        let mut sats = vec![
+            Satellite::new(0, 3000.0, 15_000.0),
+            Satellite::new(1, 3000.0, 15_000.0),
+        ];
+        sats[1].try_load(4500.0);
+        assert!(o.maybe_sample(0.0, &sats));
+        assert!(!o.maybe_sample(0.5, &sats));
+        assert!(o.maybe_sample(1.25, &sats));
+        assert!(!o.maybe_sample(2.0, &sats)); // next due at 2.25
+        assert!(o.maybe_sample(2.5, &sats));
+        assert_eq!(o.counters().samples, 3);
+        assert_eq!(o.counters().util_points, 6);
+        assert_eq!(o.counters().queue_peak_mflops, 4500.0);
+    }
+
+    #[test]
+    fn chrome_export_covers_every_record_class() {
+        let mut o = traced(64);
+        o.task_span(0.0, 2.0, 3, 7, false);
+        o.seg_span(SpanKind::Uplink, 0.0, 0.25, 3, 7, 0);
+        o.seg_span(SpanKind::Exec, 0.25, 1.0, 5, 7, 0);
+        o.seg_span(SpanKind::Isl, 1.0, 1.5, 5, 7, 0);
+        o.instant(InstantKind::Decide, 0.0, 3);
+        o.instant(InstantKind::Fault, 0.5, 1);
+        o.instant(InstantKind::Handover, 0.75, 2);
+        o.instant(InstantKind::Broadcast, 1.0, 1);
+        let sats = vec![Satellite::new(0, 3000.0, 15_000.0)];
+        assert!(o.maybe_sample(1.0, &sats));
+        o.sample_engine(1.0, 9, 4, 12);
+        let doc = Json::parse(&o.to_chrome_json()).unwrap();
+        let events = doc.get("traceEvents").unwrap().as_arr().unwrap();
+        assert_eq!(events.len(), 10);
+        let names: Vec<&str> = events
+            .iter()
+            .map(|e| e.get("name").unwrap().as_str().unwrap())
+            .collect();
+        for want in [
+            "task", "uplink", "exec", "isl", "decide", "fault", "handover", "broadcast",
+            "sat0", "engine",
+        ] {
+            assert!(names.contains(&want), "missing {want} in {names:?}");
+        }
+        // exec span lives in its satellite's pid and carries the task tid
+        let exec = events
+            .iter()
+            .find(|e| e.get("name").unwrap().as_str() == Some("exec"))
+            .unwrap();
+        assert_eq!(exec.get("pid").unwrap().as_f64(), Some(6.0));
+        assert_eq!(exec.get("tid").unwrap().as_f64(), Some(7.0));
+        assert_eq!(exec.get("dur").unwrap().as_f64(), Some(0.75e6));
+        // counters aggregated alongside
+        let c = o.counters();
+        assert_eq!(c.spans_task, 1);
+        assert_eq!(c.tasks_dropped, 1);
+        assert_eq!(c.instants_decide, 1);
+        assert_eq!(c.event_queue_peak, 9);
+        assert_eq!(c.arena_slots_peak, 12);
+    }
+
+    #[test]
+    fn telemetry_json_shape() {
+        let mut o = Obs::from_config(&ObsConfig {
+            telemetry: true,
+            trace: None,
+            counter_period_s: 0.5,
+        });
+        o.task_span(0.0, 1.0, 0, 1, true);
+        let j = o.telemetry_json(
+            "slotted",
+            3,
+            Some(Json::obj(vec![("memo_hits", Json::Num(5.0))])),
+        );
+        assert_eq!(j.get("engine").unwrap().as_str(), Some("slotted"));
+        assert_eq!(j.get("counter_period_s").unwrap().as_f64(), Some(0.5));
+        assert_eq!(
+            j.get("spans").unwrap().get("task").unwrap().as_f64(),
+            Some(1.0)
+        );
+        assert_eq!(j.get("state_broadcasts").unwrap().as_f64(), Some(3.0));
+        assert_eq!(
+            j.get("scheme").unwrap().get("memo_hits").unwrap().as_f64(),
+            Some(5.0)
+        );
+        assert!(j.get("trace").is_none());
+        // serializes as parseable JSON
+        assert!(Json::parse(&j.to_string()).is_ok());
+    }
+}

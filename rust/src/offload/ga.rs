@@ -52,6 +52,7 @@ use super::{
     MEMO_MAX_L,
 };
 use crate::topology::SatId;
+use crate::util::json::Json;
 use crate::util::rng::Pcg64;
 use std::collections::HashMap;
 use std::hash::{BuildHasherDefault, Hasher};
@@ -112,6 +113,28 @@ pub struct GaScheme {
     /// deficit memo keyed on the packed chromosome (cleared per decision:
     /// satellite loads change between tasks).
     memo: Memo,
+    /// Lifetime kernel counters, read once at end of run for the report's
+    /// telemetry block (plain integer increments on paths already taken —
+    /// no effect on decisions or the RNG stream).
+    stats: GaStats,
+}
+
+/// Lifetime counters over the GA kernel's caching layers: chromosome-memo
+/// hit/miss totals and the shape of the batched Eq. 12 passes. Exposed via
+/// [`OffloadScheme::telemetry`] alongside the
+/// [`GaScheme::index_cache_stats`] pair.
+#[derive(Default, Clone, Debug)]
+pub struct GaStats {
+    /// Chromosome evaluations answered from the per-decision memo.
+    pub memo_hits: u64,
+    /// Chromosome evaluations that went to the batched kernel.
+    pub memo_misses: u64,
+    /// Number of [`DecisionSpaceIndex::deficit_batch`] invocations.
+    pub batches: u64,
+    /// Total chromosomes across all batched passes (`memo_misses`
+    /// restated per-batch; mean batch size = `batch_chromosomes /
+    /// batches`).
+    pub batch_chromosomes: u64,
 }
 
 #[derive(Clone, Debug)]
@@ -145,6 +168,7 @@ fn eval_generation(
     batch: &mut BatchScratch,
     bufs: &mut EvalBuffers,
     memo: &mut Memo,
+    stats: &mut GaStats,
     pop: &mut [Individual],
 ) {
     let memoizable = index.n_segments() <= MEMO_MAX_L;
@@ -154,6 +178,7 @@ fn eval_generation(
         if memoizable {
             if let Some(&d) = memo.get(&pack(&ind.chrom)) {
                 ind.deficit = d;
+                stats.memo_hits += 1;
                 continue;
             }
         }
@@ -163,6 +188,9 @@ fn eval_generation(
     if bufs.miss.is_empty() {
         return;
     }
+    stats.memo_misses += bufs.miss.len() as u64;
+    stats.batches += 1;
+    stats.batch_chromosomes += bufs.miss.len() as u64;
     index.deficit_batch(batch, &bufs.genes, &mut bufs.out);
     debug_assert_eq!(bufs.out.len(), bufs.miss.len());
     for (&i, &d) in bufs.miss.iter().zip(&bufs.out) {
@@ -196,7 +224,13 @@ impl GaScheme {
             batch: BatchScratch::default(),
             bufs: EvalBuffers::default(),
             memo: Memo::default(),
+            stats: GaStats::default(),
         }
+    }
+
+    /// Lifetime chromosome-memo / batch-kernel counters (see [`GaStats`]).
+    pub fn ga_stats(&self) -> &GaStats {
+        &self.stats
     }
 
     /// (hits, misses) of the per-decision [`DecisionSpaceIndex`] reuse
@@ -368,6 +402,7 @@ impl OffloadScheme for GaScheme {
             &mut self.batch,
             &mut self.bufs,
             &mut self.memo,
+            &mut self.stats,
             &mut self.pop,
         );
         let mut best_prev = f64::INFINITY;
@@ -418,6 +453,7 @@ impl OffloadScheme for GaScheme {
                 &mut self.batch,
                 &mut self.bufs,
                 &mut self.memo,
+                &mut self.stats,
                 &mut self.pop[parents..],
             );
 
@@ -443,6 +479,7 @@ impl OffloadScheme for GaScheme {
                 &mut self.batch,
                 &mut self.bufs,
                 &mut self.memo,
+                &mut self.stats,
                 &mut self.pop[summoned_from..],
             );
         }
@@ -458,6 +495,21 @@ impl OffloadScheme for GaScheme {
 
     fn kind(&self) -> SchemeKind {
         SchemeKind::Scc
+    }
+
+    fn telemetry(&self) -> Option<Json> {
+        let (index_hits, index_misses) = self.index_cache_stats();
+        Some(Json::obj(vec![
+            ("memo_hits", Json::Num(self.stats.memo_hits as f64)),
+            ("memo_misses", Json::Num(self.stats.memo_misses as f64)),
+            ("index_cache_hits", Json::Num(index_hits as f64)),
+            ("index_cache_misses", Json::Num(index_misses as f64)),
+            ("deficit_batches", Json::Num(self.stats.batches as f64)),
+            (
+                "batch_chromosomes",
+                Json::Num(self.stats.batch_chromosomes as f64),
+            ),
+        ]))
     }
 }
 
@@ -675,6 +727,33 @@ mod tests {
         let mut g = GaScheme::new(6);
         let chrom = g.decide(&c);
         assert_eq!(chrom.len(), 3);
+    }
+
+    #[test]
+    fn ga_stats_count_memo_and_batches() {
+        let (topo, sats) = setup(6);
+        let ga = GaConfig::default();
+        let cands = topo.decision_space(8, 2);
+        let segs = vec![500.0, 700.0, 300.0];
+        let c = ctx(&topo, &sats, &cands, &segs, &ga);
+        let mut s = GaScheme::new(9);
+        for _ in 0..3 {
+            s.decide(&c);
+        }
+        let st = s.ga_stats();
+        assert!(st.memo_misses > 0, "every decision batches at least once");
+        assert!(st.batches > 0);
+        assert_eq!(st.batch_chromosomes, st.memo_misses);
+        // telemetry block mirrors the counters
+        let t = s.telemetry().expect("GA exposes kernel telemetry");
+        assert_eq!(
+            t.get("memo_misses").and_then(|j| j.as_f64()),
+            Some(st.memo_misses as f64)
+        );
+        assert_eq!(
+            t.get("deficit_batches").and_then(|j| j.as_f64()),
+            Some(st.batches as f64)
+        );
     }
 
     #[test]

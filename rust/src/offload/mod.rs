@@ -14,6 +14,7 @@ pub mod rrp;
 use crate::config::GaConfig;
 use crate::state::StateView;
 use crate::topology::{Constellation, SatId};
+use crate::util::json::Json;
 
 /// Which scheme to run (CLI / experiment selector).
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
@@ -617,6 +618,15 @@ pub trait OffloadScheme {
     /// hot-path gate that cannot change any decision.
     fn learns(&self) -> bool {
         false
+    }
+
+    /// Kernel-level counters for the report's `telemetry` block, read once
+    /// at end of run (never on the hot path). Default `None`: schemes
+    /// without internal caches contribute nothing. [`ga::GaScheme`]
+    /// overrides this with its chromosome-memo / index-cache hit rates and
+    /// `deficit_batch` sizes.
+    fn telemetry(&self) -> Option<Json> {
+        None
     }
 }
 

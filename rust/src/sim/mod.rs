@@ -20,6 +20,7 @@ pub mod dynamics;
 use crate::comm::{GatewayChannel, IslLink};
 use crate::config::{EngineKind, SimConfig};
 use crate::metrics::{MetricsCollector, Report, TaskOutcome};
+use crate::obs::{InstantKind, Obs, SpanKind};
 use crate::offload::{make_scheme, OffloadContext, OffloadScheme, SchemeKind};
 use crate::satellite::{Admission, Satellite};
 use crate::splitting::balanced_split;
@@ -257,6 +258,12 @@ impl Simulation {
             d_max,
         );
         let mut faults = self.faults.take();
+        // Telemetry sink ([`crate::obs`]): every hook is a single branch on
+        // its `enabled` flag, so default runs stay bit-for-bit identical
+        // (`tests/prop_telemetry.rs`). The slotted clock has no event
+        // queue, so spans are reconstructed from the same analytic Eq. 5/7
+        // offsets that define `finish_time_s`.
+        let mut obs = Obs::from_config(&self.cfg.obs);
         // Per-task scratch, reused across every task of the run (the
         // decision hot path allocates nothing in steady state).
         let mut seg_buf: Vec<f64> = Vec::new();
@@ -264,11 +271,23 @@ impl Simulation {
         for slot in 0..slots {
             // fault injection: newly failed satellites lose queued work
             if let Some(f) = faults.as_mut() {
-                for id in f.step() {
+                let newly = f.step();
+                if !newly.is_empty() {
+                    obs.instant(InstantKind::Fault, slot as f64, newly.len());
+                }
+                for id in newly {
                     self.satellites[id].reset();
                 }
             }
             let t_slot = slot as f64;
+            obs.maybe_sample(t_slot, &self.satellites);
+            if let Some(h) = &self.handover {
+                let dwell = h.dwell_secs() as usize;
+                if slot > 0 && slot % dwell == 0 {
+                    obs.instant(InstantKind::Handover, t_slot, slot / dwell);
+                }
+            }
+            let bc_before = tracker.broadcasts();
             // gossip disseminates at slot granularity here: one snapshot
             // per slot start, before any origin acts, so a peer's state is
             // MH hops × 1 slot old in every origin's view
@@ -283,6 +302,9 @@ impl Simulation {
                 tracker.broadcast_now(t_slot, &self.satellites, &self.topo, &serving);
             }
             tracker.advance_to(t_slot);
+            if tracker.broadcasts() != bc_before {
+                obs.instant(InstantKind::Broadcast, t_slot, spaces.len());
+            }
             for (area, (origin0, candidates0)) in spaces.iter().enumerate() {
                 // orbital handover: the serving satellite (and with it the
                 // decision space) drifts along the orbit
@@ -337,6 +359,7 @@ impl Simulation {
                         };
                         self.scheme.decide_into(&ctx, &mut chrom);
                     }
+                    obs.instant(InstantKind::Decide, task.arrival_time_s, origin);
                     // the origin tracks its own placements in its view
                     for (&c, &q) in chrom.iter().zip(segments) {
                         tracker.record_local(area, c, q, t_slot, &self.satellites);
@@ -345,10 +368,22 @@ impl Simulation {
 
                     // execute: walk segments, Eq. 4 admission, Eq. 5/7 delays
                     let uplink = self.gateway.upload_secs(602_112.0 * task.scale, &mut self.rng);
+                    obs.seg_span(
+                        SpanKind::Uplink,
+                        task.arrival_time_s,
+                        task.arrival_time_s + uplink,
+                        origin,
+                        task.id,
+                        0,
+                    );
                     let mut comp = 0.0f64;
                     let mut tran = 0.0f64;
                     let mut drop_point = l + 1; // completed
                     let mut dropped_at = None;
+                    // Trace cursor: the analytic offsets Eq. 5/7 charge
+                    // against the arrival, laid out back-to-back exactly
+                    // as `finish_time_s` accumulates them.
+                    let mut cursor = task.arrival_time_s;
                     for (k, (&c, &q)) in chrom.iter().zip(segments).enumerate() {
                         if q == 0.0 {
                             continue; // padded empty block
@@ -360,11 +395,29 @@ impl Simulation {
                                 metrics.sat(c).comp_delay_s += dt;
                                 metrics.sat(c).assigned_mflops += q;
                                 metrics.sat(c).segments_executed += 1;
+                                obs.seg_span(
+                                    SpanKind::Exec,
+                                    cursor,
+                                    cursor + dt,
+                                    c,
+                                    task.id,
+                                    k,
+                                );
+                                cursor += dt;
                                 if k + 1 < chrom.len() {
                                     let hops = self.topo.hops(c, chrom[k + 1]) as f64;
                                     let tt = hops * q * self.kappa;
                                     tran += tt;
                                     metrics.sat(c).tran_delay_s += tt;
+                                    obs.seg_span(
+                                        SpanKind::Isl,
+                                        cursor,
+                                        cursor + tt,
+                                        c,
+                                        task.id,
+                                        k + 1,
+                                    );
+                                    cursor += tt;
                                 }
                             }
                             Admission::Rejected => {
@@ -390,6 +443,13 @@ impl Simulation {
                         self.scheme
                             .observe(&ctx, &chrom, dropped_at, comp + tran);
                     }
+                    obs.task_span(
+                        task.arrival_time_s,
+                        task.arrival_time_s + comp + tran,
+                        origin,
+                        task.id,
+                        drop_point > l,
+                    );
                     metrics.record(TaskOutcome {
                         task_id: task.id,
                         origin,
@@ -409,7 +469,16 @@ impl Simulation {
                 s.service_slot();
             }
         }
-        metrics.finish(slots)
+        obs.write_trace();
+        let mut report = metrics.finish(slots);
+        if obs.enabled() {
+            report.telemetry = Some(obs.telemetry_json(
+                "slotted",
+                tracker.broadcasts(),
+                self.scheme.telemetry(),
+            ));
+        }
+        report
     }
 
     /// Access to the per-satellite end state (used by tests/examples).

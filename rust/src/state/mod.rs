@@ -289,6 +289,9 @@ pub struct ViewTracker {
     /// Per-area log of own placements `(t, sat, q)` newer than the oldest
     /// retained snapshot, replayed on top of lagged snapshots (Gossip).
     logs: Vec<Vec<(f64, SatId, f64)>>,
+    /// Eager dissemination captures performed ([`ViewTracker::broadcast_now`]);
+    /// telemetry only — see [`ViewTracker::broadcasts`].
+    broadcasts: u64,
 }
 
 impl ViewTracker {
@@ -319,6 +322,7 @@ impl ViewTracker {
             ring,
             depth: d_max + 1,
             logs: vec![Vec::new(); if gossip { n_areas } else { 0 }],
+            broadcasts: 0,
         }
     }
 
@@ -361,6 +365,7 @@ impl ViewTracker {
         match self.kind {
             DisseminationKind::Instant => {}
             DisseminationKind::Periodic { .. } => {
+                self.broadcasts += 1;
                 self.generation += 1;
                 for (area, view) in self.views.iter_mut().enumerate() {
                     for (v, s) in view.iter_mut().zip(sats) {
@@ -370,6 +375,7 @@ impl ViewTracker {
                 }
             }
             DisseminationKind::Gossip { .. } => {
+                self.broadcasts += 1;
                 // push the new snapshot, recycling the evicted buffer
                 let mut snap = if self.ring.len() >= self.depth {
                     self.ring.pop_back().map(|(_, v)| v).unwrap_or_default()
@@ -447,6 +453,15 @@ impl ViewTracker {
                 self.logs[area].push((t, sat, q));
             }
         }
+    }
+
+    /// Dissemination rounds driven so far, for telemetry: eager
+    /// [`ViewTracker::broadcast_now`] captures (the event engine, and the
+    /// slotted engine under gossip) or lazily opened periodic windows via
+    /// [`ViewTracker::advance_to`] (the slotted engine), whichever the
+    /// engine actually exercised. Zero for instant dissemination.
+    pub fn broadcasts(&self) -> u64 {
+        self.broadcasts.max(self.generation)
     }
 
     /// The state view `area`'s origin decides on right now.
@@ -612,6 +627,36 @@ mod tests {
         // stands in for the snapshot lag.
         tr.broadcast_now(2.0, &live, &topo, &[origin]);
         assert_eq!(tr.view(0, &live).loaded(nb), 3000.0);
+    }
+
+    #[test]
+    fn broadcast_counter_tracks_rounds() {
+        let topo = Constellation::torus(3);
+        let live = sats(9);
+        let mut tr = ViewTracker::new(
+            DisseminationKind::Periodic { period_s: 2.0 },
+            9,
+            1,
+            2,
+        );
+        assert_eq!(tr.broadcasts(), 0);
+        tr.broadcast_now(2.0, &live, &topo, &[0]);
+        tr.broadcast_now(4.0, &live, &topo, &[0]);
+        assert_eq!(tr.broadcasts(), 2);
+        // the slotted engine's lazy periodic path opens windows without
+        // ever calling broadcast_now; those count too
+        let mut lazy = ViewTracker::new(
+            DisseminationKind::Periodic { period_s: 1.0 },
+            9,
+            1,
+            2,
+        );
+        lazy.advance_to(3.0);
+        assert_eq!(lazy.broadcasts(), 4); // windows at t = 0, 1, 2, 3
+        // instant dissemination never broadcasts
+        let mut inst = ViewTracker::new(DisseminationKind::Instant, 9, 1, 2);
+        inst.broadcast_now(1.0, &live, &topo, &[0]);
+        assert_eq!(inst.broadcasts(), 0);
     }
 
     #[test]

@@ -1,0 +1,250 @@
+//! Property tests for the telemetry layer (`satkit::obs`): observability
+//! must be free when off and read-only when on.
+//!
+//! * With telemetry disabled (the default), both engines produce reports
+//!   bit-for-bit identical to the pre-telemetry path — the hooks are one
+//!   untaken branch, nothing else.
+//! * Enabling `--telemetry` / `--trace` changes NO report field except
+//!   adding the `telemetry` JSON block: the recorder observes the
+//!   simulation, it never participates in it (no RNG draws, no float
+//!   reordering).
+//! * A recorded trace actually covers the task lifecycle: task / uplink /
+//!   exec / ISL spans, broadcast instants, per-satellite counter samples.
+
+use satkit::config::{EngineKind, SimConfig};
+use satkit::metrics::Report;
+use satkit::obs::TraceConfig;
+use satkit::offload::SchemeKind;
+use satkit::state::DisseminationKind;
+use satkit::util::json::Json;
+use satkit::util::quickcheck::{check_no_shrink, default_cases};
+use satkit::util::rng::Pcg64;
+
+/// Compare two reports field-by-field, bit-for-bit on floats (the
+/// `telemetry` block is deliberately NOT compared — it is the one field
+/// observability is allowed to add).
+fn assert_reports_identical(a: &Report, b: &Report) -> Result<(), String> {
+    if a.total_tasks != b.total_tasks {
+        return Err(format!("task counts differ: {} vs {}", a.total_tasks, b.total_tasks));
+    }
+    if a.completed_tasks != b.completed_tasks {
+        return Err(format!(
+            "completion counts differ: {} vs {}",
+            a.completed_tasks, b.completed_tasks
+        ));
+    }
+    for (name, x, y) in [
+        ("avg_delay_ms", a.avg_delay_ms, b.avg_delay_ms),
+        ("avg_comp_ms", a.avg_comp_ms, b.avg_comp_ms),
+        ("avg_tran_ms", a.avg_tran_ms, b.avg_tran_ms),
+        ("avg_uplink_ms", a.avg_uplink_ms, b.avg_uplink_ms),
+        ("workload_variance", a.workload_variance, b.workload_variance),
+        ("workload_mean", a.workload_mean, b.workload_mean),
+        ("delay_p50_ms", a.delay_p50_ms, b.delay_p50_ms),
+        ("delay_p95_ms", a.delay_p95_ms, b.delay_p95_ms),
+    ] {
+        if x.to_bits() != y.to_bits() {
+            return Err(format!("{name} differs: {x} vs {y}"));
+        }
+    }
+    Ok(())
+}
+
+fn random_case(r: &mut Pcg64) -> (usize, f64, usize, SchemeKind, EngineKind, u64) {
+    let n = *r.choose(&[4usize, 6]);
+    let lambda = r.f64_in(2.0, 12.0);
+    let slots = r.usize_in(3, 9);
+    let scheme = *r.choose(&SchemeKind::all());
+    let engine = *r.choose(&[EngineKind::Slotted, EngineKind::Event]);
+    let seed = r.next_u64() % 1000;
+    (n, lambda, slots, scheme, engine, seed)
+}
+
+/// Enabling the counter registry changes no report field except adding
+/// the `telemetry` block, on either engine, for any scheme: stripping the
+/// block yields byte-identical report JSON.
+#[test]
+fn prop_telemetry_counters_do_not_perturb_runs() {
+    check_no_shrink(
+        "telemetry-counters-do-not-perturb",
+        default_cases().min(20),
+        random_case,
+        |&(n, lambda, slots, scheme, engine, seed)| {
+            let cfg = SimConfig {
+                n,
+                lambda,
+                slots,
+                seed,
+                engine,
+                ..SimConfig::default()
+            };
+            let off = satkit::engine::run(&cfg, scheme);
+            if off.telemetry.is_some() {
+                return Err("telemetry block present on a default run".into());
+            }
+            let mut on_cfg = cfg.clone();
+            on_cfg.obs.telemetry = true;
+            let mut on = satkit::engine::run(&on_cfg, scheme);
+            assert_reports_identical(&off, &on)?;
+            if on.telemetry.is_none() {
+                return Err("telemetry block missing on an enabled run".into());
+            }
+            // stripping the block must make the JSON byte-identical
+            on.telemetry = None;
+            let (a, b) = (off.to_json().to_string(), on.to_json().to_string());
+            if a != b {
+                return Err(format!("report JSON diverged beyond `telemetry`: {a} vs {b}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+fn temp_trace_path(tag: &str) -> std::path::PathBuf {
+    std::env::temp_dir().join(format!("satkit_prop_trace_{tag}_{}.json", std::process::id()))
+}
+
+/// `--trace` (both engines × all four schemes) changes no report field
+/// except the `telemetry` block, and the written file parses as a Chrome
+/// trace with at least one event.
+#[test]
+fn trace_only_adds_telemetry_block_all_schemes_both_engines() {
+    for engine in [EngineKind::Slotted, EngineKind::Event] {
+        for scheme in SchemeKind::all() {
+            let cfg = SimConfig {
+                n: 4,
+                lambda: 6.0,
+                slots: 5,
+                seed: 11,
+                engine,
+                ..SimConfig::default()
+            };
+            let off = satkit::engine::run(&cfg, scheme);
+            let path = temp_trace_path(&format!("{}_{}", engine.name(), scheme.name()));
+            let mut traced_cfg = cfg.clone();
+            traced_cfg.obs.trace = Some(TraceConfig {
+                path: path.to_string_lossy().into_owned(),
+                max_events: 100_000,
+            });
+            let traced = satkit::engine::run(&traced_cfg, scheme);
+            assert_reports_identical(&off, &traced)
+                .unwrap_or_else(|e| panic!("{engine:?}/{scheme:?}: {e}"));
+            assert!(
+                traced.telemetry.is_some(),
+                "{engine:?}/{scheme:?}: traced run must carry the telemetry block"
+            );
+            let text = std::fs::read_to_string(&path)
+                .unwrap_or_else(|e| panic!("{engine:?}/{scheme:?}: reading trace: {e}"));
+            let _ = std::fs::remove_file(&path);
+            let json = Json::parse(&text)
+                .unwrap_or_else(|e| panic!("{engine:?}/{scheme:?}: trace not JSON: {e}"));
+            let events = json
+                .get("traceEvents")
+                .and_then(|e| e.as_arr())
+                .unwrap_or_else(|| panic!("{engine:?}/{scheme:?}: no traceEvents array"));
+            assert!(!events.is_empty(), "{engine:?}/{scheme:?}: empty trace");
+        }
+    }
+}
+
+/// A traced run on the event engine under periodic dissemination covers
+/// the whole lifecycle: task/uplink/exec/ISL spans, broadcast instants,
+/// and per-satellite + engine counter samples, all with sane timestamps.
+#[test]
+fn trace_covers_task_lifecycle() {
+    let path = temp_trace_path("lifecycle");
+    let mut cfg = SimConfig {
+        n: 6,
+        lambda: 10.0,
+        slots: 8,
+        seed: 3,
+        engine: EngineKind::Event,
+        ..SimConfig::default()
+    };
+    cfg.dissemination = Some(DisseminationKind::Periodic { period_s: 1.0 });
+    cfg.obs.trace = Some(TraceConfig {
+        path: path.to_string_lossy().into_owned(),
+        max_events: 1_000_000,
+    });
+    let report = satkit::engine::run(&cfg, SchemeKind::Scc);
+    assert!(report.completed_tasks > 0, "need completions to trace");
+
+    let text = std::fs::read_to_string(&path).expect("trace written");
+    let _ = std::fs::remove_file(&path);
+    let json = Json::parse(&text).expect("trace parses");
+    let events = json
+        .get("traceEvents")
+        .and_then(|e| e.as_arr())
+        .expect("traceEvents array");
+
+    let mut names: Vec<&str> = Vec::new();
+    for ev in events {
+        let name = ev.get("name").and_then(|n| n.as_str()).expect("event name");
+        let ts = ev.get("ts").and_then(|t| t.as_f64()).expect("event ts");
+        assert!(ts >= 0.0 && ts.is_finite(), "bad ts {ts} on {name}");
+        if let Some(dur) = ev.get("dur").and_then(|d| d.as_f64()) {
+            assert!(dur >= 0.0, "negative dur on {name}");
+        }
+        if !names.contains(&name) {
+            names.push(name);
+        }
+    }
+    for expect in ["task", "uplink", "exec", "isl", "decide", "broadcast", "engine"] {
+        assert!(names.contains(&expect), "trace lacks {expect:?} events: {names:?}");
+    }
+    assert!(
+        names.iter().any(|n| n.starts_with("sat")),
+        "trace lacks per-satellite counter samples: {names:?}"
+    );
+
+    // the telemetry block mirrors what the trace recorded
+    let t = report.telemetry.expect("telemetry block");
+    let spans = t.get("spans").expect("spans");
+    assert!(spans.get("task").and_then(|v| v.as_f64()).unwrap_or(0.0) > 0.0);
+    assert!(spans.get("exec").and_then(|v| v.as_f64()).unwrap_or(0.0) > 0.0);
+    assert!(
+        t.get("state_broadcasts").and_then(|v| v.as_f64()).unwrap_or(0.0) > 0.0,
+        "periodic dissemination must count broadcasts"
+    );
+    let trace_meta = t.get("trace").expect("trace meta");
+    assert_eq!(
+        trace_meta.get("retained").and_then(|v| v.as_f64()),
+        Some(events.len() as f64),
+        "trace meta retained count must match the file"
+    );
+}
+
+/// The ring cap truncates the trace to the newest events and reports the
+/// drop count instead of growing without bound.
+#[test]
+fn trace_ring_cap_bounds_the_file() {
+    let path = temp_trace_path("capped");
+    let mut cfg = SimConfig {
+        n: 4,
+        lambda: 8.0,
+        slots: 6,
+        seed: 5,
+        engine: EngineKind::Event,
+        ..SimConfig::default()
+    };
+    cfg.obs.trace = Some(TraceConfig {
+        path: path.to_string_lossy().into_owned(),
+        max_events: 16,
+    });
+    let report = satkit::engine::run(&cfg, SchemeKind::Random);
+    let text = std::fs::read_to_string(&path).expect("trace written");
+    let _ = std::fs::remove_file(&path);
+    let events = Json::parse(&text)
+        .expect("trace parses")
+        .get("traceEvents")
+        .and_then(|e| e.as_arr())
+        .map(|a| a.len())
+        .unwrap_or(0);
+    assert!(events <= 16, "ring cap exceeded: {events}");
+    let t = report.telemetry.expect("telemetry block");
+    let meta = t.get("trace").expect("trace meta");
+    assert!(
+        meta.get("dropped").and_then(|v| v.as_f64()).unwrap_or(0.0) > 0.0,
+        "a capped busy run must report dropped events"
+    );
+}
