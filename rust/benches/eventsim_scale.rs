@@ -51,8 +51,9 @@ fn cfg(engine: EngineKind, lambda: f64, slots: usize) -> SimConfig {
 type Payload = [u64; 4];
 
 /// Run one ≥ `floor`-task event-engine point, print its row, and return
-/// the `scale` JSON record.
-fn scale_point(name: &str, c: &SimConfig, floor: u64) -> Json {
+/// the `scale` JSON record plus the report (so callers can compare runs
+/// bit-for-bit without paying for a second run).
+fn scale_point(name: &str, c: &SimConfig, floor: u64) -> (Json, satkit::metrics::Report) {
     let t0 = std::time::Instant::now();
     let rep = satkit::engine::run(c, SchemeKind::Random);
     let wall = t0.elapsed().as_secs_f64();
@@ -74,13 +75,14 @@ fn scale_point(name: &str, c: &SimConfig, floor: u64) -> Json {
         "scale run produced {} tasks, expected >= {floor}",
         rep.total_tasks
     );
-    Json::obj(vec![
+    let row = Json::obj(vec![
         ("point", Json::Str(name.to_string())),
         ("tasks", Json::Num(rep.total_tasks as f64)),
         ("completed", Json::Num(rep.completed_tasks as f64)),
         ("wall_s", Json::Num(wall)),
         ("tasks_per_s", Json::Num(tasks_per_s)),
-    ])
+    ]);
+    (row, rep)
 }
 
 fn main() {
@@ -208,7 +210,7 @@ fn main() {
         (25_000.0, 48, 1_000_000u64)
     };
     let c = cfg(EngineKind::Event, lambda, slots);
-    scale_rows.push(scale_point("admission-bound", &c, floor));
+    scale_rows.push(scale_point("admission-bound", &c, floor).0);
 
     section("million-task live path (event engine, Random, capacity-matched)");
     // Execution-bound operating point: satellite capacity is raised so
@@ -219,7 +221,77 @@ fn main() {
     let mut c = cfg(EngineKind::Event, lambda, slots);
     c.satellite.capacity_mflops = 5_000_000.0;
     c.satellite.max_workload_mflops = 50_000_000.0;
-    scale_rows.push(scale_point("execution-bound", &c, floor));
+    let (row, exec_single) = scale_point("execution-bound", &c, floor);
+    scale_rows.push(row);
+
+    section("sharded pending-event queue (execution-bound, k=8 vs single heap)");
+    // The per-plane sharded heap on the heap-heaviest operating point.
+    // Same (time, seq) total order at any shard count, so the report must
+    // be byte-identical to the single-heap run above — asserted here so a
+    // bench run doubles as a whole-run regression check.
+    c.shards = 8;
+    let (row, exec_sharded) = scale_point("execution-bound sharded-queue k=8", &c, floor);
+    scale_rows.push(row);
+    assert_eq!(
+        (exec_single.total_tasks, exec_single.completed_tasks),
+        (exec_sharded.total_tasks, exec_sharded.completed_tasks),
+        "sharded queue diverged from single heap"
+    );
+    assert_eq!(
+        exec_single.avg_delay_ms.to_bits(),
+        exec_sharded.avg_delay_ms.to_bits(),
+        "sharded queue diverged from single heap (avg_delay bits)"
+    );
+
+    section("per-repeat sharded dispatch (million-task point, R repeats)");
+    // The headline `sharded` row: R independent repeats of the
+    // admission-bound operating point fanned over all cores through
+    // `run_cells_repeated` vs forced-sequential. Per-repeat seeds are
+    // position-derived, so the fan-out is byte-identical — only the wall
+    // clock moves. Acceptance wants > 1.5x on a multi-core runner; the
+    // CI gate warns instead of failing where cores are scarce.
+    let repeats = if quick { 2usize } else { 4 };
+    let rc = cfg(EngineKind::Event, lambda, slots);
+    let run_rep = |threads: usize| -> (f64, Vec<satkit::metrics::Report>) {
+        let t0 = std::time::Instant::now();
+        let groups = satkit::experiments::run_cells_repeated(
+            threads,
+            repeats,
+            vec![rc.clone()],
+            |c, r| {
+                let mut cc = c.clone();
+                cc.seed = c.seed + r as u64 * 1000;
+                satkit::engine::run(&cc, SchemeKind::Random)
+            },
+        );
+        (t0.elapsed().as_secs_f64(), groups.into_iter().next().unwrap())
+    };
+    let (wall_seq, reps_seq) = run_rep(1);
+    let (wall_par, reps_par) = run_rep(0);
+    for (a, b) in reps_seq.iter().zip(&reps_par) {
+        assert_eq!(
+            (a.total_tasks, a.avg_delay_ms.to_bits()),
+            (b.total_tasks, b.avg_delay_ms.to_bits()),
+            "per-repeat fan-out diverged from sequential"
+        );
+    }
+    let total_tasks: u64 = reps_par.iter().map(|r| r.total_tasks).sum();
+    let seq_tps = total_tasks as f64 / wall_seq.max(1e-9);
+    let par_tps = total_tasks as f64 / wall_par.max(1e-9);
+    let speedup = wall_seq / wall_par.max(1e-9);
+    println!(
+        "sharded (R={repeats}): seq {wall_seq:.2}s ({seq_tps:.0} tasks/s) \
+         -> fanned {wall_par:.2}s ({par_tps:.0} tasks/s), speedup {speedup:.2}x"
+    );
+    scale_rows.push(Json::obj(vec![
+        ("point", Json::Str("sharded".to_string())),
+        ("repeats", Json::Num(repeats as f64)),
+        ("tasks", Json::Num(total_tasks as f64)),
+        ("wall_s", Json::Num(wall_par)),
+        ("tasks_per_s", Json::Num(par_tps)),
+        ("single_shard_tasks_per_s", Json::Num(seq_tps)),
+        ("speedup", Json::Num(speedup)),
+    ]));
 
     let path = satkit::bench::out_path("SATKIT_EVENTSIM_JSON", "BENCH_eventsim.json");
     let n_scale = scale_rows.len();

@@ -123,6 +123,36 @@ fn main() {
         },
     ));
 
+    // the same batch through the explicit SIMD lanes (`--features simd`):
+    // when the feature is off or the CPU lacks the lanes this measures
+    // the scalar dispatcher again, and the row label says so — the CI
+    // perf gate only hard-asserts on the simd-active label. Bitwise
+    // self-check against the scalar oracle before timing, like the
+    // batched row above.
+    let simd_on = satkit::offload::simd_active();
+    let mut simd_outs: Vec<f64> = Vec::new();
+    index.deficit_batch(&mut batch, &flat, &mut simd_outs);
+    for (c, &d) in flat.chunks(segments.len()).zip(&simd_outs) {
+        assert_eq!(
+            d.to_bits(),
+            index.deficit(c).to_bits(),
+            "SIMD kernel diverged from the scalar oracle"
+        );
+    }
+    show(bench_per_item(
+        &format!(
+            "simd deficit_batch(L=4, |A_x|=25, B=64) per-chrom [{}]",
+            if simd_on { "simd-active" } else { "scalar-fallback" }
+        ),
+        gen_size,
+        100,
+        iters * 50,
+        || {
+            index.deficit_batch(&mut batch, &flat, &mut simd_outs);
+            std::hint::black_box(simd_outs.last().copied());
+        },
+    ));
+
     section("scheme decide() per task");
     for kind in SchemeKind::all() {
         let mut scheme = make_scheme(kind, 7);

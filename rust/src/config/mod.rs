@@ -251,6 +251,14 @@ pub struct SimConfig {
     /// re-derives it. An explicit `gossip:<tick>` pins the tick and
     /// leaves this false. Maintained by the TOML/CLI loaders.
     pub gossip_tick_derived: bool,
+    /// Pending-event queue shards for the event engine (`--shards`, TOML
+    /// `shards = ...`). `1` (default) is the classic single-heap queue;
+    /// `0` means auto — one shard per orbital plane of the effective
+    /// topology; `K > 1` pins K shards. Sharding preserves the global
+    /// `(time, seq)` event order exactly, so every setting produces
+    /// byte-identical reports (enforced by `tests/prop_sharded.rs`);
+    /// ignored by the slotted engine.
+    pub shards: usize,
     /// Keep the full per-task `TaskOutcome` buffer in the report (memory
     /// grows with task count). Default false: metrics stream into
     /// constant-size accumulators so million-task runs stay flat in
@@ -287,6 +295,7 @@ impl Default for SimConfig {
             scenario: ScenarioKind::Poisson,
             dissemination: None,
             gossip_tick_derived: false,
+            shards: 1,
             retain_outcomes: false,
             obs: ObsConfig::default(),
             ga: GaConfig::default(),
@@ -459,6 +468,7 @@ impl SimConfig {
         if let Some(b) = doc.get_bool("", "retain_outcomes") {
             d.retain_outcomes = b;
         }
+        doc.read_usize("", "shards", &mut d.shards);
         if let Some(b) = doc.get_bool("obs", "telemetry") {
             d.obs.telemetry = b;
         }
@@ -566,6 +576,9 @@ impl SimConfig {
                 matches!(self.dissemination, Some(DisseminationKind::Gossip { .. }))
                     && !s.contains(':');
         }
+        if let Some(k) = args.get_parsed::<usize>("shards")? {
+            self.shards = k;
+        }
         if args.has_flag("retain-outcomes") {
             self.retain_outcomes = true;
         }
@@ -626,6 +639,13 @@ impl SimConfig {
             self.slots,
             self.seed,
         );
+        if self.shards != 1 {
+            use std::fmt::Write as _;
+            let _ = match self.shards {
+                0 => write!(t, "\nEvent queue shards                     auto (one per plane)"),
+                k => write!(t, "\nEvent queue shards                     {k}"),
+            };
+        }
         if self.obs.enabled() {
             use std::fmt::Write as _;
             let _ = write!(
@@ -931,6 +951,27 @@ capacity_mflops = 6000.0
             c.dissemination,
             Some(DisseminationKind::Periodic { period_s: 2.0 })
         );
+    }
+
+    #[test]
+    fn shards_knob_parses_and_defaults() {
+        let c = SimConfig::default();
+        assert_eq!(c.shards, 1);
+        assert!(!c.table().contains("Event queue shards"));
+
+        let t = SimConfig::from_toml("shards = 8\n").unwrap();
+        assert_eq!(t.shards, 8);
+        assert!(t.validate().is_ok());
+        assert!(t.table().contains("Event queue shards"));
+
+        let args = crate::util::cli::Args::parse(
+            "x --shards 0".split_whitespace().map(String::from),
+        );
+        let mut d = SimConfig::default();
+        d.apply_args(&args).unwrap();
+        assert_eq!(d.shards, 0);
+        assert!(d.validate().is_ok());
+        assert!(d.table().contains("auto (one per plane)"));
     }
 
     #[test]

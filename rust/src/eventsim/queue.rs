@@ -3,6 +3,18 @@
 //! ties in insertion order, which makes every run of the engine fully
 //! deterministic — two events scheduled at the same instant always pop in
 //! the order they were pushed, independent of heap internals.
+//!
+//! [`ShardedEventQueue`] partitions the same pending set across K
+//! independent heaps (one per satellite plane in the engine's routing)
+//! while preserving the exact global `(time, seq)` total order: sequence
+//! numbers come from one shared counter, and `pop` merges by scanning the
+//! K shard heads for the globally smallest key. Sharding therefore never
+//! changes what pops when — only which heap each event waits in — so a
+//! sharded run is byte-identical to the single-heap engine by
+//! construction (and by `tests/prop_sharded.rs`). The win is structural:
+//! each heap is K× smaller (shallower sift paths, hotter cache lines),
+//! and the layout is the substrate the per-repeat sweep sharding in
+//! `experiments::run_cells_repeated` scales across cores.
 
 use std::cmp::Ordering;
 use std::collections::BinaryHeap;
@@ -95,6 +107,94 @@ impl<E> EventQueue<E> {
     }
 }
 
+/// The pending-event set split across K independent heaps with one shared
+/// sequence counter. Push routes to a caller-chosen shard (the engine maps
+/// satellites to orbital planes); pop scans the K shard heads and removes
+/// the globally smallest `(time, seq)` key. Because `seq` assignment order
+/// and the pop order are both identical to a single [`EventQueue`] fed the
+/// same pushes, the shard routing affects only heap balance — never the
+/// event order — so sharded runs stay bit-for-bit reproducible.
+pub struct ShardedEventQueue<E> {
+    shards: Vec<BinaryHeap<Entry<E>>>,
+    next_seq: u64,
+    len: usize,
+}
+
+impl<E> ShardedEventQueue<E> {
+    /// `shards` heaps (clamped to >= 1), each pre-sized so the shards
+    /// together hold `cap` concurrently scheduled events without regrowth
+    /// — the sharded extension of [`EventQueue::with_capacity`].
+    pub fn with_capacity(shards: usize, cap: usize) -> ShardedEventQueue<E> {
+        let shards = shards.max(1);
+        #[allow(clippy::manual_div_ceil)] // `div_ceil` needs a newer MSRV
+        let per_shard = (cap + shards - 1) / shards;
+        ShardedEventQueue {
+            shards: (0..shards)
+                .map(|_| BinaryHeap::with_capacity(per_shard))
+                .collect(),
+            next_seq: 0,
+            len: 0,
+        }
+    }
+
+    pub fn num_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Schedule `event` at absolute `time` [s] on `shard` (taken modulo
+    /// the shard count, so callers can route by plane id directly).
+    /// Panics on non-finite time, like [`EventQueue::push`].
+    pub fn push(&mut self, shard: usize, time: f64, event: E) {
+        assert!(time.is_finite(), "event time must be finite, got {time}");
+        let seq = self.next_seq;
+        self.next_seq += 1;
+        let k = shard % self.shards.len();
+        self.shards[k].push(Entry { time, seq, event });
+        self.len += 1;
+    }
+
+    /// Index of the shard holding the globally next `(time, seq)` key.
+    fn min_shard(&self) -> Option<usize> {
+        let mut best: Option<(f64, u64, usize)> = None;
+        for (i, h) in self.shards.iter().enumerate() {
+            if let Some(e) = h.peek() {
+                let earlier = match best {
+                    None => true,
+                    Some((t, s, _)) => {
+                        e.time.total_cmp(&t).then(e.seq.cmp(&s)) == Ordering::Less
+                    }
+                };
+                if earlier {
+                    best = Some((e.time, e.seq, i));
+                }
+            }
+        }
+        best.map(|(_, _, i)| i)
+    }
+
+    /// Pop the globally earliest event; ties resolve in push order across
+    /// all shards — the same total order as a single [`EventQueue`].
+    pub fn pop(&mut self) -> Option<(f64, E)> {
+        let i = self.min_shard()?;
+        self.len -= 1;
+        self.shards[i].pop().map(|e| (e.time, e.event))
+    }
+
+    /// Timestamp of the globally next event without removing it.
+    pub fn peek_time(&self) -> Option<f64> {
+        self.min_shard()
+            .and_then(|i| self.shards[i].peek().map(|e| e.time))
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -163,5 +263,69 @@ mod tests {
     fn rejects_nan_time() {
         let mut q = EventQueue::new();
         q.push(f64::NAN, ());
+    }
+
+    #[test]
+    fn sharded_pops_in_global_time_order() {
+        let mut q = ShardedEventQueue::with_capacity(4, 16);
+        q.push(0, 3.0, "c");
+        q.push(1, 1.0, "a");
+        q.push(2, 2.0, "b");
+        assert_eq!(q.peek_time(), Some(1.0));
+        assert_eq!(q.pop(), Some((1.0, "a")));
+        assert_eq!(q.pop(), Some((2.0, "b")));
+        assert_eq!(q.pop(), Some((3.0, "c")));
+        assert_eq!(q.pop(), None);
+    }
+
+    #[test]
+    fn sharded_ties_stay_fifo_across_shards() {
+        // equal timestamps scattered over different shards must still pop
+        // in push order — the shared seq counter carries the total order
+        let mut q = ShardedEventQueue::with_capacity(3, 0);
+        for i in 0..60u32 {
+            q.push((i % 3) as usize, 1.5, i);
+        }
+        for i in 0..60u32 {
+            assert_eq!(q.pop(), Some((1.5, i)));
+        }
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn sharded_matches_single_queue_oracle() {
+        // random push sequence with random shard routing: the pop
+        // sequence must equal a single EventQueue fed the same pushes
+        let mut rng = crate::util::rng::Pcg64::seed_from_u64(7);
+        for &shards in &[1usize, 2, 3, 8] {
+            let mut sq = ShardedEventQueue::with_capacity(shards, 8);
+            let mut oracle = EventQueue::new();
+            let mut id = 0u64;
+            for _ in 0..500 {
+                if rng.f64() < 0.6 || oracle.is_empty() {
+                    // coarse times force plenty of exact ties
+                    let t = (rng.usize_in(0, 20) as f64) * 0.5;
+                    sq.push(rng.usize_in(0, shards + 1), t, id);
+                    oracle.push(t, id);
+                    id += 1;
+                } else {
+                    assert_eq!(sq.peek_time(), oracle.peek_time());
+                    assert_eq!(sq.pop(), oracle.pop());
+                }
+                assert_eq!(sq.len(), oracle.len());
+            }
+            while let Some(want) = oracle.pop() {
+                assert_eq!(sq.pop(), Some(want));
+            }
+            assert!(sq.is_empty());
+        }
+    }
+
+    #[test]
+    fn sharded_clamps_zero_shards_and_wraps_routing() {
+        let mut q = ShardedEventQueue::with_capacity(0, 0);
+        assert_eq!(q.num_shards(), 1);
+        q.push(99, 1.0, "wrapped");
+        assert_eq!(q.pop(), Some((1.0, "wrapped")));
     }
 }

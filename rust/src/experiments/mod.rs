@@ -54,6 +54,9 @@ pub struct SweepOpts {
     /// Constellation topology override (`None` = the paper torus);
     /// [`topology_sweep`] sets this per cell.
     pub topology: Option<TopologyKind>,
+    /// Event-queue shard count (`SimConfig::shards`, `--shards`): pure
+    /// mechanics, byte-identical rows at every setting.
+    pub shards: usize,
     /// Worker threads for [`run_cells`]: 0 = one per available core,
     /// 1 = force the sequential path (the parallel runner's oracle).
     pub threads: usize,
@@ -73,6 +76,7 @@ impl Default for SweepOpts {
             scenario: ScenarioKind::Poisson,
             dissemination: None,
             topology: None,
+            shards: 1,
             threads: 0,
             progress: false,
         }
@@ -187,6 +191,74 @@ where
     collected.into_iter().map(|(_, r)| r).collect()
 }
 
+/// Fan `cells × repeats` across cores: every (cell, repeat) pair is an
+/// independent engine run, so a few-cell/many-repeat sweep saturates the
+/// machine even when the cell grid alone cannot. `f` receives the cell
+/// and the repeat index; results come back grouped per cell **in input
+/// order** with the repeats of each cell in repeat order — exactly the
+/// sequence the sequential repeat loop produces, so downstream averaging
+/// is byte-identical (enforced by `tests/integration_experiments.rs::
+/// per_repeat_dispatch_rows_match_sequential`).
+pub fn run_cells_repeated<T, R, F>(
+    threads: usize,
+    repeats: usize,
+    items: Vec<T>,
+    f: F,
+) -> Vec<Vec<R>>
+where
+    T: Send + Sync + Clone,
+    R: Send,
+    F: Fn(&T, usize) -> R + Sync,
+{
+    let repeats = repeats.max(1);
+    let pairs: Vec<(T, usize)> = items
+        .into_iter()
+        .flat_map(|t| (0..repeats).map(move |r| (t.clone(), r)))
+        .collect();
+    let flat = run_cells(threads, pairs, |(t, r)| f(&t, r));
+    let mut out: Vec<Vec<R>> = Vec::with_capacity(flat.len() / repeats);
+    let mut cur: Vec<R> = Vec::with_capacity(repeats);
+    for r in flat {
+        cur.push(r);
+        if cur.len() == repeats {
+            out.push(std::mem::replace(&mut cur, Vec::with_capacity(repeats)));
+        }
+    }
+    debug_assert!(cur.is_empty());
+    out
+}
+
+/// The repeat protocol every sweep shares, dispatched per (cell, repeat):
+/// `run_one` gets the cell and the repeat's seed (`opts.seed + r·1000`),
+/// each pair runs as its own parallel unit, and the repeats of each cell
+/// average into one report — byte-identical to the sequential
+/// [`repeat_mean`] loop because grouping preserves repeat order.
+fn repeat_mean_cells<T>(
+    opts: &SweepOpts,
+    cells: Vec<T>,
+    label: impl Fn(&T) -> String + Sync,
+    run_one: impl Fn(&T, u64) -> Report + Sync,
+) -> Vec<Report>
+where
+    T: Send + Sync + Clone,
+{
+    let repeats = opts.repeats.max(1);
+    let progress = Progress::new(opts.progress, cells.len() * repeats);
+    let grouped = run_cells_repeated(opts.threads, repeats, cells, |cell, r| {
+        progress.cell(
+            || {
+                if repeats == 1 {
+                    label(cell)
+                } else {
+                    format!("{} repeat={}/{repeats}", label(cell), r + 1)
+                }
+            },
+            || run_one(cell, opts.seed + r as u64 * 1000),
+        )
+    });
+    grouped.into_iter().map(mean_reports).collect()
+}
+
 fn base_cfg(model: DnnModel, opts: &SweepOpts) -> SimConfig {
     SimConfig {
         model,
@@ -197,6 +269,7 @@ fn base_cfg(model: DnnModel, opts: &SweepOpts) -> SimConfig {
         scenario: opts.scenario,
         dissemination: opts.dissemination,
         topology: opts.topology.clone(),
+        shards: opts.shards,
         ..SimConfig::default()
     }
 }
@@ -279,7 +352,8 @@ pub fn run_point_event(
 }
 
 /// λ-sweep over all four schemes on the event-driven engine (the eventsim
-/// companion to [`fig2`]/[`fig3`]), cells fanned across cores.
+/// companion to [`fig2`]/[`fig3`]), every (cell, repeat) fanned across
+/// cores.
 pub fn eventsim_sweep(
     model: DnnModel,
     lambdas: &[f64],
@@ -290,17 +364,28 @@ pub fn eventsim_sweep(
         .iter()
         .flat_map(|&lambda| SchemeKind::all().into_iter().map(move |s| (lambda, s)))
         .collect();
-    let progress = Progress::new(opts.progress, cells.len());
-    run_cells(opts.threads, cells, |(lambda, scheme)| {
-        progress.cell(
-            || format!("lambda={lambda} scheme={}", scheme.name()),
-            || Row {
-                x: lambda,
-                scheme,
-                report: run_point_event(model, lambda, scheme, scenario, opts),
-            },
-        )
-    })
+    let reports = repeat_mean_cells(
+        opts,
+        cells.clone(),
+        |(lambda, scheme)| format!("lambda={lambda} scheme={}", scheme.name()),
+        |&(lambda, scheme), seed| {
+            let mut cfg = base_cfg(model, opts);
+            cfg.engine = EngineKind::Event;
+            cfg.scenario = scenario;
+            cfg.seed = seed;
+            cfg.lambda = lambda;
+            crate::engine::run(&cfg, scheme)
+        },
+    );
+    cells
+        .into_iter()
+        .zip(reports)
+        .map(|((lambda, scheme), report)| Row {
+            x: lambda,
+            scheme,
+            report,
+        })
+        .collect()
 }
 
 /// λ grid for the eventsim experiment. `quick` shrinks it to two points so
@@ -363,21 +448,28 @@ pub fn staleness_sweep(
         .iter()
         .flat_map(|&d| SchemeKind::all().into_iter().map(move |s| (d, s)))
         .collect();
-    let progress = Progress::new(opts.progress, cells.len());
-    run_cells(opts.threads, cells, |(d, scheme)| {
-        progress.cell(
-            || format!("dissemination={} scheme={}", d.label(), scheme.name()),
-            || StalenessRow {
-                t_d: d.t_d_s(),
-                dissemination: d,
-                scheme,
-                report: repeat_mean(model, scheme, opts, |cfg| {
-                    cfg.lambda = lambda;
-                    cfg.dissemination = Some(d);
-                }),
-            },
-        )
-    })
+    let reports = repeat_mean_cells(
+        opts,
+        cells.clone(),
+        |(d, scheme)| format!("dissemination={} scheme={}", d.label(), scheme.name()),
+        |&(d, scheme), seed| {
+            let mut cfg = base_cfg(model, opts);
+            cfg.seed = seed;
+            cfg.lambda = lambda;
+            cfg.dissemination = Some(d);
+            crate::engine::run(&cfg, scheme)
+        },
+    );
+    cells
+        .into_iter()
+        .zip(reports)
+        .map(|((d, scheme), report)| StalenessRow {
+            t_d: d.t_d_s(),
+            dissemination: d,
+            scheme,
+            report,
+        })
+        .collect()
 }
 
 /// Render the staleness sweep as two panels (completion rate and p95
@@ -520,23 +612,27 @@ pub fn topology_sweep(
                 .map(move |s| (kind.clone(), s))
         })
         .collect();
-    let progress = Progress::new(opts.progress, cells.len());
-    run_cells(opts.threads, cells, |(kind, scheme)| {
-        progress.cell(
-            || format!("topology={} scheme={}", kind.label(), scheme.name()),
-            || {
-                let report = repeat_mean(model, scheme, opts, |cfg| {
-                    cfg.lambda = lambda;
-                    cfg.topology = Some(kind.clone());
-                });
-                TopologyRow {
-                    topology: kind.clone(),
-                    scheme,
-                    report,
-                }
-            },
-        )
-    })
+    let reports = repeat_mean_cells(
+        opts,
+        cells.clone(),
+        |(kind, scheme)| format!("topology={} scheme={}", kind.label(), scheme.name()),
+        |(kind, scheme), seed| {
+            let mut cfg = base_cfg(model, opts);
+            cfg.seed = seed;
+            cfg.lambda = lambda;
+            cfg.topology = Some(kind.clone());
+            crate::engine::run(&cfg, *scheme)
+        },
+    );
+    cells
+        .into_iter()
+        .zip(reports)
+        .map(|((kind, scheme), report)| TopologyRow {
+            topology: kind,
+            scheme,
+            report,
+        })
+        .collect()
 }
 
 /// Render the topology sweep as two panels (completion rate and p95
@@ -629,24 +725,33 @@ pub fn topology_json(
     ])
 }
 
-/// λ-sweep over all four schemes (the engine behind Figs. 2 & 3), cells
-/// fanned across cores with deterministic row order.
+/// λ-sweep over all four schemes (the engine behind Figs. 2 & 3), every
+/// (cell, repeat) fanned across cores with deterministic row order.
 pub fn lambda_sweep(model: DnnModel, lambdas: &[f64], opts: &SweepOpts) -> Vec<Row> {
     let cells: Vec<(f64, SchemeKind)> = lambdas
         .iter()
         .flat_map(|&lambda| SchemeKind::all().into_iter().map(move |s| (lambda, s)))
         .collect();
-    let progress = Progress::new(opts.progress, cells.len());
-    run_cells(opts.threads, cells, |(lambda, scheme)| {
-        progress.cell(
-            || format!("lambda={lambda} scheme={}", scheme.name()),
-            || Row {
-                x: lambda,
-                scheme,
-                report: run_point(model, lambda, scheme, opts),
-            },
-        )
-    })
+    let reports = repeat_mean_cells(
+        opts,
+        cells.clone(),
+        |(lambda, scheme)| format!("lambda={lambda} scheme={}", scheme.name()),
+        |&(lambda, scheme), seed| {
+            let mut cfg = base_cfg(model, opts);
+            cfg.seed = seed;
+            cfg.lambda = lambda;
+            crate::engine::run(&cfg, scheme)
+        },
+    );
+    cells
+        .into_iter()
+        .zip(reports)
+        .map(|((lambda, scheme), report)| Row {
+            x: lambda,
+            scheme,
+            report,
+        })
+        .collect()
 }
 
 /// Paper default λ grid (§V-A: λ ∈ 4–70).
@@ -664,31 +769,38 @@ pub fn fig3(opts: &SweepOpts) -> Vec<Row> {
     lambda_sweep(DnnModel::Vgg19, &default_lambdas(), opts)
 }
 
-/// §V-B network-scale study: completion rate vs N at fixed λ = 25,
-/// cells fanned across cores.
+/// §V-B network-scale study: completion rate vs N at fixed λ = 25, every
+/// (cell, repeat) fanned across cores.
 pub fn scale(ns: &[usize], opts: &SweepOpts) -> Vec<Row> {
     let cells: Vec<(usize, SchemeKind)> = ns
         .iter()
         .flat_map(|&n| SchemeKind::all().into_iter().map(move |s| (n, s)))
         .collect();
-    let progress = Progress::new(opts.progress, cells.len());
-    run_cells(opts.threads, cells, |(n, scheme)| {
-        progress.cell(
-            || format!("n={n} scheme={}", scheme.name()),
-            || Row {
-                x: n as f64,
-                scheme,
-                report: repeat_mean(DnnModel::Vgg19, scheme, opts, |cfg| {
-                    cfg.n = n;
-                    // the sweep coordinate IS the torus size: a --topology
-                    // override would pin the geometry and turn the N-axis
-                    // into a lie, so it is cleared per cell
-                    cfg.topology = None;
-                    cfg.lambda = 25.0;
-                }),
-            },
-        )
-    })
+    let reports = repeat_mean_cells(
+        opts,
+        cells.clone(),
+        |(n, scheme)| format!("n={n} scheme={}", scheme.name()),
+        |&(n, scheme), seed| {
+            let mut cfg = base_cfg(DnnModel::Vgg19, opts);
+            cfg.seed = seed;
+            cfg.n = n;
+            // the sweep coordinate IS the torus size: a --topology
+            // override would pin the geometry and turn the N-axis
+            // into a lie, so it is cleared per cell
+            cfg.topology = None;
+            cfg.lambda = 25.0;
+            crate::engine::run(&cfg, scheme)
+        },
+    );
+    cells
+        .into_iter()
+        .zip(reports)
+        .map(|((n, scheme), report)| Row {
+            x: n as f64,
+            scheme,
+            report,
+        })
+        .collect()
 }
 
 /// Default N grid for the scale study (paper: 4 – 32).
@@ -836,6 +948,23 @@ mod tests {
         let j = rows_to_json(&rows).to_string();
         let parsed = crate::util::json::Json::parse(&j).unwrap();
         assert_eq!(parsed.as_arr().unwrap().len(), 4);
+    }
+
+    #[test]
+    fn run_cells_repeated_groups_in_order() {
+        // grouped per cell in input order, repeats in repeat order —
+        // regardless of worker count
+        for threads in [1usize, 3] {
+            let groups =
+                run_cells_repeated(threads, 3, vec![10usize, 20, 30], |&x, r| x + r);
+            assert_eq!(
+                groups,
+                vec![vec![10, 11, 12], vec![20, 21, 22], vec![30, 31, 32]]
+            );
+        }
+        // repeats = 0 clamps to one run per cell
+        let groups = run_cells_repeated(1, 0, vec![5usize], |&x, r| (x, r));
+        assert_eq!(groups, vec![vec![(5, 0)]]);
     }
 
     #[test]

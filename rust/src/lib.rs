@@ -22,12 +22,16 @@
 //! * [`sim::Simulation`] — the paper's **fixed-slot** loop (§V): arrivals,
 //!   admission, and backlog draining advance once per slot.
 //! * [`eventsim::EventSim`] — a **continuous-time discrete-event** kernel:
-//!   a binary-heap event queue with deterministic FIFO tie-breaking drives
-//!   `TaskArrival` / `SegmentStart` / `SegmentDone` / `IslTransfer` /
-//!   `Handover` / `Fault` / `StateBroadcast` events through
-//!   per-satellite work-conserving queues, so delay fidelity is no
-//!   longer capped by slot quantization and cost scales with events
-//!   rather than wall-clock slots.
+//!   a per-plane sharded bank of binary heaps
+//!   ([`eventsim::queue::ShardedEventQueue`], `SimConfig::shards`) with
+//!   deterministic FIFO tie-breaking drives `TaskArrival` /
+//!   `SegmentStart` / `SegmentDone` / `IslTransfer` / `Handover` /
+//!   `Fault` / `StateBroadcast` events through per-satellite
+//!   work-conserving queues, so delay fidelity is no longer capped by
+//!   slot quantization and cost scales with events rather than
+//!   wall-clock slots. One sequence counter spans the bank and pops take
+//!   the global `(time, seq)` minimum, so runs are byte-identical at
+//!   every shard count (`tests/prop_sharded.rs`).
 //!
 //! The event engine draws arrivals from pluggable
 //! [`eventsim::scenario::TrafficScenario`] profiles — homogeneous Poisson
@@ -39,10 +43,13 @@
 //! `(slot, id)` pairs; fault scans go through a per-satellite reverse
 //! index), the GA evaluates whole generations through the
 //! structure-of-arrays [`offload::DecisionSpaceIndex::deficit_batch`]
-//! kernel (bit-for-bit the scalar Eq. 12), and
-//! [`experiments::run_cells`] fans independent sweep cells across cores
-//! with byte-identical row output. `benches/eventsim_scale.rs` tracks
-//! the resulting tasks/s in `BENCH_eventsim.json`.
+//! kernel (bit-for-bit the scalar Eq. 12; with `--features simd` it
+//! dispatches to explicit AVX2/NEON lanes that stay bit-identical —
+//! [`offload::simd_active`] reports what actually runs), and
+//! [`experiments::run_cells_repeated`] fans independent
+//! (cell × repeat) work items across cores with byte-identical row
+//! output. `benches/eventsim_scale.rs` tracks the resulting tasks/s in
+//! `BENCH_eventsim.json`.
 //!
 //! ## Pluggable constellation topology
 //!

@@ -86,7 +86,11 @@ OPTIONS
                   sets the tick of a bare --dissemination gossip
   --seed X        RNG seed      --repeats R    seeds averaged per point
   --threads T     sweep cells fanned over T workers (0 = all cores, the
-                  default; 1 = sequential — rows are byte-identical)
+                  default; 1 = sequential — rows are byte-identical;
+                  repeats > 1 fan out per (cell, repeat) pair)
+  --shards K      event-engine pending-event shards (1 = classic single
+                  heap, the default; 0 = one shard per orbital plane;
+                  any K — runs are byte-identical at every setting)
   --quick         smaller slot budget          --json FILE   export rows
   --retain-outcomes  buffer per-task outcomes (metrics stream by default)
   --telemetry     runtime counters: adds a `telemetry` block to the report
@@ -115,6 +119,7 @@ fn sweep_opts(args: &Args, cfg: &SimConfig) -> exp::SweepOpts {
     o.decision_fraction = cfg.decision_fraction;
     o.repeats = args.get_or("repeats", 1usize);
     o.threads = args.get_or("threads", 0usize);
+    o.shards = cfg.shards;
     // --engine / --scenario / --dissemination / --topology flow into
     // sweeps and experiments too
     o.engine = cfg.engine;

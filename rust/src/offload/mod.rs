@@ -10,6 +10,8 @@ pub mod dqn;
 pub mod ga;
 pub mod random;
 pub mod rrp;
+#[cfg(feature = "simd")]
+mod simd;
 
 use crate::config::GaConfig;
 use crate::state::StateView;
@@ -522,11 +524,34 @@ impl DecisionSpaceIndex {
             return;
         }
         debug_assert_eq!(genes.len() % l, 0, "ragged chromosome matrix");
-        let n = genes.len() / l;
         if l > 128 {
             out.extend(genes.chunks(l).map(|c| self.deficit_long(c)));
             return;
         }
+        // Explicit SIMD lanes (4-wide AVX2 / 2-wide NEON, `simd` feature,
+        // runtime CPU detection): bit-identical to the scalar body below
+        // — same per-lane add order, masked adds of +0.0 for skipped
+        // admission terms, no FMA contraction — so the dispatch can never
+        // change a decision (`tests/prop_sharded.rs::
+        // prop_deficit_batch_simd_matches_scalar`).
+        #[cfg(feature = "simd")]
+        if simd::deficit_batch(self, genes, out) {
+            return;
+        }
+        self.deficit_batch_scalar(scratch, genes, out);
+    }
+
+    /// The scalar (autovectorizer-friendly) body of
+    /// [`DecisionSpaceIndex::deficit_batch`] — the bitwise oracle the
+    /// explicit `simd` lanes are property-tested against.
+    fn deficit_batch_scalar(
+        &self,
+        scratch: &mut BatchScratch,
+        genes: &[Gene],
+        out: &mut Vec<f64>,
+    ) {
+        let l = self.segments.len();
+        let n = genes.len() / l;
         let nc = self.sat_ids.len();
         scratch.comp.clear();
         scratch.comp.resize(n, 0.0);
@@ -555,6 +580,21 @@ impl DecisionSpaceIndex {
                     + self.theta3 * drops,
             );
         }
+    }
+}
+
+/// True when [`DecisionSpaceIndex::deficit_batch`] dispatches to the
+/// explicit-SIMD kernel: the build has the `simd` feature AND the CPU
+/// provides the lanes (AVX2 on x86_64; NEON is baseline on aarch64).
+/// Benches and the CI perf gate read this to label/judge the simd row.
+pub fn simd_active() -> bool {
+    #[cfg(feature = "simd")]
+    {
+        simd::active()
+    }
+    #[cfg(not(feature = "simd"))]
+    {
+        false
     }
 }
 

@@ -1,0 +1,361 @@
+//! Explicit SIMD lanes for [`DecisionSpaceIndex::deficit_batch`]
+//! (`simd` cargo feature): 4-wide AVX2 on x86_64 (runtime-detected) and
+//! 2-wide NEON on aarch64 (baseline), over the k-major `comp_lut` / `kq`
+//! fixed-stride layout the scalar kernel already uses.
+//!
+//! Chromosomes are the lanes: lane `i` of every vector holds chromosome
+//! `base + i`'s accumulator, and the k-loop walks segments exactly like
+//! the scalar kernel, so every lane performs the scalar kernel's adds in
+//! the scalar kernel's order. The Eq. 4 admission walk — the last scalar
+//! stretch — runs as bitmask lanes: `admitted[j] AND genes[j] == genes[k]`
+//! masks each `segments[j]` contribution, and a masked-out lane adds
+//! `+0.0`, which is bit-identical to the scalar skip because planned
+//! prefixes are never `-0.0` (workloads are non-negative). The final
+//! `θ1·comp + θ2·tran + θ3·drops` combine uses discrete mul/add
+//! intrinsics — never FMA — in the scalar's association order. Results
+//! are therefore **bit-for-bit identical** to
+//! [`DecisionSpaceIndex::deficit_batch`]'s scalar body (enforced by
+//! `tests/prop_sharded.rs::prop_deficit_batch_simd_matches_scalar`).
+//!
+//! The `n % LANES` chromosome tail goes through the scalar
+//! [`DecisionSpaceIndex::deficit`] (bit-identical by the existing batch
+//! oracle property). Chromosomes longer than `ADM_MAX_L` fall back to the
+//! scalar admission walk per lane — Table-I L is 3–4, so real runs never
+//! take that branch.
+
+use super::{DecisionSpaceIndex, Gene};
+
+/// True when this build + CPU dispatches `deficit_batch` to SIMD lanes.
+pub(super) fn active() -> bool {
+    #[cfg(target_arch = "x86_64")]
+    {
+        is_x86_feature_detected!("avx2")
+    }
+    #[cfg(target_arch = "aarch64")]
+    {
+        true
+    }
+    #[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+    {
+        false
+    }
+}
+
+/// Evaluate the whole batch with SIMD lanes. Returns false (leaving `out`
+/// untouched) when the CPU lacks the lanes — the caller then runs the
+/// scalar body. The caller guarantees `1 <= L <= 128` and a non-empty,
+/// non-ragged `genes` matrix.
+pub(super) fn deficit_batch(
+    index: &DecisionSpaceIndex,
+    genes: &[Gene],
+    out: &mut Vec<f64>,
+) -> bool {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if is_x86_feature_detected!("avx2") {
+            // SAFETY: AVX2 presence verified at runtime just above.
+            unsafe { avx2::deficit_batch(index, genes, out) };
+            return true;
+        }
+        false
+    }
+    #[cfg(target_arch = "aarch64")]
+    {
+        // SAFETY: NEON is part of the aarch64 baseline.
+        unsafe { neon::deficit_batch(index, genes, out) };
+        true
+    }
+    #[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+    {
+        let _ = (index, genes, out);
+        false
+    }
+}
+
+/// Admission-walk lane history is kept in vector masks up to this L;
+/// longer chromosomes use the scalar walk per lane (never hit by real
+/// configs — Table I has L = 3–4).
+const ADM_MAX_L: usize = 16;
+
+#[cfg(target_arch = "x86_64")]
+mod avx2 {
+    use super::super::{DecisionSpaceIndex, Gene};
+    use super::ADM_MAX_L;
+    use std::arch::x86_64::*;
+
+    const LANES: usize = 4;
+
+    /// Gene indices of segment `k` for four consecutive chromosomes
+    /// starting at `base`, as the i32 offsets a gather consumes.
+    #[inline(always)]
+    unsafe fn gene_idx(genes: &[Gene], base: usize, l: usize, k: usize) -> __m128i {
+        _mm_set_epi32(
+            genes[base + 3 * l + k] as i32,
+            genes[base + 2 * l + k] as i32,
+            genes[base + l + k] as i32,
+            genes[base + k] as i32,
+        )
+    }
+
+    /// One lane of the θ2 term: `hops[a·nc + b]` as f64 (the hop LUT is
+    /// u16, so lanes are built scalar and combined).
+    #[inline(always)]
+    fn hop(index: &DecisionSpaceIndex, genes: &[Gene], row: usize, k: usize, nc: usize) -> f64 {
+        let a = genes[row + k] as usize;
+        let b = genes[row + k + 1] as usize;
+        index.hops[a * nc + b] as f64
+    }
+
+    /// Eq. 4 admission walk, four chromosome lanes wide, bitmask lanes
+    /// for the admitted-prefix history. Per-lane float operations match
+    /// the scalar walk's order exactly; masked-out contributions add
+    /// `+0.0` (bit-safe — planned prefixes are never `-0.0`).
+    #[target_feature(enable = "avx2")]
+    unsafe fn admission_lanes(
+        index: &DecisionSpaceIndex,
+        genes: &[Gene],
+        base: usize,
+        l: usize,
+    ) -> __m256d {
+        let mut gene_v = [_mm256_setzero_si256(); ADM_MAX_L];
+        let mut adm = [_mm256_setzero_si256(); ADM_MAX_L];
+        for k in 0..l {
+            gene_v[k] = _mm256_set_epi64x(
+                genes[base + 3 * l + k] as i64,
+                genes[base + 2 * l + k] as i64,
+                genes[base + l + k] as i64,
+                genes[base + k] as i64,
+            );
+        }
+        let ones = _mm256_set1_pd(1.0);
+        let all_bits = _mm256_castsi256_pd(_mm256_set1_epi64x(-1));
+        let mut drops = _mm256_setzero_pd();
+        for k in 0..l {
+            let q = index.segments[k];
+            let mut planned = _mm256_setzero_pd();
+            for j in 0..k {
+                // admitted[j] && genes[j] == genes[k], as full lane masks
+                let eq = _mm256_cmpeq_epi64(gene_v[j], gene_v[k]);
+                let m = _mm256_castsi256_pd(_mm256_and_si256(eq, adm[j]));
+                let add = _mm256_and_pd(m, _mm256_set1_pd(index.segments[j]));
+                planned = _mm256_add_pd(planned, add);
+            }
+            let gk = gene_idx(genes, base, l, k);
+            let loaded = _mm256_i32gather_pd::<8>(index.loaded.as_ptr(), gk);
+            let maxw = _mm256_i32gather_pd::<8>(index.max_workload.as_ptr(), gk);
+            // (loaded + planned) + q — the scalar's association order
+            let tot = _mm256_add_pd(_mm256_add_pd(loaded, planned), _mm256_set1_pd(q));
+            // drop where q > 0 (lane-uniform: segments are shared) and
+            // the planned total reaches the workload cap
+            let dropm = if q > 0.0 {
+                _mm256_cmp_pd::<{ _CMP_GE_OQ }>(tot, maxw)
+            } else {
+                _mm256_setzero_pd()
+            };
+            drops = _mm256_add_pd(drops, _mm256_and_pd(dropm, ones));
+            adm[k] = _mm256_castpd_si256(_mm256_andnot_pd(dropm, all_bits));
+        }
+        drops
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub(in super::super) unsafe fn deficit_batch(
+        index: &DecisionSpaceIndex,
+        genes: &[Gene],
+        out: &mut Vec<f64>,
+    ) {
+        let l = index.segments.len();
+        let n = genes.len() / l;
+        let nc = index.sat_ids.len();
+        out.reserve(n);
+        let main = n - n % LANES;
+        let mut i = 0usize;
+        while i < main {
+            let base = i * l;
+            let mut comp = _mm256_setzero_pd();
+            let mut tran = _mm256_setzero_pd();
+            for k in 0..l {
+                let lut = index.comp_lut.as_ptr().add(k * nc);
+                let v = _mm256_i32gather_pd::<8>(lut, gene_idx(genes, base, l, k));
+                comp = _mm256_add_pd(comp, v);
+            }
+            for k in 0..l - 1 {
+                let kq = _mm256_set1_pd(index.kq[k]);
+                let h = _mm256_set_pd(
+                    hop(index, genes, base + 3 * l, k, nc),
+                    hop(index, genes, base + 2 * l, k, nc),
+                    hop(index, genes, base + l, k, nc),
+                    hop(index, genes, base, k, nc),
+                );
+                tran = _mm256_add_pd(tran, _mm256_mul_pd(kq, h));
+            }
+            let drops = if l <= ADM_MAX_L {
+                admission_lanes(index, genes, base, l)
+            } else {
+                _mm256_set_pd(
+                    index.admission_drops(&genes[base + 3 * l..base + 4 * l]),
+                    index.admission_drops(&genes[base + 2 * l..base + 3 * l]),
+                    index.admission_drops(&genes[base + l..base + 2 * l]),
+                    index.admission_drops(&genes[base..base + l]),
+                )
+            };
+            // θ1·comp + θ2·tran + θ3·drops, discrete mul/add (no FMA),
+            // scalar association order
+            let d = _mm256_add_pd(
+                _mm256_add_pd(
+                    _mm256_mul_pd(_mm256_set1_pd(index.theta1), comp),
+                    _mm256_mul_pd(_mm256_set1_pd(index.theta2), tran),
+                ),
+                _mm256_mul_pd(_mm256_set1_pd(index.theta3), drops),
+            );
+            let mut buf = [0.0f64; LANES];
+            _mm256_storeu_pd(buf.as_mut_ptr(), d);
+            out.extend_from_slice(&buf);
+            i += LANES;
+        }
+        // scalar tail for the trailing n % LANES chromosomes
+        for c in genes[main * l..].chunks(l) {
+            out.push(index.deficit(c));
+        }
+    }
+}
+
+#[cfg(target_arch = "aarch64")]
+mod neon {
+    use super::super::{DecisionSpaceIndex, Gene};
+    use super::ADM_MAX_L;
+    use std::arch::aarch64::*;
+
+    const LANES: usize = 2;
+
+    /// Two f64 lanes, lane 0 first.
+    #[inline(always)]
+    unsafe fn make2(e0: f64, e1: f64) -> float64x2_t {
+        let arr = [e0, e1];
+        vld1q_f64(arr.as_ptr())
+    }
+
+    /// Gene values of segment `k` for two consecutive chromosomes as u64
+    /// lanes (for bitmask equality in the admission walk).
+    #[inline(always)]
+    unsafe fn gene2(genes: &[Gene], base: usize, l: usize, k: usize) -> uint64x2_t {
+        let arr = [genes[base + k] as u64, genes[base + l + k] as u64];
+        vld1q_u64(arr.as_ptr())
+    }
+
+    #[inline(always)]
+    fn hop(index: &DecisionSpaceIndex, genes: &[Gene], row: usize, k: usize, nc: usize) -> f64 {
+        let a = genes[row + k] as usize;
+        let b = genes[row + k + 1] as usize;
+        index.hops[a * nc + b] as f64
+    }
+
+    /// Eq. 4 admission walk, two chromosome lanes wide — the NEON mirror
+    /// of the AVX2 bitmask-lane walk.
+    unsafe fn admission_lanes(
+        index: &DecisionSpaceIndex,
+        genes: &[Gene],
+        base: usize,
+        l: usize,
+    ) -> float64x2_t {
+        let mut gene_v = [vdupq_n_u64(0); ADM_MAX_L];
+        let mut adm = [vdupq_n_u64(0); ADM_MAX_L];
+        for k in 0..l {
+            gene_v[k] = gene2(genes, base, l, k);
+        }
+        let ones = vreinterpretq_u64_f64(vdupq_n_f64(1.0));
+        let all_bits = vdupq_n_u64(!0u64);
+        let mut drops = vdupq_n_f64(0.0);
+        for k in 0..l {
+            let q = index.segments[k];
+            let mut planned = vdupq_n_f64(0.0);
+            for j in 0..k {
+                let eq = vceqq_u64(gene_v[j], gene_v[k]);
+                let m = vandq_u64(eq, adm[j]);
+                let add = vreinterpretq_f64_u64(vandq_u64(
+                    m,
+                    vreinterpretq_u64_f64(vdupq_n_f64(index.segments[j])),
+                ));
+                planned = vaddq_f64(planned, add);
+            }
+            let loaded = make2(
+                index.loaded[genes[base + k] as usize],
+                index.loaded[genes[base + l + k] as usize],
+            );
+            let maxw = make2(
+                index.max_workload[genes[base + k] as usize],
+                index.max_workload[genes[base + l + k] as usize],
+            );
+            // (loaded + planned) + q — the scalar's association order
+            let tot = vaddq_f64(vaddq_f64(loaded, planned), vdupq_n_f64(q));
+            let dropm = if q > 0.0 {
+                vcgeq_f64(tot, maxw)
+            } else {
+                vdupq_n_u64(0)
+            };
+            drops = vaddq_f64(drops, vreinterpretq_f64_u64(vandq_u64(dropm, ones)));
+            // admitted[k] = !drop  (BIC: all_bits AND NOT dropm)
+            adm[k] = vbicq_u64(all_bits, dropm);
+        }
+        drops
+    }
+
+    pub(in super::super) unsafe fn deficit_batch(
+        index: &DecisionSpaceIndex,
+        genes: &[Gene],
+        out: &mut Vec<f64>,
+    ) {
+        let l = index.segments.len();
+        let n = genes.len() / l;
+        let nc = index.sat_ids.len();
+        out.reserve(n);
+        let main = n - n % LANES;
+        let mut i = 0usize;
+        while i < main {
+            let base = i * l;
+            let mut comp = vdupq_n_f64(0.0);
+            let mut tran = vdupq_n_f64(0.0);
+            for k in 0..l {
+                let lut = &index.comp_lut[k * nc..(k + 1) * nc];
+                let v = make2(
+                    lut[genes[base + k] as usize],
+                    lut[genes[base + l + k] as usize],
+                );
+                comp = vaddq_f64(comp, v);
+            }
+            for k in 0..l - 1 {
+                let kq = vdupq_n_f64(index.kq[k]);
+                let h = make2(
+                    hop(index, genes, base, k, nc),
+                    hop(index, genes, base + l, k, nc),
+                );
+                tran = vaddq_f64(tran, vmulq_f64(kq, h));
+            }
+            let drops = if l <= ADM_MAX_L {
+                admission_lanes(index, genes, base, l)
+            } else {
+                make2(
+                    index.admission_drops(&genes[base..base + l]),
+                    index.admission_drops(&genes[base + l..base + 2 * l]),
+                )
+            };
+            // θ1·comp + θ2·tran + θ3·drops, discrete mul/add (no FMA),
+            // scalar association order
+            let d = vaddq_f64(
+                vaddq_f64(
+                    vmulq_f64(vdupq_n_f64(index.theta1), comp),
+                    vmulq_f64(vdupq_n_f64(index.theta2), tran),
+                ),
+                vmulq_f64(vdupq_n_f64(index.theta3), drops),
+            );
+            let mut buf = [0.0f64; LANES];
+            vst1q_f64(buf.as_mut_ptr(), d);
+            out.extend_from_slice(&buf);
+            i += LANES;
+        }
+        // scalar tail for the trailing n % LANES chromosomes
+        for c in genes[main * l..].chunks(l) {
+            out.push(index.deficit(c));
+        }
+    }
+}

@@ -426,6 +426,17 @@ impl Constellation {
         }
     }
 
+    /// Number of orbital planes — N on the torus, P on a Walker. The
+    /// event engine's `shards = 0` (auto) mode shards its pending-event
+    /// queue one-per-plane using this.
+    #[inline]
+    pub fn planes(&self) -> usize {
+        match self {
+            Constellation::Torus(t) => t.n(),
+            Constellation::Walker(w) => w.planes(),
+        }
+    }
+
     /// ISL hop distance between two satellites — Manhattan `MH(i, j)` on
     /// the torus (Eq. 7), BFS shortest-path hops on a Walker.
     #[inline]

@@ -100,6 +100,54 @@ fn parallel_sweep_rows_match_sequential() {
 }
 
 #[test]
+fn per_repeat_dispatch_rows_match_sequential() {
+    // PR 7 satellite: with repeats > 1 the sweep runner dispatches
+    // individual (cell, repeat) pairs to the pool instead of whole
+    // cells. The flattened fan-out must still serialize to the SAME
+    // bytes as a forced single-thread run — the per-repeat seeds
+    // (seed + r·1000) and the averaging order are position-derived, so
+    // thread count can change nothing.
+    let mut seq = quick();
+    seq.engine = EngineKind::Event;
+    seq.threads = 1;
+    seq.repeats = 3;
+    let mut par = seq.clone();
+    par.threads = 4;
+    let a = exp::eventsim_sweep(
+        DnnModel::Vgg19,
+        &[4.0, 25.0],
+        satkit::config::ScenarioKind::Poisson,
+        &seq,
+    );
+    let b = exp::eventsim_sweep(
+        DnnModel::Vgg19,
+        &[4.0, 25.0],
+        satkit::config::ScenarioKind::Poisson,
+        &par,
+    );
+    assert_eq!(
+        exp::rows_to_json(&a).to_string(),
+        exp::rows_to_json(&b).to_string(),
+        "per-repeat dispatch diverged from sequential"
+    );
+    // and the repeat axis really was averaged in: a repeats=1 run of the
+    // same grid must differ (distinct seeds feed the mean)
+    let mut one = seq.clone();
+    one.repeats = 1;
+    let c = exp::eventsim_sweep(
+        DnnModel::Vgg19,
+        &[4.0, 25.0],
+        satkit::config::ScenarioKind::Poisson,
+        &one,
+    );
+    assert_ne!(
+        exp::rows_to_json(&a).to_string(),
+        exp::rows_to_json(&c).to_string(),
+        "repeats=3 rows should not equal a single-repeat run"
+    );
+}
+
+#[test]
 fn run_cells_preserves_input_order_and_runs_every_cell() {
     // order is by input index, not completion time: staggered workloads
     // would reorder under a completion-order merge

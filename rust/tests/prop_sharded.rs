@@ -1,0 +1,177 @@
+//! Whole-run properties for PR 7's two perf structures: the per-plane
+//! sharded event queue must leave every report **byte-identical** to the
+//! single-heap engine at any shard count (the merge discipline preserves
+//! the `(time, seq)` total order, so sharding can only change heap
+//! balance, never event order), and the SIMD `deficit_batch` lanes must
+//! be bit-for-bit equal to the per-chromosome scalar oracle — including
+//! ragged batch tails that exercise the scalar tail loop.
+
+use satkit::config::{EngineKind, GaConfig, SimConfig};
+use satkit::metrics::Report;
+use satkit::offload::{BatchScratch, DecisionSpaceIndex, Gene, OffloadContext, SchemeKind};
+use satkit::satellite::Satellite;
+use satkit::state::StateView;
+use satkit::topology::Constellation;
+use satkit::util::quickcheck::{check_no_shrink, default_cases};
+use satkit::util::rng::Pcg64;
+
+/// Compare two reports field-by-field, bit-for-bit on floats.
+fn assert_reports_identical(a: &Report, b: &Report) -> Result<(), String> {
+    if a.total_tasks != b.total_tasks {
+        return Err(format!(
+            "task counts differ: {} vs {}",
+            a.total_tasks, b.total_tasks
+        ));
+    }
+    if a.completed_tasks != b.completed_tasks {
+        return Err(format!(
+            "completion counts differ: {} vs {}",
+            a.completed_tasks, b.completed_tasks
+        ));
+    }
+    for (name, x, y) in [
+        ("avg_delay_ms", a.avg_delay_ms, b.avg_delay_ms),
+        ("avg_comp_ms", a.avg_comp_ms, b.avg_comp_ms),
+        ("avg_tran_ms", a.avg_tran_ms, b.avg_tran_ms),
+        ("avg_uplink_ms", a.avg_uplink_ms, b.avg_uplink_ms),
+        ("workload_variance", a.workload_variance, b.workload_variance),
+        ("workload_mean", a.workload_mean, b.workload_mean),
+        ("delay_p50_ms", a.delay_p50_ms, b.delay_p50_ms),
+        ("delay_p95_ms", a.delay_p95_ms, b.delay_p95_ms),
+    ] {
+        if x.to_bits() != y.to_bits() {
+            return Err(format!("{name} differs: {x} vs {y}"));
+        }
+    }
+    Ok(())
+}
+
+/// The tentpole acceptance invariant, deterministically over every
+/// (engine, scheme, shard count) cell: pinned shard counts and the
+/// auto (one-per-plane) mode all reproduce the classic single-heap run
+/// bit-for-bit. The slotted engine ignores the knob, which this also
+/// pins down.
+#[test]
+fn sharded_engine_matches_single_heap_all_engines_and_schemes() {
+    for engine in EngineKind::all() {
+        for scheme in SchemeKind::all() {
+            let mut cfg = SimConfig {
+                n: 6,
+                slots: 6,
+                lambda: 8.0,
+                seed: 11,
+                engine,
+                ..SimConfig::default()
+            };
+            cfg.shards = 1;
+            let single = satkit::engine::run(&cfg, scheme);
+            for shards in [2usize, 4, 7, 0] {
+                cfg.shards = shards;
+                let sharded = satkit::engine::run(&cfg, scheme);
+                assert_reports_identical(&single, &sharded).unwrap_or_else(|e| {
+                    panic!("{engine:?}/{scheme:?} shards={shards}: {e}")
+                });
+            }
+        }
+    }
+}
+
+/// The same invariant over random (n, λ, slots, engine, scheme, shards,
+/// seed) whole-run cases, in the style of `tests/prop_topology.rs`.
+#[test]
+fn prop_sharded_runs_are_byte_identical_to_sequential() {
+    check_no_shrink(
+        "sharded-engine-byte-identical",
+        default_cases().min(16),
+        |r| {
+            let n = *r.choose(&[4usize, 6]);
+            let lambda = r.f64_in(2.0, 10.0);
+            let slots = r.usize_in(3, 7);
+            let engine = *r.choose(&EngineKind::all());
+            let scheme = *r.choose(&SchemeKind::all());
+            // 0 = auto (one shard per plane); otherwise a pinned count,
+            // deliberately allowed to exceed the plane count
+            let shards = r.usize_in(0, 9);
+            let seed = r.next_u64() % 1000;
+            (n, lambda, slots, engine, scheme, shards, seed)
+        },
+        |&(n, lambda, slots, engine, scheme, shards, seed)| {
+            let mut cfg = SimConfig {
+                n,
+                lambda,
+                slots,
+                seed,
+                engine,
+                ..SimConfig::default()
+            };
+            cfg.shards = 1;
+            let single = satkit::engine::run(&cfg, scheme);
+            cfg.shards = shards;
+            let sharded = satkit::engine::run(&cfg, scheme);
+            assert_reports_identical(&single, &sharded)
+        },
+    );
+}
+
+/// Bitwise `deficit_batch` vs per-chromosome `deficit` over random gene
+/// batches — random L, random batch sizes **including tails** where
+/// `n % 4 != 0`, random loads. Built with `--features simd` on an AVX2 /
+/// NEON machine this pins the vector lanes to the scalar oracle
+/// bit-for-bit; built without it, it pins the batched scalar kernel the
+/// same way (the oracle contract is identical either way).
+#[test]
+fn prop_deficit_batch_simd_matches_scalar() {
+    check_no_shrink(
+        "deficit-batch-simd-bitwise",
+        default_cases().min(24),
+        |r| {
+            let l = r.usize_in(1, 7);
+            // cover every lane-tail residue for both 4-wide and 2-wide
+            let n = r.usize_in(1, 20);
+            let load_seed = r.next_u64();
+            let gene_seed = r.next_u64();
+            (l, n, load_seed, gene_seed)
+        },
+        |&(l, n, load_seed, gene_seed)| {
+            let topo = Constellation::torus(6);
+            let mut sats: Vec<Satellite> =
+                (0..36).map(|i| Satellite::new(i, 3000.0, 15000.0)).collect();
+            let mut lr = Pcg64::seed_from_u64(load_seed);
+            for s in sats.iter_mut() {
+                s.try_load(lr.f64_in(0.0, 14_000.0));
+            }
+            let ga = GaConfig::default();
+            let cands = topo.decision_space(14, 2);
+            let segments: Vec<f64> = (0..l).map(|_| lr.f64_in(500.0, 5_000.0)).collect();
+            let ctx = OffloadContext {
+                topo: &topo,
+                view: StateView::live(&sats),
+                origin: 14,
+                candidates: &cands,
+                segments: &segments,
+                kappa: 1e-4,
+                ga: &ga,
+            };
+            let index = DecisionSpaceIndex::from_ctx(&ctx);
+            let mut gr = Pcg64::seed_from_u64(gene_seed);
+            let flat: Vec<Gene> = (0..n * l)
+                .map(|_| gr.usize_in(0, cands.len()) as Gene)
+                .collect();
+            let mut scratch = BatchScratch::default();
+            let mut outs: Vec<f64> = Vec::new();
+            index.deficit_batch(&mut scratch, &flat, &mut outs);
+            if outs.len() != n {
+                return Err(format!("expected {n} deficits, got {}", outs.len()));
+            }
+            for (i, (c, &d)) in flat.chunks(l).zip(&outs).enumerate() {
+                let want = index.deficit(c);
+                if d.to_bits() != want.to_bits() {
+                    return Err(format!(
+                        "chromosome {i}/{n} (L={l}): batch={d} scalar={want}"
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
