@@ -54,6 +54,7 @@ fn main() {
             segments: &segments,
             kappa: 1e-4,
             ga: &ga,
+            migration: None,
         };
         let mut scheme = make_scheme(SchemeKind::Scc, 3);
         let r = bench(

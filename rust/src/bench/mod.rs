@@ -114,8 +114,8 @@ pub fn quick_mode() -> bool {
 
 /// Resolve an output path from its `SATKIT_*_JSON` env override, falling
 /// back to `default`. One helper for every bench/sweep emitter (hotpath,
-/// eventsim, staleness, topology) so the override convention can't drift
-/// per call site.
+/// eventsim, staleness, topology, llm) so the override convention can't
+/// drift per call site.
 pub fn out_path(env_key: &str, default: &str) -> String {
     std::env::var(env_key).unwrap_or_else(|_| default.to_string())
 }

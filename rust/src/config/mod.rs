@@ -12,6 +12,7 @@ pub use toml_lite::TomlDoc;
 use crate::dnn::DnnModel;
 use crate::obs::{ObsConfig, TraceConfig};
 use crate::state::DisseminationKind;
+use crate::tasks::TaskKind;
 use crate::topology::{Constellation, TopologyKind};
 use crate::util::cli::Args;
 
@@ -177,6 +178,46 @@ impl Default for CommConfig {
     }
 }
 
+/// Defaults for the LLM-era autoregressive workload class (`[llm]` TOML
+/// block): an unstated parameter of `--task-kind autoregressive[:...]`
+/// falls back to these, and the per-round execution knobs
+/// (`round_deadline_s`, `small_model_factor`) live here because they are
+/// engine parameters, not part of the task-kind selector itself.
+#[derive(Clone, Debug, PartialEq)]
+pub struct LlmConfig {
+    /// Decode rounds per task after the prefill chain.
+    pub rounds: u32,
+    /// Full-model workload of one decode round [MFLOP].
+    pub decode_flops: f64,
+    /// KV-cache size shipped over ISLs when the serving satellite
+    /// changes [bytes].
+    pub state_bytes: f64,
+    /// Small-model-first escalation threshold [s] (`None` = no
+    /// escalation: decode on the chain's last satellite).
+    pub escalate: Option<f64>,
+    /// Per-round deadline [s]: a round whose ready-to-done delay exceeds
+    /// this drops the task's remaining rounds.
+    pub round_deadline_s: f64,
+    /// Workload ratio of the serving satellite's small model (escalation
+    /// mode runs `decode_flops × small_model_factor` per round until the
+    /// threshold trips).
+    pub small_model_factor: f64,
+}
+
+impl Default for LlmConfig {
+    fn default() -> Self {
+        LlmConfig {
+            rounds: 8,
+            // ~one token of a distilled ~100M-param on-board model
+            decode_flops: 200.0,
+            state_bytes: 262_144.0, // 256 KiB KV cache
+            escalate: None,
+            round_deadline_s: 0.5,
+            small_model_factor: 0.25,
+        }
+    }
+}
+
 /// Satellite compute parameters (Table I + Eq. 4).
 #[derive(Clone, Debug, PartialEq)]
 pub struct SatelliteConfig {
@@ -270,6 +311,14 @@ pub struct SimConfig {
     /// telemetry hook behind one `enabled` branch, keeping runs
     /// bit-for-bit identical to pre-telemetry builds.
     pub obs: ObsConfig,
+    /// Workload class (`--task-kind oneshot|autoregressive[:...]`, TOML
+    /// `task_kind = "..."`). `None` keeps the paper's one-shot tasks —
+    /// bit-for-bit the pre-task-kind behaviour on both engines
+    /// (`tests/prop_taskkind.rs`) — see [`SimConfig::effective_task_kind`].
+    pub task_kind: Option<TaskKind>,
+    /// Defaults + execution knobs for the autoregressive class
+    /// (`[llm]` TOML block).
+    pub llm: LlmConfig,
     pub ga: GaConfig,
     pub comm: CommConfig,
     pub satellite: SatelliteConfig,
@@ -298,6 +347,8 @@ impl Default for SimConfig {
             shards: 1,
             retain_outcomes: false,
             obs: ObsConfig::default(),
+            task_kind: None,
+            llm: LlmConfig::default(),
             ga: GaConfig::default(),
             comm: CommConfig::default(),
             satellite: SatelliteConfig::default(),
@@ -367,6 +418,13 @@ impl SimConfig {
         self.effective_dissemination_for(self.engine)
     }
 
+    /// The workload class this run generates: the configured one, or the
+    /// paper's one-shot tasks. The default path is bit-for-bit the legacy
+    /// behaviour (enforced by `tests/prop_taskkind.rs`).
+    pub fn effective_task_kind(&self) -> TaskKind {
+        self.task_kind.unwrap_or(TaskKind::OneShot)
+    }
+
     /// Validate parameter ranges; returns a description of each violation.
     pub fn validate(&self) -> Result<(), Vec<String>> {
         let mut errs = Vec::new();
@@ -412,6 +470,23 @@ impl SimConfig {
         }
         if let Err(e) = self.obs.validate() {
             errs.push(format!("obs: {e}"));
+        }
+        if let Some(k) = &self.task_kind {
+            if let Err(e) = k.validate() {
+                errs.push(e);
+            }
+        }
+        if !self.llm.round_deadline_s.is_finite() || self.llm.round_deadline_s <= 0.0 {
+            errs.push(format!(
+                "llm.round_deadline_s={} must be finite and > 0",
+                self.llm.round_deadline_s
+            ));
+        }
+        if !(self.llm.small_model_factor > 0.0 && self.llm.small_model_factor <= 1.0) {
+            errs.push(format!(
+                "llm.small_model_factor={} must be in (0,1]",
+                self.llm.small_model_factor
+            ));
         }
         if errs.is_empty() {
             Ok(())
@@ -510,6 +585,22 @@ impl SimConfig {
                 matches!(d.dissemination, Some(DisseminationKind::Gossip { .. }))
                     && !s.contains(':');
         }
+        // [llm] is read before `task_kind` so a bare `autoregressive`
+        // selector picks up the block's values (the isl_latency_ms /
+        // dissemination ordering precedent)
+        if let Some(r) = doc.get_i64("llm", "rounds") {
+            d.llm.rounds = r as u32;
+        }
+        doc.read_f64("llm", "decode_flops", &mut d.llm.decode_flops);
+        doc.read_f64("llm", "state_bytes", &mut d.llm.state_bytes);
+        if let Some(e) = doc.get_f64("llm", "escalate") {
+            d.llm.escalate = Some(e);
+        }
+        doc.read_f64("llm", "round_deadline_s", &mut d.llm.round_deadline_s);
+        doc.read_f64("llm", "small_model_factor", &mut d.llm.small_model_factor);
+        if let Some(s) = doc.get_str("", "task_kind") {
+            d.task_kind = Some(TaskKind::parse_with(&s, &d.llm)?);
+        }
         Ok(cfg)
     }
 
@@ -579,6 +670,11 @@ impl SimConfig {
         if let Some(k) = args.get_parsed::<usize>("shards")? {
             self.shards = k;
         }
+        // unstated selector parameters fall back to the [llm] block
+        // (already applied from TOML at this point)
+        if let Some(s) = args.get("task-kind") {
+            self.task_kind = Some(TaskKind::parse_with(s, &self.llm)?);
+        }
         if args.has_flag("retain-outcomes") {
             self.retain_outcomes = true;
         }
@@ -645,6 +741,18 @@ impl SimConfig {
                 0 => write!(t, "\nEvent queue shards                     auto (one per plane)"),
                 k => write!(t, "\nEvent queue shards                     {k}"),
             };
+        }
+        // printed only for a non-default kind, so default runs keep the
+        // classic table byte-for-byte
+        let kind = self.effective_task_kind();
+        if kind != TaskKind::OneShot {
+            use std::fmt::Write as _;
+            let _ = write!(
+                t,
+                "\nTask kind                              {} (round deadline {} s)",
+                kind.label(),
+                self.llm.round_deadline_s
+            );
         }
         if self.obs.enabled() {
             use std::fmt::Write as _;
@@ -979,6 +1087,72 @@ capacity_mflops = 6000.0
         let t = SimConfig::default().table();
         assert!(t.contains("N_ini"));
         assert!(t.contains("20 MHz"));
+    }
+
+    #[test]
+    fn task_kind_knob_parses_and_defaults() {
+        let c = SimConfig::default();
+        assert_eq!(c.effective_task_kind(), TaskKind::OneShot);
+        assert!(!c.table().contains("Task kind"));
+
+        // TOML: [llm] feeds a bare `autoregressive` selector
+        let t = SimConfig::from_toml(
+            "task_kind = \"autoregressive\"\n\n[llm]\nrounds = 5\ndecode_flops = 123.0\nescalate = 0.1\n",
+        )
+        .unwrap();
+        assert_eq!(
+            t.effective_task_kind(),
+            TaskKind::Autoregressive {
+                rounds: 5,
+                decode_flops: 123.0,
+                state_bytes: 262_144.0,
+                escalate: Some(0.1),
+            }
+        );
+        assert!(t.validate().is_ok());
+        assert!(t.table().contains("Task kind"));
+        assert!(SimConfig::from_toml("task_kind = \"warp\"\n").is_err());
+
+        // CLI: explicit selector parameters win over the block
+        let args = crate::util::cli::Args::parse(
+            "x --task-kind autoregressive:3:50:1024".split_whitespace().map(String::from),
+        );
+        let mut d = SimConfig::default();
+        d.apply_args(&args).unwrap();
+        assert_eq!(
+            d.task_kind,
+            Some(TaskKind::Autoregressive {
+                rounds: 3,
+                decode_flops: 50.0,
+                state_bytes: 1024.0,
+                escalate: None,
+            })
+        );
+        assert!(d.validate().is_ok());
+
+        // explicit oneshot stays the default behaviour and prints nothing
+        let args = crate::util::cli::Args::parse(
+            "x --task-kind oneshot".split_whitespace().map(String::from),
+        );
+        let mut d = SimConfig::default();
+        d.apply_args(&args).unwrap();
+        assert_eq!(d.task_kind, Some(TaskKind::OneShot));
+        assert_eq!(d.table(), SimConfig::default().table());
+
+        // malformed selector is an error, not a panic
+        let args = crate::util::cli::Args::parse(
+            "x --task-kind autoregressive:x".split_whitespace().map(String::from),
+        );
+        let mut d = SimConfig::default();
+        assert!(d.apply_args(&args).is_err());
+
+        // validation catches bad [llm] execution knobs
+        let mut bad = SimConfig::default();
+        bad.llm.round_deadline_s = 0.0;
+        assert!(bad.validate().is_err());
+        let mut bad = SimConfig::default();
+        bad.llm.small_model_factor = 1.5;
+        assert!(bad.validate().is_err());
     }
 
     #[test]

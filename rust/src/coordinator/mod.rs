@@ -143,6 +143,7 @@ impl Coordinator {
                 segments: &segments,
                 kappa: self.kappa,
                 ga: &self.cfg.ga,
+                migration: None,
             };
             self.scheme.decide(&ctx)
         };

@@ -52,8 +52,22 @@ impl EarlyExitProfile {
         if !pool_idxs.is_empty() {
             pool_idxs.remove(0);
         }
-        if pool_idxs.len() > 1 {
-            pool_idxs.pop();
+        pool_idxs.pop();
+        if pool_idxs.is_empty() {
+            // residual nets: the only pools are the stem maxpool and the
+            // terminal avgpool, so anchor on bottleneck adds at quarter
+            // depths instead
+            let res: Vec<usize> = base
+                .layers
+                .iter()
+                .enumerate()
+                .filter(|(_, l)| l.kind == LayerKind::Residual)
+                .map(|(i, _)| i)
+                .collect();
+            pool_idxs = (1..=3)
+                .filter_map(|q| res.get(q * res.len() / 4).copied())
+                .collect();
+            pool_idxs.dedup();
         }
         pool_idxs.truncate(3);
         let n = pool_idxs.len().max(1) as f64;
@@ -228,6 +242,90 @@ mod tests {
         let (acc0, work0) = p.expected(&probs);
         assert!((acc0 - p.branches[0].accuracy).abs() < 1e-12);
         assert!(work0 < work);
+    }
+
+    #[test]
+    fn no_branch_sits_on_the_terminal_pool() {
+        // regression: with exactly two Pool layers (ResNet101's stem
+        // maxpool + terminal avgpool) the old `len() > 1` guard let the
+        // terminal pool through as the only exit — an "exit" that saves
+        // nothing but the FC head
+        for m in [DnnModel::Vgg19, DnnModel::Resnet101] {
+            let p = EarlyExitProfile::for_model(m);
+            let last_pool = p
+                .base
+                .layers
+                .iter()
+                .rposition(|l| l.kind == LayerKind::Pool)
+                .unwrap();
+            for b in &p.branches {
+                assert_ne!(
+                    b.layer_idx, last_pool,
+                    "{m:?}: exit anchored on the terminal pool"
+                );
+                assert!(b.layer_idx < p.base.layers.len() - 1);
+            }
+            // every kept exit still saves a meaningful fraction of work
+            for b in 0..p.branches.len() {
+                assert!(p.saving_for_exit(b) > 0.05, "{m:?} exit {b} saves ~nothing");
+            }
+        }
+    }
+
+    #[test]
+    fn first_layer_exit_truncates_to_one_layer() {
+        let base = DnnModel::Vgg19.profile();
+        let w0 = base.layers[0].workload_mflops;
+        let p = EarlyExitProfile {
+            base,
+            branches: vec![ExitBranch {
+                layer_idx: 0,
+                head_mflops: 1.5,
+                accuracy: 0.6,
+            }],
+        };
+        let w = p.workloads_for_exit(Some(0));
+        assert_eq!(w.len(), 1);
+        assert!((w[0] - (w0 + 1.5)).abs() < 1e-12, "head folds into layer 0");
+        assert!(p.supports_l(Some(0), 1));
+        assert!(!p.supports_l(Some(0), 2));
+    }
+
+    #[test]
+    fn last_layer_exit_keeps_full_length() {
+        let base = DnnModel::Vgg19.profile();
+        let n = base.layers.len();
+        let full: f64 = base.total_mflops();
+        let p = EarlyExitProfile {
+            base,
+            branches: vec![ExitBranch {
+                layer_idx: n - 1,
+                head_mflops: 2.0,
+                accuracy: 0.99,
+            }],
+        };
+        let w = p.workloads_for_exit(Some(0));
+        assert_eq!(w.len(), n, "an exit after the last layer truncates nothing");
+        let sum: f64 = w.iter().sum();
+        assert!((sum - (full + 2.0)).abs() < 1e-6);
+        // such an "exit" costs more than the full model — negative saving
+        assert!(p.saving_for_exit(0) < 0.0);
+    }
+
+    #[test]
+    fn zero_confidence_floor_takes_the_earliest_exit() {
+        for m in [DnnModel::Vgg19, DnnModel::Resnet101] {
+            let p = EarlyExitProfile::for_model(m);
+            assert_eq!(p.cheapest_exit(0.0), Some(0), "{m:?}");
+            // a floor exactly on a branch's accuracy admits that branch
+            let acc0 = p.branches[0].accuracy;
+            assert_eq!(p.cheapest_exit(acc0), Some(0), "{m:?}");
+            // the shared engine-facing policy agrees
+            let (acc, w) = EarlyExitProfile::plan(m, 0.0);
+            assert!((acc - acc0).abs() < 1e-12, "{m:?}");
+            assert_eq!(w.len(), p.branches[0].layer_idx + 1, "{m:?}");
+            assert!(w.len() < p.base.layers.len(), "{m:?}");
+        }
     }
 
     #[test]

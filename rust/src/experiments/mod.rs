@@ -18,12 +18,13 @@
 
 pub mod plot;
 
-use crate::config::{EngineKind, ScenarioKind, SimConfig};
+use crate::config::{EngineKind, LlmConfig, ScenarioKind, SimConfig};
 use crate::dnn::DnnModel;
-use crate::metrics::Report;
+use crate::metrics::{LlmReport, Report};
 use crate::offload::SchemeKind;
 use crate::sim::{Simulation, SplitPolicy};
 use crate::state::DisseminationKind;
+use crate::tasks::TaskKind;
 use crate::topology::TopologyKind;
 use crate::util::json::Json;
 
@@ -298,6 +299,25 @@ fn mean_reports(reports: Vec<Report>) -> Report {
         out.delay_p95_ms = sum_f(|r| r.delay_p95_ms);
         out.horizon_s = sum_f(|r| r.horizon_s);
         out.last_finish_s = sum_f(|r| r.last_finish_s);
+        // round-level block (autoregressive runs): field means when every
+        // repeat produced one — a mixed set keeps the first repeat's
+        // (one-shot repeats never have it, so `None` stays `None`)
+        if reports.iter().all(|r| r.llm.is_some()) {
+            let ls: Vec<&LlmReport> = reports.iter().filter_map(|r| r.llm.as_ref()).collect();
+            let sum_lu = |f: fn(&LlmReport) -> u64| -> u64 {
+                (ls.iter().map(|l| f(l) as f64).sum::<f64>() / n).round() as u64
+            };
+            let sum_lf =
+                |f: fn(&LlmReport) -> f64| -> f64 { ls.iter().map(|l| f(l)).sum::<f64>() / n };
+            out.llm = Some(LlmReport {
+                decode_tasks: sum_lu(|l| l.decode_tasks),
+                rounds_completed: sum_lu(|l| l.rounds_completed),
+                rounds_dropped: sum_lu(|l| l.rounds_dropped),
+                avg_round_delay_ms: sum_lf(|l| l.avg_round_delay_ms),
+                time_to_first_round_ms: sum_lf(|l| l.time_to_first_round_ms),
+                time_to_last_round_ms: sum_lf(|l| l.time_to_last_round_ms),
+            });
+        }
     }
     out
 }
@@ -725,6 +745,214 @@ pub fn topology_json(
     ])
 }
 
+/// One cell of the LLM workload sweep: an autoregressive task-kind
+/// variant crossed with an offloading scheme.
+pub struct LlmRow {
+    /// The autoregressive workload this cell ran under.
+    pub kind: TaskKind,
+    pub scheme: SchemeKind,
+    pub report: Report,
+}
+
+/// The λ the LLM sweep runs at by default: moderate load so the decode
+/// phase (not admission) dominates the round-delay signal.
+pub const LLM_LAMBDA: f64 = 25.0;
+
+/// Round counts swept by `experiment llm`.
+pub fn llm_rounds(quick: bool) -> Vec<u32> {
+    if quick {
+        vec![2, 8]
+    } else {
+        vec![2, 8, 32]
+    }
+}
+
+/// The task-kind grid for [`llm_sweep`]: one escalation-free
+/// autoregressive variant per round count, plus a single escalating cell
+/// (threshold at half the round deadline) on the mid round count so the
+/// sticky-state migration path is exercised in every run.
+pub fn llm_kind_grid(rounds: &[u32]) -> Vec<TaskKind> {
+    let d = LlmConfig::default();
+    let mut kinds: Vec<TaskKind> = rounds
+        .iter()
+        .map(|&r| TaskKind::Autoregressive {
+            rounds: r,
+            decode_flops: d.decode_flops,
+            state_bytes: d.state_bytes,
+            escalate: None,
+        })
+        .collect();
+    let mid = rounds[rounds.len() / 2];
+    kinds.push(TaskKind::Autoregressive {
+        rounds: mid,
+        decode_flops: d.decode_flops,
+        state_bytes: d.state_bytes,
+        escalate: Some(d.round_deadline_s * 0.5),
+    });
+    kinds
+}
+
+/// Sweep round-level delay metrics per scheme per autoregressive
+/// workload variant on the engine selected by `opts.engine`, averaged
+/// over `opts.repeats` seeds.
+pub fn llm_sweep(
+    model: DnnModel,
+    lambda: f64,
+    kinds: &[TaskKind],
+    opts: &SweepOpts,
+) -> Vec<LlmRow> {
+    let cells: Vec<(TaskKind, SchemeKind)> = kinds
+        .iter()
+        .flat_map(|kind| SchemeKind::all().into_iter().map(move |s| (*kind, s)))
+        .collect();
+    let reports = repeat_mean_cells(
+        opts,
+        cells.clone(),
+        |(kind, scheme)| format!("kind={} scheme={}", kind.label(), scheme.name()),
+        |(kind, scheme), seed| {
+            let mut cfg = base_cfg(model, opts);
+            cfg.seed = seed;
+            cfg.lambda = lambda;
+            cfg.task_kind = Some(*kind);
+            crate::engine::run(&cfg, *scheme)
+        },
+    );
+    cells
+        .into_iter()
+        .zip(reports)
+        .map(|((kind, scheme), report)| LlmRow {
+            kind,
+            scheme,
+            report,
+        })
+        .collect()
+}
+
+/// Render the LLM sweep as three panels (completion rate, mean round
+/// delay, time-to-last-round; workload × scheme).
+pub fn render_llm(title: &str, rows: &[LlmRow]) -> String {
+    let mut kinds: Vec<TaskKind> = Vec::new();
+    for r in rows {
+        if !kinds.contains(&r.kind) {
+            kinds.push(r.kind);
+        }
+    }
+    let schemes = SchemeKind::all();
+    let mut out = format!("== {title} ==\n");
+    for (panel, metric) in [
+        ("(a) task completion rate", 0usize),
+        ("(b) avg round delay [ms]", 1),
+        ("(c) time to last round [ms]", 2),
+    ] {
+        out.push_str(&format!("-- {panel} --\n{:>26}", "workload"));
+        for s in schemes {
+            out.push_str(&format!("{:>14}", s.name()));
+        }
+        out.push('\n');
+        for k in &kinds {
+            out.push_str(&format!("{:>26}", k.label()));
+            for s in schemes {
+                let row = rows
+                    .iter()
+                    .find(|r| r.kind == *k && r.scheme == s)
+                    .expect("missing llm row");
+                let llm = row.report.llm.as_ref();
+                let v = match metric {
+                    0 => row.report.completion_rate(),
+                    1 => llm.map(|l| l.avg_round_delay_ms).unwrap_or(0.0),
+                    _ => llm.map(|l| l.time_to_last_round_ms).unwrap_or(0.0),
+                };
+                match metric {
+                    0 => out.push_str(&format!("{v:>14.4}")),
+                    _ => out.push_str(&format!("{v:>14.2}")),
+                }
+            }
+            out.push('\n');
+        }
+    }
+    out
+}
+
+/// The machine-readable `BENCH_llm.json` payload: per-cell workload
+/// label, round count, scheme, headline completion/delay numbers, and
+/// the flattened round-level block (see the README's "LLM workloads"
+/// section for the schema). `engine` records which clock produced the
+/// rows.
+pub fn llm_json(
+    model: DnnModel,
+    lambda: f64,
+    engine: EngineKind,
+    quick: bool,
+    rows: &[LlmRow],
+) -> Json {
+    Json::obj(vec![
+        ("bench", Json::Str("llm".into())),
+        ("quick", Json::Bool(quick)),
+        ("model", Json::Str(model.name().into())),
+        ("engine", Json::Str(engine.name().into())),
+        ("lambda", Json::Num(lambda)),
+        (
+            "results",
+            Json::Arr(
+                rows.iter()
+                    .map(|r| {
+                        let rounds = match r.kind {
+                            TaskKind::Autoregressive { rounds, .. } => rounds,
+                            TaskKind::OneShot => 0,
+                        };
+                        let mut fields = vec![
+                            ("workload", Json::Str(r.kind.label())),
+                            ("rounds", Json::Num(rounds as f64)),
+                            ("scheme", Json::Str(r.scheme.name().into())),
+                            (
+                                "completion_rate",
+                                Json::Num(r.report.completion_rate()),
+                            ),
+                            ("avg_delay_ms", Json::Num(r.report.avg_delay_ms)),
+                            ("delay_p95_ms", Json::Num(r.report.delay_p95_ms)),
+                            (
+                                "total_tasks",
+                                Json::Num(r.report.total_tasks as f64),
+                            ),
+                            (
+                                "dropped_tasks",
+                                Json::Num(r.report.dropped_tasks as f64),
+                            ),
+                        ];
+                        if let Some(l) = &r.report.llm {
+                            fields.push((
+                                "decode_tasks",
+                                Json::Num(l.decode_tasks as f64),
+                            ));
+                            fields.push((
+                                "rounds_completed",
+                                Json::Num(l.rounds_completed as f64),
+                            ));
+                            fields.push((
+                                "rounds_dropped",
+                                Json::Num(l.rounds_dropped as f64),
+                            ));
+                            fields.push((
+                                "avg_round_delay_ms",
+                                Json::Num(l.avg_round_delay_ms),
+                            ));
+                            fields.push((
+                                "time_to_first_round_ms",
+                                Json::Num(l.time_to_first_round_ms),
+                            ));
+                            fields.push((
+                                "time_to_last_round_ms",
+                                Json::Num(l.time_to_last_round_ms),
+                            ));
+                        }
+                        Json::obj(fields)
+                    })
+                    .collect(),
+            ),
+        ),
+    ])
+}
+
 /// λ-sweep over all four schemes (the engine behind Figs. 2 & 3), every
 /// (cell, repeat) fanned across cores with deterministic row order.
 pub fn lambda_sweep(model: DnnModel, lambdas: &[f64], opts: &SweepOpts) -> Vec<Row> {
@@ -1010,6 +1238,39 @@ mod tests {
             parsed.get("results").unwrap().as_arr().unwrap().len(),
             rows.len()
         );
+    }
+
+    #[test]
+    fn llm_sweep_covers_all_cells_and_serializes() {
+        let mut opts = SweepOpts::quick();
+        opts.engine = EngineKind::Event;
+        let kinds = llm_kind_grid(&[2]);
+        // one escalation-free cell + the escalating cell, each × 4 schemes
+        assert_eq!(kinds.len(), 2);
+        let rows = llm_sweep(DnnModel::Vgg19, 10.0, &kinds, &opts);
+        assert_eq!(rows.len(), 2 * 4);
+        for r in &rows {
+            assert!(r.report.total_tasks > 0, "{:?}", r.kind);
+            let l = r.report.llm.as_ref().expect("autoregressive cell has llm block");
+            // every decoded task contributes exactly `rounds` rounds
+            assert_eq!(
+                l.rounds_completed + l.rounds_dropped,
+                l.decode_tasks * 2,
+                "{:?}",
+                r.kind
+            );
+        }
+        let s = render_llm("llm", &rows);
+        assert!(s.contains("(a) task completion rate"));
+        assert!(s.contains("avg round delay"));
+        assert!(s.contains("time to last round"));
+        let j = llm_json(DnnModel::Vgg19, 10.0, EngineKind::Event, true, &rows).to_string();
+        let parsed = crate::util::json::Json::parse(&j).unwrap();
+        assert_eq!(parsed.get("bench").unwrap().as_str(), Some("llm"));
+        assert_eq!(parsed.get("engine").unwrap().as_str(), Some("event"));
+        let results = parsed.get("results").unwrap().as_arr().unwrap();
+        assert_eq!(results.len(), rows.len());
+        assert!(results[0].get("rounds_completed").is_some());
     }
 
     #[test]

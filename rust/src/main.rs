@@ -65,7 +65,7 @@ SUBCOMMANDS
   simulate            one simulation run (--scheme scc|random|rrp|dqn)
   sweep               lambda sweep, all schemes (--model vgg19|resnet101)
   experiment <id>     fig2 | fig3 | eventsim | staleness | topology |
-                      scale | ablation-split | ablation-ga | all
+                      llm | scale | ablation-split | ablation-ga | all
   serve               coordinator with real PJRT slice inference
   validate-artifacts  compile + execute each artifacts/*.hlo.txt
   print-config        effective Table-I parameters
@@ -84,6 +84,11 @@ OPTIONS
                   instant on the event engine, periodic:1 on the slotted)
   --isl-latency-ms M  per-hop ISL store-and-forward latency (default 25);
                   sets the tick of a bare --dissemination gossip
+  --task-kind K   oneshot | autoregressive[:<rounds>[:<mflops>[:<bytes>
+                  [:<escalate_s>]]]] — task workload shape (default
+                  oneshot; autoregressive runs LLM-style decode rounds
+                  after the split chain; unstated fields fall back to
+                  the [llm] TOML block)
   --seed X        RNG seed      --repeats R    seeds averaged per point
   --threads T     sweep cells fanned over T workers (0 = all cores, the
                   default; 1 = sequential — rows are byte-identical;
@@ -302,6 +307,43 @@ fn experiment(args: &Args) -> Result<(), String> {
             satkit::bench::write_json("results/topology.json", &json)
                 .map_err(|e| e.to_string())?;
             println!("wrote results/topology.json\n");
+        }
+        "llm" => {
+            // round-level delay metrics per scheme per autoregressive
+            // (LLM-style decode) workload variant — the adaptive
+            // task-kind study. Runs on the event engine unless --engine
+            // explicitly says otherwise; --lambda overrides the
+            // operating point; --quick trims the round grid and horizon.
+            let quick = args.has_flag("quick");
+            let lambda = args
+                .get_parsed::<f64>("lambda")?
+                .unwrap_or(exp::LLM_LAMBDA);
+            let mut opts = opts;
+            if args.get("engine").is_none() {
+                opts.engine = satkit::config::EngineKind::Event;
+            }
+            guard("results/llm.json")?;
+            let rounds = exp::llm_rounds(quick);
+            let kinds = exp::llm_kind_grid(&rounds);
+            let rows = exp::llm_sweep(cfg.model, lambda, &kinds, &opts);
+            println!(
+                "{}",
+                exp::render_llm(
+                    &format!(
+                        "llm workload sweep ({}, {} engine, lambda={lambda})",
+                        cfg.model.name(),
+                        opts.engine.name()
+                    ),
+                    &rows
+                )
+            );
+            let json = exp::llm_json(cfg.model, lambda, opts.engine, quick, &rows);
+            let bench_path = satkit::bench::out_path("SATKIT_LLM_JSON", "BENCH_llm.json");
+            satkit::bench::write_json(&bench_path, &json).map_err(|e| e.to_string())?;
+            println!("wrote {bench_path}");
+            satkit::bench::write_json("results/llm.json", &json)
+                .map_err(|e| e.to_string())?;
+            println!("wrote results/llm.json\n");
         }
         "scale" => run_fig("scale", &|| exp::scale(&exp::default_ns(), &opts), "N")?,
         "ablation-split" => {

@@ -137,6 +137,26 @@ impl DelayHistogram {
     }
 }
 
+/// Streaming accumulators for the autoregressive (LLM) workload class:
+/// per-round delay components plus time-to-first/last-round, lazily
+/// created the first time a decode hook fires — one-shot runs never
+/// allocate it, so their reports (and JSON bytes) are untouched.
+#[derive(Clone, Debug, Default)]
+struct LlmStats {
+    /// Tasks whose prefill chain completed and that entered decode.
+    decode_tasks: u64,
+    rounds_completed: u64,
+    /// Rounds lost to a per-round deadline miss (the missed round plus
+    /// every round the task never ran).
+    rounds_dropped: u64,
+    /// Welford over per-round ready→done delays [ms].
+    round_delay_ms: Welford,
+    /// Welford over arrival→first-round-done [ms] (completed tasks).
+    ttfr_ms: Welford,
+    /// Welford over arrival→last-round-done [ms] (completed tasks).
+    ttlr_ms: Welford,
+}
+
 /// Collects everything a simulation run produces, streaming each outcome
 /// into constant-size accumulators at record time.
 #[derive(Clone, Debug)]
@@ -154,6 +174,9 @@ pub struct MetricsCollector {
     /// consumers (plots/traces) opt into; `None` keeps memory flat in
     /// task count.
     retained: Option<Vec<TaskOutcome>>,
+    /// Autoregressive-round accumulators — `Some` only once a decode hook
+    /// has fired, so one-shot runs stay byte-identical.
+    llm: Option<Box<LlmStats>>,
     pub per_sat: Vec<SatelliteTotals>,
     pub slots_run: usize,
 }
@@ -170,9 +193,41 @@ impl MetricsCollector {
             delay_hist: DelayHistogram::new(),
             last_finish_s: 0.0,
             retained: None,
+            llm: None,
             per_sat: vec![SatelliteTotals::default(); n_sats],
             slots_run: 0,
         }
+    }
+
+    fn llm_mut(&mut self) -> &mut LlmStats {
+        self.llm.get_or_insert_with(Default::default)
+    }
+
+    /// A task's prefill chain completed and its decode phase began.
+    pub fn decode_started(&mut self) {
+        self.llm_mut().decode_tasks += 1;
+    }
+
+    /// One decode round completed within its deadline; `delay_s` is its
+    /// ready→done delay (FIFO wait + service).
+    pub fn round_done(&mut self, delay_s: f64) {
+        let s = self.llm_mut();
+        s.rounds_completed += 1;
+        s.round_delay_ms.push(delay_s * 1e3);
+    }
+
+    /// A round missed its deadline: `n` rounds are lost (the missed one
+    /// plus every round the task never ran).
+    pub fn rounds_dropped(&mut self, n: u64) {
+        self.llm_mut().rounds_dropped += n;
+    }
+
+    /// A decode task ran all its rounds: record time-to-first-round and
+    /// time-to-last-round (both measured from arrival) [s].
+    pub fn decode_finished(&mut self, ttfr_s: f64, ttlr_s: f64) {
+        let s = self.llm_mut();
+        s.ttfr_ms.push(ttfr_s * 1e3);
+        s.ttlr_ms.push(ttlr_s * 1e3);
     }
 
     /// Builder: keep the full `TaskOutcome` buffer (memory grows with task
@@ -236,6 +291,42 @@ impl MetricsCollector {
     }
 }
 
+/// Round-level block of the report for autoregressive (LLM) runs —
+/// present only when the run generated decode rounds, so one-shot
+/// reports (and their JSON bytes) are unchanged.
+#[derive(Clone, Debug, PartialEq)]
+pub struct LlmReport {
+    /// Tasks whose prefill chain completed and that entered decode.
+    pub decode_tasks: u64,
+    pub rounds_completed: u64,
+    pub rounds_dropped: u64,
+    /// Mean per-round ready→done delay [ms].
+    pub avg_round_delay_ms: f64,
+    /// Mean arrival→first-round-done [ms] over fully-decoded tasks.
+    pub time_to_first_round_ms: f64,
+    /// Mean arrival→last-round-done [ms] over fully-decoded tasks.
+    pub time_to_last_round_ms: f64,
+}
+
+impl LlmReport {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("decode_tasks", Json::Num(self.decode_tasks as f64)),
+            ("rounds_completed", Json::Num(self.rounds_completed as f64)),
+            ("rounds_dropped", Json::Num(self.rounds_dropped as f64)),
+            ("avg_round_delay_ms", Json::Num(self.avg_round_delay_ms)),
+            (
+                "time_to_first_round_ms",
+                Json::Num(self.time_to_first_round_ms),
+            ),
+            (
+                "time_to_last_round_ms",
+                Json::Num(self.time_to_last_round_ms),
+            ),
+        ])
+    }
+}
+
 /// Final experiment report — the quantities plotted in Figs. 2 & 3.
 #[derive(Clone, Debug)]
 pub struct Report {
@@ -272,6 +363,10 @@ pub struct Report {
     /// keeps the default JSON output byte-identical to pre-telemetry
     /// builds. See `crate::obs`.
     pub telemetry: Option<Json>,
+    /// Round-level stats — `Some` only when the run executed decode
+    /// rounds (`task-kind=autoregressive`); `None` keeps one-shot JSON
+    /// byte-identical to pre-LLM builds.
+    pub llm: Option<LlmReport>,
 }
 
 impl Report {
@@ -294,6 +389,14 @@ impl Report {
             last_finish_s: c.last_finish_s,
             outcomes: c.retained,
             telemetry: None,
+            llm: c.llm.map(|s| LlmReport {
+                decode_tasks: s.decode_tasks,
+                rounds_completed: s.rounds_completed,
+                rounds_dropped: s.rounds_dropped,
+                avg_round_delay_ms: s.round_delay_ms.mean(),
+                time_to_first_round_ms: s.ttfr_ms.mean(),
+                time_to_last_round_ms: s.ttlr_ms.mean(),
+            }),
         }
     }
 
@@ -357,6 +460,9 @@ impl Report {
             ("throughput_per_s", Json::Num(self.throughput_per_s())),
             ("drain_secs", Json::Num(self.drain_secs())),
         ];
+        if let Some(l) = &self.llm {
+            pairs.push(("llm", l.to_json()));
+        }
         if let Some(t) = &self.telemetry {
             pairs.push(("telemetry", t.clone()));
         }
@@ -513,6 +619,39 @@ mod tests {
             "streaming {} vs batch {batch}",
             r.avg_delay_ms
         );
+    }
+
+    #[test]
+    fn llm_block_absent_unless_rounds_ran() {
+        let mut c = MetricsCollector::new(1);
+        c.record(outcome(0, 3, 2, 1.0, 0.2));
+        let r = c.finish(1);
+        assert!(r.llm.is_none());
+        // JSON for a one-shot run must not mention the llm block at all
+        assert!(!r.to_json().to_string().contains("\"llm\""));
+    }
+
+    #[test]
+    fn llm_accumulators_roll_up() {
+        let mut c = MetricsCollector::new(1);
+        c.decode_started();
+        c.round_done(0.1);
+        c.round_done(0.3);
+        c.decode_finished(0.5, 1.5);
+        c.decode_started();
+        c.round_done(0.2);
+        c.rounds_dropped(3);
+        let r = c.finish(1);
+        let l = r.llm.as_ref().unwrap();
+        assert_eq!(l.decode_tasks, 2);
+        assert_eq!(l.rounds_completed, 3);
+        assert_eq!(l.rounds_dropped, 3);
+        assert!((l.avg_round_delay_ms - 200.0).abs() < 1e-9);
+        assert!((l.time_to_first_round_ms - 500.0).abs() < 1e-9);
+        assert!((l.time_to_last_round_ms - 1500.0).abs() < 1e-9);
+        let js = r.to_json().to_string();
+        assert!(js.contains("\"llm\""));
+        assert!(js.contains("\"rounds_dropped\""));
     }
 
     #[test]

@@ -543,6 +543,7 @@ mod tests {
             segments: segs,
             kappa: 1e-4,
             ga,
+            migration: None,
         }
     }
 

@@ -58,6 +58,20 @@ impl SchemeKind {
     }
 }
 
+/// Sticky-state surcharge for re-placing a live autoregressive task:
+/// its KV-cache (`state_bytes`) lives on `from`, so any placement whose
+/// final decode satellite differs pays `secs_per_hop · MH(from, c_L)` of
+/// extra ISL transmission (Eq. 7 reuse over the state size instead of an
+/// activation cut). `None` for one-shot tasks — the deficit is then
+/// bit-for-bit the pre-LLM expression.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct MigrationCost {
+    /// Satellite currently holding the task's KV-cache state.
+    pub from: SatId,
+    /// ISL seconds per hop to ship the state (`IslLink::hop_secs(state_bytes)`).
+    pub secs_per_hop: f64,
+}
+
 /// Everything a scheme may observe when deciding (local view of the
 /// decision-making satellite: its decision space and those satellites'
 /// resource state — §I's "local observations").
@@ -82,6 +96,9 @@ pub struct OffloadContext<'a> {
     /// κ — ISL transfer coefficient [s per MFLOP·hop] (Eq. 7 scaling).
     pub kappa: f64,
     pub ga: &'a GaConfig,
+    /// Sticky-state migration surcharge (autoregressive tasks only);
+    /// `None` leaves every deficit bit-for-bit unchanged.
+    pub migration: Option<MigrationCost>,
 }
 
 impl<'a> OffloadContext<'a> {
@@ -145,6 +162,15 @@ impl<'a> OffloadContext<'a> {
                 admitted[k] = true;
             } else {
                 extra_fallback.push((c, q));
+            }
+        }
+        // Sticky-state term: decode rounds run where the chain ends, so a
+        // live task whose state sits elsewhere pays the Eq. 7 state ship
+        // toward that final satellite. Added after the loop (single term,
+        // left-to-right) so the indexed kernels can reproduce it exactly.
+        if let Some(m) = &self.migration {
+            if let Some(&last) = chrom.last() {
+                tran += m.secs_per_hop * self.topo.hops(m.from, last) as f64;
             }
         }
         g.theta1 * comp + g.theta2 * tran + g.theta3 * drops
@@ -220,6 +246,12 @@ pub struct DecisionSpaceIndex {
     /// kernel computes `κ·q_k·MH` left-to-right, so `kq[k]·MH` reproduces
     /// it bit-for-bit).
     kq: Vec<f64>,
+    /// `mig[g]` — sticky-state surcharge of ending the chain on gene `g`
+    /// (`secs_per_hop · MH(from, sat_ids[g])`); empty when the decision
+    /// carries no [`MigrationCost`], so the one-shot kernels never touch it.
+    mig: Vec<f64>,
+    /// The migration the side table was built from (reuse-cache key).
+    migration: Option<MigrationCost>,
     kappa: f64,
     theta1: f64,
     theta2: f64,
@@ -277,6 +309,15 @@ impl DecisionSpaceIndex {
         }
         self.kq.clear();
         self.kq.extend(self.segments.iter().map(|&q| ctx.kappa * q));
+        self.mig.clear();
+        if let Some(m) = &ctx.migration {
+            self.mig.extend(
+                ctx.candidates
+                    .iter()
+                    .map(|&c| m.secs_per_hop * ctx.topo.hops(m.from, c) as f64),
+            );
+        }
+        self.migration = ctx.migration;
         self.kappa = ctx.kappa;
         self.theta1 = ctx.ga.theta1;
         self.theta2 = ctx.ga.theta2;
@@ -307,7 +348,15 @@ impl DecisionSpaceIndex {
 
     /// True when the cached contents equal what `build(ctx)` would write.
     fn matches(&self, ctx: &OffloadContext) -> bool {
-        let same_static = self.origin == ctx.origin
+        let same_migration = match (&self.migration, &ctx.migration) {
+            (None, None) => true,
+            (Some(a), Some(b)) => {
+                a.from == b.from && a.secs_per_hop.to_bits() == b.secs_per_hop.to_bits()
+            }
+            _ => false,
+        };
+        let same_static = same_migration
+            && self.origin == ctx.origin
             && self.sat_ids.as_slice() == ctx.candidates
             && self.kappa.to_bits() == ctx.kappa.to_bits()
             && self.theta1.to_bits() == ctx.ga.theta1.to_bits()
@@ -382,6 +431,18 @@ impl DecisionSpaceIndex {
         self.kappa * self.segments[k] * self.hop(genes[k], genes[k + 1]) as f64
     }
 
+    /// Sticky-state surcharge of a chromosome (0 unless the decision was
+    /// built with a [`MigrationCost`]): the reference adds this single
+    /// term to `tran` after its segment loop, and every kernel below adds
+    /// it at the same reduction position, keeping them bit-for-bit equal.
+    #[inline]
+    fn mig_term(&self, genes: &[Gene]) -> f64 {
+        match genes.last() {
+            Some(&g) if !self.mig.is_empty() => self.mig[g as usize],
+            _ => 0.0,
+        }
+    }
+
     /// The Eq. 4 admission walk of the reference `deficit` (θ3 drop count):
     /// planned loads accumulate over the admitted prefix in segment order,
     /// so the floating-point sums match the reference bit for bit.
@@ -420,6 +481,9 @@ impl DecisionSpaceIndex {
                 tran += self.kappa * q * self.hop(g, genes[k + 1]) as f64;
             }
         }
+        if !self.mig.is_empty() {
+            tran += self.mig_term(genes);
+        }
         let drops = self.admission_drops(genes);
         self.theta1 * comp + self.theta2 * tran + self.theta3 * drops
     }
@@ -449,6 +513,9 @@ impl DecisionSpaceIndex {
             } else {
                 admitted[k] = true;
             }
+        }
+        if !self.mig.is_empty() {
+            tran += self.mig_term(genes);
         }
         self.theta1 * comp + self.theta2 * tran + self.theta3 * drops
     }
@@ -500,6 +567,9 @@ impl DecisionSpaceIndex {
         for &t in &scratch.tran_terms {
             tran += t;
         }
+        if !self.mig.is_empty() {
+            tran += self.mig_term(genes);
+        }
         let drops = self.admission_drops(genes);
         self.theta1 * comp + self.theta2 * tran + self.theta3 * drops
     }
@@ -533,9 +603,11 @@ impl DecisionSpaceIndex {
         // — same per-lane add order, masked adds of +0.0 for skipped
         // admission terms, no FMA contraction — so the dispatch can never
         // change a decision (`tests/prop_sharded.rs::
-        // prop_deficit_batch_simd_matches_scalar`).
+        // prop_deficit_batch_simd_matches_scalar`). The lanes predate the
+        // sticky-state side table, so dispatch only when it is empty
+        // (one-shot decisions — the entire pre-LLM hot path).
         #[cfg(feature = "simd")]
-        if simd::deficit_batch(self, genes, out) {
+        if self.mig.is_empty() && simd::deficit_batch(self, genes, out) {
             return;
         }
         self.deficit_batch_scalar(scratch, genes, out);
@@ -569,6 +641,11 @@ impl DecisionSpaceIndex {
                 let a = genes[i * l + k] as usize;
                 let b = genes[i * l + k + 1] as usize;
                 *acc += kq * self.hops[a * nc + b] as f64;
+            }
+        }
+        if !self.mig.is_empty() {
+            for (i, acc) in scratch.tran.iter_mut().enumerate() {
+                *acc += self.mig[genes[i * l + l - 1] as usize];
             }
         }
         out.reserve(n);
@@ -702,6 +779,7 @@ mod tests {
             segments,
             kappa: 1e-4,
             ga,
+            migration: None,
         }
     }
 
@@ -863,6 +941,85 @@ mod tests {
         // empty generation is a clean no-op
         index.deficit_batch(&mut scratch, &[], &mut out);
         assert!(out.is_empty());
+    }
+
+    #[test]
+    fn migration_cost_charges_final_hop_distance() {
+        let (topo, sats, mut ga) = setup(4);
+        ga.theta1 = 0.0;
+        ga.theta3 = 0.0;
+        ga.theta2 = 1.0;
+        let cands = topo.decision_space(0, 2);
+        let segs = [100.0, 50.0];
+        let mut ctx = test_ctx(&topo, &sats, &cands, &segs, &ga);
+        let base = ctx.deficit(&[0, 0]);
+        ctx.migration = Some(MigrationCost {
+            from: 0,
+            secs_per_hop: 0.25,
+        });
+        // chain ends on the state-holding satellite: no surcharge
+        assert_eq!(ctx.deficit(&[0, 0]).to_bits(), base.to_bits());
+        // chain ends one hop away: + secs_per_hop · 1 on the θ2 term
+        let nb = topo.neighbors(0)[0];
+        let d = ctx.deficit(&[0, nb]);
+        let plain = {
+            let mut c2 = test_ctx(&topo, &sats, &cands, &segs, &ga);
+            c2.migration = None;
+            c2.deficit(&[0, nb])
+        };
+        assert!((d - (plain + 0.25)).abs() < 1e-12, "d={d} plain={plain}");
+    }
+
+    #[test]
+    fn indexed_migration_matches_reference_bitwise() {
+        let (topo, mut sats, ga) = setup(6);
+        let mut rng = crate::util::rng::Pcg64::seed_from_u64(31);
+        for s in sats.iter_mut() {
+            s.try_load(rng.f64_in(0.0, 14_000.0));
+        }
+        let cands = topo.decision_space(7, 2);
+        let segs = [4000.0, 0.0, 3500.0];
+        let mut ctx = test_ctx(&topo, &sats, &cands, &segs, &ga);
+        ctx.origin = 7;
+        ctx.migration = Some(MigrationCost {
+            from: 7,
+            secs_per_hop: 0.031_25,
+        });
+        let index = DecisionSpaceIndex::from_ctx(&ctx);
+        let mut scratch = DeficitScratch::default();
+        let mut batch = BatchScratch::default();
+        let mut flat: Vec<Gene> = Vec::new();
+        let mut chrom = Vec::new();
+        for _ in 0..100 {
+            let genes: Vec<Gene> = (0..segs.len())
+                .map(|_| rng.usize_in(0, cands.len()) as Gene)
+                .collect();
+            index.decode_into(&genes, &mut chrom);
+            let want = ctx.deficit(&chrom);
+            assert_eq!(index.deficit(&genes).to_bits(), want.to_bits());
+            assert_eq!(index.deficit_with(&mut scratch, &genes).to_bits(), want.to_bits());
+            flat.extend_from_slice(&genes);
+        }
+        let mut out = Vec::new();
+        index.deficit_batch(&mut batch, &flat, &mut out);
+        for (genes, &got) in flat.chunks(segs.len()).zip(&out) {
+            assert_eq!(got.to_bits(), index.deficit(genes).to_bits());
+        }
+        // the reuse cache keys on the migration: same → hit, changed → rebuild
+        let mut cached = DecisionSpaceIndex::new();
+        assert!(!cached.build_cached(&ctx));
+        assert!(cached.build_cached(&ctx));
+        ctx.migration = Some(MigrationCost {
+            from: 7,
+            secs_per_hop: 0.0625,
+        });
+        assert!(!cached.build_cached(&ctx));
+        ctx.migration = None;
+        assert!(!cached.build_cached(&ctx));
+        assert_eq!(
+            cached.deficit(&[0, 0, 0]).to_bits(),
+            ctx.deficit(&[cands[0], cands[0], cands[0]]).to_bits()
+        );
     }
 
     #[test]

@@ -56,6 +56,7 @@ mod tests {
             segments: &segs,
             kappa: 1e-4,
             ga: &ga,
+            migration: None,
         };
         let mut s = RandomScheme::new(3);
         for _ in 0..50 {
@@ -80,6 +81,7 @@ mod tests {
             segments: &segs,
             kappa: 1e-4,
             ga: &ga,
+            migration: None,
         };
         let mut s = RandomScheme::new(4);
         let mut seen = std::collections::HashSet::new();

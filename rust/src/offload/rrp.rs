@@ -79,6 +79,7 @@ mod tests {
             segments: segs,
             kappa: 1e-4,
             ga,
+            migration: None,
         }
     }
 

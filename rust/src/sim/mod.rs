@@ -21,11 +21,11 @@ use crate::comm::{GatewayChannel, IslLink};
 use crate::config::{EngineKind, SimConfig};
 use crate::metrics::{MetricsCollector, Report, TaskOutcome};
 use crate::obs::{InstantKind, Obs, SpanKind};
-use crate::offload::{make_scheme, OffloadContext, OffloadScheme, SchemeKind};
+use crate::offload::{make_scheme, MigrationCost, OffloadContext, OffloadScheme, SchemeKind};
 use crate::satellite::{Admission, Satellite};
 use crate::splitting::balanced_split;
 use crate::state::ViewTracker;
-use crate::tasks::{decision_satellites, TaskGenerator};
+use crate::tasks::{decision_satellites, TaskGenerator, TaskKind};
 use crate::topology::{Constellation, SatId};
 use crate::util::rng::Pcg64;
 
@@ -120,6 +120,12 @@ pub struct Simulation {
     gateway: GatewayChannel,
     kappa: f64,
     rng: Pcg64,
+    /// Workload class (`cfg.effective_task_kind()`); `OneShot` leaves
+    /// every pre-LLM code path untouched.
+    task_kind: TaskKind,
+    /// ISL seconds per hop to ship one task's KV-cache state
+    /// (`IslLink::hop_secs(state_bytes)`; 0 for one-shot runs).
+    state_hop_secs: f64,
     pub split_policy: SplitPolicy,
     /// Cached split (per-task splits are identical when scale jitter = 0).
     split_cache: Option<(u64, Vec<f64>)>,
@@ -152,6 +158,13 @@ impl Simulation {
             decision_satellites(topo.len(), cfg.decision_fraction, cfg.seed);
         let n_areas = decision_sats.len();
         let kappa = calibrate_kappa(cfg);
+        let task_kind = cfg.effective_task_kind();
+        let state_hop_secs = match task_kind {
+            TaskKind::Autoregressive { state_bytes, .. } => {
+                IslLink::new(cfg.comm.clone()).hop_secs(state_bytes)
+            }
+            TaskKind::OneShot => 0.0,
+        };
         Simulation {
             topo,
             satellites,
@@ -168,6 +181,8 @@ impl Simulation {
             gateway: GatewayChannel::new(cfg.comm.clone()),
             kappa,
             rng: Pcg64::new(cfg.seed, 0x5131),
+            task_kind,
+            state_hop_secs,
             split_policy: SplitPolicy::Balanced,
             split_cache: None,
             handover: None,
@@ -225,6 +240,22 @@ impl Simulation {
     pub fn with_split_policy(mut self, p: SplitPolicy) -> Simulation {
         self.split_policy = p;
         self
+    }
+
+    /// Sticky-state surcharge the placement decision must see (see
+    /// [`crate::eventsim::EventSim`]'s analogue): only autoregressive
+    /// tasks under the escalation policy, whose KV-cache starts on the
+    /// origin, can pay a state ship toward the chain's end.
+    fn migration_cost(&self, origin: SatId) -> Option<MigrationCost> {
+        match self.task_kind {
+            TaskKind::Autoregressive {
+                escalate: Some(_), ..
+            } => Some(MigrationCost {
+                from: origin,
+                secs_per_hop: self.state_hop_secs,
+            }),
+            _ => None,
+        }
     }
 
     /// Run the full Γ-slot simulation and produce the report.
@@ -356,6 +387,7 @@ impl Simulation {
                             segments,
                             kappa: self.kappa,
                             ga: &self.cfg.ga,
+                            migration: self.migration_cost(origin),
                         };
                         self.scheme.decide_into(&ctx, &mut chrom);
                     }
@@ -380,6 +412,9 @@ impl Simulation {
                     let mut tran = 0.0f64;
                     let mut drop_point = l + 1; // completed
                     let mut dropped_at = None;
+                    // satellite executing the last admitted segment (the
+                    // chain's end — where decode rounds run by default)
+                    let mut last_exec_sat = origin;
                     // Trace cursor: the analytic offsets Eq. 5/7 charge
                     // against the arrival, laid out back-to-back exactly
                     // as `finish_time_s` accumulates them.
@@ -390,6 +425,7 @@ impl Simulation {
                         }
                         match self.satellites[c].try_load(q) {
                             Admission::Accepted => {
+                                last_exec_sat = c;
                                 let dt = self.satellites[c].service_secs_with_queue(q);
                                 comp += dt;
                                 metrics.sat(c).comp_delay_s += dt;
@@ -439,9 +475,81 @@ impl Simulation {
                             segments,
                             kappa: self.kappa,
                             ga: &self.cfg.ga,
+                            migration: self.migration_cost(origin),
                         };
                         self.scheme
                             .observe(&ctx, &chrom, dropped_at, comp + tran);
+                    }
+                    // Decode phase (autoregressive tasks whose prefill
+                    // chain was fully admitted): the slotted analogue of
+                    // the event engine's RoundDone/Escalate flow. Rounds
+                    // skip Eq. 4 admission and are charged analytically —
+                    // backlog wait plus service, `(loaded + flops)/C` —
+                    // the slot-quantized stand-in for the FIFO wait.
+                    if drop_point > l {
+                        if let TaskKind::Autoregressive {
+                            rounds,
+                            decode_flops,
+                            escalate,
+                            ..
+                        } = self.task_kind
+                        {
+                            metrics.decode_started();
+                            let deadline = self.cfg.llm.round_deadline_s;
+                            let small = self.cfg.llm.small_model_factor;
+                            let mut decode_sat = if escalate.is_some() {
+                                origin
+                            } else {
+                                last_exec_sat
+                            };
+                            let mut escalated = false;
+                            let mut deficit = 0.0f64;
+                            let mut first_round_end = cursor;
+                            for round in 1..=rounds {
+                                let flops = if escalate.is_some() && !escalated {
+                                    decode_flops * small
+                                } else {
+                                    decode_flops
+                                };
+                                let s = &self.satellites[decode_sat];
+                                let dt = (s.loaded() + flops) / s.capacity_mflops;
+                                if dt > deadline {
+                                    // this round and everything behind it
+                                    // miss the per-round deadline
+                                    metrics.rounds_dropped((rounds - (round - 1)) as u64);
+                                    drop_point = l;
+                                    break;
+                                }
+                                comp += dt;
+                                metrics.sat(decode_sat).comp_delay_s += dt;
+                                metrics.sat(decode_sat).assigned_mflops += flops;
+                                metrics.round_done(dt);
+                                cursor += dt;
+                                if round == 1 {
+                                    first_round_end = cursor;
+                                }
+                                if round == rounds {
+                                    metrics.decode_finished(
+                                        first_round_end - task.arrival_time_s,
+                                        cursor - task.arrival_time_s,
+                                    );
+                                } else if let Some(thresh) = escalate {
+                                    deficit += dt;
+                                    if !escalated && deficit > thresh {
+                                        // ship the KV-cache to the chain's
+                                        // end and decode on the large model
+                                        escalated = true;
+                                        let to = last_exec_sat;
+                                        let mig = self.state_hop_secs
+                                            * self.topo.hops(decode_sat, to) as f64;
+                                        tran += mig;
+                                        metrics.sat(decode_sat).tran_delay_s += mig;
+                                        cursor += mig;
+                                        decode_sat = to;
+                                    }
+                                }
+                            }
+                        }
                     }
                     obs.task_span(
                         task.arrival_time_s,
@@ -646,6 +754,52 @@ mod tests {
                 full.avg_delay_ms
             );
         }
+    }
+
+    #[test]
+    fn autoregressive_rounds_conserve_slotted() {
+        let mut cfg = small_cfg(DnnModel::Vgg19, 3.0);
+        cfg.task_kind = Some(TaskKind::Autoregressive {
+            rounds: 4,
+            decode_flops: 150.0,
+            state_bytes: 1e5,
+            escalate: None,
+        });
+        let r = Simulation::new(&cfg, SchemeKind::Scc).run();
+        assert!(r.total_tasks > 0);
+        assert_eq!(r.total_tasks, r.completed_tasks + r.dropped_tasks);
+        let l = r.llm.as_ref().expect("llm block present");
+        assert!(l.decode_tasks > 0);
+        assert_eq!(l.rounds_completed + l.rounds_dropped, l.decode_tasks * 4);
+        assert!(l.time_to_last_round_ms >= l.time_to_first_round_ms);
+    }
+
+    #[test]
+    fn escalation_and_deadline_run_slotted() {
+        let mut cfg = small_cfg(DnnModel::Vgg19, 3.0);
+        cfg.task_kind = Some(TaskKind::Autoregressive {
+            rounds: 6,
+            decode_flops: 150.0,
+            state_bytes: 1e6,
+            escalate: Some(0.0),
+        });
+        let r = Simulation::new(&cfg, SchemeKind::Scc).run();
+        let l = r.llm.as_ref().expect("llm block present");
+        assert_eq!(l.rounds_completed + l.rounds_dropped, l.decode_tasks * 6);
+        // an impossibly tight deadline drops every decoding task
+        cfg.llm.round_deadline_s = 1e-9;
+        let r2 = Simulation::new(&cfg, SchemeKind::Scc).run();
+        let l2 = r2.llm.as_ref().expect("llm block present");
+        assert_eq!(l2.rounds_completed, 0);
+        assert_eq!(r2.completed_tasks, 0);
+    }
+
+    #[test]
+    fn oneshot_report_has_no_llm_block_slotted() {
+        let mut cfg = small_cfg(DnnModel::Vgg19, 3.0);
+        cfg.task_kind = Some(TaskKind::OneShot);
+        let r = Simulation::new(&cfg, SchemeKind::Scc).run();
+        assert!(r.llm.is_none());
     }
 
     #[test]

@@ -3,9 +3,162 @@
 //! decision-making satellite overhead. Arrivals per decision satellite per
 //! slot are Poisson(λ) (Table I: λ ∈ [4, 70]).
 
+use crate::config::LlmConfig;
 use crate::dnn::DnnModel;
 use crate::topology::SatId;
 use crate::util::rng::Pcg64;
+
+/// Which workload class a run generates: the paper's one-shot split-DNN
+/// inference, or an LLM-style autoregressive task that keeps producing
+/// decode rounds after its prefill (segment-chain) phase completes.
+///
+/// `OneShot` is the default and is bit-for-bit the pre-task-kind
+/// behaviour on both engines (enforced by `tests/prop_taskkind.rs`).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum TaskKind {
+    /// One split inference per task (the paper's model; the default).
+    OneShot,
+    /// Multi-round decode with sticky KV-cache state (token streaming
+    /// over the placed segment chain).
+    Autoregressive {
+        /// Decode rounds run after the segment chain (the prefill).
+        rounds: u32,
+        /// Workload of one full-model decode round [MFLOP].
+        decode_flops: f64,
+        /// KV-cache size [bytes]: re-serving a live task from a different
+        /// satellite ships this over the ISL path (Eq. 7 reuse).
+        state_bytes: f64,
+        /// Small-model-first escalation: rounds run on the serving
+        /// satellite's small model until the accumulated round delay
+        /// exceeds this threshold [s], then the remaining rounds (and the
+        /// KV cache) migrate to the GA-chosen placement. `None` decodes
+        /// every round on the chain's last satellite with the full model.
+        escalate: Option<f64>,
+    },
+}
+
+impl TaskKind {
+    /// Parse `oneshot` or
+    /// `autoregressive[:<rounds>[:<decode_flops>[:<state_bytes>[:<escalate_s>]]]]`
+    /// (aliases `ar`, `llm`), filling unstated parameters from `defaults`
+    /// (the `[llm]` TOML block) — the same default-injection pattern as
+    /// [`crate::state::DisseminationKind::parse_with`].
+    pub fn parse_with(s: &str, defaults: &LlmConfig) -> Result<TaskKind, String> {
+        let low = s.to_ascii_lowercase();
+        let mut parts = low.splitn(5, ':');
+        let head = parts.next().unwrap_or("");
+        match head {
+            "oneshot" | "one-shot" | "single" => {
+                if low.contains(':') {
+                    Err(format!("task kind 'oneshot' takes no arguments, got '{low}'"))
+                } else {
+                    Ok(TaskKind::OneShot)
+                }
+            }
+            "autoregressive" | "ar" | "llm" => {
+                let mut rounds = defaults.rounds;
+                let mut decode_flops = defaults.decode_flops;
+                let mut state_bytes = defaults.state_bytes;
+                let mut escalate = defaults.escalate;
+                if let Some(r) = parts.next() {
+                    rounds = r
+                        .parse::<u32>()
+                        .map_err(|e| format!("task-kind rounds '{r}': {e}"))?;
+                }
+                if let Some(f) = parts.next() {
+                    decode_flops = f
+                        .parse::<f64>()
+                        .map_err(|e| format!("task-kind decode_flops '{f}': {e}"))?;
+                }
+                if let Some(b) = parts.next() {
+                    state_bytes = b
+                        .parse::<f64>()
+                        .map_err(|e| format!("task-kind state_bytes '{b}': {e}"))?;
+                }
+                if let Some(t) = parts.next() {
+                    escalate = Some(
+                        t.parse::<f64>()
+                            .map_err(|e| format!("task-kind escalate '{t}': {e}"))?,
+                    );
+                }
+                let kind = TaskKind::Autoregressive {
+                    rounds,
+                    decode_flops,
+                    state_bytes,
+                    escalate,
+                };
+                kind.validate()?;
+                Ok(kind)
+            }
+            other => Err(format!(
+                "unknown task kind '{other}' \
+                 (oneshot|autoregressive[:<rounds>[:<mflops>[:<bytes>[:<escalate_s>]]]])"
+            )),
+        }
+    }
+
+    /// [`TaskKind::parse_with`] against the stock `[llm]` defaults.
+    pub fn parse(s: &str) -> Result<TaskKind, String> {
+        TaskKind::parse_with(s, &LlmConfig::default())
+    }
+
+    /// Canonical selector string; `parse_with` on this (under defaults
+    /// whose `escalate` is `None`, e.g. [`LlmConfig::default`]) returns
+    /// `self` exactly — Rust's float `Display` is shortest-roundtrip, so
+    /// the numeric fields survive the trip bit-for-bit
+    /// (`tests/prop_config_parse.rs`).
+    pub fn label(&self) -> String {
+        match self {
+            TaskKind::OneShot => "oneshot".into(),
+            TaskKind::Autoregressive {
+                rounds,
+                decode_flops,
+                state_bytes,
+                escalate,
+            } => match escalate {
+                Some(e) => {
+                    format!("autoregressive:{rounds}:{decode_flops}:{state_bytes}:{e}")
+                }
+                None => format!("autoregressive:{rounds}:{decode_flops}:{state_bytes}"),
+            },
+        }
+    }
+
+    /// Validate parameter ranges (mirrors [`crate::config::SimConfig::validate`]).
+    pub fn validate(&self) -> Result<(), String> {
+        match self {
+            TaskKind::OneShot => Ok(()),
+            TaskKind::Autoregressive {
+                rounds,
+                decode_flops,
+                state_bytes,
+                escalate,
+            } => {
+                if *rounds == 0 {
+                    return Err("task-kind rounds must be >= 1".into());
+                }
+                if !decode_flops.is_finite() || *decode_flops <= 0.0 {
+                    return Err(format!(
+                        "task-kind decode_flops={decode_flops} must be finite and > 0"
+                    ));
+                }
+                if !state_bytes.is_finite() || *state_bytes < 0.0 {
+                    return Err(format!(
+                        "task-kind state_bytes={state_bytes} must be finite and >= 0"
+                    ));
+                }
+                if let Some(e) = escalate {
+                    if !e.is_finite() || *e < 0.0 {
+                        return Err(format!(
+                            "task-kind escalate={e} must be finite and >= 0"
+                        ));
+                    }
+                }
+                Ok(())
+            }
+        }
+    }
+}
 
 /// One DNN inference task (a "task block" after the decision satellite
 /// groups arrivals into processing units).
@@ -225,5 +378,53 @@ mod tests {
     fn decision_sats_at_least_one() {
         assert_eq!(decision_satellites(9, 0.0, 1).len(), 1);
         assert_eq!(decision_satellites(9, 1.0, 1).len(), 9);
+    }
+
+    #[test]
+    fn task_kind_parses_and_labels() {
+        assert_eq!(TaskKind::parse("oneshot").unwrap(), TaskKind::OneShot);
+        assert_eq!(TaskKind::parse("ONE-SHOT").unwrap(), TaskKind::OneShot);
+        let d = LlmConfig::default();
+        // bare autoregressive fills every field from the [llm] defaults
+        assert_eq!(
+            TaskKind::parse("autoregressive").unwrap(),
+            TaskKind::Autoregressive {
+                rounds: d.rounds,
+                decode_flops: d.decode_flops,
+                state_bytes: d.state_bytes,
+                escalate: d.escalate,
+            }
+        );
+        assert_eq!(TaskKind::parse("llm").unwrap(), TaskKind::parse("ar").unwrap());
+        let k = TaskKind::parse("autoregressive:4:150.5:1024:0.25").unwrap();
+        assert_eq!(
+            k,
+            TaskKind::Autoregressive {
+                rounds: 4,
+                decode_flops: 150.5,
+                state_bytes: 1024.0,
+                escalate: Some(0.25),
+            }
+        );
+        assert_eq!(TaskKind::parse(&k.label()).unwrap(), k);
+        assert_eq!(TaskKind::OneShot.label(), "oneshot");
+    }
+
+    #[test]
+    fn task_kind_rejects_malformed() {
+        for bad in [
+            "",
+            "warp",
+            "oneshot:3",
+            "autoregressive:zero",
+            "autoregressive:3:abc",
+            "autoregressive:3:100:xyz",
+            "autoregressive:3:100:0:nope",
+            "autoregressive:0",       // rounds must be >= 1
+            "autoregressive:3:-5",    // decode_flops must be > 0
+            "autoregressive:3:100:-1", // state_bytes must be >= 0
+        ] {
+            assert!(TaskKind::parse(bad).is_err(), "accepted {bad:?}");
+        }
     }
 }

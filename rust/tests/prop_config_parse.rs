@@ -1,0 +1,191 @@
+//! Config-surface error paths and label/parse inverses. Malformed
+//! `--task-kind` / `--topology` / `--dissemination` values must surface
+//! as `Err` from `SimConfig::load` — never a panic — and each selector's
+//! canonical `label()` must round-trip through its parser exactly
+//! (floats survive bit-for-bit: Rust's `Display` is shortest-roundtrip).
+
+use satkit::config::{LlmConfig, SimConfig};
+use satkit::state::DisseminationKind;
+use satkit::tasks::TaskKind;
+use satkit::topology::TopologyKind;
+use satkit::util::cli::Args;
+use satkit::util::quickcheck::{check_no_shrink, default_cases};
+
+fn load_with(key: &str, value: &str) -> Result<SimConfig, String> {
+    let args = Args::parse(vec![format!("--{key}"), value.to_string()]);
+    SimConfig::load(None, &args)
+}
+
+/// Every malformed selector value is rejected with an `Err` whose text
+/// names the offending input — no panics, no silent defaults.
+#[test]
+fn malformed_selector_values_error_not_panic() {
+    let cases: &[(&str, &str)] = &[
+        // --task-kind: unknown head, bad numbers, arguments on oneshot
+        ("task-kind", "bogus"),
+        ("task-kind", "autoregressive:abc"),
+        ("task-kind", "autoregressive:0"),
+        ("task-kind", "autoregressive:4:-1"),
+        ("task-kind", "autoregressive:4:nan"),
+        ("task-kind", "autoregressive:4:100:-5"),
+        ("task-kind", "autoregressive:4:100:1000:-0.5"),
+        ("task-kind", "oneshot:3"),
+        ("task-kind", ""),
+        // --topology: unknown kind, missing size, malformed geometry
+        ("topology", "bogus:4"),
+        ("topology", "torus"),
+        ("topology", "torus:one"),
+        ("topology", "torus:1"),
+        ("topology", "walker-delta:4"),
+        ("topology", "walker-delta:4x"),
+        ("topology", "walker-delta:4x4:9"),
+        ("topology", "walker-star:1x4"),
+        // --dissemination: unknown kind, bad interval, argument on instant
+        ("dissemination", "bogus"),
+        ("dissemination", "instant:1"),
+        ("dissemination", "periodic:abc"),
+        ("dissemination", "gossip:abc"),
+    ];
+    for (key, value) in cases {
+        match load_with(key, value) {
+            Err(e) => assert!(
+                !e.is_empty(),
+                "--{key} {value}: error message should not be empty"
+            ),
+            Ok(_) => panic!("--{key} {value}: expected a parse error, got Ok"),
+        }
+    }
+}
+
+/// Well-formed selector values load, land in the config, and re-emerge
+/// from the effective accessors.
+#[test]
+fn wellformed_selector_values_load() {
+    let cfg = load_with("task-kind", "autoregressive:4").unwrap();
+    assert!(matches!(
+        cfg.task_kind,
+        Some(TaskKind::Autoregressive { rounds: 4, .. })
+    ));
+    let cfg = load_with("task-kind", "oneshot").unwrap();
+    assert_eq!(cfg.task_kind, Some(TaskKind::OneShot));
+    let cfg = load_with("topology", "walker-delta:4x5:2").unwrap();
+    assert_eq!(
+        cfg.topology,
+        Some(TopologyKind::WalkerDelta {
+            planes: 4,
+            sats_per_plane: 5,
+            phasing: 2
+        })
+    );
+    let cfg = load_with("dissemination", "periodic:2.5").unwrap();
+    assert_eq!(
+        cfg.dissemination,
+        Some(DisseminationKind::Periodic { period_s: 2.5 })
+    );
+}
+
+/// `TaskKind::parse_with(kind.label(), defaults)` is the identity for
+/// every valid kind when `defaults.escalate` is `None` (the stock
+/// `[llm]` block) — numeric fields round-trip bit-for-bit.
+#[test]
+fn prop_task_kind_label_parse_inverse() {
+    check_no_shrink(
+        "task-kind-label-parse-inverse",
+        default_cases(),
+        |r| {
+            if r.next_u64() % 8 == 0 {
+                return TaskKind::OneShot;
+            }
+            TaskKind::Autoregressive {
+                rounds: r.usize_in(1, 512) as u32,
+                decode_flops: r.f64_in(0.1, 1e6),
+                state_bytes: r.f64_in(0.0, 1e9),
+                escalate: if r.next_u64() % 2 == 0 {
+                    Some(r.f64_in(0.0, 100.0))
+                } else {
+                    None
+                },
+            }
+        },
+        |kind| {
+            let label = kind.label();
+            let parsed = TaskKind::parse_with(&label, &LlmConfig::default())
+                .map_err(|e| format!("label '{label}' failed to parse: {e}"))?;
+            if parsed != *kind {
+                return Err(format!(
+                    "label '{label}' parsed to {parsed:?}, expected {kind:?}"
+                ));
+            }
+            Ok(())
+        },
+    );
+}
+
+/// `TopologyKind::parse(kind.label())` is the identity for every valid
+/// geometry.
+#[test]
+fn prop_topology_label_parse_inverse() {
+    check_no_shrink(
+        "topology-label-parse-inverse",
+        default_cases(),
+        |r| match r.next_u64() % 3 {
+            0 => TopologyKind::Torus {
+                n: r.usize_in(2, 30),
+            },
+            1 => {
+                let sats_per_plane = r.usize_in(2, 16);
+                TopologyKind::WalkerDelta {
+                    planes: r.usize_in(2, 16),
+                    sats_per_plane,
+                    phasing: r.usize_in(0, sats_per_plane),
+                }
+            }
+            _ => TopologyKind::WalkerStar {
+                planes: r.usize_in(2, 16),
+                sats_per_plane: r.usize_in(2, 16),
+            },
+        },
+        |kind| {
+            let label = kind.label();
+            let parsed = TopologyKind::parse(&label)
+                .map_err(|e| format!("label '{label}' failed to parse: {e}"))?;
+            if parsed != *kind {
+                return Err(format!(
+                    "label '{label}' parsed to {parsed:?}, expected {kind:?}"
+                ));
+            }
+            Ok(())
+        },
+    );
+}
+
+/// `DisseminationKind::parse(kind.label())` is the identity — the label
+/// always states the interval, so the bare-`gossip` default tick never
+/// enters the round trip.
+#[test]
+fn prop_dissemination_label_parse_inverse() {
+    check_no_shrink(
+        "dissemination-label-parse-inverse",
+        default_cases(),
+        |r| match r.next_u64() % 3 {
+            0 => DisseminationKind::Instant,
+            1 => DisseminationKind::Periodic {
+                period_s: r.f64_in(0.01, 30.0),
+            },
+            _ => DisseminationKind::Gossip {
+                tick_s: r.f64_in(0.001, 5.0),
+            },
+        },
+        |kind| {
+            let label = kind.label();
+            let parsed = DisseminationKind::parse(&label)
+                .map_err(|e| format!("label '{label}' failed to parse: {e}"))?;
+            if parsed != *kind {
+                return Err(format!(
+                    "label '{label}' parsed to {parsed:?}, expected {kind:?}"
+                ));
+            }
+            Ok(())
+        },
+    );
+}

@@ -294,6 +294,7 @@ fn prop_all_schemes_emit_valid_chromosomes() {
                 segments: &inst.segments,
                 kappa: 1e-4,
                 ga: &ga,
+                migration: None,
             };
             for kind in SchemeKind::all() {
                 let mut s = make_scheme(kind, 99);
@@ -345,6 +346,7 @@ fn prop_deficit_nonnegative_and_theta_monotone() {
                     segments: &inst.segments,
                     kappa: 1e-4,
                     ga,
+                    migration: None,
                 };
                 ctx.deficit(&chrom)
             };
@@ -390,6 +392,7 @@ fn prop_indexed_deficit_matches_reference() {
                 segments: &inst.segments,
                 kappa: 1e-4,
                 ga: &ga,
+                migration: None,
             };
             let index = DecisionSpaceIndex::from_ctx(&ctx);
             let mut scratch = DeficitScratch::default();
@@ -451,6 +454,7 @@ fn prop_deficit_batch_matches_scalar() {
                 segments: &inst.segments,
                 kappa: 1e-4,
                 ga: &ga,
+                migration: None,
             };
             let index = DecisionSpaceIndex::from_ctx(&ctx);
             let l = inst.segments.len();
@@ -516,6 +520,7 @@ fn prop_index_cache_preserves_decisions() {
                     segments: &inst.segments,
                     kappa: 1e-4,
                     ga: &ga,
+                    migration: None,
                 };
                 if cached.build_cached(&ctx) {
                     return Err("first build reported a hit".into());
@@ -548,6 +553,7 @@ fn prop_index_cache_preserves_decisions() {
                 segments: &inst.segments,
                 kappa: 1e-4,
                 ga: &ga,
+                migration: None,
             };
             if cached.build_cached(&ctx2) {
                 return Err("stale cache hit after a load change".into());
@@ -588,6 +594,7 @@ fn prop_ga_decide_identical_to_reference_per_seed() {
                 segments: &inst.segments,
                 kappa: 1e-4,
                 ga: &ga,
+                migration: None,
             };
             let mut fast = GaScheme::new(*seed);
             let mut slow = GaScheme::new(*seed);
@@ -636,6 +643,7 @@ fn prop_ga_close_to_random_best() {
                 segments: &inst.segments,
                 kappa: 1e-4,
                 ga: &ga,
+                migration: None,
             };
             let mut g = GaScheme::new(7);
             let got = ctx.deficit(&g.decide(&ctx));

@@ -151,6 +151,7 @@ fn prop_deficit_batch_simd_matches_scalar() {
                 segments: &segments,
                 kappa: 1e-4,
                 ga: &ga,
+                migration: None,
             };
             let index = DecisionSpaceIndex::from_ctx(&ctx);
             let mut gr = Pcg64::seed_from_u64(gene_seed);

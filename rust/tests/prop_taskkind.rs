@@ -1,0 +1,197 @@
+//! Whole-run properties for PR 8's task-kind layer: `oneshot` (and an
+//! unset `task_kind`, which defaults to it) must leave every report —
+//! including its serialized JSON — **byte-identical** to the
+//! pre-task-kind behaviour on both engines under all four schemes;
+//! autoregressive runs must conserve decode rounds exactly
+//! (`completed + dropped == decode_tasks × rounds`); and the sharded
+//! event queue must reproduce the single-heap `experiment llm` sweep
+//! bit-for-bit, down to the `BENCH_llm.json` string.
+
+use satkit::config::{EngineKind, SimConfig};
+use satkit::experiments as exp;
+use satkit::metrics::Report;
+use satkit::offload::SchemeKind;
+use satkit::tasks::TaskKind;
+use satkit::util::quickcheck::{check_no_shrink, default_cases};
+
+/// Whole-report equality down to the serialized byte level: any new
+/// field that leaks into the default path (e.g. an `llm` block on a
+/// one-shot run) shows up here even if the headline numbers agree.
+fn assert_json_identical(a: &Report, b: &Report) -> Result<(), String> {
+    let (ja, jb) = (a.to_json().to_string(), b.to_json().to_string());
+    if ja != jb {
+        // find the first divergent region so failures are readable
+        let split = ja
+            .bytes()
+            .zip(jb.bytes())
+            .position(|(x, y)| x != y)
+            .unwrap_or(ja.len().min(jb.len()));
+        let lo = split.saturating_sub(40);
+        return Err(format!(
+            "report JSON diverges at byte {split}: ...{} vs ...{}",
+            &ja[lo..(split + 40).min(ja.len())],
+            &jb[lo..(split + 40).min(jb.len())]
+        ));
+    }
+    Ok(())
+}
+
+/// The tentpole acceptance invariant, deterministically over every
+/// (engine, scheme) cell: an explicit `--task-kind oneshot` and an
+/// unset `task_kind` produce byte-identical reports, and neither carries
+/// an `llm` block.
+#[test]
+fn oneshot_matches_unset_all_engines_and_schemes() {
+    for engine in EngineKind::all() {
+        for scheme in SchemeKind::all() {
+            let mut cfg = SimConfig {
+                n: 6,
+                slots: 6,
+                lambda: 8.0,
+                seed: 11,
+                engine,
+                ..SimConfig::default()
+            };
+            cfg.task_kind = None;
+            let unset = satkit::engine::run(&cfg, scheme);
+            cfg.task_kind = Some(TaskKind::OneShot);
+            let oneshot = satkit::engine::run(&cfg, scheme);
+            assert!(unset.llm.is_none(), "{engine:?}/{scheme:?}: unset run grew an llm block");
+            assert!(oneshot.llm.is_none(), "{engine:?}/{scheme:?}: oneshot run grew an llm block");
+            assert_json_identical(&unset, &oneshot)
+                .unwrap_or_else(|e| panic!("{engine:?}/{scheme:?}: {e}"));
+        }
+    }
+}
+
+/// The same invariant over random (n, λ, slots, engine, scheme, seed)
+/// whole-run cases, in the style of `tests/prop_sharded.rs`.
+#[test]
+fn prop_oneshot_unset_byte_identical() {
+    check_no_shrink(
+        "taskkind-oneshot-unset-byte-identical",
+        default_cases().min(12),
+        |r| {
+            let n = *r.choose(&[4usize, 6]);
+            let lambda = r.f64_in(2.0, 10.0);
+            let slots = r.usize_in(3, 7);
+            let engine = *r.choose(&EngineKind::all());
+            let scheme = *r.choose(&SchemeKind::all());
+            let seed = r.next_u64() % 1000;
+            (n, lambda, slots, engine, scheme, seed)
+        },
+        |&(n, lambda, slots, engine, scheme, seed)| {
+            let mut cfg = SimConfig {
+                n,
+                lambda,
+                slots,
+                seed,
+                engine,
+                ..SimConfig::default()
+            };
+            cfg.task_kind = None;
+            let unset = satkit::engine::run(&cfg, scheme);
+            cfg.task_kind = Some(TaskKind::OneShot);
+            let oneshot = satkit::engine::run(&cfg, scheme);
+            if unset.llm.is_some() || oneshot.llm.is_some() {
+                return Err("one-shot run produced an llm block".into());
+            }
+            assert_json_identical(&unset, &oneshot)
+        },
+    );
+}
+
+/// Round conservation over random autoregressive workloads on both
+/// engines: every task that enters the decode phase accounts for exactly
+/// `rounds` rounds between `rounds_completed` and `rounds_dropped`, and
+/// a run that decodes at all carries the `llm` block. Running this under
+/// `cargo test` (debug assertions on) also sweeps the event engine's
+/// slab-arena hygiene check — the live-task arena must drain to empty
+/// even when decode rounds outlive the arrival horizon.
+#[test]
+fn prop_autoregressive_rounds_conserve() {
+    check_no_shrink(
+        "taskkind-round-conservation",
+        default_cases().min(12),
+        |r| {
+            let lambda = r.f64_in(2.0, 8.0);
+            let slots = r.usize_in(3, 6);
+            let engine = *r.choose(&EngineKind::all());
+            let scheme = *r.choose(&SchemeKind::all());
+            let rounds = r.usize_in(1, 9) as u32;
+            // escalation on half the cases; threshold 0 escalates at
+            // once, larger values may never trigger — both are legal
+            let escalate = if r.next_u64() % 2 == 0 {
+                Some(r.f64_in(0.0, 0.5))
+            } else {
+                None
+            };
+            let seed = r.next_u64() % 1000;
+            (lambda, slots, engine, scheme, rounds, escalate, seed)
+        },
+        |&(lambda, slots, engine, scheme, rounds, escalate, seed)| {
+            let mut cfg = SimConfig {
+                n: 6,
+                lambda,
+                slots,
+                seed,
+                engine,
+                ..SimConfig::default()
+            };
+            cfg.task_kind = Some(TaskKind::Autoregressive {
+                rounds,
+                decode_flops: cfg.llm.decode_flops,
+                state_bytes: cfg.llm.state_bytes,
+                escalate,
+            });
+            let report = satkit::engine::run(&cfg, scheme);
+            let Some(l) = &report.llm else {
+                // a run may legitimately decode nothing (every task
+                // dropped in the chain phase) — then no block either
+                return Ok(());
+            };
+            let expect = l.decode_tasks * rounds as u64;
+            if l.rounds_completed + l.rounds_dropped != expect {
+                return Err(format!(
+                    "round leak: {} completed + {} dropped != {} tasks × {} rounds",
+                    l.rounds_completed, l.rounds_dropped, l.decode_tasks, rounds
+                ));
+            }
+            if l.decode_tasks > report.total_tasks {
+                return Err(format!(
+                    "{} decode tasks exceed {} generated",
+                    l.decode_tasks, report.total_tasks
+                ));
+            }
+            Ok(())
+        },
+    );
+}
+
+/// The full `experiment llm` sweep is byte-identical between the classic
+/// single-heap event queue and the per-plane sharded queue — compared on
+/// the serialized `BENCH_llm.json` payload, so the round-level metrics
+/// (not just headline counts) are pinned.
+#[test]
+fn sharded_llm_sweep_matches_single_heap() {
+    let kinds = exp::llm_kind_grid(&[3]);
+    let mut opts = exp::SweepOpts::quick();
+    opts.engine = EngineKind::Event;
+    opts.threads = 1;
+    opts.shards = 1;
+    let single = exp::llm_sweep(satkit::dnn::DnnModel::Vgg19, 10.0, &kinds, &opts);
+    let single_json =
+        exp::llm_json(satkit::dnn::DnnModel::Vgg19, 10.0, EngineKind::Event, true, &single)
+            .to_string();
+    for shards in [4usize, 0] {
+        opts.shards = shards;
+        let sharded = exp::llm_sweep(satkit::dnn::DnnModel::Vgg19, 10.0, &kinds, &opts);
+        let sharded_json =
+            exp::llm_json(satkit::dnn::DnnModel::Vgg19, 10.0, EngineKind::Event, true, &sharded)
+                .to_string();
+        assert_eq!(
+            single_json, sharded_json,
+            "shards={shards}: BENCH_llm.json payload diverged from single-heap"
+        );
+    }
+}
