@@ -293,6 +293,54 @@ fn main() {
         ("speedup", Json::Num(speedup)),
     ]));
 
+    section("pooled generation evaluation (SCC, decide-threads 1 vs 4)");
+    // Intra-run decision parallelism: the same event-engine run with the
+    // GA's generation evaluation fanned across the persistent EvalPool
+    // (--decide-threads 4) vs the sequential oracle. RNG stays on the
+    // coordinator, so the whole run is byte-identical at any lane count —
+    // asserted here so the bench doubles as a regression check; only the
+    // wall clock moves.
+    let (pd_lambda, pd_slots) = if quick { (60.0, 8) } else { (120.0, 20) };
+    let pd = cfg(EngineKind::Event, pd_lambda, pd_slots);
+    let run_pd = |threads: usize, c: &SimConfig| -> (f64, satkit::metrics::Report) {
+        let mut cc = c.clone();
+        cc.decide_threads = threads;
+        let t0 = std::time::Instant::now();
+        let rep = satkit::engine::run(&cc, SchemeKind::Scc);
+        (t0.elapsed().as_secs_f64(), rep)
+    };
+    // warm once so first-touch costs don't land on the timed sequential run
+    let _ = run_pd(1, &pd);
+    let (pd_wall_seq, pd_rep_seq) = run_pd(1, &pd);
+    let (pd_wall_par, pd_rep_par) = run_pd(4, &pd);
+    assert_eq!(
+        (pd_rep_seq.total_tasks, pd_rep_seq.completed_tasks),
+        (pd_rep_par.total_tasks, pd_rep_par.completed_tasks),
+        "pooled decide diverged from sequential"
+    );
+    assert_eq!(
+        pd_rep_seq.avg_delay_ms.to_bits(),
+        pd_rep_par.avg_delay_ms.to_bits(),
+        "pooled decide diverged from sequential (avg_delay bits)"
+    );
+    let pd_tasks = pd_rep_par.total_tasks;
+    let pd_seq_tps = pd_tasks as f64 / pd_wall_seq.max(1e-9);
+    let pd_par_tps = pd_tasks as f64 / pd_wall_par.max(1e-9);
+    let pd_speedup = pd_wall_seq / pd_wall_par.max(1e-9);
+    println!(
+        "pooled-decide: seq {pd_wall_seq:.2}s ({pd_seq_tps:.0} tasks/s) \
+         -> T=4 {pd_wall_par:.2}s ({pd_par_tps:.0} tasks/s), speedup {pd_speedup:.2}x"
+    );
+    scale_rows.push(Json::obj(vec![
+        ("point", Json::Str("pooled-decide".to_string())),
+        ("decide_threads", Json::Num(4.0)),
+        ("tasks", Json::Num(pd_tasks as f64)),
+        ("wall_s", Json::Num(pd_wall_par)),
+        ("tasks_per_s", Json::Num(pd_par_tps)),
+        ("sequential_tasks_per_s", Json::Num(pd_seq_tps)),
+        ("speedup", Json::Num(pd_speedup)),
+    ]));
+
     let path = satkit::bench::out_path("SATKIT_EVENTSIM_JSON", "BENCH_eventsim.json");
     let n_scale = scale_rows.len();
     let json = Json::obj(vec![

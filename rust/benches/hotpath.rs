@@ -154,6 +154,57 @@ fn main() {
         },
     ));
 
+    // pooled generation evaluation (--decide-threads): the persistent
+    // EvalPool splits a generation into contiguous chromosome chunks
+    // evaluated concurrently into pre-sized slots. The pair below runs a
+    // generation big enough to amortize the wake-up (B=4096; B=64 stays
+    // on the inline path by design) sequentially and through a 4-lane
+    // pool. Row names deliberately do NOT start with "deficit_batch" —
+    // the CI gates key on that prefix for the B=64 rows above. Bitwise
+    // self-check against the sequential kernel before timing.
+    section("pooled generation evaluation (--decide-threads)");
+    let pool_b = 4096usize;
+    let flat_big: Vec<Gene> = (0..pool_b * segments.len())
+        .map(|_| brng.usize_in(0, cands.len()) as Gene)
+        .collect();
+    let mut seq_outs: Vec<f64> = Vec::new();
+    index.deficit_batch(&mut batch, &flat_big, &mut seq_outs);
+    let pool = satkit::offload::pool::EvalPool::new(4);
+    let mut pool_outs: Vec<f64> = Vec::new();
+    pool.deficit_batch(&index, &mut batch, &flat_big, &mut pool_outs);
+    assert_eq!(seq_outs.len(), pool_outs.len());
+    for (i, (&s, &p)) in seq_outs.iter().zip(&pool_outs).enumerate() {
+        assert_eq!(
+            s.to_bits(),
+            p.to_bits(),
+            "pooled kernel diverged from the sequential oracle at chrom {i}"
+        );
+    }
+    let pool_iters = if quick { 10 } else { 60 };
+    show(bench_per_item(
+        &format!("seq deficit_batch(L=4, |A_x|=25, B={pool_b}) per-chrom"),
+        pool_b,
+        5,
+        pool_iters,
+        || {
+            index.deficit_batch(&mut batch, &flat_big, &mut seq_outs);
+            std::hint::black_box(seq_outs.last().copied());
+        },
+    ));
+    show(bench_per_item(
+        &format!(
+            "pooled deficit_batch(L=4, |A_x|=25, B={pool_b}, T={}) per-chrom",
+            pool.lanes()
+        ),
+        pool_b,
+        5,
+        pool_iters,
+        || {
+            pool.deficit_batch(&index, &mut batch, &flat_big, &mut pool_outs);
+            std::hint::black_box(pool_outs.last().copied());
+        },
+    ));
+
     section("scheme decide() per task");
     for kind in SchemeKind::all() {
         let mut scheme = make_scheme(kind, 7);

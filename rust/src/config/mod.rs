@@ -306,6 +306,21 @@ pub struct SimConfig {
     /// memory; enable only when plots/traces need per-task data
     /// (`--retain-outcomes` on the CLI, `retain_outcomes = true` in TOML).
     pub retain_outcomes: bool,
+    /// Worker lanes for pooled GA generation evaluation
+    /// (`--decide-threads`, TOML `decide_threads = ...`). `1` (default)
+    /// is the sequential kernel; `0` means auto — one lane per available
+    /// core; `K > 1` pins K lanes. Chromosome deficits are independent
+    /// reductions, so every setting produces byte-identical runs
+    /// (enforced by `tests/prop_pool.rs`); only the GA (SCC) scheme has
+    /// generations to pool.
+    pub decide_threads: usize,
+    /// Epoch-keyed final-placement cache for the GA scheme
+    /// (`--decision-cache`, TOML `decision_cache = true`). Between view
+    /// epochs (broadcasts / faults / handovers), decides for the same
+    /// (origin, segment profile, migration) replay the cached placement.
+    /// A hit skips the GA's RNG draws, so this is NOT byte-identical —
+    /// default false, and off == legacy is pinned by `tests/prop_pool.rs`.
+    pub decision_cache: bool,
     /// Observability knobs (`--telemetry`, `--trace`, `--counter-period`,
     /// TOML `[obs]`). Default: everything off — engines then skip every
     /// telemetry hook behind one `enabled` branch, keeping runs
@@ -346,6 +361,8 @@ impl Default for SimConfig {
             gossip_tick_derived: false,
             shards: 1,
             retain_outcomes: false,
+            decide_threads: 1,
+            decision_cache: false,
             obs: ObsConfig::default(),
             task_kind: None,
             llm: LlmConfig::default(),
@@ -544,6 +561,10 @@ impl SimConfig {
             d.retain_outcomes = b;
         }
         doc.read_usize("", "shards", &mut d.shards);
+        doc.read_usize("", "decide_threads", &mut d.decide_threads);
+        if let Some(b) = doc.get_bool("", "decision_cache") {
+            d.decision_cache = b;
+        }
         if let Some(b) = doc.get_bool("obs", "telemetry") {
             d.obs.telemetry = b;
         }
@@ -670,6 +691,12 @@ impl SimConfig {
         if let Some(k) = args.get_parsed::<usize>("shards")? {
             self.shards = k;
         }
+        if let Some(k) = args.get_parsed::<usize>("decide-threads")? {
+            self.decide_threads = k;
+        }
+        if args.has_flag("decision-cache") {
+            self.decision_cache = true;
+        }
         // unstated selector parameters fall back to the [llm] block
         // (already applied from TOML at this point)
         if let Some(s) = args.get("task-kind") {
@@ -741,6 +768,17 @@ impl SimConfig {
                 0 => write!(t, "\nEvent queue shards                     auto (one per plane)"),
                 k => write!(t, "\nEvent queue shards                     {k}"),
             };
+        }
+        if self.decide_threads != 1 {
+            use std::fmt::Write as _;
+            let _ = match self.decide_threads {
+                0 => write!(t, "\nDecide eval lanes                      auto (one per core)"),
+                k => write!(t, "\nDecide eval lanes                      {k}"),
+            };
+        }
+        if self.decision_cache {
+            use std::fmt::Write as _;
+            let _ = write!(t, "\nDecision cache                         epoch-keyed (on)");
         }
         // printed only for a non-default kind, so default runs keep the
         // classic table byte-for-byte
@@ -1080,6 +1118,32 @@ capacity_mflops = 6000.0
         assert_eq!(d.shards, 0);
         assert!(d.validate().is_ok());
         assert!(d.table().contains("auto (one per plane)"));
+    }
+
+    #[test]
+    fn decide_knobs_parse_and_default() {
+        let c = SimConfig::default();
+        assert_eq!(c.decide_threads, 1);
+        assert!(!c.decision_cache);
+        assert!(!c.table().contains("Decide eval lanes"));
+        assert!(!c.table().contains("Decision cache"));
+
+        let t = SimConfig::from_toml("decide_threads = 4\ndecision_cache = true\n").unwrap();
+        assert_eq!(t.decide_threads, 4);
+        assert!(t.decision_cache);
+        assert!(t.validate().is_ok());
+        assert!(t.table().contains("Decide eval lanes"));
+        assert!(t.table().contains("Decision cache"));
+
+        let args = crate::util::cli::Args::parse(
+            "x --decide-threads 0 --decision-cache".split_whitespace().map(String::from),
+        );
+        let mut d = SimConfig::default();
+        d.apply_args(&args).unwrap();
+        assert_eq!(d.decide_threads, 0);
+        assert!(d.decision_cache);
+        assert!(d.validate().is_ok());
+        assert!(d.table().contains("auto (one per core)"));
     }
 
     #[test]

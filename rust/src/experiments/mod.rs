@@ -12,6 +12,10 @@
 //! * [`topology_sweep`] — completion rate & p95 delay per scheme per
 //!   constellation topology (torus vs Walker-Delta vs Walker-Star at
 //!   equal satellite count); exported as `BENCH_topology.json`.
+//! * [`decidecache_sweep`] — the epoch-keyed GA decision cache
+//!   (`--decision-cache`) on vs off per periodic `T_d`: completion/p95
+//!   deltas plus hit rate and decides/s; exported as
+//!   `BENCH_decidecache.json`.
 //!
 //! Every function returns structured rows and can render the paper-style
 //! table; the benches in `rust/benches/` wrap these with timing.
@@ -58,6 +62,13 @@ pub struct SweepOpts {
     /// Event-queue shard count (`SimConfig::shards`, `--shards`): pure
     /// mechanics, byte-identical rows at every setting.
     pub shards: usize,
+    /// GA generation-evaluation lanes (`SimConfig::decide_threads`,
+    /// `--decide-threads`): pure mechanics, byte-identical rows at every
+    /// setting (`tests/prop_pool.rs`).
+    pub decide_threads: usize,
+    /// Epoch-keyed GA decision cache (`SimConfig::decision_cache`,
+    /// `--decision-cache`): **not** byte-identical — default off.
+    pub decision_cache: bool,
     /// Worker threads for [`run_cells`]: 0 = one per available core,
     /// 1 = force the sequential path (the parallel runner's oracle).
     pub threads: usize,
@@ -78,6 +89,8 @@ impl Default for SweepOpts {
             dissemination: None,
             topology: None,
             shards: 1,
+            decide_threads: 1,
+            decision_cache: false,
             threads: 0,
             progress: false,
         }
@@ -271,6 +284,8 @@ fn base_cfg(model: DnnModel, opts: &SweepOpts) -> SimConfig {
         dissemination: opts.dissemination,
         topology: opts.topology.clone(),
         shards: opts.shards,
+        decide_threads: opts.decide_threads,
+        decision_cache: opts.decision_cache,
         ..SimConfig::default()
     }
 }
@@ -574,6 +589,200 @@ pub fn staleness_json(
                                 "dropped_tasks",
                                 Json::Num(r.report.dropped_tasks as f64),
                             ),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ])
+}
+
+/// One point of the decision-cache sweep: a (`T_d`, cache on/off) cell.
+/// SCC-only — the cache lives in the GA scheme; heuristics never consult
+/// it (pinned by `tests/prop_pool.rs`).
+#[derive(Clone, Debug)]
+pub struct DecideCacheRow {
+    /// Broadcast period `T_d` [s] of the periodic dissemination the cell
+    /// ran under — the epoch length the cache keys on.
+    pub t_d: f64,
+    /// Whether `--decision-cache` was on for this cell.
+    pub cache: bool,
+    pub report: Report,
+    /// Cache hits / lookups across the cell's repeats (0.0 off or when
+    /// no decide ever consulted the cache).
+    pub hit_rate: f64,
+    /// GA placement decisions per run (mean over repeats).
+    pub decides: f64,
+    /// Placement decisions per wall-clock second, summed decides over
+    /// summed wall time — the sweep's headline throughput number.
+    pub decides_per_s: f64,
+}
+
+/// Default `T_d` grid for the decision-cache sweep; `quick` trims it to
+/// two points for the CI smoke run.
+pub fn decidecache_periods(quick: bool) -> Vec<f64> {
+    if quick {
+        vec![1.0, 4.0]
+    } else {
+        vec![0.5, 1.0, 2.0, 4.0]
+    }
+}
+
+/// The λ the decision-cache sweep runs at by default: the staleness
+/// sweep's high-traffic point, where decides between broadcasts are
+/// dense enough for the cache to matter.
+pub const DECIDECACHE_LAMBDA: f64 = STALENESS_LAMBDA;
+
+/// Sweep the epoch-keyed decision cache (`--decision-cache`) against the
+/// default path at each periodic `T_d`: SCC on the engine selected by
+/// `opts.engine`, averaged over `opts.repeats` seeds. Each cell runs
+/// with telemetry enabled to harvest the GA kernel counters (decides,
+/// cache hits/lookups) and times the runs for decides/s. The cache is
+/// **not** byte-identical to off (hits skip the GA's RNG draws), so the
+/// interesting check is that completion rate and p95 stay inside the
+/// repeat noise band while decides/s moves.
+pub fn decidecache_sweep(
+    model: DnnModel,
+    lambda: f64,
+    periods: &[f64],
+    opts: &SweepOpts,
+) -> Vec<DecideCacheRow> {
+    let cells: Vec<(f64, bool)> = periods
+        .iter()
+        .flat_map(|&p| [(p, false), (p, true)])
+        .collect();
+    let repeats = opts.repeats.max(1);
+    let progress = Progress::new(opts.progress, cells.len() * repeats);
+    // (report, decides, hits, lookups, wall_s) per repeat; counters come
+    // from the telemetry block's `scheme` object (crate::offload::ga).
+    let grouped = run_cells_repeated(opts.threads, repeats, cells.clone(), |&(p, cache), r| {
+        progress.cell(
+            || format!("t_d={p} cache={cache} repeat={}/{repeats}", r + 1),
+            || {
+                let mut cfg = base_cfg(model, opts);
+                cfg.seed = opts.seed + r as u64 * 1000;
+                cfg.lambda = lambda;
+                cfg.dissemination = Some(DisseminationKind::Periodic { period_s: p });
+                cfg.decision_cache = cache;
+                cfg.obs.telemetry = true;
+                let t0 = std::time::Instant::now();
+                let report = crate::engine::run(&cfg, SchemeKind::Scc);
+                let wall_s = t0.elapsed().as_secs_f64();
+                let counter = |key: &str| -> f64 {
+                    report
+                        .telemetry
+                        .as_ref()
+                        .and_then(|t| t.get("scheme"))
+                        .and_then(|s| s.get(key))
+                        .and_then(|v| v.as_f64())
+                        .unwrap_or(0.0)
+                };
+                let decides = counter("decides");
+                let hits = counter("decision_cache_hits");
+                let lookups = counter("decision_cache_lookups");
+                (report, decides, hits, lookups, wall_s)
+            },
+        )
+    });
+    cells
+        .into_iter()
+        .zip(grouped)
+        .map(|((t_d, cache), reps)| {
+            let n = reps.len() as f64;
+            let decides_sum: f64 = reps.iter().map(|r| r.1).sum();
+            let hits_sum: f64 = reps.iter().map(|r| r.2).sum();
+            let lookups_sum: f64 = reps.iter().map(|r| r.3).sum();
+            let wall_sum: f64 = reps.iter().map(|r| r.4).sum();
+            let report = mean_reports(reps.into_iter().map(|r| r.0).collect());
+            DecideCacheRow {
+                t_d,
+                cache,
+                report,
+                hit_rate: if lookups_sum > 0.0 { hits_sum / lookups_sum } else { 0.0 },
+                decides: decides_sum / n,
+                decides_per_s: if wall_sum > 0.0 { decides_sum / wall_sum } else { 0.0 },
+            }
+        })
+        .collect()
+}
+
+/// Render the decision-cache sweep: one line per `T_d`, cache off vs on
+/// side by side (completion, p95, hit rate, decides/s).
+pub fn render_decidecache(title: &str, rows: &[DecideCacheRow]) -> String {
+    let mut out = format!(
+        "== {title} ==\n{:>8}{:>12}{:>12}{:>12}{:>12}{:>10}{:>14}{:>14}\n",
+        "T_d [s]",
+        "compl off",
+        "compl on",
+        "p95 off",
+        "p95 on",
+        "hit rate",
+        "decides/s off",
+        "decides/s on",
+    );
+    let mut t_ds: Vec<f64> = Vec::new();
+    for r in rows {
+        if !t_ds.iter().any(|&t| t == r.t_d) {
+            t_ds.push(r.t_d);
+        }
+    }
+    for &t_d in &t_ds {
+        let cell = |cache: bool| {
+            rows.iter()
+                .find(|r| r.t_d == t_d && r.cache == cache)
+                .expect("missing decidecache row")
+        };
+        let (off, on) = (cell(false), cell(true));
+        out.push_str(&format!(
+            "{:>8}{:>12.4}{:>12.4}{:>12.1}{:>12.1}{:>10.3}{:>14.1}{:>14.1}\n",
+            t_d,
+            off.report.completion_rate(),
+            on.report.completion_rate(),
+            off.report.delay_p95_ms,
+            on.report.delay_p95_ms,
+            on.hit_rate,
+            off.decides_per_s,
+            on.decides_per_s,
+        ));
+    }
+    out
+}
+
+/// The machine-readable `BENCH_decidecache.json` payload (per-cell
+/// completion rate, p95 delay, hit rate, and decide throughput — see the
+/// README's "Experiment cookbook" for the schema).
+pub fn decidecache_json(
+    model: DnnModel,
+    lambda: f64,
+    engine: EngineKind,
+    quick: bool,
+    rows: &[DecideCacheRow],
+) -> Json {
+    Json::obj(vec![
+        ("bench", Json::Str("decidecache".into())),
+        ("quick", Json::Bool(quick)),
+        ("model", Json::Str(model.name().into())),
+        ("engine", Json::Str(engine.name().into())),
+        ("scheme", Json::Str("SCC".into())),
+        ("lambda", Json::Num(lambda)),
+        (
+            "results",
+            Json::Arr(
+                rows.iter()
+                    .map(|r| {
+                        Json::obj(vec![
+                            ("t_d_s", Json::Num(r.t_d)),
+                            ("cache", Json::Bool(r.cache)),
+                            (
+                                "completion_rate",
+                                Json::Num(r.report.completion_rate()),
+                            ),
+                            ("avg_delay_ms", Json::Num(r.report.avg_delay_ms)),
+                            ("delay_p95_ms", Json::Num(r.report.delay_p95_ms)),
+                            ("total_tasks", Json::Num(r.report.total_tasks as f64)),
+                            ("hit_rate", Json::Num(r.hit_rate)),
+                            ("decides", Json::Num(r.decides)),
+                            ("decides_per_s", Json::Num(r.decides_per_s)),
                         ])
                     })
                     .collect(),
@@ -1238,6 +1447,39 @@ mod tests {
             parsed.get("results").unwrap().as_arr().unwrap().len(),
             rows.len()
         );
+    }
+
+    #[test]
+    fn decidecache_sweep_covers_all_cells_and_serializes() {
+        let mut opts = SweepOpts::quick();
+        opts.engine = EngineKind::Event;
+        let rows = decidecache_sweep(DnnModel::Vgg19, 10.0, &[1.0], &opts);
+        // periodic:1 × {off, on}
+        assert_eq!(rows.len(), 2);
+        for r in &rows {
+            assert!(r.report.total_tasks > 0, "t_d={} cache={}", r.t_d, r.cache);
+            assert!(r.decides > 0.0, "telemetry decides counter wired");
+        }
+        let off = rows.iter().find(|r| !r.cache).unwrap();
+        let on = rows.iter().find(|r| r.cache).unwrap();
+        // off never consults the cache; on at least records its lookups
+        assert_eq!(off.hit_rate, 0.0);
+        assert!(on.hit_rate >= 0.0 && on.hit_rate <= 1.0);
+        let s = render_decidecache("decidecache", &rows);
+        assert!(s.contains("hit rate"));
+        assert!(s.contains("decides/s"));
+        let j =
+            decidecache_json(DnnModel::Vgg19, 10.0, EngineKind::Event, true, &rows).to_string();
+        let parsed = crate::util::json::Json::parse(&j).unwrap();
+        assert_eq!(parsed.get("bench").unwrap().as_str(), Some("decidecache"));
+        assert_eq!(parsed.get("engine").unwrap().as_str(), Some("event"));
+        assert_eq!(
+            parsed.get("results").unwrap().as_arr().unwrap().len(),
+            rows.len()
+        );
+        let first = &parsed.get("results").unwrap().as_arr().unwrap()[0];
+        assert!(first.get("hit_rate").is_some());
+        assert!(first.get("decides_per_s").is_some());
     }
 
     #[test]

@@ -45,7 +45,12 @@
 //! structure-of-arrays [`offload::DecisionSpaceIndex::deficit_batch`]
 //! kernel (bit-for-bit the scalar Eq. 12; with `--features simd` it
 //! dispatches to explicit AVX2/NEON lanes that stay bit-identical —
-//! [`offload::simd_active`] reports what actually runs), and
+//! [`offload::simd_active`] reports what actually runs), generation
+//! evaluation fans chromosome chunks across the persistent
+//! [`offload::pool::EvalPool`] worker pool (`--decide-threads`,
+//! byte-identical at every lane count — `tests/prop_pool.rs`; an
+//! opt-in epoch-keyed decision cache, `--decision-cache`, memoizes
+//! whole placements between state broadcasts), and
 //! [`experiments::run_cells_repeated`] fans independent
 //! (cell × repeat) work items across cores with byte-identical row
 //! output. `benches/eventsim_scale.rs` tracks the resulting tasks/s in

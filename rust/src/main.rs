@@ -5,10 +5,12 @@
 //!                       (--engine slotted|event, --scenario for traffic)
 //!   sweep               λ-sweep all four schemes for one model
 //!   experiment <id>     regenerate a paper figure (fig2|fig3|eventsim|
-//!                       staleness|topology|scale|ablation-split|
-//!                       ablation-ga|all); writes results/<id>.json next
-//!                       to the printed table (staleness/topology also
-//!                       emit BENCH_staleness.json / BENCH_topology.json)
+//!                       staleness|topology|decidecache|scale|
+//!                       ablation-split|ablation-ga|all); writes
+//!                       results/<id>.json next to the printed table
+//!                       (staleness/topology/decidecache also emit
+//!                       BENCH_staleness.json / BENCH_topology.json /
+//!                       BENCH_decidecache.json)
 //!   serve               run the coordinator on real PJRT slice inference
 //!   validate-artifacts  load + execute every artifact once
 //!   print-config        show the effective Table-I configuration
@@ -65,7 +67,8 @@ SUBCOMMANDS
   simulate            one simulation run (--scheme scc|random|rrp|dqn)
   sweep               lambda sweep, all schemes (--model vgg19|resnet101)
   experiment <id>     fig2 | fig3 | eventsim | staleness | topology |
-                      llm | scale | ablation-split | ablation-ga | all
+                      decidecache | llm | scale | ablation-split |
+                      ablation-ga | all
   serve               coordinator with real PJRT slice inference
   validate-artifacts  compile + execute each artifacts/*.hlo.txt
   print-config        effective Table-I parameters
@@ -96,6 +99,12 @@ OPTIONS
   --shards K      event-engine pending-event shards (1 = classic single
                   heap, the default; 0 = one shard per orbital plane;
                   any K — runs are byte-identical at every setting)
+  --decide-threads K  GA generation-evaluation lanes (1 = sequential, the
+                  default; 0 = one per core; any K — runs are
+                  byte-identical at every setting)
+  --decision-cache  epoch-keyed GA placement memo for stale views under
+                  periodic dissemination (off by default; NOT
+                  byte-identical — hits skip the GA entirely)
   --quick         smaller slot budget          --json FILE   export rows
   --retain-outcomes  buffer per-task outcomes (metrics stream by default)
   --telemetry     runtime counters: adds a `telemetry` block to the report
@@ -125,6 +134,8 @@ fn sweep_opts(args: &Args, cfg: &SimConfig) -> exp::SweepOpts {
     o.repeats = args.get_or("repeats", 1usize);
     o.threads = args.get_or("threads", 0usize);
     o.shards = cfg.shards;
+    o.decide_threads = cfg.decide_threads;
+    o.decision_cache = cfg.decision_cache;
     // --engine / --scenario / --dissemination / --topology flow into
     // sweeps and experiments too
     o.engine = cfg.engine;
@@ -268,6 +279,44 @@ fn experiment(args: &Args) -> Result<(), String> {
             satkit::bench::write_json("results/staleness.json", &json)
                 .map_err(|e| e.to_string())?;
             println!("wrote results/staleness.json\n");
+        }
+        "decidecache" => {
+            // epoch-keyed GA decision cache (--decision-cache) on vs off
+            // per periodic T_d: completion/p95 deltas (expected inside
+            // the repeat noise band) plus hit rate and decides/s. SCC
+            // only, event engine unless --engine explicitly says
+            // otherwise; --lambda overrides the operating point; --quick
+            // trims the T_d grid and horizon.
+            let quick = args.has_flag("quick");
+            let lambda = args
+                .get_parsed::<f64>("lambda")?
+                .unwrap_or(exp::DECIDECACHE_LAMBDA);
+            let mut opts = opts;
+            if args.get("engine").is_none() {
+                opts.engine = satkit::config::EngineKind::Event;
+            }
+            guard("results/decidecache.json")?;
+            let periods = exp::decidecache_periods(quick);
+            let rows = exp::decidecache_sweep(cfg.model, lambda, &periods, &opts);
+            println!(
+                "{}",
+                exp::render_decidecache(
+                    &format!(
+                        "decision-cache sweep ({}, {} engine, SCC, lambda={lambda})",
+                        cfg.model.name(),
+                        opts.engine.name()
+                    ),
+                    &rows
+                )
+            );
+            let json = exp::decidecache_json(cfg.model, lambda, opts.engine, quick, &rows);
+            let bench_path =
+                satkit::bench::out_path("SATKIT_DECIDECACHE_JSON", "BENCH_decidecache.json");
+            satkit::bench::write_json(&bench_path, &json).map_err(|e| e.to_string())?;
+            println!("wrote {bench_path}");
+            satkit::bench::write_json("results/decidecache.json", &json)
+                .map_err(|e| e.to_string())?;
+            println!("wrote results/decidecache.json\n");
         }
         "topology" => {
             // completion rate & p95 delay per scheme per constellation

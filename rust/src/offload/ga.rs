@@ -47,6 +47,7 @@
 //! The paper-literal implementation is retained as
 //! [`GaScheme::decide_reference`], the equivalence oracle.
 
+use super::pool::{resolve_threads, EvalPool};
 use super::{
     BatchScratch, DecisionSpaceIndex, Gene, OffloadContext, OffloadScheme, SchemeKind,
     MEMO_MAX_L,
@@ -117,6 +118,48 @@ pub struct GaScheme {
     /// telemetry block (plain integer increments on paths already taken —
     /// no effect on decisions or the RNG stream).
     stats: GaStats,
+    /// Pooled generation evaluation (`--decide-threads` resolved above 1);
+    /// `None` keeps the plain sequential kernel — the bitwise oracle the
+    /// pooled path is property-tested against (`tests/prop_pool.rs`).
+    pool: Option<EvalPool>,
+    /// Epoch-keyed final-placement cache (`--decision-cache`); `None`
+    /// (the default) is the legacy decision path, bit for bit.
+    dcache: Option<DecisionCache>,
+}
+
+/// Opt-in final-placement memo (`--decision-cache`): between view epochs
+/// — state broadcasts, fault batches, and handovers bump
+/// [`crate::state::ViewTracker`]'s monotone counter — a decide for the
+/// same (origin, segment profile, migration) returns the cached placement
+/// instead of re-running the GA. A hit skips the GA's RNG draws, so this
+/// is **not** byte-identical to the uncached run: it is off by default,
+/// and off == legacy is pinned by `tests/prop_pool.rs`. Only consulted on
+/// stale (disseminated) views — a live view changes with every admission
+/// and carries no epoch discipline, so caching it would serve arbitrarily
+/// outdated placements.
+#[derive(Default)]
+struct DecisionCache {
+    /// Epoch the cached placements were computed in. Any epoch change
+    /// clears the map (epochs are monotone), which both keeps placements
+    /// from outliving the view they were solved against and bounds memory
+    /// to one epoch's working set.
+    epoch: u64,
+    map: HashMap<DecisionKey, Vec<SatId>>,
+    /// Cache-eligible decides answered from the map.
+    hits: u64,
+    /// Cache-eligible decides (the hit-rate denominator).
+    lookups: u64,
+}
+
+/// Exact identity of a cacheable decision within one view epoch. Segment
+/// workloads are keyed by their f64 bit patterns, so a key can never
+/// alias a different split profile; migration keys the sticky source and
+/// its per-hop cost the same way.
+#[derive(PartialEq, Eq, Hash)]
+struct DecisionKey {
+    origin: SatId,
+    segments: Vec<u64>,
+    migration: Option<(SatId, u64)>,
 }
 
 /// Lifetime counters over the GA kernel's caching layers: chromosome-memo
@@ -135,6 +178,9 @@ pub struct GaStats {
     /// restated per-batch; mean batch size = `batch_chromosomes /
     /// batches`).
     pub batch_chromosomes: u64,
+    /// Total `decide_into` calls over the scheme's lifetime (cached or
+    /// not) — the decides/s numerator for the `decidecache` sweep.
+    pub decides: u64,
 }
 
 #[derive(Clone, Debug)]
@@ -165,6 +211,7 @@ struct EvalBuffers {
 /// accepts calls against population slices.
 fn eval_generation(
     index: &DecisionSpaceIndex,
+    pool: Option<&EvalPool>,
     batch: &mut BatchScratch,
     bufs: &mut EvalBuffers,
     memo: &mut Memo,
@@ -191,7 +238,13 @@ fn eval_generation(
     stats.memo_misses += bufs.miss.len() as u64;
     stats.batches += 1;
     stats.batch_chromosomes += bufs.miss.len() as u64;
-    index.deficit_batch(batch, &bufs.genes, &mut bufs.out);
+    // Pooled evaluation produces exactly the sequential kernel's bytes
+    // (chromosome deficits are independent — see `offload::pool`), so the
+    // dispatch choice can never change a decision.
+    match pool {
+        Some(p) => p.deficit_batch(index, batch, &bufs.genes, &mut bufs.out),
+        None => index.deficit_batch(batch, &bufs.genes, &mut bufs.out),
+    }
     debug_assert_eq!(bufs.out.len(), bufs.miss.len());
     for (&i, &d) in bufs.miss.iter().zip(&bufs.out) {
         pop[i].deficit = d;
@@ -216,6 +269,15 @@ fn random_genes(rng: &mut Pcg64, free: &mut Vec<Vec<Gene>>, n_cands: usize, l: u
 
 impl GaScheme {
     pub fn new(seed: u64) -> GaScheme {
+        GaScheme::with_opts(seed, 1, false)
+    }
+
+    /// [`GaScheme::new`] with the decision-layer perf knobs threaded
+    /// through: pooled generation evaluation across `decide_threads`
+    /// lanes (0 = auto, 1 = the sequential oracle — byte-identical
+    /// either way) and the epoch-keyed decision cache (**not**
+    /// byte-identical on hits; off by default).
+    pub fn with_opts(seed: u64, decide_threads: usize, decision_cache: bool) -> GaScheme {
         GaScheme {
             rng: Pcg64::new(seed, 0x6A61),
             pop: Vec::new(),
@@ -225,7 +287,17 @@ impl GaScheme {
             bufs: EvalBuffers::default(),
             memo: Memo::default(),
             stats: GaStats::default(),
+            pool: (resolve_threads(decide_threads) > 1).then(|| EvalPool::new(decide_threads)),
+            dcache: decision_cache.then(DecisionCache::default),
         }
+    }
+
+    /// (hits, lookups) of the epoch-keyed decision cache; (0, 0) when
+    /// `--decision-cache` is off.
+    pub fn decision_cache_stats(&self) -> (u64, u64) {
+        self.dcache
+            .as_ref()
+            .map_or((0, 0), |c| (c.hits, c.lookups))
     }
 
     /// Lifetime chromosome-memo / batch-kernel counters (see [`GaStats`]).
@@ -378,6 +450,33 @@ impl OffloadScheme for GaScheme {
         if l == 0 {
             return;
         }
+        self.stats.decides += 1;
+        // Epoch-keyed decision cache (opt-in; see [`DecisionCache`]): a
+        // decide for the same (origin, segment profile, migration) within
+        // the same view epoch returns the memoized placement without
+        // touching the GA or its RNG.
+        let cache_key = match &mut self.dcache {
+            Some(cache) if ctx.view.is_stale() => {
+                let epoch = ctx.view.epoch();
+                if cache.epoch != epoch {
+                    cache.map.clear();
+                    cache.epoch = epoch;
+                }
+                let key = DecisionKey {
+                    origin: ctx.origin,
+                    segments: ctx.segments.iter().map(|q| q.to_bits()).collect(),
+                    migration: ctx.migration.as_ref().map(|m| (m.from, m.secs_per_hop.to_bits())),
+                };
+                cache.lookups += 1;
+                if let Some(placement) = cache.map.get(&key) {
+                    cache.hits += 1;
+                    out.extend_from_slice(placement);
+                    return;
+                }
+                Some(key)
+            }
+            _ => None,
+        };
         // Per-decision kernel state: candidate index (reused verbatim
         // across consecutive decisions when origin, candidates, and the
         // observed view are unchanged — the rebuild is skipped, the
@@ -399,6 +498,7 @@ impl OffloadScheme for GaScheme {
         }
         eval_generation(
             &self.index,
+            self.pool.as_ref(),
             &mut self.batch,
             &mut self.bufs,
             &mut self.memo,
@@ -450,6 +550,7 @@ impl OffloadScheme for GaScheme {
             }
             eval_generation(
                 &self.index,
+                self.pool.as_ref(),
                 &mut self.batch,
                 &mut self.bufs,
                 &mut self.memo,
@@ -476,6 +577,7 @@ impl OffloadScheme for GaScheme {
             }
             eval_generation(
                 &self.index,
+                self.pool.as_ref(),
                 &mut self.batch,
                 &mut self.bufs,
                 &mut self.memo,
@@ -491,6 +593,9 @@ impl OffloadScheme for GaScheme {
             .min_by(|a, b| a.deficit.partial_cmp(&b.deficit).unwrap())
             .expect("population non-empty");
         self.index.decode_into(&best.chrom, out);
+        if let (Some(cache), Some(key)) = (&mut self.dcache, cache_key) {
+            cache.map.insert(key, out.clone());
+        }
     }
 
     fn kind(&self) -> SchemeKind {
@@ -499,6 +604,7 @@ impl OffloadScheme for GaScheme {
 
     fn telemetry(&self) -> Option<Json> {
         let (index_hits, index_misses) = self.index_cache_stats();
+        let (dc_hits, dc_lookups) = self.decision_cache_stats();
         Some(Json::obj(vec![
             ("memo_hits", Json::Num(self.stats.memo_hits as f64)),
             ("memo_misses", Json::Num(self.stats.memo_misses as f64)),
@@ -509,6 +615,9 @@ impl OffloadScheme for GaScheme {
                 "batch_chromosomes",
                 Json::Num(self.stats.batch_chromosomes as f64),
             ),
+            ("decides", Json::Num(self.stats.decides as f64)),
+            ("decision_cache_hits", Json::Num(dc_hits as f64)),
+            ("decision_cache_lookups", Json::Num(dc_lookups as f64)),
         ]))
     }
 }
@@ -755,6 +864,79 @@ mod tests {
             t.get("deficit_batches").and_then(|j| j.as_f64()),
             Some(st.batches as f64)
         );
+    }
+
+    #[test]
+    fn pooled_decide_is_identical_to_sequential() {
+        let (topo, mut sats) = setup(8);
+        for i in 0..sats.len() {
+            if i % 3 == 0 {
+                sats[i].try_load(11_000.0);
+            }
+        }
+        let ga = GaConfig::default();
+        let cands = topo.decision_space(20, 3);
+        let segs = vec![3800.0, 2500.0, 3100.0, 1900.0];
+        let c = ctx(&topo, &sats, &cands, &segs, &ga);
+        for threads in [2usize, 4, 0] {
+            let mut seq = GaScheme::new(33);
+            let mut pooled = GaScheme::with_opts(33, threads, false);
+            for round in 0..3 {
+                assert_eq!(
+                    seq.decide(&c),
+                    pooled.decide(&c),
+                    "threads {threads} round {round} diverged"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn decision_cache_hits_within_epoch_and_invalidates_across() {
+        let (topo, mut sats) = setup(8);
+        for i in 0..sats.len() {
+            if i % 2 == 0 {
+                sats[i].try_load(9_000.0);
+            }
+        }
+        let ga = GaConfig::default();
+        let cands = topo.decision_space(20, 3);
+        let segs = vec![3800.0, 2500.0, 3100.0];
+        let observed: Vec<f64> = sats.iter().map(|s| s.loaded()).collect();
+        let mut c = ctx(&topo, &sats, &cands, &segs, &ga);
+        c.view = crate::state::StateView::observed(&sats, &observed).at_epoch(1);
+        let mut s = GaScheme::with_opts(77, 1, true);
+        let first = s.decide(&c);
+        let again = s.decide(&c);
+        assert_eq!(first, again, "a cache hit must replay the placement");
+        assert_eq!(s.decision_cache_stats(), (1, 2));
+        // a new epoch invalidates: the decide re-runs the GA
+        c.view = crate::state::StateView::observed(&sats, &observed).at_epoch(2);
+        s.decide(&c);
+        assert_eq!(s.decision_cache_stats(), (1, 3));
+        // live views are never cached, even with the knob on
+        c.view = crate::state::StateView::live(&sats);
+        s.decide(&c);
+        assert_eq!(s.decision_cache_stats(), (1, 3));
+        assert_eq!(s.ga_stats().decides, 4);
+    }
+
+    #[test]
+    fn decision_cache_off_keeps_stats_at_zero() {
+        let (topo, sats) = setup(6);
+        let ga = GaConfig::default();
+        let cands = topo.decision_space(8, 2);
+        let segs = vec![500.0, 700.0, 300.0];
+        let c = ctx(&topo, &sats, &cands, &segs, &ga);
+        let mut s = GaScheme::new(9);
+        s.decide(&c);
+        assert_eq!(s.decision_cache_stats(), (0, 0));
+        let t = s.telemetry().unwrap();
+        assert_eq!(
+            t.get("decision_cache_lookups").and_then(|j| j.as_f64()),
+            Some(0.0)
+        );
+        assert_eq!(t.get("decides").and_then(|j| j.as_f64()), Some(1.0));
     }
 
     #[test]

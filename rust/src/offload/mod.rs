@@ -8,6 +8,7 @@
 
 pub mod dqn;
 pub mod ga;
+pub mod pool;
 pub mod random;
 pub mod rrp;
 #[cfg(feature = "simd")]
@@ -598,6 +599,33 @@ impl DecisionSpaceIndex {
             out.extend(genes.chunks(l).map(|c| self.deficit_long(c)));
             return;
         }
+        out.resize(genes.len() / l, 0.0);
+        self.deficit_batch_slice(scratch, genes, out);
+    }
+
+    /// Slice-writing core of [`DecisionSpaceIndex::deficit_batch`] and
+    /// the pooled-eval chunk entry ([`pool::EvalPool`]): evaluates the
+    /// chromosomes of `genes` into the pre-sized `out` slots
+    /// (`out.len() · L == genes.len()`). Per-chromosome results are fully
+    /// independent — neither the scalar body nor the SIMD lanes carry any
+    /// state across chromosomes, and the lanes' scalar tails are
+    /// bitwise-equal to lane results — so evaluating any contiguous
+    /// sub-range writes exactly the values a whole-batch pass would.
+    /// That independence is what makes chunked parallel evaluation
+    /// bit-safe by construction at any thread count. Requires
+    /// `1 <= L <= 128` and a non-ragged matrix.
+    pub(crate) fn deficit_batch_slice(
+        &self,
+        scratch: &mut BatchScratch,
+        genes: &[Gene],
+        out: &mut [f64],
+    ) {
+        debug_assert!((1..=128).contains(&self.segments.len()));
+        debug_assert_eq!(
+            genes.len(),
+            out.len() * self.segments.len(),
+            "out slots != chromosomes"
+        );
         // Explicit SIMD lanes (4-wide AVX2 / 2-wide NEON, `simd` feature,
         // runtime CPU detection): bit-identical to the scalar body below
         // — same per-lane add order, masked adds of +0.0 for skipped
@@ -620,7 +648,7 @@ impl DecisionSpaceIndex {
         &self,
         scratch: &mut BatchScratch,
         genes: &[Gene],
-        out: &mut Vec<f64>,
+        out: &mut [f64],
     ) {
         let l = self.segments.len();
         let n = genes.len() / l;
@@ -648,14 +676,11 @@ impl DecisionSpaceIndex {
                 *acc += self.mig[genes[i * l + l - 1] as usize];
             }
         }
-        out.reserve(n);
-        for i in 0..n {
+        for (i, slot) in out.iter_mut().enumerate() {
             let drops = self.admission_drops(&genes[i * l..(i + 1) * l]);
-            out.push(
-                self.theta1 * scratch.comp[i]
-                    + self.theta2 * scratch.tran[i]
-                    + self.theta3 * drops,
-            );
+            *slot = self.theta1 * scratch.comp[i]
+                + self.theta2 * scratch.tran[i]
+                + self.theta3 * drops;
         }
     }
 }
@@ -747,10 +772,27 @@ pub trait OffloadScheme {
     }
 }
 
-/// Construct a scheme instance.
+/// Construct a scheme instance with the default decision-layer knobs
+/// (sequential evaluation, no decision cache).
 pub fn make_scheme(kind: SchemeKind, seed: u64) -> Box<dyn OffloadScheme> {
+    make_scheme_with(kind, seed, 1, false)
+}
+
+/// Construct a scheme instance with the decision-layer perf knobs
+/// threaded through (engines pass [`crate::config::SimConfig`]'s
+/// `decide_threads` / `decision_cache`). Only the GA scheme has pooled
+/// generation evaluation and an epoch-keyed decision cache — the other
+/// schemes' decides are O(|A_x|·L) table walks with nothing to pool or
+/// memoize, so they ignore both knobs (pinned by `tests/prop_pool.rs`:
+/// every scheme is byte-identical across thread counts).
+pub fn make_scheme_with(
+    kind: SchemeKind,
+    seed: u64,
+    decide_threads: usize,
+    decision_cache: bool,
+) -> Box<dyn OffloadScheme> {
     match kind {
-        SchemeKind::Scc => Box::new(ga::GaScheme::new(seed)),
+        SchemeKind::Scc => Box::new(ga::GaScheme::with_opts(seed, decide_threads, decision_cache)),
         SchemeKind::Random => Box::new(random::RandomScheme::new(seed)),
         SchemeKind::Rrp => Box::new(rrp::RrpScheme::new()),
         SchemeKind::Dqn => Box::new(dqn::DqnScheme::new(seed)),

@@ -1,0 +1,350 @@
+//! Pooled GA generation evaluation — the `--decide-threads` knob.
+//!
+//! A persistent worker pool that splits one `deficit_batch` generation
+//! into contiguous chromosome chunks evaluated concurrently into
+//! disjoint, indexed slots of the shared output buffer. This is the
+//! first perf axis that speeds up a *single* run instead of many: every
+//! earlier layer parallelized across sweep cells or repeats, while the
+//! GA inside one million-task run still burned one core.
+//!
+//! Determinism: chromosome deficits are independent per-chromosome
+//! reductions — [`DecisionSpaceIndex::deficit_batch_slice`] carries no
+//! state across chromosomes, and the SIMD lanes' scalar tails are
+//! bitwise-equal to lane results — so splitting a generation at any
+//! chunk boundary writes exactly the bytes a sequential pass would, at
+//! any lane count. All RNG stays on the coordinator thread: workers only
+//! read the index and write their own `out` range. Whole-run
+//! byte-identity of `--decide-threads K` vs `1` is enforced by
+//! `tests/prop_pool.rs` across both engines and all four schemes.
+//!
+//! std::thread only — no new dependencies. The pool is persistent
+//! (workers park on a condvar between generations) because one GA decide
+//! dispatches hundreds of small generations; spawning threads per
+//! generation would cost more than the evaluation itself.
+
+use super::{BatchScratch, DecisionSpaceIndex, Gene};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+/// Below this many chromosomes per lane the dispatch/wake overhead beats
+/// the win, so the coordinator evaluates the generation inline instead
+/// (same bytes either way — only the schedule changes).
+const MIN_CHUNK: usize = 16;
+
+/// Resolve the `--decide-threads` knob to a concrete lane count:
+/// `0` = auto (one lane per available core), anything else is taken
+/// literally. `1` is the sequential oracle.
+pub fn resolve_threads(threads: usize) -> usize {
+    if threads == 0 {
+        std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1)
+    } else {
+        threads
+    }
+}
+
+/// One dispatched generation: raw views of the coordinator's borrows.
+/// Valid strictly while the coordinator blocks in
+/// [`EvalPool::deficit_batch`] waiting for `pending == 0`, which is what
+/// lets a persistent ('static) worker touch non-'static borrows.
+#[derive(Clone, Copy)]
+struct Job {
+    index: *const DecisionSpaceIndex,
+    genes: *const Gene,
+    genes_len: usize,
+    out: *mut f64,
+    /// Chromosome count of the generation.
+    n: usize,
+    /// Total lanes this generation was split into (workers + the
+    /// coordinator, which evaluates chunk 0 itself).
+    lanes: usize,
+}
+
+// SAFETY: the pointers are only dereferenced between dispatch and the
+// coordinator's completion wait, while the underlying borrows are live
+// and the per-lane ranges are disjoint.
+unsafe impl Send for Job {}
+
+struct JobState {
+    /// Monotone dispatch counter; a worker runs a job exactly once when
+    /// it observes a seq newer than the last one it completed.
+    seq: u64,
+    job: Option<Job>,
+    /// Worker chunks not yet completed for the current seq.
+    pending: usize,
+    shutdown: bool,
+}
+
+struct Shared {
+    state: Mutex<JobState>,
+    /// Workers park here between generations.
+    work: Condvar,
+    /// The coordinator parks here until `pending == 0`.
+    done: Condvar,
+}
+
+/// Contiguous chunk `t` of `n` items split `lanes` ways: `n·t/lanes`
+/// bounds, so chunk sizes differ by at most one and cover exactly
+/// `[0, n)`.
+fn chunk_bounds(n: usize, lanes: usize, t: usize) -> (usize, usize) {
+    (n * t / lanes, n * (t + 1) / lanes)
+}
+
+fn worker_loop(shared: Arc<Shared>, worker: usize) {
+    let mut scratch = BatchScratch::default();
+    let mut last_seq = 0u64;
+    loop {
+        let job = {
+            let mut st = shared.state.lock().unwrap();
+            loop {
+                if st.shutdown {
+                    return;
+                }
+                if st.seq > last_seq {
+                    if let Some(job) = st.job {
+                        last_seq = st.seq;
+                        break job;
+                    }
+                }
+                st = shared.work.wait(st).unwrap();
+            }
+        };
+        // This worker's fixed chunk: `worker + 1` (the coordinator runs
+        // chunk 0 concurrently).
+        let (lo, hi) = chunk_bounds(job.n, job.lanes, worker + 1);
+        if hi > lo {
+            // SAFETY: the coordinator blocks until every worker reports
+            // done, so the borrows behind these pointers outlive this
+            // block; chunk ranges are disjoint, so the slices alias
+            // nothing — see `Job`.
+            unsafe {
+                let index = &*job.index;
+                let l = index.segments.len();
+                debug_assert_eq!(job.genes_len, job.n * l);
+                let genes = std::slice::from_raw_parts(job.genes.add(lo * l), (hi - lo) * l);
+                let out = std::slice::from_raw_parts_mut(job.out.add(lo), hi - lo);
+                index.deficit_batch_slice(&mut scratch, genes, out);
+            }
+        }
+        let mut st = shared.state.lock().unwrap();
+        st.pending -= 1;
+        if st.pending == 0 {
+            shared.done.notify_one();
+        }
+    }
+}
+
+/// Persistent pooled evaluator for GA generations. One per
+/// [`super::ga::GaScheme`] when `--decide-threads` resolves above 1; the
+/// coordinator (the engine thread driving the GA) counts as one lane and
+/// evaluates chunk 0 itself, so `lanes - 1` workers are spawned.
+pub struct EvalPool {
+    shared: Arc<Shared>,
+    workers: Vec<JoinHandle<()>>,
+    lanes: usize,
+}
+
+impl EvalPool {
+    /// Build a pool evaluating generations `threads` ways
+    /// ([`resolve_threads`] semantics: 0 = auto). Callers should keep the
+    /// plain sequential path instead of a 1-lane pool — `GaScheme` only
+    /// constructs one when the resolved count exceeds 1 — but a 1-lane
+    /// pool is still correct (every generation evaluates inline).
+    pub fn new(threads: usize) -> EvalPool {
+        let lanes = resolve_threads(threads).max(1);
+        let shared = Arc::new(Shared {
+            state: Mutex::new(JobState {
+                seq: 0,
+                job: None,
+                pending: 0,
+                shutdown: false,
+            }),
+            work: Condvar::new(),
+            done: Condvar::new(),
+        });
+        let workers = (0..lanes - 1)
+            .map(|i| {
+                let sh = Arc::clone(&shared);
+                std::thread::Builder::new()
+                    .name(format!("satkit-eval-{i}"))
+                    .spawn(move || worker_loop(sh, i))
+                    .expect("spawning pooled-eval worker")
+            })
+            .collect();
+        EvalPool {
+            shared,
+            workers,
+            lanes,
+        }
+    }
+
+    /// Lane count (workers + coordinator) generations are split into.
+    pub fn lanes(&self) -> usize {
+        self.lanes
+    }
+
+    /// Evaluate one generation into `out`, producing exactly the bytes
+    /// [`DecisionSpaceIndex::deficit_batch`] would. Generations too small
+    /// to amortize a wake-up, empty decision spaces, and the `L > 128`
+    /// fallback all run inline on the coordinator.
+    pub fn deficit_batch(
+        &self,
+        index: &DecisionSpaceIndex,
+        scratch: &mut BatchScratch,
+        genes: &[Gene],
+        out: &mut Vec<f64>,
+    ) {
+        let l = index.segments.len();
+        let n = if l == 0 { 0 } else { genes.len() / l };
+        if self.lanes <= 1 || l == 0 || l > 128 || n < self.lanes * MIN_CHUNK {
+            index.deficit_batch(scratch, genes, out);
+            return;
+        }
+        debug_assert_eq!(genes.len() % l, 0, "ragged chromosome matrix");
+        out.clear();
+        out.resize(n, 0.0);
+        // From here until the completion wait below, `out` is only
+        // touched through `base` + disjoint per-lane ranges.
+        let base = out.as_mut_ptr();
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            st.seq += 1;
+            st.pending = self.lanes - 1;
+            st.job = Some(Job {
+                index,
+                genes: genes.as_ptr(),
+                genes_len: genes.len(),
+                out: base,
+                n,
+                lanes: self.lanes,
+            });
+            self.shared.work.notify_all();
+        }
+        // The coordinator's own share: chunk 0.
+        let (lo, hi) = chunk_bounds(n, self.lanes, 0);
+        // SAFETY: disjoint from every worker chunk (chunk_bounds ranges
+        // partition [0, n)).
+        let out0 = unsafe { std::slice::from_raw_parts_mut(base.add(lo), hi - lo) };
+        index.deficit_batch_slice(scratch, &genes[lo * l..hi * l], out0);
+        let mut st = self.shared.state.lock().unwrap();
+        while st.pending != 0 {
+            st = self.shared.done.wait(st).unwrap();
+        }
+        st.job = None;
+    }
+}
+
+impl Drop for EvalPool {
+    fn drop(&mut self) {
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            st.shutdown = true;
+            self.shared.work.notify_all();
+        }
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::tests::test_ctx;
+    use super::super::{BatchScratch, DecisionSpaceIndex, Gene};
+    use super::{chunk_bounds, resolve_threads, EvalPool};
+    use crate::config::GaConfig;
+    use crate::satellite::Satellite;
+    use crate::topology::Constellation;
+    use crate::util::rng::Pcg64;
+
+    fn built_index() -> DecisionSpaceIndex {
+        let topo = Constellation::torus(6);
+        let mut rng = Pcg64::seed_from_u64(17);
+        let sats: Vec<Satellite> = (0..topo.len())
+            .map(|i| {
+                let mut s = Satellite::new(i, 3000.0, 15_000.0);
+                s.try_load(rng.f64_in(0.0, 12_000.0));
+                s
+            })
+            .collect();
+        let cands = topo.decision_space(7, 2);
+        let segs = [4000.0, 1500.0, 3500.0, 2800.0];
+        let ga = GaConfig::default();
+        let ctx = test_ctx(&topo, &sats, &cands, &segs, &ga);
+        DecisionSpaceIndex::from_ctx(&ctx)
+    }
+
+    fn random_batch(index: &DecisionSpaceIndex, n: usize, seed: u64) -> Vec<Gene> {
+        let mut rng = Pcg64::new(seed, 0xB00);
+        let nc = index.n_cands();
+        let l = index.n_segments();
+        (0..n * l)
+            .map(|_| rng.usize_in(0, nc) as Gene)
+            .collect()
+    }
+
+    #[test]
+    fn chunk_bounds_partition_without_gaps() {
+        for n in [0usize, 1, 7, 64, 65, 4096] {
+            for lanes in [1usize, 2, 3, 4, 7] {
+                let mut covered = 0usize;
+                for t in 0..lanes {
+                    let (lo, hi) = chunk_bounds(n, lanes, t);
+                    assert_eq!(lo, covered, "n={n} lanes={lanes} t={t}");
+                    assert!(hi >= lo);
+                    covered = hi;
+                }
+                assert_eq!(covered, n);
+            }
+        }
+    }
+
+    #[test]
+    fn pooled_batch_is_bitwise_equal_to_sequential() {
+        let index = built_index();
+        let mut scratch = BatchScratch::default();
+        let mut seq = Vec::new();
+        let mut pooled = Vec::new();
+        for threads in [2usize, 3, 4] {
+            let pool = EvalPool::new(threads);
+            // Sizes straddle the inline cutoff, SIMD lane tails, and
+            // uneven chunk splits.
+            for n in [0usize, 1, 5, 63, 64, 129, 500] {
+                let genes = random_batch(&index, n, 42 + n as u64);
+                index.deficit_batch(&mut scratch, &genes, &mut seq);
+                pool.deficit_batch(&index, &mut scratch, &genes, &mut pooled);
+                assert_eq!(seq.len(), pooled.len());
+                for (i, (a, b)) in seq.iter().zip(&pooled).enumerate() {
+                    assert_eq!(
+                        a.to_bits(),
+                        b.to_bits(),
+                        "threads={threads} n={n} chrom={i}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn pool_survives_repeated_dispatches() {
+        let index = built_index();
+        let mut scratch = BatchScratch::default();
+        let pool = EvalPool::new(4);
+        let mut seq = Vec::new();
+        let mut pooled = Vec::new();
+        for round in 0..50u64 {
+            let genes = random_batch(&index, 200, round);
+            index.deficit_batch(&mut scratch, &genes, &mut seq);
+            pool.deficit_batch(&index, &mut scratch, &genes, &mut pooled);
+            assert_eq!(seq, pooled, "round {round}");
+        }
+    }
+
+    #[test]
+    fn auto_resolves_to_at_least_one_lane() {
+        assert!(resolve_threads(0) >= 1);
+        assert_eq!(resolve_threads(1), 1);
+        assert_eq!(resolve_threads(6), 6);
+    }
+}

@@ -41,14 +41,16 @@ pub(super) fn active() -> bool {
     }
 }
 
-/// Evaluate the whole batch with SIMD lanes. Returns false (leaving `out`
-/// untouched) when the CPU lacks the lanes — the caller then runs the
-/// scalar body. The caller guarantees `1 <= L <= 128` and a non-empty,
-/// non-ragged `genes` matrix.
+/// Evaluate the whole batch with SIMD lanes into the pre-sized `out`
+/// slots. Returns false (leaving `out` untouched) when the CPU lacks the
+/// lanes — the caller then runs the scalar body. The caller guarantees
+/// `1 <= L <= 128`, a non-empty, non-ragged `genes` matrix, and
+/// `out.len() · L == genes.len()`. Writing slots instead of pushing lets
+/// the pooled evaluator hand each worker its own disjoint sub-range.
 pub(super) fn deficit_batch(
     index: &DecisionSpaceIndex,
     genes: &[Gene],
-    out: &mut Vec<f64>,
+    out: &mut [f64],
 ) -> bool {
     #[cfg(target_arch = "x86_64")]
     {
@@ -162,12 +164,11 @@ mod avx2 {
     pub(in super::super) unsafe fn deficit_batch(
         index: &DecisionSpaceIndex,
         genes: &[Gene],
-        out: &mut Vec<f64>,
+        out: &mut [f64],
     ) {
         let l = index.segments.len();
         let n = genes.len() / l;
         let nc = index.sat_ids.len();
-        out.reserve(n);
         let main = n - n % LANES;
         let mut i = 0usize;
         while i < main {
@@ -208,14 +209,12 @@ mod avx2 {
                 ),
                 _mm256_mul_pd(_mm256_set1_pd(index.theta3), drops),
             );
-            let mut buf = [0.0f64; LANES];
-            _mm256_storeu_pd(buf.as_mut_ptr(), d);
-            out.extend_from_slice(&buf);
+            _mm256_storeu_pd(out.as_mut_ptr().add(i), d);
             i += LANES;
         }
         // scalar tail for the trailing n % LANES chromosomes
-        for c in genes[main * l..].chunks(l) {
-            out.push(index.deficit(c));
+        for (j, c) in genes[main * l..].chunks(l).enumerate() {
+            out[main + j] = index.deficit(c);
         }
     }
 }
@@ -303,12 +302,11 @@ mod neon {
     pub(in super::super) unsafe fn deficit_batch(
         index: &DecisionSpaceIndex,
         genes: &[Gene],
-        out: &mut Vec<f64>,
+        out: &mut [f64],
     ) {
         let l = index.segments.len();
         let n = genes.len() / l;
         let nc = index.sat_ids.len();
-        out.reserve(n);
         let main = n - n % LANES;
         let mut i = 0usize;
         while i < main {
@@ -348,14 +346,12 @@ mod neon {
                 ),
                 vmulq_f64(vdupq_n_f64(index.theta3), drops),
             );
-            let mut buf = [0.0f64; LANES];
-            vst1q_f64(buf.as_mut_ptr(), d);
-            out.extend_from_slice(&buf);
+            vst1q_f64(out.as_mut_ptr().add(i), d);
             i += LANES;
         }
         // scalar tail for the trailing n % LANES chromosomes
-        for c in genes[main * l..].chunks(l) {
-            out.push(index.deficit(c));
+        for (j, c) in genes[main * l..].chunks(l).enumerate() {
+            out[main + j] = index.deficit(c);
         }
     }
 }

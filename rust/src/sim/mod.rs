@@ -21,7 +21,7 @@ use crate::comm::{GatewayChannel, IslLink};
 use crate::config::{EngineKind, SimConfig};
 use crate::metrics::{MetricsCollector, Report, TaskOutcome};
 use crate::obs::{InstantKind, Obs, SpanKind};
-use crate::offload::{make_scheme, MigrationCost, OffloadContext, OffloadScheme, SchemeKind};
+use crate::offload::{make_scheme_with, MigrationCost, OffloadContext, OffloadScheme, SchemeKind};
 use crate::satellite::{Admission, Satellite};
 use crate::splitting::balanced_split;
 use crate::state::ViewTracker;
@@ -46,6 +46,15 @@ pub enum SplitPolicy {
 /// partition boundary, not the sum of all intermediate tensors. Shared by
 /// the slotted and event-driven engines so their delay models agree.
 pub fn calibrate_kappa(cfg: &SimConfig) -> f64 {
+    calibrate_kappa_with(cfg, &IslLink::new(cfg.comm.clone()))
+}
+
+/// [`calibrate_kappa`] against a caller-supplied ISL handle: engine
+/// constructors precompute one [`IslLink`] per engine and reuse it here
+/// and for the autoregressive state-migration cost, instead of cloning
+/// `CommConfig` (and re-deriving the Eq. 2 rate) once per derived
+/// quantity.
+pub fn calibrate_kappa_with(cfg: &SimConfig, isl: &IslLink) -> f64 {
     let profile = cfg.model.profile();
     let l_eff = cfg.effective_l();
     let cuts = crate::splitting::balanced_split(
@@ -68,7 +77,6 @@ pub fn calibrate_kappa(cfg: &SimConfig) -> f64 {
         }
     };
     let mean_seg_mflops = profile.total_mflops() / l_eff as f64;
-    let isl = IslLink::new(cfg.comm.clone());
     isl.hop_secs(mean_cut_bytes) / mean_seg_mflops.max(1e-9)
 }
 
@@ -157,19 +165,26 @@ impl Simulation {
         let decision_sats =
             decision_satellites(topo.len(), cfg.decision_fraction, cfg.seed);
         let n_areas = decision_sats.len();
-        let kappa = calibrate_kappa(cfg);
+        // One precomputed comm handle per engine: κ calibration and the
+        // autoregressive state-migration cost share it instead of cloning
+        // `CommConfig` per derived quantity.
+        let isl = IslLink::new(cfg.comm.clone());
+        let kappa = calibrate_kappa_with(cfg, &isl);
         let task_kind = cfg.effective_task_kind();
         let state_hop_secs = match task_kind {
-            TaskKind::Autoregressive { state_bytes, .. } => {
-                IslLink::new(cfg.comm.clone()).hop_secs(state_bytes)
-            }
+            TaskKind::Autoregressive { state_bytes, .. } => isl.hop_secs(state_bytes),
             TaskKind::OneShot => 0.0,
         };
         Simulation {
             topo,
             satellites,
             decision_sats,
-            scheme: make_scheme(kind, cfg.seed ^ 0x5EED),
+            scheme: make_scheme_with(
+                kind,
+                cfg.seed ^ 0x5EED,
+                cfg.decide_threads,
+                cfg.decision_cache,
+            ),
             // Table I gives ONE "generated task incidence" λ for the
             // system: arrivals are Poisson(λ) network-wide, spread across
             // the gateway areas (each area draws Poisson(λ/#areas)).
@@ -305,6 +320,10 @@ impl Simulation {
                 let newly = f.step();
                 if !newly.is_empty() {
                     obs.instant(InstantKind::Fault, slot as f64, newly.len());
+                    // capacities vanished: cached placements must not
+                    // survive the shock (counter only — no legacy path
+                    // reads it, so default runs are unchanged)
+                    tracker.bump_epoch();
                 }
                 for id in newly {
                     self.satellites[id].reset();
@@ -316,6 +335,9 @@ impl Simulation {
                 let dwell = h.dwell_secs() as usize;
                 if slot > 0 && slot % dwell == 0 {
                     obs.instant(InstantKind::Handover, t_slot, slot / dwell);
+                    // serving satellites (and decision spaces) just
+                    // drifted: invalidate cached placements
+                    tracker.bump_epoch();
                 }
             }
             let bc_before = tracker.broadcasts();

@@ -182,6 +182,9 @@ impl DisseminationKind {
 pub struct StateView<'a> {
     sats: &'a [Satellite],
     observed: Option<&'a [f64]>,
+    /// Dissemination epoch this view was captured in (see
+    /// [`ViewTracker::epoch`]); 0 for live and hand-built views.
+    epoch: u64,
 }
 
 impl<'a> StateView<'a> {
@@ -190,6 +193,7 @@ impl<'a> StateView<'a> {
         StateView {
             sats,
             observed: None,
+            epoch: 0,
         }
     }
 
@@ -200,7 +204,23 @@ impl<'a> StateView<'a> {
         StateView {
             sats,
             observed: Some(loaded),
+            epoch: 0,
         }
+    }
+
+    /// Tag this view with the dissemination epoch it was captured in
+    /// (builder form, used by [`ViewTracker::view`]). The epoch carries no
+    /// state itself — it is the invalidation key the opt-in decision
+    /// cache (`--decision-cache`) hangs on.
+    pub fn at_epoch(mut self, epoch: u64) -> StateView<'a> {
+        self.epoch = epoch;
+        self
+    }
+
+    /// Monotone dissemination epoch of this view: 0 for live views,
+    /// otherwise the owning tracker's counter at capture time.
+    pub fn epoch(&self) -> u64 {
+        self.epoch
     }
 
     /// Number of satellites in view.
@@ -292,6 +312,11 @@ pub struct ViewTracker {
     /// Eager dissemination captures performed ([`ViewTracker::broadcast_now`]);
     /// telemetry only — see [`ViewTracker::broadcasts`].
     broadcasts: u64,
+    /// Monotone view-epoch counter (see [`ViewTracker::epoch`]): bumped
+    /// whenever observed views may change for a reason other than an
+    /// origin's own placements — broadcasts, newly opened periodic
+    /// windows, and engine-reported shocks ([`ViewTracker::bump_epoch`]).
+    epoch: u64,
 }
 
 impl ViewTracker {
@@ -323,6 +348,7 @@ impl ViewTracker {
             depth: d_max + 1,
             logs: vec![Vec::new(); if gossip { n_areas } else { 0 }],
             broadcasts: 0,
+            epoch: 0,
         }
     }
 
@@ -367,6 +393,7 @@ impl ViewTracker {
             DisseminationKind::Periodic { .. } => {
                 self.broadcasts += 1;
                 self.generation += 1;
+                self.epoch += 1;
                 for (area, view) in self.views.iter_mut().enumerate() {
                     for (v, s) in view.iter_mut().zip(sats) {
                         *v = s.loaded();
@@ -376,6 +403,7 @@ impl ViewTracker {
             }
             DisseminationKind::Gossip { .. } => {
                 self.broadcasts += 1;
+                self.epoch += 1;
                 // push the new snapshot, recycling the evicted buffer
                 let mut snap = if self.ring.len() >= self.depth {
                     self.ring.pop_back().map(|(_, v)| v).unwrap_or_default()
@@ -418,7 +446,11 @@ impl ViewTracker {
     /// deferred to each area's next [`ViewTracker::sync_batch`].
     pub fn advance_to(&mut self, t: f64) {
         if let DisseminationKind::Periodic { period_s } = self.kind {
-            self.generation = (t / period_s).floor() as u64 + 1;
+            let gen = (t / period_s).floor() as u64 + 1;
+            if gen > self.generation {
+                self.generation = gen;
+                self.epoch += 1;
+            }
         }
     }
 
@@ -464,11 +496,31 @@ impl ViewTracker {
         self.broadcasts.max(self.generation)
     }
 
+    /// Monotone view-epoch counter: increments at every dissemination
+    /// capture / newly opened periodic window and at every engine-reported
+    /// shock ([`ViewTracker::bump_epoch`] on faults and handovers).
+    /// Between two epochs, an area's observed view changes only through
+    /// its origin's own placements ([`ViewTracker::record_local`]) — the
+    /// invariant the opt-in `--decision-cache` relies on to replay
+    /// placements within an epoch.
+    pub fn epoch(&self) -> u64 {
+        self.epoch
+    }
+
+    /// Engine hook for view shocks outside the dissemination schedule —
+    /// fault batches (capacities vanished) and coverage handovers (the
+    /// serving satellite changed). Cached decisions must not survive
+    /// either, so engines bump the epoch even though the observed buffers
+    /// themselves refresh only at the next capture.
+    pub fn bump_epoch(&mut self) {
+        self.epoch += 1;
+    }
+
     /// The state view `area`'s origin decides on right now.
     pub fn view<'a>(&'a self, area: usize, sats: &'a [Satellite]) -> StateView<'a> {
         match self.kind {
             DisseminationKind::Instant => StateView::live(sats),
-            _ => StateView::observed(sats, &self.views[area]),
+            _ => StateView::observed(sats, &self.views[area]).at_epoch(self.epoch),
         }
     }
 }
@@ -657,6 +709,54 @@ mod tests {
         let mut inst = ViewTracker::new(DisseminationKind::Instant, 9, 1, 2);
         inst.broadcast_now(1.0, &live, &topo, &[0]);
         assert_eq!(inst.broadcasts(), 0);
+    }
+
+    #[test]
+    fn epoch_counts_broadcasts_windows_and_shocks() {
+        let topo = Constellation::torus(3);
+        let live = sats(9);
+        // eager periodic: every broadcast is an epoch
+        let mut tr = ViewTracker::new(
+            DisseminationKind::Periodic { period_s: 2.0 },
+            9,
+            1,
+            2,
+        );
+        assert_eq!(tr.epoch(), 0);
+        assert_eq!(tr.view(0, &live).epoch(), 0);
+        tr.broadcast_now(2.0, &live, &topo, &[0]);
+        tr.broadcast_now(4.0, &live, &topo, &[0]);
+        assert_eq!(tr.epoch(), 2);
+        assert_eq!(tr.view(0, &live).epoch(), 2);
+        // engine-reported shocks (fault / handover) bump without a capture
+        tr.bump_epoch();
+        assert_eq!(tr.epoch(), 3);
+        // lazy periodic: an epoch per newly opened window, and repeated
+        // advances inside one window change nothing
+        let mut lazy = ViewTracker::new(
+            DisseminationKind::Periodic { period_s: 1.0 },
+            9,
+            1,
+            2,
+        );
+        lazy.advance_to(0.0);
+        assert_eq!(lazy.epoch(), 1);
+        lazy.advance_to(0.5);
+        assert_eq!(lazy.epoch(), 1);
+        lazy.advance_to(3.0);
+        assert_eq!(lazy.epoch(), 2);
+        // gossip ticks are epochs too
+        let mut gsp = ViewTracker::new(
+            DisseminationKind::Gossip { tick_s: 1.0 },
+            9,
+            1,
+            2,
+        );
+        gsp.broadcast_now(1.0, &live, &topo, &[0]);
+        assert_eq!(gsp.epoch(), 1);
+        // live views always report epoch 0
+        let inst = ViewTracker::new(DisseminationKind::Instant, 9, 1, 2);
+        assert_eq!(inst.view(0, &live).epoch(), 0);
     }
 
     #[test]

@@ -1,0 +1,182 @@
+//! Whole-run properties for PR 9's two decision-layer structures.
+//!
+//! * The pooled GA generation evaluator (`--decide-threads`) must leave
+//!   every report **byte-identical** to the sequential run at any lane
+//!   count: all RNG stays on the coordinator thread and per-chromosome
+//!   deficits are independent reductions, so fanning a generation over
+//!   the `EvalPool` can only change wall-clock, never a single bit.
+//! * The epoch-keyed decision cache (`--decision-cache`) is explicitly
+//!   **not** byte-identical when on (hits skip the GA's RNG draws), so
+//!   the guarantee the default path rides on is the inverse: with the
+//!   flag off — the default — runs are bit-for-bit the legacy engine.
+//!
+//! Both invariants hold across both engines and all four schemes (the
+//! heuristics ignore both knobs entirely, which this also pins down).
+
+use satkit::config::{EngineKind, SimConfig};
+use satkit::metrics::Report;
+use satkit::offload::SchemeKind;
+use satkit::util::quickcheck::{check_no_shrink, default_cases};
+
+/// Compare two reports field-by-field, bit-for-bit on floats.
+fn assert_reports_identical(a: &Report, b: &Report) -> Result<(), String> {
+    if a.total_tasks != b.total_tasks {
+        return Err(format!(
+            "task counts differ: {} vs {}",
+            a.total_tasks, b.total_tasks
+        ));
+    }
+    if a.completed_tasks != b.completed_tasks {
+        return Err(format!(
+            "completion counts differ: {} vs {}",
+            a.completed_tasks, b.completed_tasks
+        ));
+    }
+    for (name, x, y) in [
+        ("avg_delay_ms", a.avg_delay_ms, b.avg_delay_ms),
+        ("avg_comp_ms", a.avg_comp_ms, b.avg_comp_ms),
+        ("avg_tran_ms", a.avg_tran_ms, b.avg_tran_ms),
+        ("avg_uplink_ms", a.avg_uplink_ms, b.avg_uplink_ms),
+        ("workload_variance", a.workload_variance, b.workload_variance),
+        ("workload_mean", a.workload_mean, b.workload_mean),
+        ("delay_p50_ms", a.delay_p50_ms, b.delay_p50_ms),
+        ("delay_p95_ms", a.delay_p95_ms, b.delay_p95_ms),
+    ] {
+        if x.to_bits() != y.to_bits() {
+            return Err(format!("{name} differs: {x} vs {y}"));
+        }
+    }
+    Ok(())
+}
+
+/// The tentpole acceptance invariant, deterministically over every
+/// (engine, scheme, lane count) cell: pinned lane counts and the auto
+/// (one-per-core) mode all reproduce the sequential run bit-for-bit.
+#[test]
+fn pooled_decide_matches_sequential_all_engines_and_schemes() {
+    for engine in EngineKind::all() {
+        for scheme in SchemeKind::all() {
+            let mut cfg = SimConfig {
+                n: 6,
+                slots: 6,
+                lambda: 8.0,
+                seed: 11,
+                engine,
+                ..SimConfig::default()
+            };
+            cfg.decide_threads = 1;
+            let sequential = satkit::engine::run(&cfg, scheme);
+            for threads in [2usize, 4, 0] {
+                cfg.decide_threads = threads;
+                let pooled = satkit::engine::run(&cfg, scheme);
+                assert_reports_identical(&sequential, &pooled).unwrap_or_else(|e| {
+                    panic!("{engine:?}/{scheme:?} decide_threads={threads}: {e}")
+                });
+            }
+        }
+    }
+}
+
+/// `--decision-cache` defaults off, and off is the legacy path: a config
+/// that spells `decision_cache = false` runs bit-for-bit like one that
+/// never mentions the knob — across both engines, all schemes, and a
+/// stale (periodic) dissemination where the cache would actually engage
+/// if it were wrongly live.
+#[test]
+fn decision_cache_off_is_bit_identical_to_unset() {
+    for engine in EngineKind::all() {
+        for scheme in SchemeKind::all() {
+            let base = SimConfig {
+                n: 6,
+                slots: 6,
+                lambda: 8.0,
+                seed: 11,
+                engine,
+                dissemination: Some(satkit::state::DisseminationKind::Periodic {
+                    period_s: 2.0,
+                }),
+                ..SimConfig::default()
+            };
+            assert!(!base.decision_cache, "cache must default off");
+            let unset = satkit::engine::run(&base, scheme);
+            let mut explicit = base.clone();
+            explicit.decision_cache = false;
+            let off = satkit::engine::run(&explicit, scheme);
+            assert_reports_identical(&unset, &off)
+                .unwrap_or_else(|e| panic!("{engine:?}/{scheme:?}: {e}"));
+        }
+    }
+}
+
+/// Cache-on smoke: the run completes, produces tasks, and under a stale
+/// periodic view the SCC scheme's cache actually records lookups (the
+/// counters ride the telemetry block). Heuristic schemes never consult
+/// it — their kernels have no cache — which the scheme-agnostic knob
+/// plumbing (`make_scheme_with`) keeps true by construction.
+#[test]
+fn decision_cache_on_runs_and_counts_lookups() {
+    let mut cfg = SimConfig {
+        n: 6,
+        slots: 6,
+        lambda: 8.0,
+        seed: 11,
+        engine: EngineKind::Event,
+        dissemination: Some(satkit::state::DisseminationKind::Periodic { period_s: 2.0 }),
+        ..SimConfig::default()
+    };
+    cfg.decision_cache = true;
+    cfg.obs.telemetry = true;
+    let rep = satkit::engine::run(&cfg, SchemeKind::Scc);
+    assert!(rep.total_tasks > 0);
+    let scheme_block = rep
+        .telemetry
+        .as_ref()
+        .and_then(|t| t.get("scheme"))
+        .expect("SCC telemetry exposes the kernel block");
+    let counter = |key: &str| -> f64 {
+        scheme_block.get(key).and_then(|v| v.as_f64()).unwrap_or(-1.0)
+    };
+    let lookups = counter("decision_cache_lookups");
+    let hits = counter("decision_cache_hits");
+    let decides = counter("decides");
+    assert!(decides > 0.0, "GA decided at least once");
+    assert!(lookups > 0.0, "stale periodic views consult the cache");
+    assert!(hits >= 0.0 && hits <= lookups, "hits within lookups");
+}
+
+/// The pooled-eval invariant over random (n, λ, slots, engine, scheme,
+/// lanes, seed) whole-run cases, in the style of `tests/prop_sharded.rs`.
+#[test]
+fn prop_pooled_runs_are_byte_identical_to_sequential() {
+    check_no_shrink(
+        "pooled-decide-byte-identical",
+        default_cases().min(16),
+        |r| {
+            let n = *r.choose(&[4usize, 6]);
+            let lambda = r.f64_in(2.0, 10.0);
+            let slots = r.usize_in(3, 7);
+            let engine = *r.choose(&EngineKind::all());
+            let scheme = *r.choose(&SchemeKind::all());
+            // 0 = auto (one lane per core); otherwise a pinned count,
+            // deliberately allowed to exceed the core count
+            let threads = r.usize_in(0, 9);
+            let seed = r.next_u64() % 1000;
+            (n, lambda, slots, engine, scheme, threads, seed)
+        },
+        |&(n, lambda, slots, engine, scheme, threads, seed)| {
+            let mut cfg = SimConfig {
+                n,
+                lambda,
+                slots,
+                seed,
+                engine,
+                ..SimConfig::default()
+            };
+            cfg.decide_threads = 1;
+            let sequential = satkit::engine::run(&cfg, scheme);
+            cfg.decide_threads = threads;
+            let pooled = satkit::engine::run(&cfg, scheme);
+            assert_reports_identical(&sequential, &pooled)
+        },
+    );
+}
