@@ -55,6 +55,7 @@ fn main() {
             kappa: 1e-4,
             ga: &ga,
             migration: None,
+            outages: None,
         };
         let mut scheme = make_scheme(SchemeKind::Scc, 3);
         let r = bench(

@@ -52,6 +52,7 @@ fn main() {
         kappa: 1e-4,
         ga: &ga,
         migration: None,
+        outages: None,
     };
     let chrom: Vec<usize> = (0..4).map(|_| *rng.choose(&cands)).collect();
     show(bench("deficit(L=4, |A_x|=25) reference", 100, iters * 50, || {

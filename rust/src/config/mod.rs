@@ -11,6 +11,7 @@ pub use toml_lite::TomlDoc;
 
 use crate::dnn::DnnModel;
 use crate::obs::{ObsConfig, TraceConfig};
+use crate::resilience::{FaultTrace, RecoveryPolicy};
 use crate::state::DisseminationKind;
 use crate::tasks::TaskKind;
 use crate::topology::{Constellation, TopologyKind};
@@ -218,6 +219,85 @@ impl Default for LlmConfig {
     }
 }
 
+/// Fault injection + recovery knobs (`[resilience]` TOML block,
+/// `--p-fail` / `--link-p-fail` / `--recovery` / `--fault-trace` on the
+/// CLI). Everything defaults off: no injector is constructed, recovery
+/// is the legacy drop, and runs stay byte-identical with pre-resilience
+/// builds (`tests/prop_resilience.rs`).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ResilienceConfig {
+    /// Per-satellite Bernoulli failure probability per injector tick
+    /// (`--p-fail`). 0 disables the satellite fault process entirely.
+    pub p_fail: f64,
+    /// Per-satellite Bernoulli recovery probability per tick while down
+    /// (`--p-recover`).
+    pub p_recover: f64,
+    /// Per-ISL-link Bernoulli failure probability per tick
+    /// (`--link-p-fail`). 0 disables the link outage process.
+    pub link_p_fail: f64,
+    /// Per-link Bernoulli recovery probability per tick while out
+    /// (`--link-p-recover`).
+    pub link_p_recover: f64,
+    /// Restrict Bernoulli link failures to links touching the first or
+    /// last orbital plane — the Walker-star seam region
+    /// (`--seam-outage`).
+    pub seam_only: bool,
+    /// What happens to a task's surviving segment chain on a satellite
+    /// fault (`--recovery drop|reoffload[:<max_retries>]`).
+    pub recovery: RecoveryPolicy,
+    /// Scripted outage windows (`--fault-trace <file>`), parsed eagerly
+    /// at load time so malformed traces fail at the CLI boundary.
+    pub fault_trace: Option<FaultTrace>,
+    /// Path the trace came from (for `table()` rendering).
+    pub fault_trace_path: Option<String>,
+    /// How long an in-flight ISL transfer stalls on a dead link before
+    /// retrying the route [s].
+    pub link_timeout_s: f64,
+    /// Deadline-aware give-up: a faulted task older than this is dropped
+    /// rather than re-offloaded [s].
+    pub deadline_s: f64,
+}
+
+impl Default for ResilienceConfig {
+    fn default() -> Self {
+        ResilienceConfig {
+            p_fail: 0.0,
+            p_recover: 0.3,
+            link_p_fail: 0.0,
+            link_p_recover: 0.3,
+            seam_only: false,
+            recovery: RecoveryPolicy::Drop,
+            fault_trace: None,
+            fault_trace_path: None,
+            link_timeout_s: 1.0,
+            deadline_s: 10.0,
+        }
+    }
+}
+
+impl ResilienceConfig {
+    /// Does this config inject satellite faults at all (Bernoulli
+    /// process or scripted windows)? Engines skip constructing the
+    /// `FaultInjector` — and scheduling its per-tick `Fault` events —
+    /// when false.
+    pub fn sat_faults_active(&self) -> bool {
+        self.p_fail > 0.0
+            || self
+                .fault_trace
+                .as_ref()
+                .is_some_and(|t| t.has_sat_windows())
+    }
+
+    /// Does this config inject ISL link outages at all?
+    pub fn link_faults_active(&self) -> bool {
+        self.link_p_fail > 0.0
+            || self
+                .fault_trace
+                .as_ref()
+                .is_some_and(|t| t.has_link_windows())
+    }
+}
+
 /// Satellite compute parameters (Table I + Eq. 4).
 #[derive(Clone, Debug, PartialEq)]
 pub struct SatelliteConfig {
@@ -334,6 +414,10 @@ pub struct SimConfig {
     /// Defaults + execution knobs for the autoregressive class
     /// (`[llm]` TOML block).
     pub llm: LlmConfig,
+    /// Fault injection + recovery (`[resilience]` TOML block,
+    /// `--p-fail` / `--link-p-fail` / `--recovery` / `--fault-trace`).
+    /// Defaults off — see [`ResilienceConfig`].
+    pub resilience: ResilienceConfig,
     pub ga: GaConfig,
     pub comm: CommConfig,
     pub satellite: SatelliteConfig,
@@ -366,6 +450,7 @@ impl Default for SimConfig {
             obs: ObsConfig::default(),
             task_kind: None,
             llm: LlmConfig::default(),
+            resilience: ResilienceConfig::default(),
             ga: GaConfig::default(),
             comm: CommConfig::default(),
             satellite: SatelliteConfig::default(),
@@ -505,6 +590,39 @@ impl SimConfig {
                 self.llm.small_model_factor
             ));
         }
+        let r = &self.resilience;
+        for (name, p) in [
+            ("resilience.p_fail", r.p_fail),
+            ("resilience.p_recover", r.p_recover),
+            ("resilience.link_p_fail", r.link_p_fail),
+            ("resilience.link_p_recover", r.link_p_recover),
+        ] {
+            if !p.is_finite() || !(0.0..=1.0).contains(&p) {
+                errs.push(format!("{name}={p} must be in [0,1]"));
+            }
+        }
+        if !r.link_timeout_s.is_finite() || r.link_timeout_s <= 0.0 {
+            errs.push(format!(
+                "resilience.link_timeout_s={} must be finite and > 0",
+                r.link_timeout_s
+            ));
+        }
+        if !r.deadline_s.is_finite() || r.deadline_s <= 0.0 {
+            errs.push(format!(
+                "resilience.deadline_s={} must be finite and > 0",
+                r.deadline_s
+            ));
+        }
+        if let Some(trace) = &r.fault_trace {
+            if let Some(max) = trace.max_sat_id() {
+                let n_sats = self.effective_topology().n_sats();
+                if max >= n_sats {
+                    errs.push(format!(
+                        "fault-trace references satellite {max} but the topology has {n_sats} sats"
+                    ));
+                }
+            }
+        }
         if errs.is_empty() {
             Ok(())
         } else {
@@ -622,6 +740,30 @@ impl SimConfig {
         if let Some(s) = doc.get_str("", "task_kind") {
             d.task_kind = Some(TaskKind::parse_with(&s, &d.llm)?);
         }
+        doc.read_f64("resilience", "p_fail", &mut d.resilience.p_fail);
+        doc.read_f64("resilience", "p_recover", &mut d.resilience.p_recover);
+        doc.read_f64("resilience", "link_p_fail", &mut d.resilience.link_p_fail);
+        doc.read_f64(
+            "resilience",
+            "link_p_recover",
+            &mut d.resilience.link_p_recover,
+        );
+        if let Some(b) = doc.get_bool("resilience", "seam_only") {
+            d.resilience.seam_only = b;
+        }
+        if let Some(s) = doc.get_str("resilience", "recovery") {
+            d.resilience.recovery = RecoveryPolicy::parse(&s)?;
+        }
+        if let Some(p) = doc.get_str("resilience", "fault_trace") {
+            d.resilience.fault_trace = Some(FaultTrace::from_file(&p)?);
+            d.resilience.fault_trace_path = Some(p);
+        }
+        doc.read_f64(
+            "resilience",
+            "link_timeout_s",
+            &mut d.resilience.link_timeout_s,
+        );
+        doc.read_f64("resilience", "deadline_s", &mut d.resilience.deadline_s);
         Ok(cfg)
     }
 
@@ -716,6 +858,40 @@ impl SimConfig {
         if let Some(x) = args.get_parsed::<f64>("counter-period")? {
             self.obs.counter_period_s = x;
         }
+        if let Some(p) = args.get_parsed::<f64>("p-fail")? {
+            self.resilience.p_fail = p;
+        }
+        if let Some(p) = args.get_parsed::<f64>("p-recover")? {
+            self.resilience.p_recover = p;
+        }
+        if let Some(p) = args.get_parsed::<f64>("link-p-fail")? {
+            self.resilience.link_p_fail = p;
+        }
+        if let Some(p) = args.get_parsed::<f64>("link-p-recover")? {
+            self.resilience.link_p_recover = p;
+        }
+        if args.has_flag("seam-outage") {
+            self.resilience.seam_only = true;
+        }
+        if let Some(s) = args.get("recovery") {
+            self.resilience.recovery = RecoveryPolicy::parse(s)?;
+        } else if args.has_flag("recovery") {
+            return Err(
+                "--recovery requires a policy: --recovery drop|reoffload[:<max_retries>]".into(),
+            );
+        }
+        if let Some(p) = args.get("fault-trace") {
+            self.resilience.fault_trace = Some(FaultTrace::from_file(p)?);
+            self.resilience.fault_trace_path = Some(p.to_string());
+        } else if args.has_flag("fault-trace") {
+            return Err("--fault-trace requires a path: --fault-trace <file>".into());
+        }
+        if let Some(x) = args.get_parsed::<f64>("link-timeout")? {
+            self.resilience.link_timeout_s = x;
+        }
+        if let Some(x) = args.get_parsed::<f64>("recovery-deadline")? {
+            self.resilience.deadline_s = x;
+        }
         Ok(())
     }
 
@@ -790,6 +966,29 @@ impl SimConfig {
                 "\nTask kind                              {} (round deadline {} s)",
                 kind.label(),
                 self.llm.round_deadline_s
+            );
+        }
+        // printed only when some fault knob is non-default, so default
+        // runs keep the classic table byte-for-byte
+        let r = &self.resilience;
+        if r.sat_faults_active() || r.link_faults_active() || !r.recovery.is_drop() {
+            use std::fmt::Write as _;
+            let _ = write!(
+                t,
+                "\nFault injection                        sat p={}/{} link p={}/{}{}",
+                r.p_fail,
+                r.p_recover,
+                r.link_p_fail,
+                r.link_p_recover,
+                if r.seam_only { " (seam only)" } else { "" }
+            );
+            if let Some(path) = &r.fault_trace_path {
+                let _ = write!(t, ", trace {path}");
+            }
+            let _ = write!(
+                t,
+                "\nRecovery policy                        {}",
+                r.recovery.label()
             );
         }
         if self.obs.enabled() {
@@ -1217,6 +1416,101 @@ capacity_mflops = 6000.0
         let mut bad = SimConfig::default();
         bad.llm.small_model_factor = 1.5;
         assert!(bad.validate().is_err());
+    }
+
+    #[test]
+    fn resilience_knobs_parse_and_default_off() {
+        let c = SimConfig::default();
+        assert!(!c.resilience.sat_faults_active());
+        assert!(!c.resilience.link_faults_active());
+        assert!(c.resilience.recovery.is_drop());
+        assert!(!c.table().contains("Fault injection"));
+        assert!(!c.table().contains("Recovery policy"));
+
+        // TOML [resilience] block
+        let t = SimConfig::from_toml(
+            "[resilience]\np_fail = 0.05\nrecovery = \"reoffload:3\"\nlink_p_fail = 0.02\nseam_only = true\n",
+        )
+        .unwrap();
+        assert_eq!(t.resilience.p_fail, 0.05);
+        assert_eq!(t.resilience.link_p_fail, 0.02);
+        assert!(t.resilience.seam_only);
+        assert_eq!(
+            t.resilience.recovery,
+            RecoveryPolicy::Reoffload { max_retries: 3 }
+        );
+        assert!(t.validate().is_ok());
+        assert!(t.table().contains("Fault injection"));
+        assert!(t.table().contains("reoffload:3"));
+        assert!(SimConfig::from_toml("[resilience]\nrecovery = \"warp\"\n").is_err());
+
+        // CLI knobs
+        let args = crate::util::cli::Args::parse(
+            "x --p-fail 0.1 --p-recover 0.4 --link-p-fail 0.05 --seam-outage --recovery reoffload"
+                .split_whitespace()
+                .map(String::from),
+        );
+        let mut d = SimConfig::default();
+        d.apply_args(&args).unwrap();
+        assert_eq!(d.resilience.p_fail, 0.1);
+        assert_eq!(d.resilience.p_recover, 0.4);
+        assert_eq!(d.resilience.link_p_fail, 0.05);
+        assert!(d.resilience.seam_only);
+        assert_eq!(
+            d.resilience.recovery,
+            RecoveryPolicy::Reoffload {
+                max_retries: crate::resilience::DEFAULT_MAX_RETRIES
+            }
+        );
+        assert!(d.validate().is_ok());
+
+        // explicit drop keeps the default table byte-for-byte
+        let args = crate::util::cli::Args::parse(
+            "x --recovery drop".split_whitespace().map(String::from),
+        );
+        let mut d = SimConfig::default();
+        d.apply_args(&args).unwrap();
+        assert_eq!(d.table(), SimConfig::default().table());
+
+        // out-of-range probabilities are validation errors, not panics
+        for (k, v) in [
+            ("p_fail", 1.5),
+            ("p_fail", -0.1),
+            ("p_recover", f64::NAN),
+            ("link_p_fail", 2.0),
+            ("link_p_recover", -1.0),
+        ] {
+            let mut bad = SimConfig::default();
+            match k {
+                "p_fail" => bad.resilience.p_fail = v,
+                "p_recover" => bad.resilience.p_recover = v,
+                "link_p_fail" => bad.resilience.link_p_fail = v,
+                _ => bad.resilience.link_p_recover = v,
+            }
+            assert!(bad.validate().is_err(), "{k}={v} should fail validation");
+        }
+        let mut bad = SimConfig::default();
+        bad.resilience.link_timeout_s = 0.0;
+        assert!(bad.validate().is_err());
+        let mut bad = SimConfig::default();
+        bad.resilience.deadline_s = -1.0;
+        assert!(bad.validate().is_err());
+
+        // a trace referencing sats outside the topology is caught
+        let mut bad = SimConfig::default();
+        bad.n = 2; // 4 sats
+        bad.resilience.fault_trace =
+            Some(FaultTrace::parse_str("0 5 sat:9\n").unwrap());
+        assert!(bad.validate().is_err());
+
+        // missing trace file errors at the CLI boundary
+        let args = crate::util::cli::Args::parse(
+            "x --fault-trace /nonexistent/trace.txt"
+                .split_whitespace()
+                .map(String::from),
+        );
+        let mut d = SimConfig::default();
+        assert!(d.apply_args(&args).is_err());
     }
 
     #[test]

@@ -144,6 +144,7 @@ impl Coordinator {
                 kappa: self.kappa,
                 ga: &self.cfg.ga,
                 migration: None,
+                outages: None,
             };
             self.scheme.decide(&ctx)
         };

@@ -16,6 +16,9 @@
 //!   (`--decision-cache`) on vs off per periodic `T_d`: completion/p95
 //!   deltas plus hit rate and decides/s; exported as
 //!   `BENCH_decidecache.json`.
+//! * [`resilience_sweep`] — completion rate & p95 delay vs satellite
+//!   fault rate, recovery off (`drop`) vs on (`reoffload:2`) per scheme;
+//!   exported as `BENCH_resilience.json`.
 //!
 //! Every function returns structured rows and can render the paper-style
 //! table; the benches in `rust/benches/` wrap these with timing.
@@ -24,8 +27,9 @@ pub mod plot;
 
 use crate::config::{EngineKind, LlmConfig, ScenarioKind, SimConfig};
 use crate::dnn::DnnModel;
-use crate::metrics::{LlmReport, Report};
+use crate::metrics::{LlmReport, Report, ResilienceReport};
 use crate::offload::SchemeKind;
+use crate::resilience::RecoveryPolicy;
 use crate::sim::{Simulation, SplitPolicy};
 use crate::state::DisseminationKind;
 use crate::tasks::TaskKind;
@@ -314,6 +318,29 @@ fn mean_reports(reports: Vec<Report>) -> Report {
         out.delay_p95_ms = sum_f(|r| r.delay_p95_ms);
         out.horizon_s = sum_f(|r| r.horizon_s);
         out.last_finish_s = sum_f(|r| r.last_finish_s);
+        // resilience block (recovery/reroute runs): field means when
+        // every repeat produced one — a mixed set keeps the first
+        // repeat's (fault-free repeats never have it)
+        if reports.iter().all(|r| r.resilience.is_some()) {
+            let rs: Vec<&ResilienceReport> = reports
+                .iter()
+                .filter_map(|r| r.resilience.as_ref())
+                .collect();
+            let sum_ru = |f: fn(&ResilienceReport) -> u64| -> u64 {
+                (rs.iter().map(|x| f(x) as f64).sum::<f64>() / n).round() as u64
+            };
+            let sum_rf = |f: fn(&ResilienceReport) -> f64| -> f64 {
+                rs.iter().map(|x| f(x)).sum::<f64>() / n
+            };
+            out.resilience = Some(ResilienceReport {
+                recovered_tasks: sum_ru(|x| x.recovered_tasks),
+                retries: sum_ru(|x| x.retries),
+                reroutes: sum_ru(|x| x.reroutes),
+                give_ups: sum_ru(|x| x.give_ups),
+                rework_mflops: sum_rf(|x| x.rework_mflops),
+                mean_time_to_recover_ms: sum_rf(|x| x.mean_time_to_recover_ms),
+            });
+        }
         // round-level block (autoregressive runs): field means when every
         // repeat produced one — a mixed set keeps the first repeat's
         // (one-shot repeats never have it, so `None` stays `None`)
@@ -1162,6 +1189,211 @@ pub fn llm_json(
     ])
 }
 
+/// One cell of the resilience sweep: a (fault rate, recovery on/off,
+/// scheme) cell.
+#[derive(Clone, Debug)]
+pub struct ResilienceRow {
+    /// Per-tick satellite failure probability this cell ran under.
+    pub p_fail: f64,
+    /// Whether `--recovery reoffload:2` was on for this cell (off =
+    /// the legacy `drop` policy).
+    pub recovery: bool,
+    pub scheme: SchemeKind,
+    pub report: Report,
+}
+
+/// The λ the resilience sweep runs at by default: loaded enough that a
+/// lost chain actually costs completions, light enough that recovery
+/// still finds spare capacity to land retries on.
+pub const RESILIENCE_LAMBDA: f64 = 40.0;
+
+/// Fault-rate grid for `experiment resilience`; `quick` trims it to two
+/// points for the CI smoke run.
+pub fn resilience_rates(quick: bool) -> Vec<f64> {
+    if quick {
+        vec![0.02, 0.08]
+    } else {
+        vec![0.0, 0.02, 0.05, 0.08, 0.12]
+    }
+}
+
+/// Sweep completion rate & tail delay vs satellite fault rate, recovery
+/// off (`drop`, the paper's behaviour) vs on (`reoffload:2`) per scheme,
+/// on the engine selected by `opts.engine` (the CLI defaults this to the
+/// event engine, whose mid-chain faults make recovery bite), averaged
+/// over `opts.repeats` seeds. The recovery probability is pinned at 0.5
+/// so the fault rate is the only moving axis.
+pub fn resilience_sweep(
+    model: DnnModel,
+    lambda: f64,
+    rates: &[f64],
+    opts: &SweepOpts,
+) -> Vec<ResilienceRow> {
+    let cells: Vec<(f64, bool, SchemeKind)> = rates
+        .iter()
+        .flat_map(|&p| {
+            [false, true].into_iter().flat_map(move |rec| {
+                SchemeKind::all().into_iter().map(move |s| (p, rec, s))
+            })
+        })
+        .collect();
+    let reports = repeat_mean_cells(
+        opts,
+        cells.clone(),
+        |(p, rec, scheme)| {
+            format!(
+                "p_fail={p} recovery={} scheme={}",
+                if *rec { "reoffload" } else { "drop" },
+                scheme.name()
+            )
+        },
+        |&(p, rec, scheme), seed| {
+            let mut cfg = base_cfg(model, opts);
+            cfg.seed = seed;
+            cfg.lambda = lambda;
+            cfg.resilience.p_fail = p;
+            cfg.resilience.p_recover = 0.5;
+            if rec {
+                cfg.resilience.recovery = RecoveryPolicy::Reoffload { max_retries: 2 };
+            }
+            crate::engine::run(&cfg, scheme)
+        },
+    );
+    cells
+        .into_iter()
+        .zip(reports)
+        .map(|((p_fail, recovery, scheme), report)| ResilienceRow {
+            p_fail,
+            recovery,
+            scheme,
+            report,
+        })
+        .collect()
+}
+
+/// Render the resilience sweep as two panels (completion rate and p95
+/// delay; fault rate × policy rows, scheme columns).
+pub fn render_resilience(title: &str, rows: &[ResilienceRow]) -> String {
+    let mut rates: Vec<f64> = Vec::new();
+    for r in rows {
+        if !rates.iter().any(|&p| p == r.p_fail) {
+            rates.push(r.p_fail);
+        }
+    }
+    let schemes = SchemeKind::all();
+    let mut out = format!("== {title} ==\n");
+    for (panel, metric) in [
+        ("(a) task completion rate", 0usize),
+        ("(b) p95 total delay [ms]", 1),
+    ] {
+        out.push_str(&format!("-- {panel} --\n{:>22}", "p_fail / recovery"));
+        for s in schemes {
+            out.push_str(&format!("{:>14}", s.name()));
+        }
+        out.push('\n');
+        for &p in &rates {
+            for rec in [false, true] {
+                let label =
+                    format!("{p} / {}", if rec { "reoffload" } else { "drop" });
+                out.push_str(&format!("{label:>22}"));
+                for s in schemes {
+                    let row = rows
+                        .iter()
+                        .find(|r| {
+                            r.p_fail == p && r.recovery == rec && r.scheme == s
+                        })
+                        .expect("missing resilience row");
+                    let v = match metric {
+                        0 => row.report.completion_rate(),
+                        _ => row.report.delay_p95_ms,
+                    };
+                    match metric {
+                        0 => out.push_str(&format!("{v:>14.4}")),
+                        _ => out.push_str(&format!("{v:>14.1}")),
+                    }
+                }
+                out.push('\n');
+            }
+        }
+    }
+    out
+}
+
+/// The machine-readable `BENCH_resilience.json` payload: per-cell fault
+/// rate, policy, scheme, headline completion/delay numbers, and the
+/// flattened recovery block when the cell produced one (see the README's
+/// "Experiment cookbook" for the schema). `engine` records which clock
+/// produced the rows.
+pub fn resilience_json(
+    model: DnnModel,
+    lambda: f64,
+    engine: EngineKind,
+    quick: bool,
+    rows: &[ResilienceRow],
+) -> Json {
+    Json::obj(vec![
+        ("bench", Json::Str("resilience".into())),
+        ("quick", Json::Bool(quick)),
+        ("model", Json::Str(model.name().into())),
+        ("engine", Json::Str(engine.name().into())),
+        ("lambda", Json::Num(lambda)),
+        (
+            "results",
+            Json::Arr(
+                rows.iter()
+                    .map(|r| {
+                        let mut fields = vec![
+                            ("p_fail", Json::Num(r.p_fail)),
+                            (
+                                "recovery",
+                                Json::Str(
+                                    if r.recovery { "reoffload" } else { "drop" }
+                                        .into(),
+                                ),
+                            ),
+                            ("scheme", Json::Str(r.scheme.name().into())),
+                            (
+                                "completion_rate",
+                                Json::Num(r.report.completion_rate()),
+                            ),
+                            ("avg_delay_ms", Json::Num(r.report.avg_delay_ms)),
+                            ("delay_p95_ms", Json::Num(r.report.delay_p95_ms)),
+                            (
+                                "total_tasks",
+                                Json::Num(r.report.total_tasks as f64),
+                            ),
+                            (
+                                "dropped_tasks",
+                                Json::Num(r.report.dropped_tasks as f64),
+                            ),
+                        ];
+                        if let Some(res) = &r.report.resilience {
+                            fields.push((
+                                "recovered_tasks",
+                                Json::Num(res.recovered_tasks as f64),
+                            ));
+                            fields.push(("retries", Json::Num(res.retries as f64)));
+                            fields
+                                .push(("reroutes", Json::Num(res.reroutes as f64)));
+                            fields
+                                .push(("give_ups", Json::Num(res.give_ups as f64)));
+                            fields.push((
+                                "rework_mflops",
+                                Json::Num(res.rework_mflops),
+                            ));
+                            fields.push((
+                                "mean_time_to_recover_ms",
+                                Json::Num(res.mean_time_to_recover_ms),
+                            ));
+                        }
+                        Json::obj(fields)
+                    })
+                    .collect(),
+            ),
+        ),
+    ])
+}
+
 /// λ-sweep over all four schemes (the engine behind Figs. 2 & 3), every
 /// (cell, repeat) fanned across cores with deterministic row order.
 pub fn lambda_sweep(model: DnnModel, lambdas: &[f64], opts: &SweepOpts) -> Vec<Row> {
@@ -1513,6 +1745,37 @@ mod tests {
         let results = parsed.get("results").unwrap().as_arr().unwrap();
         assert_eq!(results.len(), rows.len());
         assert!(results[0].get("rounds_completed").is_some());
+    }
+
+    #[test]
+    fn resilience_sweep_covers_all_cells_and_serializes() {
+        let mut opts = SweepOpts::quick();
+        opts.engine = EngineKind::Event;
+        let rows = resilience_sweep(DnnModel::Vgg19, 10.0, &[0.08], &opts);
+        // one rate × {drop, reoffload} × 4 schemes
+        assert_eq!(rows.len(), 2 * 4);
+        for r in &rows {
+            assert!(
+                r.report.total_tasks > 0,
+                "p={} rec={}",
+                r.p_fail,
+                r.recovery
+            );
+        }
+        let s = render_resilience("resilience", &rows);
+        assert!(s.contains("(a) task completion rate"));
+        assert!(s.contains("p95 total delay"));
+        assert!(s.contains("reoffload"));
+        assert!(s.contains("drop"));
+        let j = resilience_json(DnnModel::Vgg19, 10.0, EngineKind::Event, true, &rows)
+            .to_string();
+        let parsed = crate::util::json::Json::parse(&j).unwrap();
+        assert_eq!(parsed.get("bench").unwrap().as_str(), Some("resilience"));
+        assert_eq!(parsed.get("engine").unwrap().as_str(), Some("event"));
+        let results = parsed.get("results").unwrap().as_arr().unwrap();
+        assert_eq!(results.len(), rows.len());
+        assert!(results[0].get("p_fail").is_some());
+        assert!(results[0].get("recovery").is_some());
     }
 
     #[test]

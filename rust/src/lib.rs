@@ -82,6 +82,23 @@
 //! sweep measures how completion rate and tail delay degrade with `T_d` —
 //! the §V-B stale-state herding effect.
 //!
+//! ## Resilience
+//!
+//! Faults no longer have to be fatal: the [`resilience`] layer adds a
+//! [`resilience::RecoveryPolicy`] (`--recovery drop|reoffload[:n]`) that
+//! re-runs the offloading decision for a faulted task's *remaining*
+//! segment chain (charging re-uplink of intermediate activations over
+//! ISL hops, bounded retries, deadline-aware give-up), a
+//! [`resilience::LinkFaultInjector`] for Bernoulli / Walker-star
+//! seam-only ISL outages whose dead links stall and reroute in-flight
+//! transfers through an outage-masked [`resilience::OutageMap`], and
+//! scripted [`resilience::FaultTrace`] windows (`--fault-trace`) for
+//! reproducible chaos runs. `--recovery drop` (the default) stays
+//! whole-run byte-identical with the legacy engines
+//! (`tests/prop_resilience.rs`), and the `experiment resilience` sweep
+//! tracks completion and tail delay vs fault rate with recovery on/off
+//! (`BENCH_resilience.json`).
+//!
 //! ## Observability
 //!
 //! Both engines thread an [`obs::Obs`] telemetry instance through their
@@ -138,6 +155,7 @@ pub mod metrics;
 pub mod nn;
 pub mod obs;
 pub mod offload;
+pub mod resilience;
 pub mod runtime;
 pub mod satellite;
 pub mod sim;

@@ -5,12 +5,12 @@
 //!                       (--engine slotted|event, --scenario for traffic)
 //!   sweep               λ-sweep all four schemes for one model
 //!   experiment <id>     regenerate a paper figure (fig2|fig3|eventsim|
-//!                       staleness|topology|decidecache|scale|
+//!                       staleness|topology|decidecache|resilience|scale|
 //!                       ablation-split|ablation-ga|all); writes
 //!                       results/<id>.json next to the printed table
-//!                       (staleness/topology/decidecache also emit
-//!                       BENCH_staleness.json / BENCH_topology.json /
-//!                       BENCH_decidecache.json)
+//!                       (staleness/topology/decidecache/resilience also
+//!                       emit BENCH_staleness.json / BENCH_topology.json /
+//!                       BENCH_decidecache.json / BENCH_resilience.json)
 //!   serve               run the coordinator on real PJRT slice inference
 //!   validate-artifacts  load + execute every artifact once
 //!   print-config        show the effective Table-I configuration
@@ -67,8 +67,8 @@ SUBCOMMANDS
   simulate            one simulation run (--scheme scc|random|rrp|dqn)
   sweep               lambda sweep, all schemes (--model vgg19|resnet101)
   experiment <id>     fig2 | fig3 | eventsim | staleness | topology |
-                      decidecache | llm | scale | ablation-split |
-                      ablation-ga | all
+                      decidecache | llm | resilience | scale |
+                      ablation-split | ablation-ga | all
   serve               coordinator with real PJRT slice inference
   validate-artifacts  compile + execute each artifacts/*.hlo.txt
   print-config        effective Table-I parameters
@@ -92,6 +92,22 @@ OPTIONS
                   oneshot; autoregressive runs LLM-style decode rounds
                   after the split chain; unstated fields fall back to
                   the [llm] TOML block)
+  --p-fail P      per-tick satellite outage probability (default 0);
+                  --p-recover sets the per-tick recovery probability
+  --link-p-fail P per-tick ISL link outage probability (default 0);
+                  --link-p-recover sets the link recovery probability;
+                  --seam-outage restricts link faults to the polar-seam
+                  planes of a walker-star
+  --recovery R    drop | reoffload[:<max_retries>] — what happens to a
+                  task whose chain is hit by a fault (default drop, the
+                  paper's behaviour; reoffload re-decides the surviving
+                  tail over healthy satellites, retry budget default 2)
+  --fault-trace F scripted outage windows, one \"<t0> <t1> sat:<i>\" or
+                  \"<t0> <t1> link:<a>-<b>\" per line (forced on top of
+                  the Bernoulli fault processes)
+  --link-timeout S    stall before a severed in-flight ISL transfer
+                  retries (default 1); --recovery-deadline caps how late
+                  after arrival a task may still re-offload (default 10)
   --seed X        RNG seed      --repeats R    seeds averaged per point
   --threads T     sweep cells fanned over T workers (0 = all cores, the
                   default; 1 = sequential — rows are byte-identical;
@@ -393,6 +409,44 @@ fn experiment(args: &Args) -> Result<(), String> {
             satkit::bench::write_json("results/llm.json", &json)
                 .map_err(|e| e.to_string())?;
             println!("wrote results/llm.json\n");
+        }
+        "resilience" => {
+            // completion rate & p95 delay vs satellite fault rate,
+            // recovery off (drop) vs on (reoffload:2) per scheme — the
+            // failure-recovery study. Runs on the event engine (whose
+            // mid-chain faults make recovery bite) unless --engine
+            // explicitly says otherwise; --lambda overrides the
+            // operating point; --quick trims the rate grid and horizon.
+            let quick = args.has_flag("quick");
+            let lambda = args
+                .get_parsed::<f64>("lambda")?
+                .unwrap_or(exp::RESILIENCE_LAMBDA);
+            let mut opts = opts;
+            if args.get("engine").is_none() {
+                opts.engine = satkit::config::EngineKind::Event;
+            }
+            guard("results/resilience.json")?;
+            let rates = exp::resilience_rates(quick);
+            let rows = exp::resilience_sweep(cfg.model, lambda, &rates, &opts);
+            println!(
+                "{}",
+                exp::render_resilience(
+                    &format!(
+                        "resilience sweep ({}, {} engine, lambda={lambda})",
+                        cfg.model.name(),
+                        opts.engine.name()
+                    ),
+                    &rows
+                )
+            );
+            let json = exp::resilience_json(cfg.model, lambda, opts.engine, quick, &rows);
+            let bench_path =
+                satkit::bench::out_path("SATKIT_RESILIENCE_JSON", "BENCH_resilience.json");
+            satkit::bench::write_json(&bench_path, &json).map_err(|e| e.to_string())?;
+            println!("wrote {bench_path}");
+            satkit::bench::write_json("results/resilience.json", &json)
+                .map_err(|e| e.to_string())?;
+            println!("wrote results/resilience.json\n");
         }
         "scale" => run_fig("scale", &|| exp::scale(&exp::default_ns(), &opts), "N")?,
         "ablation-split" => {

@@ -157,6 +157,27 @@ struct LlmStats {
     ttlr_ms: Welford,
 }
 
+/// Streaming accumulators for the resilience layer: recovery retries,
+/// reroutes, rework, and time-to-recover — lazily created the first time
+/// a recovery hook fires, so fault-free (and recovery-off) runs never
+/// allocate it and their JSON bytes are untouched.
+#[derive(Clone, Debug, Default)]
+struct ResilienceStats {
+    /// Tasks that survived at least one fault and went on to complete.
+    recovered_tasks: u64,
+    /// Re-offload attempts (each fault-triggered re-decide).
+    retries: u64,
+    /// In-flight ISL transfers re-routed around a dead link.
+    reroutes: u64,
+    /// Faulted tasks abandoned after exhausting retries / deadline /
+    /// link stalls.
+    give_ups: u64,
+    /// Segment work re-executed due to recovery [MFLOP].
+    rework_mflops: f64,
+    /// Welford over fault→resume latencies [ms].
+    ttr_ms: Welford,
+}
+
 /// Collects everything a simulation run produces, streaming each outcome
 /// into constant-size accumulators at record time.
 #[derive(Clone, Debug)]
@@ -177,6 +198,9 @@ pub struct MetricsCollector {
     /// Autoregressive-round accumulators — `Some` only once a decode hook
     /// has fired, so one-shot runs stay byte-identical.
     llm: Option<Box<LlmStats>>,
+    /// Recovery accumulators — `Some` only once a recovery hook has
+    /// fired, so drop-policy runs stay byte-identical.
+    resilience: Option<Box<ResilienceStats>>,
     pub per_sat: Vec<SatelliteTotals>,
     pub slots_run: usize,
 }
@@ -194,6 +218,7 @@ impl MetricsCollector {
             last_finish_s: 0.0,
             retained: None,
             llm: None,
+            resilience: None,
             per_sat: vec![SatelliteTotals::default(); n_sats],
             slots_run: 0,
         }
@@ -228,6 +253,35 @@ impl MetricsCollector {
         let s = self.llm_mut();
         s.ttfr_ms.push(ttfr_s * 1e3);
         s.ttlr_ms.push(ttlr_s * 1e3);
+    }
+
+    fn resilience_mut(&mut self) -> &mut ResilienceStats {
+        self.resilience.get_or_insert_with(Default::default)
+    }
+
+    /// A faulted task was re-offloaded: `rework_mflops` of segment work
+    /// re-executes and the task resumes `ttr_s` seconds after the fault.
+    pub fn recovery_retry(&mut self, rework_mflops: f64, ttr_s: f64) {
+        let s = self.resilience_mut();
+        s.retries += 1;
+        s.rework_mflops += rework_mflops;
+        s.ttr_ms.push(ttr_s * 1e3);
+    }
+
+    /// An in-flight ISL transfer was re-routed around a dead link.
+    pub fn reroute(&mut self) {
+        self.resilience_mut().reroutes += 1;
+    }
+
+    /// A task that survived at least one fault completed.
+    pub fn task_recovered(&mut self) {
+        self.resilience_mut().recovered_tasks += 1;
+    }
+
+    /// A faulted/stalled task was abandoned (retry budget, deadline, or
+    /// link stall limit exhausted).
+    pub fn recovery_giveup(&mut self) {
+        self.resilience_mut().give_ups += 1;
     }
 
     /// Builder: keep the full `TaskOutcome` buffer (memory grows with task
@@ -327,6 +381,41 @@ impl LlmReport {
     }
 }
 
+/// Recovery block of the report for fault-injected runs with the
+/// resilience layer active — present only when a recovery/reroute hook
+/// fired, so drop-policy reports (and their JSON bytes) are unchanged.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ResilienceReport {
+    /// Tasks that survived at least one fault and completed.
+    pub recovered_tasks: u64,
+    /// Re-offload attempts across all faulted tasks.
+    pub retries: u64,
+    /// ISL transfers re-routed around dead links.
+    pub reroutes: u64,
+    /// Faulted tasks abandoned after exhausting the recovery budget.
+    pub give_ups: u64,
+    /// Segment work re-executed due to recovery [MFLOP].
+    pub rework_mflops: f64,
+    /// Mean fault→resume latency [ms].
+    pub mean_time_to_recover_ms: f64,
+}
+
+impl ResilienceReport {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("recovered_tasks", Json::Num(self.recovered_tasks as f64)),
+            ("retries", Json::Num(self.retries as f64)),
+            ("reroutes", Json::Num(self.reroutes as f64)),
+            ("give_ups", Json::Num(self.give_ups as f64)),
+            ("rework_mflops", Json::Num(self.rework_mflops)),
+            (
+                "mean_time_to_recover_ms",
+                Json::Num(self.mean_time_to_recover_ms),
+            ),
+        ])
+    }
+}
+
 /// Final experiment report — the quantities plotted in Figs. 2 & 3.
 #[derive(Clone, Debug)]
 pub struct Report {
@@ -367,6 +456,10 @@ pub struct Report {
     /// rounds (`task-kind=autoregressive`); `None` keeps one-shot JSON
     /// byte-identical to pre-LLM builds.
     pub llm: Option<LlmReport>,
+    /// Recovery stats — `Some` only when the resilience layer recovered,
+    /// rerouted, or gave up on at least one task; `None` keeps
+    /// drop-policy JSON byte-identical to pre-resilience builds.
+    pub resilience: Option<ResilienceReport>,
 }
 
 impl Report {
@@ -396,6 +489,14 @@ impl Report {
                 avg_round_delay_ms: s.round_delay_ms.mean(),
                 time_to_first_round_ms: s.ttfr_ms.mean(),
                 time_to_last_round_ms: s.ttlr_ms.mean(),
+            }),
+            resilience: c.resilience.map(|s| ResilienceReport {
+                recovered_tasks: s.recovered_tasks,
+                retries: s.retries,
+                reroutes: s.reroutes,
+                give_ups: s.give_ups,
+                rework_mflops: s.rework_mflops,
+                mean_time_to_recover_ms: s.ttr_ms.mean(),
             }),
         }
     }
@@ -462,6 +563,9 @@ impl Report {
         ];
         if let Some(l) = &self.llm {
             pairs.push(("llm", l.to_json()));
+        }
+        if let Some(r) = &self.resilience {
+            pairs.push(("resilience", r.to_json()));
         }
         if let Some(t) = &self.telemetry {
             pairs.push(("telemetry", t.clone()));
@@ -629,6 +733,37 @@ mod tests {
         assert!(r.llm.is_none());
         // JSON for a one-shot run must not mention the llm block at all
         assert!(!r.to_json().to_string().contains("\"llm\""));
+    }
+
+    #[test]
+    fn resilience_block_absent_unless_recovery_ran() {
+        let mut c = MetricsCollector::new(1);
+        c.record(outcome(0, 3, 2, 1.0, 0.2));
+        let r = c.finish(1);
+        assert!(r.resilience.is_none());
+        // JSON for a drop-policy run must not mention the block at all
+        assert!(!r.to_json().to_string().contains("\"resilience\""));
+    }
+
+    #[test]
+    fn resilience_accumulators_roll_up() {
+        let mut c = MetricsCollector::new(1);
+        c.recovery_retry(120.0, 0.5);
+        c.recovery_retry(80.0, 1.5);
+        c.reroute();
+        c.task_recovered();
+        c.recovery_giveup();
+        let r = c.finish(1);
+        let s = r.resilience.as_ref().unwrap();
+        assert_eq!(s.retries, 2);
+        assert_eq!(s.reroutes, 1);
+        assert_eq!(s.recovered_tasks, 1);
+        assert_eq!(s.give_ups, 1);
+        assert!((s.rework_mflops - 200.0).abs() < 1e-9);
+        assert!((s.mean_time_to_recover_ms - 1000.0).abs() < 1e-9);
+        let js = r.to_json().to_string();
+        assert!(js.contains("\"resilience\""));
+        assert!(js.contains("\"rework_mflops\""));
     }
 
     #[test]

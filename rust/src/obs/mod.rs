@@ -160,6 +160,12 @@ pub enum InstantKind {
     /// A `StateBroadcast` / gossip tick refreshed disseminated views
     /// (arg = broadcast ordinal).
     Broadcast,
+    /// A faulted task was re-offloaded onto surviving satellites
+    /// (arg = task id).
+    Recover,
+    /// An in-flight ISL transfer was re-routed around a dead link
+    /// (arg = task id).
+    Reroute,
 }
 
 impl InstantKind {
@@ -170,6 +176,8 @@ impl InstantKind {
             InstantKind::Fault => "fault",
             InstantKind::Handover => "handover",
             InstantKind::Broadcast => "broadcast",
+            InstantKind::Recover => "recover",
+            InstantKind::Reroute => "reroute",
         }
     }
 }
@@ -344,6 +352,10 @@ pub struct Counters {
     pub instants_handover: u64,
     /// State-broadcast / gossip-tick instants.
     pub instants_broadcast: u64,
+    /// Task-recovery (re-offload) instants.
+    pub instants_recover: u64,
+    /// ISL-transfer reroute instants.
+    pub instants_reroute: u64,
     /// Per-satellite counter sampling rounds taken.
     pub samples: u64,
     /// Highest sampled per-satellite queue depth [MFLOP].
@@ -469,6 +481,8 @@ impl Obs {
             InstantKind::Fault => self.counters.instants_fault += 1,
             InstantKind::Handover => self.counters.instants_handover += 1,
             InstantKind::Broadcast => self.counters.instants_broadcast += 1,
+            InstantKind::Recover => self.counters.instants_recover += 1,
+            InstantKind::Reroute => self.counters.instants_reroute += 1,
         }
         if let Some(tr) = &mut self.trace {
             tr.push(Rec::Instant {
@@ -594,6 +608,8 @@ impl Obs {
                     ("fault", num(c.instants_fault)),
                     ("handover", num(c.instants_handover)),
                     ("broadcast", num(c.instants_broadcast)),
+                    ("recover", num(c.instants_recover)),
+                    ("reroute", num(c.instants_reroute)),
                 ]),
             ),
             ("samples", num(c.samples)),
@@ -744,19 +760,21 @@ mod tests {
         o.instant(InstantKind::Fault, 0.5, 1);
         o.instant(InstantKind::Handover, 0.75, 2);
         o.instant(InstantKind::Broadcast, 1.0, 1);
+        o.instant(InstantKind::Recover, 1.1, 7);
+        o.instant(InstantKind::Reroute, 1.2, 7);
         let sats = vec![Satellite::new(0, 3000.0, 15_000.0)];
         assert!(o.maybe_sample(1.0, &sats));
         o.sample_engine(1.0, 9, 4, 12);
         let doc = Json::parse(&o.to_chrome_json()).unwrap();
         let events = doc.get("traceEvents").unwrap().as_arr().unwrap();
-        assert_eq!(events.len(), 10);
+        assert_eq!(events.len(), 12);
         let names: Vec<&str> = events
             .iter()
             .map(|e| e.get("name").unwrap().as_str().unwrap())
             .collect();
         for want in [
             "task", "uplink", "exec", "isl", "decide", "fault", "handover", "broadcast",
-            "sat0", "engine",
+            "recover", "reroute", "sat0", "engine",
         ] {
             assert!(names.contains(&want), "missing {want} in {names:?}");
         }

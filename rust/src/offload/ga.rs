@@ -653,6 +653,7 @@ mod tests {
             kappa: 1e-4,
             ga,
             migration: None,
+            outages: None,
         }
     }
 

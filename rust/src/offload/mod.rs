@@ -15,6 +15,7 @@ pub mod rrp;
 mod simd;
 
 use crate::config::GaConfig;
+use crate::resilience::OutageMap;
 use crate::state::StateView;
 use crate::topology::{Constellation, SatId};
 use crate::util::json::Json;
@@ -100,9 +101,31 @@ pub struct OffloadContext<'a> {
     /// Sticky-state migration surcharge (autoregressive tasks only);
     /// `None` leaves every deficit bit-for-bit unchanged.
     pub migration: Option<MigrationCost>,
+    /// Outage-masked ISL distances ([`crate::resilience::OutageMap`]):
+    /// when link faults are active the θ2 tran term prices hops over the
+    /// *alive* topology — a chromosome routed across a dead link pays the
+    /// detour (or [`crate::resilience::UNREACHABLE_HOPS`] when the pair is
+    /// partitioned), steering schemes away from severed regions. `None`
+    /// (the default, and every run without link faults) leaves each
+    /// deficit bit-for-bit the legacy expression on `topo.hops`.
+    pub outages: Option<&'a OutageMap>,
 }
 
 impl<'a> OffloadContext<'a> {
+    /// ISL hop distance the θ2 tran term prices: the outage-masked
+    /// distance when an [`OutageMap`] is attached (detours around dead
+    /// links; `UNREACHABLE_HOPS` across a partition), the plain
+    /// [`Constellation::hops`] otherwise. The sticky-state migration term
+    /// intentionally stays on `topo.hops`: the KV-cache ship happens
+    /// after recovery settles, so it is priced on the nominal topology.
+    #[inline]
+    fn hop_count(&self, a: SatId, b: SatId) -> usize {
+        match self.outages {
+            Some(o) => o.hops_or_penalty(a, b),
+            None => self.topo.hops(a, b),
+        }
+    }
+
     /// Eq. 12 deficit of a chromosome `(d_1..d_L)`:
     /// `θ1·Σ q_k/C_{d_k} + θ2·Σ q_k·MH(d_k, d_{k+1}) + θ3·D_{i,j}`,
     /// where `D_{i,j}` counts segments that would be rejected by Eq. 4
@@ -139,7 +162,7 @@ impl<'a> OffloadContext<'a> {
                 // (θ3·drop ≫ θ2·tran ≳ θ1·comp); with raw q·MH a single
                 // 4-hop ship would outweigh a dropped task and the GA
                 // would trade completions for hops.
-                tran += self.kappa * q * self.topo.hops(c, chrom[k + 1]) as f64;
+                tran += self.kappa * q * self.hop_count(c, chrom[k + 1]) as f64;
             }
             // Eq. 4 admission against loaded + planned-extra workload
             let planned: f64 = if short {
@@ -259,6 +282,14 @@ pub struct DecisionSpaceIndex {
     theta3: f64,
     /// Origin the current contents were built for (reuse-cache key).
     origin: SatId,
+    /// Whether the hop LUT was filled from an [`OutageMap`] (reuse-cache
+    /// key — an outage-masked LUT must never satisfy a nominal build, and
+    /// vice versa).
+    outaged: bool,
+    /// [`OutageMap::version`] the LUT was filled from (reuse-cache key —
+    /// any link failure or recovery bumps the version and forces a
+    /// rebuild). 0 when `outaged` is false.
+    outage_version: u64,
     /// True once `build` has populated the index (cache validity gate).
     built: bool,
     /// Reuse-cache counters ([`DecisionSpaceIndex::build_cached`]).
@@ -285,7 +316,12 @@ impl DecisionSpaceIndex {
         );
         self.sat_ids.clear();
         self.sat_ids.extend_from_slice(ctx.candidates);
-        ctx.topo.hops_lut(ctx.candidates, &mut self.hops);
+        match ctx.outages {
+            Some(o) => o.hops_lut(ctx.candidates, &mut self.hops),
+            None => ctx.topo.hops_lut(ctx.candidates, &mut self.hops),
+        }
+        self.outaged = ctx.outages.is_some();
+        self.outage_version = ctx.outages.map(|o| o.version()).unwrap_or(0);
         self.loaded.clear();
         self.capacity.clear();
         self.max_workload.clear();
@@ -336,7 +372,9 @@ impl DecisionSpaceIndex {
     /// identical (enforced by
     /// `tests/prop_invariants.rs::prop_index_cache_preserves_decisions`).
     /// Callers keep one index per scheme instance over a single topology,
-    /// so candidate-set equality implies hop-LUT equality.
+    /// so candidate-set equality implies hop-LUT equality — with link
+    /// faults active the LUT additionally keys on the [`OutageMap`]
+    /// version, so any outage change forces a rebuild.
     pub fn build_cached(&mut self, ctx: &OffloadContext) -> bool {
         if self.built && self.matches(ctx) {
             self.hits += 1;
@@ -357,6 +395,8 @@ impl DecisionSpaceIndex {
             _ => false,
         };
         let same_static = same_migration
+            && self.outaged == ctx.outages.is_some()
+            && self.outage_version == ctx.outages.map(|o| o.version()).unwrap_or(0)
             && self.origin == ctx.origin
             && self.sat_ids.as_slice() == ctx.candidates
             && self.kappa.to_bits() == ctx.kappa.to_bits()
@@ -822,6 +862,7 @@ mod tests {
             kappa: 1e-4,
             ga,
             migration: None,
+            outages: None,
         }
     }
 
@@ -1062,6 +1103,45 @@ mod tests {
             cached.deficit(&[0, 0, 0]).to_bits(),
             ctx.deficit(&[cands[0], cands[0], cands[0]]).to_bits()
         );
+    }
+
+    #[test]
+    fn outage_masked_hops_price_detours_and_key_the_cache() {
+        let (topo, sats, mut ga) = setup(4);
+        ga.theta1 = 0.0;
+        ga.theta3 = 0.0;
+        ga.theta2 = 1.0;
+        let cands = topo.decision_space(0, 2);
+        let segs = [100.0, 50.0];
+        let nb = topo.neighbors(0)[0];
+        let mut ctx = test_ctx(&topo, &sats, &cands, &segs, &ga);
+        let base = ctx.deficit(&[0, nb]);
+
+        // sever the direct 0<->nb link: the tran term must price the detour
+        let mut outages = OutageMap::new();
+        let (lo, hi) = (0.min(nb), 0.max(nb));
+        outages.rebuild_with(&topo, |a, b| (a.min(b), a.max(b)) == (lo, hi));
+        ctx.outages = Some(&outages);
+        let masked = ctx.deficit(&[0, nb]);
+        let detour = outages.hops_or_penalty(0, nb);
+        assert!(detour > 1, "severing the direct link must lengthen the path");
+        assert!(masked > base, "masked={masked} base={base}");
+
+        // indexed kernel agrees bit-for-bit with the masked reference
+        let index = DecisionSpaceIndex::from_ctx(&ctx);
+        let g_nb = cands.iter().position(|&c| c == nb).unwrap() as Gene;
+        assert_eq!(index.deficit(&[0, g_nb]).to_bits(), masked.to_bits());
+
+        // the reuse cache keys on presence and version of the outage map
+        let mut cached = DecisionSpaceIndex::new();
+        assert!(!cached.build_cached(&ctx));
+        assert!(cached.build_cached(&ctx));
+        outages.rebuild_with(&topo, |_, _| false); // version bump
+        ctx.outages = Some(&outages);
+        assert!(!cached.build_cached(&ctx));
+        ctx.outages = None;
+        assert!(!cached.build_cached(&ctx));
+        assert_eq!(cached.deficit(&[0, g_nb]).to_bits(), base.to_bits());
     }
 
     #[test]

@@ -57,6 +57,7 @@ mod tests {
             kappa: 1e-4,
             ga: &ga,
             migration: None,
+            outages: None,
         };
         let mut s = RandomScheme::new(3);
         for _ in 0..50 {
@@ -82,6 +83,7 @@ mod tests {
             kappa: 1e-4,
             ga: &ga,
             migration: None,
+            outages: None,
         };
         let mut s = RandomScheme::new(4);
         let mut seen = std::collections::HashSet::new();

@@ -1,0 +1,719 @@
+//! Resilience layer: recovery policies, ISL link outages, and scripted
+//! fault traces (ISSUE 10).
+//!
+//! The paper's system model (Eq. 9) treats every satellite fault as fatal:
+//! the legacy `FaultInjector` drops every affected task outright. This
+//! module adds the machinery both engines need to *survive* faults instead:
+//!
+//! * [`RecoveryPolicy`] — the `--recovery drop|reoffload[:<max_retries>]`
+//!   knob. `Drop` is the default and keeps whole runs bit-for-bit
+//!   identical with legacy behaviour; `Reoffload` re-runs the offloading
+//!   decision for a task's *remaining* segment chain from the last
+//!   completed segment, charging re-uplink of intermediate activations
+//!   over ISL hops, bounded by a per-task retry budget and a
+//!   deadline-aware give-up.
+//! * [`LinkFaultInjector`] — Bernoulli per-ISL-link outages (plus a
+//!   Walker-star seam-outage mode), mirroring the per-satellite
+//!   `sim::dynamics::FaultInjector` but over the constellation edge set.
+//! * [`FaultTrace`] — scripted `(t_start, t_end, sat|link)` outage
+//!   windows (`--fault-trace <file>`) feeding the same injection points,
+//!   for reproducible chaos runs.
+//! * [`OutageMap`] — an outage-masked all-pairs hop table rebuilt by BFS
+//!   whenever the set of dead links changes; the deficit kernels' tran
+//!   term and the event engine's `IslTransfer` routing consume it so
+//!   decisions steer around dead links.
+//!
+//! Everything here is off-is-free: with all fault knobs at their
+//! defaults no injector is constructed, no `Report.resilience` block is
+//! allocated, and output stays byte-identical (`tests/prop_resilience.rs`).
+
+use crate::topology::{Constellation, SatId};
+use crate::util::rng::Pcg64;
+
+/// Default bounded retry budget for `--recovery reoffload`.
+pub const DEFAULT_MAX_RETRIES: u32 = 2;
+
+/// Hop count reported by [`OutageMap::hops_or_penalty`] for unreachable
+/// pairs — large enough that any deficit term containing it loses every
+/// GA comparison, small enough not to overflow `f64` arithmetic.
+pub const UNREACHABLE_HOPS: u16 = u16::MAX;
+
+/// What to do with the surviving segment chain when a satellite hosting
+/// it faults mid-task.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RecoveryPolicy {
+    /// Legacy behaviour: every task touching a failed satellite is
+    /// dropped. Whole-run bit-for-bit identical with the pre-resilience
+    /// engines.
+    Drop,
+    /// Re-run `decide_into` for the remaining segments from the last
+    /// completed one, up to `max_retries` times per task.
+    Reoffload { max_retries: u32 },
+}
+
+impl Default for RecoveryPolicy {
+    fn default() -> Self {
+        RecoveryPolicy::Drop
+    }
+}
+
+impl RecoveryPolicy {
+    /// Parse a `--recovery` selector: `drop` | `reoffload[:<max_retries>]`.
+    pub fn parse(s: &str) -> Result<Self, String> {
+        let low = s.trim().to_ascii_lowercase();
+        let (head, arg) = match low.split_once(':') {
+            Some((h, a)) => (h, Some(a)),
+            None => (low.as_str(), None),
+        };
+        match head {
+            "drop" => match arg {
+                None => Ok(RecoveryPolicy::Drop),
+                Some(a) => Err(format!(
+                    "recovery 'drop' takes no argument (got ':{a}')"
+                )),
+            },
+            "reoffload" | "retry" => {
+                let max_retries = match arg {
+                    None => DEFAULT_MAX_RETRIES,
+                    Some(a) => a.parse::<u32>().map_err(|_| {
+                        format!("recovery max_retries '{a}' is not an integer")
+                    })?,
+                };
+                if max_retries == 0 {
+                    return Err(
+                        "recovery 'reoffload' needs >= 1 retry (use 'drop' to disable)"
+                            .to_string(),
+                    );
+                }
+                Ok(RecoveryPolicy::Reoffload { max_retries })
+            }
+            other => Err(format!(
+                "unknown recovery policy '{other}' (drop|reoffload[:<max_retries>])"
+            )),
+        }
+    }
+
+    /// Stable selector label, the inverse of [`RecoveryPolicy::parse`].
+    pub fn label(&self) -> String {
+        match self {
+            RecoveryPolicy::Drop => "drop".to_string(),
+            RecoveryPolicy::Reoffload { max_retries } => {
+                format!("reoffload:{max_retries}")
+            }
+        }
+    }
+
+    /// True for the legacy drop-everything policy.
+    pub fn is_drop(&self) -> bool {
+        matches!(self, RecoveryPolicy::Drop)
+    }
+
+    /// Per-task retry budget (0 under `Drop`).
+    pub fn max_retries(&self) -> u32 {
+        match self {
+            RecoveryPolicy::Drop => 0,
+            RecoveryPolicy::Reoffload { max_retries } => *max_retries,
+        }
+    }
+}
+
+/// One scripted outage target: a whole satellite or a single ISL link.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultTarget {
+    Sat(SatId),
+    /// Normalized so that `.0 < .1`.
+    Link(SatId, SatId),
+}
+
+/// One scripted outage window: the target is down for `t` in
+/// `[t_start, t_end)`.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct FaultWindow {
+    pub t_start: f64,
+    pub t_end: f64,
+    pub target: FaultTarget,
+}
+
+/// A scripted fault trace (`--fault-trace <file>`): one window per line,
+/// `<t_start> <t_end> sat:<id>` or `<t_start> <t_end> link:<a>-<b>`.
+/// Blank lines and `#` comments are ignored; commas are accepted as
+/// field separators.
+#[derive(Clone, Debug, PartialEq, Default)]
+pub struct FaultTrace {
+    windows: Vec<FaultWindow>,
+}
+
+impl FaultTrace {
+    /// Parse the trace text format. Errors name the offending line.
+    pub fn parse_str(text: &str) -> Result<Self, String> {
+        let mut windows = Vec::new();
+        for (i, raw) in text.lines().enumerate() {
+            let line = match raw.split_once('#') {
+                Some((head, _)) => head,
+                None => raw,
+            };
+            let norm = line.replace(',', " ");
+            let fields: Vec<&str> = norm.split_whitespace().collect();
+            if fields.is_empty() {
+                continue;
+            }
+            let n = i + 1;
+            if fields.len() != 3 {
+                return Err(format!(
+                    "fault-trace line {n}: expected '<t_start> <t_end> sat:<id>|link:<a>-<b>', got {} fields",
+                    fields.len()
+                ));
+            }
+            let t_start: f64 = fields[0].parse().map_err(|_| {
+                format!("fault-trace line {n}: bad t_start '{}'", fields[0])
+            })?;
+            let t_end: f64 = fields[1].parse().map_err(|_| {
+                format!("fault-trace line {n}: bad t_end '{}'", fields[1])
+            })?;
+            if !t_start.is_finite() || !t_end.is_finite() || t_start < 0.0 {
+                return Err(format!(
+                    "fault-trace line {n}: window times must be finite and t_start >= 0"
+                ));
+            }
+            if t_end <= t_start {
+                return Err(format!(
+                    "fault-trace line {n}: t_end ({t_end}) must be > t_start ({t_start})"
+                ));
+            }
+            let spec = fields[2].to_ascii_lowercase();
+            let target = match spec.split_once(':') {
+                Some(("sat", id)) => {
+                    let id: SatId = id.parse().map_err(|_| {
+                        format!("fault-trace line {n}: bad sat id '{id}'")
+                    })?;
+                    FaultTarget::Sat(id)
+                }
+                Some(("link", pair)) => {
+                    let (a, b) = pair.split_once('-').ok_or_else(|| {
+                        format!(
+                            "fault-trace line {n}: link spec '{pair}' must be '<a>-<b>'"
+                        )
+                    })?;
+                    let a: SatId = a.parse().map_err(|_| {
+                        format!("fault-trace line {n}: bad link endpoint '{a}'")
+                    })?;
+                    let b: SatId = b.parse().map_err(|_| {
+                        format!("fault-trace line {n}: bad link endpoint '{b}'")
+                    })?;
+                    if a == b {
+                        return Err(format!(
+                            "fault-trace line {n}: link endpoints must differ (got {a}-{b})"
+                        ));
+                    }
+                    FaultTarget::Link(a.min(b), a.max(b))
+                }
+                _ => {
+                    return Err(format!(
+                        "fault-trace line {n}: target '{spec}' must be 'sat:<id>' or 'link:<a>-<b>'"
+                    ));
+                }
+            };
+            windows.push(FaultWindow { t_start, t_end, target });
+        }
+        Ok(FaultTrace { windows })
+    }
+
+    /// Load and parse a trace file; errors name the path.
+    pub fn from_file(path: &str) -> Result<Self, String> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| format!("fault-trace '{path}': {e}"))?;
+        Self::parse_str(&text)
+            .map_err(|e| format!("fault-trace '{path}': {e}"))
+    }
+
+    pub fn windows(&self) -> &[FaultWindow] {
+        &self.windows
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.windows.is_empty()
+    }
+
+    /// Any scripted per-satellite windows?
+    pub fn has_sat_windows(&self) -> bool {
+        self.windows
+            .iter()
+            .any(|w| matches!(w.target, FaultTarget::Sat(_)))
+    }
+
+    /// Any scripted per-link windows?
+    pub fn has_link_windows(&self) -> bool {
+        self.windows
+            .iter()
+            .any(|w| matches!(w.target, FaultTarget::Link(_, _)))
+    }
+
+    /// Largest satellite id referenced anywhere in the trace (for config
+    /// validation against the constellation size).
+    pub fn max_sat_id(&self) -> Option<SatId> {
+        self.windows
+            .iter()
+            .flat_map(|w| match w.target {
+                FaultTarget::Sat(s) => vec![s],
+                FaultTarget::Link(a, b) => vec![a, b],
+            })
+            .max()
+    }
+
+    /// Is satellite `s` scripted down at time `t`? Windows are
+    /// half-open: `t` in `[t_start, t_end)`.
+    pub fn sat_down_at(&self, s: SatId, t: f64) -> bool {
+        self.windows.iter().any(|w| {
+            matches!(w.target, FaultTarget::Sat(id) if id == s)
+                && t >= w.t_start
+                && t < w.t_end
+        })
+    }
+
+    /// Is link `(a, b)` scripted down at time `t`?
+    pub fn link_down_at(&self, a: SatId, b: SatId, t: f64) -> bool {
+        let (lo, hi) = (a.min(b), a.max(b));
+        self.windows.iter().any(|w| {
+            matches!(w.target, FaultTarget::Link(x, y) if x == lo && y == hi)
+                && t >= w.t_start
+                && t < w.t_end
+        })
+    }
+
+    /// End time of the last window (0 for an empty trace).
+    pub fn last_end(&self) -> f64 {
+        self.windows
+            .iter()
+            .map(|w| w.t_end)
+            .fold(0.0, f64::max)
+    }
+}
+
+/// Bernoulli per-ISL-link outage process over a constellation's edge
+/// set, with an optional Walker-star seam-only eligibility mode and a
+/// scripted-trace overlay. Mirrors `sim::dynamics::FaultInjector`'s
+/// draw discipline: links are visited in sorted `(min, max)` edge order
+/// every tick and the RNG stream is consumed uniformly regardless of
+/// eligibility, so the realized schedule depends only on the seed.
+#[derive(Clone, Debug)]
+pub struct LinkFaultInjector {
+    links: Vec<(SatId, SatId)>,
+    eligible: Vec<bool>,
+    down: Vec<bool>,
+    forced: Vec<bool>,
+    p_fail: f64,
+    p_recover: f64,
+    rng: Pcg64,
+    version: u64,
+    failures: u64,
+}
+
+impl LinkFaultInjector {
+    /// One injector tick per simulated second, matching the satellite
+    /// `FaultInjector`'s cadence.
+    pub const TICK_SECS: f64 = 1.0;
+
+    /// Build over `topo`'s edge set. With `seam_only`, Bernoulli draws
+    /// only take effect on links touching the first or last orbital
+    /// plane (the Walker-star seam region; on a torus this is the wrap
+    /// band) — scripted trace windows are unaffected by eligibility.
+    pub fn new(
+        topo: &Constellation,
+        p_fail: f64,
+        p_recover: f64,
+        seam_only: bool,
+        seed: u64,
+    ) -> Self {
+        assert!((0.0..=1.0).contains(&p_fail), "p_fail must be in [0,1]");
+        assert!(
+            (0.0..=1.0).contains(&p_recover),
+            "p_recover must be in [0,1]"
+        );
+        let links = topo.edges();
+        let planes = topo.planes().max(1);
+        let eligible: Vec<bool> = links
+            .iter()
+            .map(|&(a, b)| {
+                if !seam_only {
+                    return true;
+                }
+                let pa = topo.coords(a).0;
+                let pb = topo.coords(b).0;
+                pa == 0 || pa == planes - 1 || pb == 0 || pb == planes - 1
+            })
+            .collect();
+        let n = links.len();
+        LinkFaultInjector {
+            links,
+            eligible,
+            down: vec![false; n],
+            forced: vec![false; n],
+            p_fail,
+            p_recover,
+            rng: Pcg64::new(seed, 0x11FA),
+            version: 0,
+            failures: 0,
+        }
+    }
+
+    fn idx(&self, a: SatId, b: SatId) -> Option<usize> {
+        let key = (a.min(b), a.max(b));
+        self.links.binary_search(&key).ok()
+    }
+
+    /// Advance the Bernoulli process one tick. Returns true when the
+    /// *effective* (Bernoulli ∪ forced) outage set changed.
+    pub fn step(&mut self) -> bool {
+        let mut changed = false;
+        for i in 0..self.links.len() {
+            let was = self.down[i] || self.forced[i];
+            if self.down[i] {
+                if self.rng.bool(self.p_recover) {
+                    self.down[i] = false;
+                }
+            } else {
+                // Draw unconditionally so the stream is uniform across
+                // eligibility configurations.
+                let fail = self.rng.bool(self.p_fail);
+                if fail && self.eligible[i] {
+                    self.down[i] = true;
+                    self.failures += 1;
+                }
+            }
+            if (self.down[i] || self.forced[i]) != was {
+                changed = true;
+            }
+        }
+        if changed {
+            self.version += 1;
+        }
+        changed
+    }
+
+    /// Overlay scripted trace windows for time `t`. Returns true when
+    /// the effective outage set changed.
+    pub fn apply_trace(&mut self, trace: &FaultTrace, t: f64) -> bool {
+        let mut changed = false;
+        for i in 0..self.links.len() {
+            let (a, b) = self.links[i];
+            let was = self.down[i] || self.forced[i];
+            self.forced[i] = trace.link_down_at(a, b, t);
+            if (self.down[i] || self.forced[i]) != was {
+                changed = true;
+            }
+        }
+        if changed {
+            self.version += 1;
+        }
+        changed
+    }
+
+    /// One full injector tick at time `t`: Bernoulli step, then the
+    /// scripted overlay. Returns true when the effective set changed.
+    pub fn step_at(&mut self, t: f64, trace: Option<&FaultTrace>) -> bool {
+        let mut changed = self.step();
+        if let Some(tr) = trace {
+            changed |= self.apply_trace(tr, t);
+        }
+        changed
+    }
+
+    /// Is the `(a, b)` ISL currently out? Non-edges report false.
+    pub fn link_down(&self, a: SatId, b: SatId) -> bool {
+        match self.idx(a, b) {
+            Some(i) => self.down[i] || self.forced[i],
+            None => false,
+        }
+    }
+
+    /// Any link currently out?
+    pub fn any_down(&self) -> bool {
+        (0..self.links.len()).any(|i| self.down[i] || self.forced[i])
+    }
+
+    /// Number of links currently out.
+    pub fn down_count(&self) -> usize {
+        (0..self.links.len())
+            .filter(|&i| self.down[i] || self.forced[i])
+            .count()
+    }
+
+    /// Monotone counter bumped on every effective-set change — consumed
+    /// by [`OutageMap`] and the decision-index cache.
+    pub fn version(&self) -> u64 {
+        self.version
+    }
+
+    /// Total Bernoulli link failures injected so far.
+    pub fn failures(&self) -> u64 {
+        self.failures
+    }
+
+    /// The sorted edge set this injector tracks.
+    pub fn links(&self) -> &[(SatId, SatId)] {
+        &self.links
+    }
+}
+
+/// Outage-masked all-pairs hop table: BFS over the constellation with
+/// dead links removed, rebuilt whenever the outage set changes. Hop
+/// queries fall back to [`UNREACHABLE_HOPS`] for severed pairs so the
+/// deficit kernels steer the GA away from them.
+#[derive(Clone, Debug, Default)]
+pub struct OutageMap {
+    n: usize,
+    dist: Vec<u16>,
+    version: u64,
+}
+
+impl OutageMap {
+    pub fn new() -> Self {
+        OutageMap::default()
+    }
+
+    /// Rebuild the table for `topo` with every link where
+    /// `link_down(a, b)` holds removed. Bumps [`OutageMap::version`].
+    pub fn rebuild_with(
+        &mut self,
+        topo: &Constellation,
+        link_down: impl Fn(SatId, SatId) -> bool,
+    ) {
+        let n = topo.len();
+        self.n = n;
+        self.dist.resize(n * n, UNREACHABLE_HOPS);
+        self.dist.fill(UNREACHABLE_HOPS);
+        let mut queue = std::collections::VecDeque::new();
+        for src in 0..n {
+            let row = src * n;
+            self.dist[row + src] = 0;
+            queue.clear();
+            queue.push_back(src);
+            while let Some(u) = queue.pop_front() {
+                let du = self.dist[row + u];
+                for v in topo.neighbors(u) {
+                    if link_down(u, v) {
+                        continue;
+                    }
+                    if self.dist[row + v] == UNREACHABLE_HOPS {
+                        self.dist[row + v] = du + 1;
+                        queue.push_back(v);
+                    }
+                }
+            }
+        }
+        self.version += 1;
+    }
+
+    /// Has [`OutageMap::rebuild_with`] run at least once?
+    pub fn built(&self) -> bool {
+        self.n > 0
+    }
+
+    /// Outage-masked hop count, `None` when `b` is unreachable from `a`.
+    pub fn hops(&self, a: SatId, b: SatId) -> Option<usize> {
+        let d = self.dist[a * self.n + b];
+        if d == UNREACHABLE_HOPS {
+            None
+        } else {
+            Some(d as usize)
+        }
+    }
+
+    /// Outage-masked hop count with [`UNREACHABLE_HOPS`] standing in
+    /// for severed pairs — the form the deficit tran term consumes.
+    pub fn hops_or_penalty(&self, a: SatId, b: SatId) -> usize {
+        self.dist[a * self.n + b] as usize
+    }
+
+    /// Is `b` reachable from `a` over alive links?
+    pub fn reachable(&self, a: SatId, b: SatId) -> bool {
+        self.dist[a * self.n + b] != UNREACHABLE_HOPS
+    }
+
+    /// Fill `out` with the pairwise hop rows for `ids` (row-major,
+    /// `out[i * ids.len() + j] = hops(ids[i], ids[j])`, penalty for
+    /// severed pairs) — the shape `DecisionSpaceIndex` expects, matching
+    /// `Constellation::hops_lut`.
+    pub fn hops_lut(&self, ids: &[SatId], out: &mut Vec<u16>) {
+        out.clear();
+        out.reserve(ids.len() * ids.len());
+        for &a in ids {
+            let row = &self.dist[a * self.n..(a + 1) * self.n];
+            for &b in ids {
+                out.push(row[b]);
+            }
+        }
+    }
+
+    /// Monotone rebuild counter (for decision-index cache invalidation).
+    pub fn version(&self) -> u64 {
+        self.version
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topology::TopologyKind;
+
+    fn torus(n: usize) -> Constellation {
+        TopologyKind::Torus { n }.build()
+    }
+
+    #[test]
+    fn recovery_policy_parse_roundtrip() {
+        assert_eq!(RecoveryPolicy::parse("drop").unwrap(), RecoveryPolicy::Drop);
+        assert_eq!(
+            RecoveryPolicy::parse("reoffload").unwrap(),
+            RecoveryPolicy::Reoffload { max_retries: DEFAULT_MAX_RETRIES }
+        );
+        assert_eq!(
+            RecoveryPolicy::parse("reoffload:5").unwrap(),
+            RecoveryPolicy::Reoffload { max_retries: 5 }
+        );
+        assert_eq!(
+            RecoveryPolicy::parse("Retry:3").unwrap(),
+            RecoveryPolicy::Reoffload { max_retries: 3 }
+        );
+        for p in [
+            RecoveryPolicy::Drop,
+            RecoveryPolicy::Reoffload { max_retries: 1 },
+            RecoveryPolicy::Reoffload { max_retries: 7 },
+        ] {
+            assert_eq!(RecoveryPolicy::parse(&p.label()).unwrap(), p);
+        }
+    }
+
+    #[test]
+    fn recovery_policy_rejects_malformed() {
+        for bad in ["bogus", "drop:1", "reoffload:abc", "reoffload:0", "reoffload:-1", ""] {
+            assert!(RecoveryPolicy::parse(bad).is_err(), "{bad:?} should err");
+        }
+    }
+
+    #[test]
+    fn fault_trace_parses_and_queries() {
+        let text = "\
+# scripted chaos
+0.0 5.0 sat:3
+2.5, 4.0, link:1-2
+10 12 LINK:7-6
+";
+        let tr = FaultTrace::parse_str(text).unwrap();
+        assert_eq!(tr.windows().len(), 3);
+        assert!(tr.has_sat_windows() && tr.has_link_windows());
+        assert_eq!(tr.max_sat_id(), Some(7));
+        assert!(tr.sat_down_at(3, 0.0));
+        assert!(tr.sat_down_at(3, 4.999));
+        assert!(!tr.sat_down_at(3, 5.0)); // half-open
+        assert!(!tr.sat_down_at(2, 1.0));
+        assert!(tr.link_down_at(2, 1, 3.0)); // normalized both ways
+        assert!(!tr.link_down_at(1, 2, 4.0));
+        assert!(tr.link_down_at(6, 7, 11.0));
+        assert_eq!(tr.last_end(), 12.0);
+    }
+
+    #[test]
+    fn fault_trace_rejects_malformed_lines() {
+        for bad in [
+            "1.0 2.0",
+            "x 2.0 sat:1",
+            "1.0 y sat:1",
+            "2.0 1.0 sat:1",
+            "-1.0 2.0 sat:1",
+            "1.0 2.0 sat:abc",
+            "1.0 2.0 node:1",
+            "1.0 2.0 link:1",
+            "1.0 2.0 link:1-1",
+            "1.0 2.0 link:a-b",
+        ] {
+            let err = FaultTrace::parse_str(bad).unwrap_err();
+            assert!(err.contains("line 1"), "{bad:?} -> {err}");
+        }
+        assert!(FaultTrace::parse_str("# only comments\n\n").unwrap().is_empty());
+    }
+
+    #[test]
+    fn link_injector_deterministic_and_inert_at_zero() {
+        let topo = torus(4);
+        let mut a = LinkFaultInjector::new(&topo, 0.3, 0.2, false, 99);
+        let mut b = LinkFaultInjector::new(&topo, 0.3, 0.2, false, 99);
+        for _ in 0..50 {
+            a.step();
+            b.step();
+            for &(x, y) in a.links() {
+                assert_eq!(a.link_down(x, y), b.link_down(x, y));
+            }
+        }
+        assert!(a.failures() > 0);
+
+        let mut z = LinkFaultInjector::new(&topo, 0.0, 0.5, false, 1);
+        for _ in 0..50 {
+            assert!(!z.step());
+        }
+        assert!(!z.any_down());
+        assert_eq!(z.version(), 0);
+    }
+
+    #[test]
+    fn seam_only_restricts_bernoulli_failures() {
+        let topo = TopologyKind::parse("walker-star:4x4").unwrap().build();
+        let planes = topo.planes();
+        let mut inj = LinkFaultInjector::new(&topo, 1.0, 0.0, true, 7);
+        inj.step();
+        for &(a, b) in inj.links() {
+            let seam = {
+                let pa = topo.coords(a).0;
+                let pb = topo.coords(b).0;
+                pa == 0 || pa == planes - 1 || pb == 0 || pb == planes - 1
+            };
+            assert_eq!(inj.link_down(a, b), seam, "link {a}-{b}");
+        }
+    }
+
+    #[test]
+    fn outage_map_matches_topology_when_healthy() {
+        let topo = torus(4);
+        let mut map = OutageMap::new();
+        map.rebuild_with(&topo, |_, _| false);
+        for a in 0..topo.len() {
+            for b in 0..topo.len() {
+                assert_eq!(map.hops(a, b), Some(topo.hops(a, b)));
+            }
+        }
+        assert_eq!(map.version(), 1);
+    }
+
+    #[test]
+    fn outage_map_severed_sat_unreachable() {
+        let topo = torus(4);
+        let mut map = OutageMap::new();
+        // Cut every link touching satellite 5.
+        map.rebuild_with(&topo, |a, b| a == 5 || b == 5);
+        assert!(!map.reachable(0, 5));
+        assert_eq!(map.hops(0, 5), None);
+        assert_eq!(map.hops_or_penalty(0, 5), UNREACHABLE_HOPS as usize);
+        // Everything else still connected (torus is 4-regular).
+        for b in 0..topo.len() {
+            if b != 5 {
+                assert!(map.reachable(0, b), "0 -> {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn outage_map_hops_lut_shape() {
+        let topo = torus(3);
+        let mut map = OutageMap::new();
+        map.rebuild_with(&topo, |_, _| false);
+        let ids = [0usize, 4, 8];
+        let mut out = Vec::new();
+        map.hops_lut(&ids, &mut out);
+        assert_eq!(out.len(), 9);
+        for (i, &a) in ids.iter().enumerate() {
+            for (j, &b) in ids.iter().enumerate() {
+                assert_eq!(out[i * 3 + j] as usize, topo.hops(a, b));
+            }
+        }
+    }
+}

@@ -4,6 +4,7 @@
 //! overhead, and fault injection (transient satellite outages) for
 //! robustness evaluation.
 
+use crate::resilience::FaultTrace;
 use crate::topology::{Constellation, SatId};
 use crate::util::rng::Pcg64;
 
@@ -67,6 +68,11 @@ pub struct FaultInjector {
     pub p_fail: f64,
     pub p_recover: f64,
     down: Vec<bool>,
+    /// Scripted-trace overlay: a satellite is effectively down when
+    /// `down[s] || forced[s]`. Empty (all-false) without a trace, so
+    /// trace-free runs behave exactly as before.
+    forced: Vec<bool>,
+    trace: Option<FaultTrace>,
     rng: Pcg64,
     /// Cumulative outage events (diagnostics).
     pub failures: u64,
@@ -85,9 +91,17 @@ impl FaultInjector {
             p_fail,
             p_recover,
             down: vec![false; n_sats],
+            forced: vec![false; n_sats],
+            trace: None,
             rng: Pcg64::new(seed, 0xFA11),
             failures: 0,
         }
+    }
+
+    /// Attach a scripted fault trace: its `sat:` windows force outages
+    /// on top of the Bernoulli process at every [`FaultInjector::step_at`].
+    pub fn set_trace(&mut self, trace: FaultTrace) {
+        self.trace = Some(trace);
     }
 
     /// Advance one slot; returns the ids that newly failed (their queued
@@ -108,13 +122,43 @@ impl FaultInjector {
         newly_failed
     }
 
-    pub fn is_down(&self, s: SatId) -> bool {
-        self.down[s]
+    /// Advance one slot at simulation time `t`: the Bernoulli
+    /// [`FaultInjector::step`] (identical draw order), then the scripted
+    /// trace overlay. Returns ids whose *effective* state newly flipped
+    /// to down. Without a trace this is bit-for-bit `step()`.
+    pub fn step_at(&mut self, t: f64) -> Vec<SatId> {
+        let trace = match self.trace.take() {
+            None => return self.step(),
+            Some(tr) => tr,
+        };
+        let before: Vec<bool> = (0..self.down.len()).map(|s| self.is_down(s)).collect();
+        self.step();
+        for s in 0..self.forced.len() {
+            self.forced[s] = trace.sat_down_at(s, t);
+        }
+        self.trace = Some(trace);
+        (0..self.down.len())
+            .filter(|&s| self.is_down(s) && !before[s])
+            .collect()
     }
 
-    /// Currently-down count.
+    /// Is the fault process live at time `t`? False when no Bernoulli
+    /// failures can occur, nothing is currently down, and no trace
+    /// window can still open — the event engine stops scheduling `Fault`
+    /// ticks then.
+    pub fn active_after(&self, t: f64) -> bool {
+        self.p_fail > 0.0
+            || self.down_count() > 0
+            || self.trace.as_ref().is_some_and(|tr| tr.last_end() > t)
+    }
+
+    pub fn is_down(&self, s: SatId) -> bool {
+        self.down[s] || self.forced[s]
+    }
+
+    /// Currently-down count (Bernoulli ∪ scripted).
     pub fn down_count(&self) -> usize {
-        self.down.iter().filter(|d| **d).count()
+        (0..self.down.len()).filter(|&s| self.is_down(s)).count()
     }
 
     /// Filter a candidate list to healthy satellites (never empties the
@@ -237,6 +281,45 @@ mod tests {
         let mut g = FaultInjector::new(4, 0.0, 1.0, 4);
         g.step();
         assert_eq!(g.healthy(&cands).len(), 4);
+    }
+
+    #[test]
+    fn step_at_without_trace_is_step() {
+        let mut a = FaultInjector::new(20, 0.25, 0.4, 9);
+        let mut b = FaultInjector::new(20, 0.25, 0.4, 9);
+        for t in 0..50 {
+            assert_eq!(a.step(), b.step_at(t as f64));
+            for s in 0..20 {
+                assert_eq!(a.is_down(s), b.is_down(s));
+            }
+        }
+    }
+
+    #[test]
+    fn scripted_trace_forces_and_releases() {
+        let mut f = FaultInjector::new(8, 0.0, 1.0, 5);
+        f.set_trace(FaultTrace::parse_str("2 4 sat:3\n").unwrap());
+        assert_eq!(f.step_at(0.0), Vec::<SatId>::new());
+        assert!(!f.is_down(3));
+        assert_eq!(f.step_at(2.0), vec![3]);
+        assert!(f.is_down(3));
+        assert_eq!(f.step_at(3.0), Vec::<SatId>::new()); // still down, not newly
+        assert_eq!(f.step_at(4.0), Vec::<SatId>::new()); // window closed
+        assert!(!f.is_down(3));
+        assert!(f.active_after(1.0)); // window still ahead at t=1
+        assert!(!f.active_after(5.0)); // nothing can happen after 5
+    }
+
+    #[test]
+    fn active_after_tracks_bernoulli_and_down() {
+        let f = FaultInjector::new(4, 0.1, 0.5, 1);
+        assert!(f.active_after(1e9)); // p_fail > 0: always live
+        let mut g = FaultInjector::new(4, 0.0, 0.5, 1);
+        assert!(!g.active_after(0.0));
+        g.set_trace(FaultTrace::parse_str("0 2 sat:1\n").unwrap());
+        g.step_at(0.0);
+        assert!(g.is_down(1));
+        assert!(g.active_after(3.0)); // someone is down -> still live
     }
 
     #[test]

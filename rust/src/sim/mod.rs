@@ -14,6 +14,13 @@
 //!    the task at dp = k; accepted segments accrue computation delay
 //!    q_k/C (Eq. 5) and transmission delay MH·q_k·κ (Eq. 7);
 //! 5. all satellites service one slot of backlog at C_x.
+//!
+//! Resilience ([`crate::resilience`]): under `--recovery reoffload` an
+//! Eq. 4 rejection re-offloads the surviving tail (minus the rejecting
+//! satellite) instead of dropping, charging the corrective re-ship of the
+//! boundary activation; with link faults on, ISL transfers are priced
+//! over the outage-masked alive topology and a severed chain gives up.
+//! Both knobs default off and leave default runs bit-for-bit identical.
 
 pub mod dynamics;
 
@@ -22,6 +29,7 @@ use crate::config::{EngineKind, SimConfig};
 use crate::metrics::{MetricsCollector, Report, TaskOutcome};
 use crate::obs::{InstantKind, Obs, SpanKind};
 use crate::offload::{make_scheme_with, MigrationCost, OffloadContext, OffloadScheme, SchemeKind};
+use crate::resilience::{LinkFaultInjector, OutageMap, RecoveryPolicy};
 use crate::satellite::{Admission, Satellite};
 use crate::splitting::balanced_split;
 use crate::state::ViewTracker;
@@ -141,6 +149,11 @@ pub struct Simulation {
     handover: Option<dynamics::Handover>,
     /// Optional transient-outage fault injection.
     faults: Option<dynamics::FaultInjector>,
+    /// Optional per-ISL-link outage injection (`[resilience]` link knobs).
+    link_faults: Option<LinkFaultInjector>,
+    /// Outage-masked all-pairs hop table; rebuilt whenever the link
+    /// injector flips any link. Never consulted without link faults.
+    outages: OutageMap,
     /// Early-exit mode (§VI future work): tasks exit at the cheapest
     /// branch meeting this accuracy floor; the truncated layer vector is
     /// what gets split and offloaded.
@@ -175,7 +188,7 @@ impl Simulation {
             TaskKind::Autoregressive { state_bytes, .. } => isl.hop_secs(state_bytes),
             TaskKind::OneShot => 0.0,
         };
-        Simulation {
+        let sim = Simulation {
             topo,
             satellites,
             decision_sats,
@@ -202,10 +215,30 @@ impl Simulation {
             split_cache: None,
             handover: None,
             faults: None,
+            link_faults: None,
+            outages: OutageMap::new(),
             early_exit_workloads: None,
             delivered_accuracy: 1.0,
             cfg: cfg.clone(),
+        };
+        // `[resilience]` wiring: route the config knobs through the same
+        // builders the tests drive directly, so a config-selected run is
+        // byte-identical to the equivalent builder-selected one
+        // (tests/prop_resilience.rs).
+        let mut sim = sim;
+        if cfg.resilience.sat_faults_active() {
+            sim = sim.with_faults(cfg.resilience.p_fail, cfg.resilience.p_recover);
+            if let Some(tr) = &cfg.resilience.fault_trace {
+                sim.faults
+                    .as_mut()
+                    .expect("installed by with_faults")
+                    .set_trace(tr.clone());
+            }
         }
+        if cfg.resilience.link_faults_active() {
+            sim = sim.with_link_faults();
+        }
+        sim
     }
 
     /// Builder: enable the early-exit extension (DESIGN.md: the paper's
@@ -236,6 +269,24 @@ impl Simulation {
             p_recover,
             self.cfg.seed ^ 0xFA17,
         ));
+        self
+    }
+
+    /// Builder: enable per-ISL-link outages from the `[resilience]` link
+    /// knobs. The outage table starts from the healthy topology; every
+    /// slot advances the per-link Bernoulli chain (and scripted `link:`
+    /// windows) and rebuilds the table on any flip.
+    pub fn with_link_faults(mut self) -> Simulation {
+        let r = &self.cfg.resilience;
+        let inj = LinkFaultInjector::new(
+            &self.topo,
+            r.link_p_fail,
+            r.link_p_recover,
+            r.seam_only,
+            self.cfg.seed ^ 0x11FA,
+        );
+        self.outages.rebuild_with(&self.topo, |a, b| inj.link_down(a, b));
+        self.link_faults = Some(inj);
         self
     }
 
@@ -304,6 +355,7 @@ impl Simulation {
             d_max,
         );
         let mut faults = self.faults.take();
+        let mut link_faults = self.link_faults.take();
         // Telemetry sink ([`crate::obs`]): every hook is a single branch on
         // its `enabled` flag, so default runs stay bit-for-bit identical
         // (`tests/prop_telemetry.rs`). The slotted clock has no event
@@ -314,12 +366,16 @@ impl Simulation {
         // decision hot path allocates nothing in steady state).
         let mut seg_buf: Vec<f64> = Vec::new();
         let mut chrom: Vec<SatId> = Vec::new();
+        // Recovery scratch: the re-decided tail chain (`--recovery
+        // reoffload`), recycled like `chrom`.
+        let mut retry_buf: Vec<SatId> = Vec::new();
         for slot in 0..slots {
+            let t_slot = slot as f64;
             // fault injection: newly failed satellites lose queued work
             if let Some(f) = faults.as_mut() {
-                let newly = f.step();
+                let newly = f.step_at(t_slot);
                 if !newly.is_empty() {
-                    obs.instant(InstantKind::Fault, slot as f64, newly.len());
+                    obs.instant(InstantKind::Fault, t_slot, newly.len());
                     // capacities vanished: cached placements must not
                     // survive the shock (counter only — no legacy path
                     // reads it, so default runs are unchanged)
@@ -329,7 +385,16 @@ impl Simulation {
                     self.satellites[id].reset();
                 }
             }
-            let t_slot = slot as f64;
+            // link outages: advance the per-link Bernoulli chain (and
+            // scripted `link:` windows); any flip rebuilds the
+            // outage-masked hop table and invalidates cached placements
+            if let Some(lf) = link_faults.as_mut() {
+                if lf.step_at(t_slot, self.cfg.resilience.fault_trace.as_ref()) {
+                    self.outages
+                        .rebuild_with(&self.topo, |a, b| lf.link_down(a, b));
+                    tracker.bump_epoch();
+                }
+            }
             obs.maybe_sample(t_slot, &self.satellites);
             if let Some(h) = &self.handover {
                 let dwell = h.dwell_secs() as usize;
@@ -410,6 +475,10 @@ impl Simulation {
                             kappa: self.kappa,
                             ga: &self.cfg.ga,
                             migration: self.migration_cost(origin),
+                            outages: match &link_faults {
+                                Some(_) => Some(&self.outages),
+                                None => None,
+                            },
                         };
                         self.scheme.decide_into(&ctx, &mut chrom);
                     }
@@ -441,8 +510,17 @@ impl Simulation {
                     // against the arrival, laid out back-to-back exactly
                     // as `finish_time_s` accumulates them.
                     let mut cursor = task.arrival_time_s;
-                    for (k, (&c, &q)) in chrom.iter().zip(segments).enumerate() {
+                    // Per-task recovery budget (`--recovery reoffload`):
+                    // the walk is a `while` so a retry can re-attempt the
+                    // same index on a freshly spliced chain.
+                    let mut retries = 0u32;
+                    let mut recovered = false;
+                    let mut k = 0usize;
+                    while k < chrom.len() {
+                        let c = chrom[k];
+                        let q = segments[k];
                         if q == 0.0 {
+                            k += 1;
                             continue; // padded empty block
                         }
                         match self.satellites[c].try_load(q) {
@@ -463,7 +541,34 @@ impl Simulation {
                                 );
                                 cursor += dt;
                                 if k + 1 < chrom.len() {
-                                    let hops = self.topo.hops(c, chrom[k + 1]) as f64;
+                                    // link faults on: price the transfer
+                                    // over the alive topology (detours
+                                    // cost extra hops; a severed next hop
+                                    // strands the chain)
+                                    let planned = self.topo.hops(c, chrom[k + 1]);
+                                    let alive = match &link_faults {
+                                        Some(_) => self.outages.hops(c, chrom[k + 1]),
+                                        None => Some(planned),
+                                    };
+                                    let hops = match alive {
+                                        Some(h) => {
+                                            if h > planned {
+                                                metrics.reroute();
+                                                obs.instant(
+                                                    InstantKind::Reroute,
+                                                    cursor,
+                                                    c,
+                                                );
+                                            }
+                                            h as f64
+                                        }
+                                        None => {
+                                            metrics.recovery_giveup();
+                                            drop_point = k + 2; // next seg unreachable
+                                            dropped_at = Some(k + 1);
+                                            break;
+                                        }
+                                    };
                                     let tt = hops * q * self.kappa;
                                     tran += tt;
                                     metrics.sat(c).tran_delay_s += tt;
@@ -477,8 +582,83 @@ impl Simulation {
                                     );
                                     cursor += tt;
                                 }
+                                k += 1;
                             }
                             Admission::Rejected => {
+                                // --recovery reoffload: instead of
+                                // dropping, re-run the offload decision
+                                // for the surviving tail segments[k..]
+                                // over the healthy candidates minus the
+                                // rejecting satellite, splice the new
+                                // tail into the chain, charge the
+                                // corrective re-ship of the boundary
+                                // activation, and re-attempt index k.
+                                if let RecoveryPolicy::Reoffload { max_retries } =
+                                    self.cfg.resilience.recovery
+                                {
+                                    metrics.sat(c).segments_rejected += 1;
+                                    let within_deadline = cursor - task.arrival_time_s
+                                        <= self.cfg.resilience.deadline_s;
+                                    let retry_cands: Vec<SatId> = candidates
+                                        .iter()
+                                        .copied()
+                                        .filter(|&x| x != c)
+                                        .collect();
+                                    if retries < max_retries
+                                        && within_deadline
+                                        && !retry_cands.is_empty()
+                                    {
+                                        {
+                                            let ctx = OffloadContext {
+                                                topo: &self.topo,
+                                                view: tracker
+                                                    .view(area, &self.satellites),
+                                                origin,
+                                                candidates: &retry_cands,
+                                                segments: &segments[k..],
+                                                kappa: self.kappa,
+                                                ga: &self.cfg.ga,
+                                                migration: self.migration_cost(origin),
+                                                outages: match &link_faults {
+                                                    Some(_) => Some(&self.outages),
+                                                    None => None,
+                                                },
+                                            };
+                                            self.scheme
+                                                .decide_into(&ctx, &mut retry_buf);
+                                        }
+                                        // re-ship the k-1 activation from
+                                        // the chain's live end to the new
+                                        // placement (Eq. 7 pricing)
+                                        let from =
+                                            if k > 0 { chrom[k - 1] } else { origin };
+                                        let q_in = segments[k.saturating_sub(1)];
+                                        let re_tt = self.topo.hops(from, retry_buf[0])
+                                            as f64
+                                            * q_in
+                                            * self.kappa;
+                                        chrom.truncate(k);
+                                        chrom.extend_from_slice(&retry_buf);
+                                        tran += re_tt;
+                                        metrics.sat(from).tran_delay_s += re_tt;
+                                        // rejection recovery re-ships but
+                                        // never re-executes: rework is 0
+                                        metrics.recovery_retry(0.0, re_tt);
+                                        obs.instant(
+                                            InstantKind::Recover,
+                                            cursor,
+                                            origin,
+                                        );
+                                        cursor += re_tt;
+                                        retries += 1;
+                                        recovered = true;
+                                        continue;
+                                    }
+                                    metrics.recovery_giveup();
+                                    drop_point = k + 1;
+                                    dropped_at = Some(k);
+                                    break;
+                                }
                                 metrics.sat(c).segments_rejected += 1;
                                 drop_point = k + 1; // dp ∈ {1..L} (11d)
                                 dropped_at = Some(k);
@@ -498,6 +678,10 @@ impl Simulation {
                             kappa: self.kappa,
                             ga: &self.cfg.ga,
                             migration: self.migration_cost(origin),
+                            outages: match &link_faults {
+                                Some(_) => Some(&self.outages),
+                                None => None,
+                            },
                         };
                         self.scheme
                             .observe(&ctx, &chrom, dropped_at, comp + tran);
@@ -580,6 +764,10 @@ impl Simulation {
                         task.id,
                         drop_point > l,
                     );
+                    // a retried chain that still completed is a recovery
+                    if recovered && drop_point > l {
+                        metrics.task_recovered();
+                    }
                     metrics.record(TaskOutcome {
                         task_id: task.id,
                         origin,
@@ -641,6 +829,8 @@ mod tests {
         assert_eq!(r.total_tasks, r.completed_tasks + r.dropped_tasks);
         assert!(r.completion_rate() > 0.0);
         assert!(r.slots_run == 10);
+        // off-is-free: default runs never allocate the resilience block
+        assert!(r.resilience.is_none());
     }
 
     #[test]
@@ -757,6 +947,61 @@ mod tests {
             faulty.completion_rate(),
             clean.completion_rate()
         );
+    }
+
+    #[test]
+    fn config_driven_faults_match_builder_slotted() {
+        let mut cfg = small_cfg(DnnModel::Vgg19, 12.0);
+        cfg.slots = 12;
+        cfg.resilience.p_fail = 0.08;
+        cfg.resilience.p_recover = 0.4;
+        let via_cfg = Simulation::new(&cfg, SchemeKind::Scc).run();
+        let mut legacy = cfg.clone();
+        legacy.resilience = Default::default();
+        let via_builder = Simulation::new(&legacy, SchemeKind::Scc)
+            .with_faults(0.08, 0.4)
+            .run();
+        assert_eq!(
+            via_cfg.to_json().to_string(),
+            via_builder.to_json().to_string()
+        );
+    }
+
+    #[test]
+    fn reoffload_retries_rejections_slotted() {
+        let mut cfg = small_cfg(DnnModel::Vgg19, 40.0);
+        cfg.slots = 12;
+        cfg.satellite.max_workload_mflops = 20_000.0;
+        cfg.resilience.recovery = RecoveryPolicy::Reoffload { max_retries: 2 };
+        let r = Simulation::new(&cfg, SchemeKind::Random).run();
+        assert!(r.total_tasks > 0);
+        assert_eq!(r.total_tasks, r.completed_tasks + r.dropped_tasks);
+        let res = r.resilience.as_ref().expect("resilience block present");
+        assert!(res.retries > 0, "overload must trigger retries: {res:?}");
+        assert!(res.retries >= res.recovered_tasks);
+    }
+
+    #[test]
+    fn link_outages_slotted_run_and_conserve() {
+        let mut cfg = small_cfg(DnnModel::Vgg19, 8.0);
+        cfg.slots = 12;
+        cfg.resilience.link_p_fail = 0.25;
+        cfg.resilience.link_p_recover = 0.2;
+        let r = Simulation::new(&cfg, SchemeKind::Scc).run();
+        assert!(r.total_tasks > 0);
+        assert_eq!(r.total_tasks, r.completed_tasks + r.dropped_tasks);
+    }
+
+    #[test]
+    fn scripted_trace_slotted_runs() {
+        let mut cfg = small_cfg(DnnModel::Vgg19, 6.0);
+        cfg.resilience.fault_trace = Some(
+            crate::resilience::FaultTrace::parse_str("1 4 sat:2\n2 6 link:0-1\n")
+                .unwrap(),
+        );
+        let r = Simulation::new(&cfg, SchemeKind::Random).run();
+        assert!(r.total_tasks > 0);
+        assert_eq!(r.total_tasks, r.completed_tasks + r.dropped_tasks);
     }
 
     #[test]

@@ -473,6 +473,21 @@ impl Constellation {
         }
     }
 
+    /// The undirected ISL edge set, as `(min, max)` pairs sorted
+    /// ascending — the link universe the resilience layer's
+    /// `LinkFaultInjector` draws outages over.
+    pub fn edges(&self) -> Vec<(SatId, SatId)> {
+        let mut out = Vec::new();
+        for s in 0..self.len() {
+            for nb in self.neighbors(s) {
+                out.push((s.min(nb), s.max(nb)));
+            }
+        }
+        out.sort_unstable();
+        out.dedup();
+        out
+    }
+
     /// Decision space `A_x` (constraint 11c): all satellites within hop
     /// distance `d_max` of `x`, including `x`, sorted ascending.
     pub fn decision_space(&self, x: SatId, d_max: usize) -> Vec<SatId> {
@@ -773,6 +788,25 @@ mod tests {
         u.dedup();
         assert_eq!(u, ds);
         assert!(ds.len() <= t.len());
+    }
+
+    #[test]
+    fn edges_sorted_unique_and_sized() {
+        // Torus: 4-regular, so |E| = 4N²/2 = 2N².
+        let t = Constellation::torus(4);
+        let e = t.edges();
+        assert_eq!(e.len(), 2 * 16);
+        let mut sorted = e.clone();
+        sorted.sort_unstable();
+        sorted.dedup();
+        assert_eq!(sorted, e);
+        for &(a, b) in &e {
+            assert!(a < b);
+            assert!(t.neighbors(a).contains(&b));
+        }
+        // Walker-Star 4x4: in-plane ring 4·4 edges + 3 inter-plane seams · 4.
+        let w = Constellation::walker_star(4, 4);
+        assert_eq!(w.edges().len(), 16 + 12);
     }
 
     #[test]

@@ -1,10 +1,12 @@
 //! Config-surface error paths and label/parse inverses. Malformed
-//! `--task-kind` / `--topology` / `--dissemination` values must surface
-//! as `Err` from `SimConfig::load` — never a panic — and each selector's
-//! canonical `label()` must round-trip through its parser exactly
-//! (floats survive bit-for-bit: Rust's `Display` is shortest-roundtrip).
+//! `--task-kind` / `--topology` / `--dissemination` / `--recovery` /
+//! fault-probability values must surface as `Err` from `SimConfig::load`
+//! — never a panic — and each selector's canonical `label()` must
+//! round-trip through its parser exactly (floats survive bit-for-bit:
+//! Rust's `Display` is shortest-roundtrip).
 
 use satkit::config::{LlmConfig, SimConfig};
+use satkit::resilience::RecoveryPolicy;
 use satkit::state::DisseminationKind;
 use satkit::tasks::TaskKind;
 use satkit::topology::TopologyKind;
@@ -45,6 +47,19 @@ fn malformed_selector_values_error_not_panic() {
         ("dissemination", "instant:1"),
         ("dissemination", "periodic:abc"),
         ("dissemination", "gossip:abc"),
+        // --recovery: unknown policy, bad retry budget, argument on drop
+        ("recovery", "bogus"),
+        ("recovery", "reoffload:abc"),
+        ("recovery", "reoffload:0"),
+        ("recovery", "drop:1"),
+        // fault probabilities must land in [0, 1] and be finite
+        ("p-fail", "1.5"),
+        ("p-fail", "-0.1"),
+        ("p-recover", "nan"),
+        ("link-p-fail", "2"),
+        ("link-p-recover", "-1e-3"),
+        // --fault-trace: missing file fails at the CLI boundary
+        ("fault-trace", "/nonexistent/satkit-trace.txt"),
     ];
     for (key, value) in cases {
         match load_with(key, value) {
@@ -82,6 +97,16 @@ fn wellformed_selector_values_load() {
         cfg.dissemination,
         Some(DisseminationKind::Periodic { period_s: 2.5 })
     );
+    let cfg = load_with("recovery", "reoffload:3").unwrap();
+    assert_eq!(
+        cfg.resilience.recovery,
+        RecoveryPolicy::Reoffload { max_retries: 3 }
+    );
+    let cfg = load_with("recovery", "drop").unwrap();
+    assert!(cfg.resilience.recovery.is_drop());
+    let cfg = load_with("p-fail", "0.25").unwrap();
+    assert_eq!(cfg.resilience.p_fail, 0.25);
+    assert!(cfg.resilience.sat_faults_active());
 }
 
 /// `TaskKind::parse_with(kind.label(), defaults)` is the identity for
@@ -152,6 +177,36 @@ fn prop_topology_label_parse_inverse() {
             if parsed != *kind {
                 return Err(format!(
                     "label '{label}' parsed to {parsed:?}, expected {kind:?}"
+                ));
+            }
+            Ok(())
+        },
+    );
+}
+
+/// `RecoveryPolicy::parse(policy.label())` is the identity for every
+/// valid policy — `drop` and any positive retry budget round-trip.
+#[test]
+fn prop_recovery_label_parse_inverse() {
+    check_no_shrink(
+        "recovery-label-parse-inverse",
+        default_cases(),
+        |r| {
+            if r.next_u64() % 4 == 0 {
+                RecoveryPolicy::Drop
+            } else {
+                RecoveryPolicy::Reoffload {
+                    max_retries: r.usize_in(1, 64) as u32,
+                }
+            }
+        },
+        |policy| {
+            let label = policy.label();
+            let parsed = RecoveryPolicy::parse(&label)
+                .map_err(|e| format!("label '{label}' failed to parse: {e}"))?;
+            if parsed != *policy {
+                return Err(format!(
+                    "label '{label}' parsed to {parsed:?}, expected {policy:?}"
                 ));
             }
             Ok(())

@@ -295,6 +295,7 @@ fn prop_all_schemes_emit_valid_chromosomes() {
                 kappa: 1e-4,
                 ga: &ga,
                 migration: None,
+                outages: None,
             };
             for kind in SchemeKind::all() {
                 let mut s = make_scheme(kind, 99);
@@ -347,6 +348,7 @@ fn prop_deficit_nonnegative_and_theta_monotone() {
                     kappa: 1e-4,
                     ga,
                     migration: None,
+                    outages: None,
                 };
                 ctx.deficit(&chrom)
             };
@@ -393,6 +395,7 @@ fn prop_indexed_deficit_matches_reference() {
                 kappa: 1e-4,
                 ga: &ga,
                 migration: None,
+                outages: None,
             };
             let index = DecisionSpaceIndex::from_ctx(&ctx);
             let mut scratch = DeficitScratch::default();
@@ -455,6 +458,7 @@ fn prop_deficit_batch_matches_scalar() {
                 kappa: 1e-4,
                 ga: &ga,
                 migration: None,
+                outages: None,
             };
             let index = DecisionSpaceIndex::from_ctx(&ctx);
             let l = inst.segments.len();
@@ -521,6 +525,7 @@ fn prop_index_cache_preserves_decisions() {
                     kappa: 1e-4,
                     ga: &ga,
                     migration: None,
+                    outages: None,
                 };
                 if cached.build_cached(&ctx) {
                     return Err("first build reported a hit".into());
@@ -554,6 +559,7 @@ fn prop_index_cache_preserves_decisions() {
                 kappa: 1e-4,
                 ga: &ga,
                 migration: None,
+                outages: None,
             };
             if cached.build_cached(&ctx2) {
                 return Err("stale cache hit after a load change".into());
@@ -595,6 +601,7 @@ fn prop_ga_decide_identical_to_reference_per_seed() {
                 kappa: 1e-4,
                 ga: &ga,
                 migration: None,
+                outages: None,
             };
             let mut fast = GaScheme::new(*seed);
             let mut slow = GaScheme::new(*seed);
@@ -644,6 +651,7 @@ fn prop_ga_close_to_random_best() {
                 kappa: 1e-4,
                 ga: &ga,
                 migration: None,
+                outages: None,
             };
             let mut g = GaScheme::new(7);
             let got = ctx.deficit(&g.decide(&ctx));

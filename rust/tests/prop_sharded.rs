@@ -152,6 +152,7 @@ fn prop_deficit_batch_simd_matches_scalar() {
                 kappa: 1e-4,
                 ga: &ga,
                 migration: None,
+                outages: None,
             };
             let index = DecisionSpaceIndex::from_ctx(&ctx);
             let mut gr = Pcg64::seed_from_u64(gene_seed);
